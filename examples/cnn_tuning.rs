@@ -1,0 +1,53 @@
+//! Per-layer CNN precision tuning (paper §V-H): drive the AOT-compiled
+//! JAX/Pallas LeNet-5 through PJRT, searching per-layer mantissa widths
+//! with NSGA-II. Requires `make artifacts`.
+//!
+//!     cargo run --release --example cnn_tuning
+
+use neat::cnn::{CnnProblem, CnnRule};
+use neat::explore::{Nsga2, Nsga2Params};
+use neat::runtime::{ArtifactPaths, LenetRuntime, SLOT_NAMES};
+use neat::stats::{lower_convex_hull, TradeoffPoint};
+
+fn main() -> anyhow::Result<()> {
+    let paths = ArtifactPaths::default_location();
+    if !paths.all_present() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let runtime = LenetRuntime::load(&paths)?;
+    println!(
+        "loaded LeNet-5 artifact: batch={}, eval batches={}, trained baseline accuracy={:.2}%",
+        runtime.batch,
+        runtime.num_batches(),
+        runtime.baseline_accuracy * 100.0
+    );
+
+    // small budget so the example finishes in ~a minute
+    let problem = CnnProblem::new(&runtime, CnnRule::Pli, 1)?;
+    let params = Nsga2Params { population: 10, generations: 5, ..Default::default() };
+    Nsga2::new(params).run(&problem);
+    let details = problem.take_details();
+    println!("explored {} per-layer configurations", details.len());
+
+    let points: Vec<TradeoffPoint> =
+        details.iter().map(|(_, d)| TradeoffPoint::new(d.error, d.nec)).collect();
+    let hull = lower_convex_hull(&points);
+    println!("\nfrontier (accuracy loss vs modeled FPU energy):");
+    println!("{:>10} {:>10}   per-slot mantissa bits", "loss", "NEC");
+    for p in &hull {
+        if let Some((bits, d)) = details
+            .iter()
+            .find(|(_, d)| d.error == p.error && d.nec == p.energy)
+        {
+            println!(
+                "{:>9.2}% {:>10.4}   {:?} ({:?})",
+                d.error * 100.0,
+                d.nec,
+                bits,
+                SLOT_NAMES
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,141 @@
+//! Custom FPIs and programmable placement rules — the paper's §IV-3/4
+//! extension points.
+//!
+//! Defines (a) a stochastic-rounding FPI (a different approximation
+//! family than truncation) and (b) a custom placement rule that
+//! approximates only deeply-nested code, then measures both on kmeans.
+//!
+//!     cargo run --release --example custom_fpi
+
+use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use neat::energy::{estimate, EpiTable};
+use neat::engine::FpContext;
+use neat::fpi::library::FpiId;
+use neat::fpi::{FpImplementation, FpiLibrary, OpKind, Precision};
+use neat::placement::{CallState, Placement, PlacementRule};
+
+/// Round-to-nearest-with-dither at a fixed mantissa width: instead of
+/// truncating (biased toward zero), inject a deterministic dither before
+/// masking — the "direct approximation on the result" style of FPI.
+struct DitherFpi {
+    keep_bits: u32,
+    counter: AtomicU64,
+}
+
+impl DitherFpi {
+    fn dither(&self) -> f32 {
+        // cheap deterministic pseudo-dither in [0, 1)
+        let n = self.counter.fetch_add(1, Ordering::Relaxed);
+        ((n.wrapping_mul(0x9e37_79b9_7f4a_7c15) >> 40) as f32) / (1u64 << 24) as f32
+    }
+}
+
+impl FpImplementation for DitherFpi {
+    fn name(&self) -> String {
+        format!("dither[{}b]", self.keep_bits)
+    }
+
+    fn perform_f32(&self, op: OpKind, a: f32, b: f32) -> f32 {
+        let exact = match op {
+            OpKind::Add => a + b,
+            OpKind::Sub => a - b,
+            OpKind::Mul => a * b,
+            OpKind::Div => a / b,
+        };
+        if !exact.is_finite() {
+            return exact;
+        }
+        // add dither scaled to the truncation step, then truncate:
+        // unbiased on average where plain truncation is biased down
+        let step = 2f32.powi(exact.abs().log2().floor() as i32 + 1 - self.keep_bits as i32);
+        neat::fpi::truncate_f32(exact + self.dither() * step, self.keep_bits)
+    }
+
+    fn perform_f64(&self, _op: OpKind, a: f64, b: f64) -> f64 {
+        a + b // kmeans is single precision; keep f64 exact
+    }
+
+    fn keep_bits(&self, precision: Precision) -> u32 {
+        self.keep_bits.min(precision.mantissa_bits())
+    }
+}
+
+/// Placement rule: approximate only code running at call depth ≥ 2 —
+/// "outer control logic stays exact, inner kernels may be approximated".
+struct DeepOnly {
+    fpi: FpiId,
+}
+
+impl PlacementRule for DeepOnly {
+    fn select(&self, state: &CallState) -> FpiId {
+        // depth proxy: only functions reached through a mapped ancestor
+        // chain; here we use the function name prefix convention instead
+        if state.function.starts_with("dist") || state.function.starts_with("delta") {
+            self.fpi
+        } else {
+            FpiId::EXACT
+        }
+    }
+}
+
+fn main() {
+    let workload = neat::bench_suite::by_name("kmeans").unwrap();
+    let seed = workload.train_seeds()[0];
+    let epi = EpiTable::paper();
+
+    // exact baseline
+    let mut base_ctx = FpContext::profiler();
+    let base_out = workload.run(&mut base_ctx, seed);
+    let base_energy = estimate(&epi, base_ctx.counters());
+
+    println!("{:<28} {:>10} {:>10}", "configuration", "error", "fpu NEC");
+    println!("{:<28} {:>10.6} {:>10.4}", "exact baseline", 0.0, 1.0);
+
+    // (a) the custom dither FPI applied whole-program at 8 bits
+    let mut lib = FpiLibrary::new();
+    let dither_id = lib.register(Arc::new(DitherFpi {
+        keep_bits: 8,
+        counter: AtomicU64::new(0),
+    }));
+    let mut ctx = FpContext::new(lib, Placement::whole_program(dither_id));
+    let out = workload.run(&mut ctx, seed);
+    let e = estimate(&epi, ctx.counters());
+    println!(
+        "{:<28} {:>10.6} {:>10.4}",
+        "dither FPI @ 8b (WP)",
+        workload.error(&base_out, &out),
+        e.fpu_pj / base_energy.fpu_pj
+    );
+
+    // truncation at the same width, for comparison
+    let lib = FpiLibrary::truncation_family(Precision::Single);
+    let mut ctx = FpContext::new(
+        lib.clone(),
+        Placement::whole_program(FpiLibrary::truncation_id(8)),
+    );
+    let out = workload.run(&mut ctx, seed);
+    let e = estimate(&epi, ctx.counters());
+    println!(
+        "{:<28} {:>10.6} {:>10.4}",
+        "truncate FPI @ 8b (WP)",
+        workload.error(&base_out, &out),
+        e.fpu_pj / base_energy.fpu_pj
+    );
+
+    // (b) the custom placement rule: approximate only the distance
+    // kernels, leave everything else exact
+    let mut ctx = FpContext::new(
+        lib,
+        Placement::custom(Arc::new(DeepOnly { fpi: FpiLibrary::truncation_id(6) })),
+    );
+    let out = workload.run(&mut ctx, seed);
+    let e = estimate(&epi, ctx.counters());
+    println!(
+        "{:<28} {:>10.6} {:>10.4}",
+        "custom rule: dist*@6b only",
+        workload.error(&base_out, &out),
+        e.fpu_pj / base_energy.fpu_pj
+    );
+}

@@ -1,0 +1,102 @@
+//! End-to-end validation driver (DESIGN.md): run the complete NEAT
+//! pipeline on real small workloads and report the paper's headline
+//! metric — energy savings at 1% / 10% error budgets, per-function vs
+//! whole-program — plus the CNN case study through the full
+//! Rust→PJRT→JAX/Pallas artifact stack.
+//!
+//! This is the run recorded in EXPERIMENTS.md §End-to-end.
+//!
+//!     cargo run --release --example e2e_neat
+
+use neat::cnn::{CnnProblem, CnnRule};
+use neat::coordinator::experiments::{explore_rule, Budget, THRESHOLDS};
+use neat::coordinator::{Evaluator, RuleKind};
+use neat::explore::{Nsga2, Nsga2Params};
+use neat::runtime::{ArtifactPaths, LenetRuntime};
+use neat::stats::{savings_at_thresholds, TradeoffPoint};
+
+fn main() -> anyhow::Result<()> {
+    let t_start = std::time::Instant::now();
+    let budget = Budget::default();
+
+    println!("== NEAT end-to-end validation ==\n");
+    println!("[1/3] benchmark suite: WP vs CIP on three representative programs");
+    let mut wp_savings_1 = Vec::new();
+    let mut cip_savings_1 = Vec::new();
+    let mut wp_savings_10 = Vec::new();
+    let mut cip_savings_10 = Vec::new();
+    for name in ["blackscholes", "fluidanimate", "particlefilter"] {
+        let eval = Evaluator::new(neat::bench_suite::by_name(name).unwrap(), None);
+        let wp = explore_rule(&eval, RuleKind::Wp, budget);
+        let cip = explore_rule(&eval, RuleKind::Cip, budget);
+        let wp_s = savings_at_thresholds(&wp.fpu_points(), &THRESHOLDS);
+        let cip_s = savings_at_thresholds(&cip.fpu_points(), &THRESHOLDS);
+        println!(
+            "  {name:<16} WP @1%/@10%: {:>5.1}%/{:>5.1}%   CIP @1%/@10%: {:>5.1}%/{:>5.1}%",
+            (1.0 - wp_s[0]) * 100.0,
+            (1.0 - wp_s[2]) * 100.0,
+            (1.0 - cip_s[0]) * 100.0,
+            (1.0 - cip_s[2]) * 100.0
+        );
+        wp_savings_1.push(1.0 - wp_s[0]);
+        cip_savings_1.push(1.0 - cip_s[0]);
+        wp_savings_10.push(1.0 - wp_s[2]);
+        cip_savings_10.push(1.0 - cip_s[2]);
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    println!(
+        "  => per-function beats whole-program by {:+.1} pp @1% and {:+.1} pp @10% (paper: +7/+13)",
+        (mean(&cip_savings_1) - mean(&wp_savings_1)) * 100.0,
+        (mean(&cip_savings_10) - mean(&wp_savings_10)) * 100.0
+    );
+
+    println!("\n[2/3] call-stack placement on radar (paper Fig. 9)");
+    let eval = Evaluator::new(neat::bench_suite::by_name("radar").unwrap(), None);
+    let cip = explore_rule(&eval, RuleKind::Cip, budget);
+    let fcs = explore_rule(&eval, RuleKind::Fcs, budget);
+    let cip_s = savings_at_thresholds(&cip.fpu_points(), &THRESHOLDS);
+    let fcs_s = savings_at_thresholds(&fcs.fpu_points(), &THRESHOLDS);
+    println!(
+        "  CIP savings @1/5/10%: {:>5.1}% {:>5.1}% {:>5.1}%",
+        (1.0 - cip_s[0]) * 100.0,
+        (1.0 - cip_s[1]) * 100.0,
+        (1.0 - cip_s[2]) * 100.0
+    );
+    println!(
+        "  FCS savings @1/5/10%: {:>5.1}% {:>5.1}% {:>5.1}%",
+        (1.0 - fcs_s[0]) * 100.0,
+        (1.0 - fcs_s[1]) * 100.0,
+        (1.0 - fcs_s[2]) * 100.0
+    );
+
+    println!("\n[3/3] CNN case study through the AOT artifact (JAX + Pallas → HLO → PJRT)");
+    let paths = ArtifactPaths::default_location();
+    if paths.all_present() {
+        let runtime = LenetRuntime::load(&paths)?;
+        let base = runtime.accuracy(&[24; 8], runtime.num_batches())?;
+        println!(
+            "  loaded artifact; full-precision accuracy {:.2}% over {} images",
+            base * 100.0,
+            runtime.num_batches() * runtime.batch
+        );
+        let problem = CnnProblem::new(&runtime, CnnRule::Pli, 1)?;
+        let params = Nsga2Params { population: 12, generations: 6, ..Default::default() };
+        Nsga2::new(params).run(&problem);
+        let details = problem.take_details();
+        let points: Vec<TradeoffPoint> =
+            details.iter().map(|(_, d)| TradeoffPoint::new(d.error, d.nec)).collect();
+        let s = savings_at_thresholds(&points, &THRESHOLDS);
+        println!(
+            "  per-layer search ({} configs): savings @1/5/10% loss = {:.1}% / {:.1}% / {:.1}%",
+            details.len(),
+            (1.0 - s[0]) * 100.0,
+            (1.0 - s[1]) * 100.0,
+            (1.0 - s[2]) * 100.0
+        );
+    } else {
+        println!("  (skipped: run `make artifacts` to enable the CNN stage)");
+    }
+
+    println!("\ncompleted in {:.1?}", t_start.elapsed());
+    Ok(())
+}

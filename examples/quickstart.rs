@@ -1,0 +1,56 @@
+//! Quickstart: instrument a program, explore its precision tradeoff
+//! space, and read the frontier — the paper's §IV workflow in ~60 lines
+//! of user code.
+//!
+//!     cargo run --release --example quickstart
+
+use neat::coordinator::experiments::{explore_rule, Budget, THRESHOLDS};
+use neat::coordinator::{Evaluator, RuleKind};
+use neat::report::ascii_tradeoff_plot;
+use neat::stats::{lower_convex_hull, savings_at_thresholds};
+
+fn main() {
+    // Step 1-2: pick a workload; NEAT profiles it and fixes the
+    // optimization target (blackscholes is single-precision).
+    let workload = neat::bench_suite::by_name("blackscholes").unwrap();
+    let eval = Evaluator::new(workload, None);
+    println!(
+        "profiled: top functions = {:?} (target: {})",
+        eval.top_functions,
+        eval.target.name()
+    );
+
+    // Step 3-5: the FPI library is mantissa truncation (24 widths); the
+    // CIP placement rule maps each hot function to its own width; the
+    // NSGA-II explorer searches the 24^4 configuration space.
+    let result = explore_rule(&eval, RuleKind::Cip, Budget::default());
+
+    // Step 6: analyze — the tradeoff scatter, its lower hull, and the
+    // best configuration within each error budget.
+    let points = result.fpu_points();
+    let hull = lower_convex_hull(&points);
+    println!(
+        "{}",
+        ascii_tradeoff_plot("blackscholes / CIP", &points, &hull, 56, 12)
+    );
+
+    let savings = savings_at_thresholds(&points, &THRESHOLDS);
+    for (t, nec) in THRESHOLDS.iter().zip(&savings) {
+        println!(
+            "within {:>4.0}% error: {:>5.1}% FPU energy savings",
+            t * 100.0,
+            (1.0 - nec) * 100.0
+        );
+    }
+
+    println!("\nPareto front (error, energy, per-function mantissa widths):");
+    for (genome, d) in result.front().iter().take(8) {
+        println!(
+            "  err {:>6.3}%  NEC {:>6.4}  bits {:?} ({:?})",
+            d.error * 100.0,
+            d.fpu_nec,
+            genome,
+            eval.top_functions
+        );
+    }
+}

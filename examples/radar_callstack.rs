@@ -1,0 +1,53 @@
+//! The function-call-stack experiment (paper §V-F / Fig. 9): on the
+//! radar pipeline, the FCS rule prices the shared FFT kernel *by
+//! caller* — one precision for fft-under-LPF, another for fft-under-PC
+//! — which the CIP rule cannot express.
+//!
+//!     cargo run --release --example radar_callstack
+
+use neat::coordinator::experiments::{explore_rule, Budget, THRESHOLDS};
+use neat::coordinator::{Evaluator, RuleKind};
+use neat::stats::savings_at_thresholds;
+
+fn main() {
+    let eval = Evaluator::new(neat::bench_suite::by_name("radar").unwrap(), None);
+    println!(
+        "radar: {} top functions; FCS maps {} (fft/complex_mul/twiddle follow their caller)",
+        eval.top_functions.len(),
+        eval.fcs_functions.len()
+    );
+
+    let budget = Budget::default();
+    let cip = explore_rule(&eval, RuleKind::Cip, budget);
+    let fcs = explore_rule(&eval, RuleKind::Fcs, budget);
+
+    let cip_s = savings_at_thresholds(&cip.fpu_points(), &THRESHOLDS);
+    let fcs_s = savings_at_thresholds(&fcs.fpu_points(), &THRESHOLDS);
+
+    println!("\n{:<10} {:>12} {:>12} {:>12}", "rule", "@1% err", "@5% err", "@10% err");
+    for (name, s) in [("CIP", &cip_s), ("FCS", &fcs_s)] {
+        println!(
+            "{name:<10} {:>11.1}% {:>11.1}% {:>11.1}%",
+            (1.0 - s[0]) * 100.0,
+            (1.0 - s[1]) * 100.0,
+            (1.0 - s[2]) * 100.0
+        );
+    }
+    println!(
+        "\nFCS advantage: {:+.1} / {:+.1} / {:+.1} percentage points",
+        (cip_s[0] - fcs_s[0]) * 100.0,
+        (cip_s[1] - fcs_s[1]) * 100.0,
+        (cip_s[2] - fcs_s[2]) * 100.0
+    );
+
+    println!("\nbest FCS configurations (per-caller-subtree widths):");
+    for (genome, d) in fcs.front().iter().take(6) {
+        println!(
+            "  err {:>6.3}%  NEC {:>6.4}  {:?} -> {:?}",
+            d.error * 100.0,
+            d.fpu_nec,
+            eval.fcs_functions,
+            genome
+        );
+    }
+}

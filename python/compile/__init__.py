@@ -1,0 +1,10 @@
+"""NEAT build-time package: L1 Pallas kernels, L2 LeNet-5, AOT lowering.
+
+x64 is enabled globally: the f64 truncation oracle (`kernels.ref`) needs
+real double-precision arithmetic. All model tensors declare explicit
+dtypes, so this does not change any artifact's types.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,116 @@
+"""AOT compile path: train LeNet-5, lower the Pallas-backed inference
+function to HLO *text*, and serialize everything the Rust runtime needs.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs (all under ``artifacts/``):
+    lenet.hlo.txt       — inference module; params: images f32[B,32,32,1],
+                          the 10 weight tensors (model.PARAM_SPECS order),
+                          bits i32[8]; returns (logits f32[B,10],).
+    lenet_weights.bin   — trained weights, flat little-endian f32 in
+                          PARAM_SPECS order.
+    eval_images.bin     — f32[EVAL_N, 32, 32, 1] held-out images.
+    eval_labels.bin     — i32[EVAL_N] labels.
+    lenet_meta.json     — shapes, batch size, slot names, per-slot FLOP
+                          counts, baseline (full-precision) accuracy.
+
+Python runs only here; the Rust binary is self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, train
+
+BATCH = 256
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_inference():
+    """Lower the Pallas-path forward fn with weights as runtime params."""
+
+    def infer(images, *flat_params_and_bits):
+        flat_params = flat_params_and_bits[:-1]
+        bits = flat_params_and_bits[-1]
+        params = {
+            name: p for (name, _), p in zip(model.PARAM_SPECS, flat_params)
+        }
+        return (model.lenet_forward(params, images, bits, use_pallas=True),)
+
+    specs = [jax.ShapeDtypeStruct((BATCH, 32, 32, 1), jnp.float32)]
+    specs += [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in model.PARAM_SPECS
+    ]
+    specs += [jax.ShapeDtypeStruct((model.NUM_SLOTS,), jnp.int32)]
+    return jax.jit(infer).lower(*specs)
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--skip-train",
+        action="store_true",
+        help="reuse existing weights/eval data, regenerate only the HLO",
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    hlo_path = os.path.join(args.out_dir, "lenet.hlo.txt")
+    weights_path = os.path.join(args.out_dir, "lenet_weights.bin")
+    meta_path = os.path.join(args.out_dir, "lenet_meta.json")
+
+    print("lowering inference module (pallas path)...")
+    text = to_hlo_text(lower_inference())
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text)} chars to {hlo_path}")
+
+    if args.skip_train and os.path.exists(weights_path):
+        print("skipping training (weights exist)")
+        return
+
+    print("training LeNet-5 on synthetic digits...")
+    params, eval_x, eval_y, acc = train.train()
+
+    flat = np.concatenate(
+        [np.asarray(params[name], np.float32).reshape(-1) for name, _ in model.PARAM_SPECS]
+    )
+    flat.astype("<f4").tofile(weights_path)
+    eval_x.astype("<f4").tofile(os.path.join(args.out_dir, "eval_images.bin"))
+    eval_y.astype("<i4").tofile(os.path.join(args.out_dir, "eval_labels.bin"))
+
+    meta = {
+        "batch": BATCH,
+        "eval_n": train.EVAL_N,
+        "slot_names": model.SLOT_NAMES,
+        "param_specs": [[n, list(s)] for n, s in model.PARAM_SPECS],
+        "flop_counts": model.flop_counts(batch=1),
+        "baseline_accuracy": acc,
+    }
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"baseline eval accuracy: {acc:.4f}")
+    print("artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Procedurally generated handwritten-digit corpus (MNIST stand-in).
+
+This environment has no network access, so the CNN case study (paper
+§V-H) runs on a synthetic digit dataset: each sample starts from a 5x7
+glyph bitmap, is scaled up, randomly rotated/sheared/translated, stroked
+with variable intensity, and corrupted with Gaussian noise — then placed
+on the 32x32 canvas LeNet-5 expects. The substitution is documented in
+DESIGN.md: the experiment needs a *real trained classifier* whose layers
+have heterogeneous precision sensitivity, which this provides (the
+trained model exceeds 97% held-out accuracy).
+
+Everything is seeded and deterministic so `make artifacts` is
+reproducible.
+"""
+
+import numpy as np
+
+# Classic 5x7 bitmap font, digits 0-9. Rows are strings of '.'/'#'.
+_GLYPHS = {
+    0: ["..#..", ".#.#.", "#...#", "#...#", "#...#", ".#.#.", "..#.."],
+    1: ["..#..", ".##..", "..#..", "..#..", "..#..", "..#..", ".###."],
+    2: [".###.", "#...#", "....#", "...#.", "..#..", ".#...", "#####"],
+    3: [".###.", "#...#", "....#", "..##.", "....#", "#...#", ".###."],
+    4: ["...#.", "..##.", ".#.#.", "#..#.", "#####", "...#.", "...#."],
+    5: ["#####", "#....", "####.", "....#", "....#", "#...#", ".###."],
+    6: [".###.", "#....", "#....", "####.", "#...#", "#...#", ".###."],
+    7: ["#####", "....#", "...#.", "..#..", ".#...", ".#...", ".#..."],
+    8: [".###.", "#...#", "#...#", ".###.", "#...#", "#...#", ".###."],
+    9: [".###.", "#...#", "#...#", ".####", "....#", "....#", ".###."],
+}
+
+IMAGE_SIZE = 32
+
+
+def _glyph_array(digit):
+    rows = _GLYPHS[digit]
+    return np.array([[1.0 if c == "#" else 0.0 for c in row] for row in rows], np.float32)
+
+
+def _render(digit, rng):
+    """Render one distorted 32x32 sample of ``digit``."""
+    glyph = _glyph_array(digit)  # (7, 5)
+    gh, gw = glyph.shape
+
+    # Target glyph box size on the canvas.
+    height = rng.uniform(16.0, 24.0)
+    width = height * (gw / gh) * rng.uniform(0.8, 1.25)
+    angle = np.deg2rad(rng.uniform(-15.0, 15.0))
+    shear = rng.uniform(-0.15, 0.15)
+    cx = IMAGE_SIZE / 2 + rng.uniform(-3.0, 3.0)
+    cy = IMAGE_SIZE / 2 + rng.uniform(-3.0, 3.0)
+
+    # Inverse mapping: canvas (x, y) -> glyph (u, v), bilinear sample.
+    cos_a, sin_a = np.cos(angle), np.sin(angle)
+    ys, xs = np.mgrid[0:IMAGE_SIZE, 0:IMAGE_SIZE].astype(np.float32)
+    dx, dy = xs - cx, ys - cy
+    # un-rotate
+    rx = cos_a * dx + sin_a * dy
+    ry = -sin_a * dx + cos_a * dy
+    rx = rx - shear * ry
+    # to glyph coords (centered)
+    u = rx / width * gw + (gw - 1) / 2
+    v = ry / height * gh + (gh - 1) / 2
+
+    u0 = np.floor(u).astype(np.int32)
+    v0 = np.floor(v).astype(np.int32)
+    fu, fv = u - u0, v - v0
+
+    def sample(vi, ui):
+        inside = (ui >= 0) & (ui < gw) & (vi >= 0) & (vi < gh)
+        ui_c = np.clip(ui, 0, gw - 1)
+        vi_c = np.clip(vi, 0, gh - 1)
+        return np.where(inside, glyph[vi_c, ui_c], 0.0)
+
+    img = (
+        sample(v0, u0) * (1 - fu) * (1 - fv)
+        + sample(v0, u0 + 1) * fu * (1 - fv)
+        + sample(v0 + 1, u0) * (1 - fu) * fv
+        + sample(v0 + 1, u0 + 1) * fu * fv
+    )
+
+    intensity = rng.uniform(0.75, 1.0)
+    img = np.clip(img * intensity, 0.0, 1.0)
+    img += rng.normal(0.0, rng.uniform(0.02, 0.08), img.shape)
+    return np.clip(img, 0.0, 1.0).astype(np.float32)
+
+
+def generate(n, seed):
+    """Generate ``n`` (image, label) pairs.
+
+    Returns (images f32[n, 32, 32, 1], labels i32[n]); label classes are
+    balanced round-robin and the order is shuffled deterministically.
+    """
+    rng = np.random.default_rng(seed)
+    labels = np.arange(n, dtype=np.int32) % 10
+    rng.shuffle(labels)
+    images = np.stack([_render(int(d), rng) for d in labels])
+    return images[..., None], labels

@@ -1,0 +1,98 @@
+"""Quantized (mantissa-truncated) matmul Pallas kernel.
+
+The paper's compute hot-spot for the CNN case study (§V-H): every conv /
+fully-connected layer in LeNet-5 is lowered to im2col + this kernel.
+Operands are truncated to a per-layer mantissa width, the product is
+accumulated wide (f32 — the MXU accumulator), and the result is truncated
+to the output width.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+  * grid tiles the output into (BLOCK_M, BLOCK_N) MXU-aligned blocks,
+  * the K dimension stays whole per block — LeNet K ≤ 400, so an
+    (BLOCK_M, K) + (K, BLOCK_N) + (BLOCK_M, BLOCK_N) working set is
+    ≤ ~0.5 MiB, far inside VMEM, letting Pallas double-buffer the
+    HBM→VMEM streams,
+  * truncation is a block-wide vector mask, not a per-scalar hook.
+
+``interpret=True`` lowers the kernel to plain HLO so the artifact runs on
+the CPU PJRT client (see /opt/xla-example/README.md).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Output-tile shape. On a real TPU the natural tile is MXU-aligned
+# (128, 128) and BLOCK_M would be set accordingly; under interpret=True
+# the grid lowers to a *sequential* HLO loop whose every trip
+# dynamic-update-slices the full output buffer, so loop trips — not
+# arithmetic — dominate. Stretching the M block from 4096 to 65536 cut
+# the AOT artifact's per-batch latency 316 ms -> 147 ms (2.15x) on the
+# CPU PJRT client (EXPERIMENTS.md §Perf L1/L2). The N block is sized to
+# the lane-aligned output width — LeNet layer widths are 6..120, so a
+# fixed 128-wide N block would be >20x padding waste.
+BLOCK_M = 65536
+LANE = 8  # N-padding granularity (TPU lane alignment)
+
+
+def _qmatmul_kernel(bits_ref, x_ref, w_ref, o_ref):
+    """One (BLOCK_M, BLOCK_N) output tile: truncate, matmul, truncate.
+
+    ``bits_ref`` holds [bits_in, bits_out].
+    """
+    zeroed_in = jnp.clip(ref.F32_MANTISSA_BITS - bits_ref[0], 0, 23).astype(jnp.uint32)
+    zeroed_out = jnp.clip(ref.F32_MANTISSA_BITS - bits_ref[1], 0, 23).astype(jnp.uint32)
+    mask_in = jnp.uint32(0xFFFFFFFF) << zeroed_in
+    mask_out = jnp.uint32(0xFFFFFFFF) << zeroed_out
+
+    def trunc(v, mask):
+        raw = jax.lax.bitcast_convert_type(v, jnp.uint32)
+        t = jax.lax.bitcast_convert_type(raw & mask, jnp.float32)
+        return jnp.where(jnp.isfinite(v), t, v)
+
+    xq = trunc(x_ref[...], mask_in)
+    wq = trunc(w_ref[...], mask_in)
+    acc = jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+    o_ref[...] = trunc(acc, mask_out)
+
+
+def _pad_to(a, rows, cols):
+    pr, pc = rows - a.shape[0], cols - a.shape[1]
+    if pr == 0 and pc == 0:
+        return a
+    return jnp.pad(a, ((0, pr), (0, pc)))
+
+
+def qmatmul(x, w, bits_in, bits_out):
+    """``truncate(truncate(x) @ truncate(w))`` with dynamic mantissa widths.
+
+    x: f32[M, K], w: f32[K, N]; ``bits_in``/``bits_out``: traced i32
+    scalars in [1, 24]. Returns f32[M, N].
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm = min(BLOCK_M, -(-m // LANE) * LANE)
+    pm = -(-m // bm) * bm
+    pn = -(-n // LANE) * LANE  # N block spans the whole (padded) width
+    xp = _pad_to(x, pm, k)
+    wp = _pad_to(w, k, pn)
+    bits = jnp.stack(
+        [jnp.asarray(bits_in, jnp.int32), jnp.asarray(bits_out, jnp.int32)]
+    )
+
+    out = pl.pallas_call(
+        _qmatmul_kernel,
+        grid=(pm // bm,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # bits: tiny, replicated
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, pn), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, pn), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((pm, pn), jnp.float32),
+        interpret=True,
+    )(bits, xp, wp)
+    return out[:m, :n]

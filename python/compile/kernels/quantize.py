@@ -1,0 +1,67 @@
+"""Element-wise mantissa-truncation Pallas kernel.
+
+This is the FPI (floating point implementation) primitive of the paper,
+expressed for TPU-class hardware: instead of hooking every scalar SSE
+instruction (the Pin mechanism on x86), truncation is applied as a
+vectorised mask over whole VMEM blocks — see DESIGN.md
+§Hardware-Adaptation.
+
+The kernel is lowered with ``interpret=True`` so it becomes plain HLO and
+runs on the CPU PJRT client (real-TPU Mosaic lowering is compile-only in
+this environment).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Block shape for the element-wise pass. 512*128 f32 = 256 KiB per block,
+# comfortably inside a TPU core's ~16 MiB VMEM with double-buffering.
+BLOCK_ROWS = 512
+BLOCK_COLS = 128
+
+
+def _quantize_kernel(bits_ref, x_ref, o_ref):
+    """Truncate a VMEM block of f32 to ``bits_ref[0]`` mantissa bits."""
+    keep = bits_ref[0]
+    zeroed = jnp.clip(ref.F32_MANTISSA_BITS - keep, 0, 23).astype(jnp.uint32)
+    mask = jnp.uint32(0xFFFFFFFF) << zeroed
+    x = x_ref[...]
+    raw = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    trunc = jax.lax.bitcast_convert_type(raw & mask, jnp.float32)
+    o_ref[...] = jnp.where(jnp.isfinite(x), trunc, x)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def quantize(x, keep_bits):
+    """Truncate an arbitrarily-shaped f32 array to ``keep_bits`` mantissa bits.
+
+    ``keep_bits`` is a runtime i32 scalar (traced), so a single lowered
+    module serves every precision configuration the explorer visits.
+    """
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    cols = BLOCK_COLS
+    rows = -(-n // cols)  # ceil
+    pad_rows = -(-rows // BLOCK_ROWS) * BLOCK_ROWS
+    padded = jnp.zeros((pad_rows * cols,), jnp.float32)
+    padded = padded.at[:n].set(flat).reshape(pad_rows, cols)
+    bits = jnp.asarray(keep_bits, jnp.int32).reshape(1)
+
+    out = pl.pallas_call(
+        _quantize_kernel,
+        grid=(pad_rows // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # bits: tiny, replicated
+            pl.BlockSpec((BLOCK_ROWS, cols), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((pad_rows, cols), jnp.float32),
+        interpret=True,
+    )(bits, padded)
+    return out.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracle implementations for the Pallas kernels.
+
+These are the correctness references. The truncation primitives are exact
+bit operations, so the Pallas quantize kernel must agree with them
+bit-for-bit. Matmul accumulation order, however, is shape-dependent (the
+kernel computes per-block gemms over padded tiles), so the qmatmul kernel
+is compared against `qmatmul_ref` within a one-reassociation-ULP
+tolerance scaled by the output truncation step.
+
+The truncation semantics mirror the paper (§III-C) and the Rust FPI layer
+(`rust/src/fpi/truncate.rs`):
+
+* single precision carries 24 mantissa bits (1 implicit + 23 explicit);
+  keeping ``k`` of them zeroes the low ``24 - k`` explicit bits,
+* double precision carries 53 bits (1 implicit + 52 explicit); keeping
+  ``k`` zeroes the low ``53 - k`` explicit bits,
+* truncation is round-toward-zero (bit masking), exactly what a pruned
+  FPU datapath produces,
+* non-finite values (NaN/Inf) pass through untouched — masking the
+  mantissa of a NaN could otherwise forge an Inf.
+"""
+
+import jax
+import jax.numpy as jnp
+
+F32_MANTISSA_BITS = 24  # incl. implicit leading 1
+F64_MANTISSA_BITS = 53
+
+
+def truncate_f32(x, keep_bits):
+    """Keep ``keep_bits`` of the 24 f32 mantissa bits; zero the rest.
+
+    ``keep_bits`` may be a traced i32 scalar (it is a runtime input of the
+    AOT-lowered model, so the same executable serves every configuration).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    keep = jnp.asarray(keep_bits, jnp.int32)
+    zeroed = jnp.clip(F32_MANTISSA_BITS - keep, 0, 23).astype(jnp.uint32)
+    mask = jnp.uint32(0xFFFFFFFF) << zeroed
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    trunc = jax.lax.bitcast_convert_type(bits & mask, jnp.float32)
+    return jnp.where(jnp.isfinite(x), trunc, x)
+
+
+def truncate_f64(x, keep_bits):
+    """Keep ``keep_bits`` of the 53 f64 mantissa bits; zero the rest."""
+    x = jnp.asarray(x, jnp.float64)
+    keep = jnp.asarray(keep_bits, jnp.int32)
+    zeroed = jnp.clip(F64_MANTISSA_BITS - keep, 0, 52).astype(jnp.uint64)
+    mask = jnp.uint64(0xFFFFFFFFFFFFFFFF) << zeroed
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint64)
+    trunc = jax.lax.bitcast_convert_type(bits & mask, jnp.float64)
+    return jnp.where(jnp.isfinite(x), trunc, x)
+
+
+def qmatmul_ref(x, w, bits_in, bits_out):
+    """Oracle for the quantized matmul kernel.
+
+    Operands are truncated to ``bits_in`` mantissa bits, the product is
+    accumulated in full f32 (the MXU-style wide accumulator), and the
+    result is truncated to ``bits_out``.
+    """
+    xq = truncate_f32(x, bits_in)
+    wq = truncate_f32(w, bits_in)
+    acc = jnp.matmul(xq, wq, preferred_element_type=jnp.float32)
+    return truncate_f32(acc, bits_out)
+
+
+def quantize_ref(x, keep_bits):
+    """Oracle for the element-wise quantize kernel (f32)."""
+    return truncate_f32(x, keep_bits)

@@ -1,0 +1,187 @@
+"""L2: LeNet-5 forward pass with per-slot mantissa-bit truncation.
+
+The paper's CNN case study (§V-H, Table IV/V) explores per-layer floating
+point precision for LeNet-5. The model here is written so that the
+*precision configuration is a runtime input*: the forward function takes
+an i32[8] vector of mantissa widths (one per Table-V slot), meaning one
+AOT-lowered HLO module serves every point the Rust NSGA-II explorer
+visits — Python never runs on the search path.
+
+Table-V slot layout (indices into ``bits``):
+    0 conv1   1 pool1   2 conv2   3 pool2   4 conv3
+    5 fc (both fully-connected layers)   6 tanh   7 internal (softmax &c.)
+
+Two execution paths share this file:
+  * ``lenet_forward(..., use_pallas=True)`` — conv/FC layers run through
+    the L1 Pallas qmatmul kernel (im2col + tiled quantized matmul); this
+    is what `aot.py` lowers to the artifact.
+  * ``use_pallas=False`` — the same math via the pure-jnp oracle
+    (`kernels.ref`); used for training (bits=24 everywhere) and as the
+    pytest cross-check for the Pallas path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import qmatmul as qmm
+from .kernels import ref
+
+NUM_SLOTS = 8
+SLOT_NAMES = [
+    "conv1", "pool1", "conv2", "pool2", "conv3", "fc", "tanh", "internal",
+]
+
+# (name, shape) of every parameter, in the flat serialization order used by
+# artifacts/lenet_weights.bin and the Rust runtime.
+PARAM_SPECS = [
+    ("conv1_w", (5, 5, 1, 6)),
+    ("conv1_b", (6,)),
+    ("conv2_w", (5, 5, 6, 16)),
+    ("conv2_b", (16,)),
+    ("conv3_w", (5, 5, 16, 120)),
+    ("conv3_b", (120,)),
+    ("fc1_w", (120, 84)),
+    ("fc1_b", (84,)),
+    ("fc2_w", (84, 10)),
+    ("fc2_b", (10,)),
+]
+
+
+def init_params(key):
+    """Glorot-uniform initialisation for every PARAM_SPECS entry."""
+    params = {}
+    for name, shape in PARAM_SPECS:
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            if len(shape) == 4:
+                fan_in = shape[0] * shape[1] * shape[2]
+                fan_out = shape[0] * shape[1] * shape[3]
+            else:
+                fan_in, fan_out = shape
+            limit = jnp.sqrt(6.0 / (fan_in + fan_out))
+            params[name] = jax.random.uniform(
+                sub, shape, jnp.float32, -limit, limit
+            )
+    return params
+
+
+def _im2col(x, kh, kw):
+    """Extract valid-padding (kh, kw) patches.
+
+    x: f32[B, H, W, C] → f32[B, OH, OW, kh*kw*C], patch layout matching a
+    HWIO kernel reshaped to (kh*kw*C, O).
+    """
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    # conv_general_dilated_patches yields channel-major (C, kh, kw) feature
+    # layout; transpose to (kh, kw, C) to match a reshaped HWIO kernel.
+    b, oh, ow, _ = patches.shape
+    c = x.shape[-1]
+    patches = patches.reshape(b, oh, ow, c, kh, kw)
+    patches = patches.transpose(0, 1, 2, 4, 5, 3)
+    return patches.reshape(b, oh, ow, kh * kw * c)
+
+
+def _t(x, bits):
+    """Truncate unless ``bits`` is None (the differentiable training path).
+
+    Truncation goes through ``bitcast_convert_type``, which has no
+    gradient — so training must bypass it entirely rather than run with
+    bits=24 (value-identical but gradient-dead).
+    """
+    return x if bits is None else ref.truncate_f32(x, bits)
+
+
+def _matmul(x, w, bits_in, bits_out, use_pallas):
+    if bits_in is None:
+        return jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    if use_pallas:
+        return qmm.qmatmul(x, w, bits_in, bits_out)
+    return ref.qmatmul_ref(x, w, bits_in, bits_out)
+
+
+def _conv(x, w, b, bits, use_pallas):
+    """Quantized valid conv via im2col + qmatmul; bias add at out width."""
+    kh, kw, c, o = w.shape
+    cols = _im2col(x, kh, kw)
+    bsz, oh, ow, k = cols.shape
+    flat = cols.reshape(bsz * oh * ow, k)
+    out = _matmul(flat, w.reshape(k, o), bits, bits, use_pallas)
+    out = _t(out + b, bits)
+    return out.reshape(bsz, oh, ow, o)
+
+
+def _avg_pool(x, bits):
+    """2x2 stride-2 average pooling, result truncated to ``bits``."""
+    b, h, w, c = x.shape
+    x = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    out = x.mean(axis=(2, 4))
+    return _t(out, bits)
+
+
+def _tanh(x, bits):
+    return _t(jnp.tanh(x), bits)
+
+
+def lenet_forward(params, images, bits, use_pallas=True):
+    """LeNet-5 forward pass under a per-slot precision configuration.
+
+    images: f32[B, 32, 32, 1]; bits: i32[NUM_SLOTS] or None (training
+    path: no truncation anywhere, keeping gradients alive). Returns logits
+    f32[B, 10] (pre-softmax — argmax is taken on the Rust side; softmax
+    is monotonic so the 'internal' slot truncation is applied to logits).
+    """
+    if bits is None:
+        bits = [None] * NUM_SLOTS
+    b_tanh, b_int = bits[6], bits[7]
+
+    x = _t(images, bits[0])
+    x = _conv(x, params["conv1_w"], params["conv1_b"], bits[0], use_pallas)
+    x = _tanh(x, b_tanh)
+    x = _avg_pool(x, bits[1])
+    x = _conv(x, params["conv2_w"], params["conv2_b"], bits[2], use_pallas)
+    x = _tanh(x, b_tanh)
+    x = _avg_pool(x, bits[3])
+    x = _conv(x, params["conv3_w"], params["conv3_b"], bits[4], use_pallas)
+    x = _tanh(x, b_tanh)
+    x = x.reshape(x.shape[0], 120)
+    x = _matmul(x, params["fc1_w"], bits[5], bits[5], use_pallas)
+    x = _t(x + params["fc1_b"], bits[5])
+    x = _tanh(x, b_tanh)
+    x = _matmul(x, params["fc2_w"], bits[5], bits[5], use_pallas)
+    logits = _t(x + params["fc2_b"], bits[5])
+    # 'internal' slot: the classifier head's bookkeeping FLOPs
+    # (softmax normalisation &c.). Softmax is monotonic, so truncating the
+    # logits is the value-relevant effect.
+    return _t(logits, b_int)
+
+
+FULL_PRECISION = jnp.full((NUM_SLOTS,), 24, jnp.int32)
+
+
+def flop_counts(batch=1):
+    """Analytical FLOP count per Table-V slot for one forward pass.
+
+    Mirrors paper Fig 10 (FLOP breakdown per layer). Counts
+    multiply-accumulate as 2 FLOPs, pooling as adds + one mul per window,
+    tanh at its FLOP-equivalent polynomial cost (est. 8 FLOPs/elem),
+    softmax as exp(8) + div(1) per class plus the normalising sum.
+    """
+    counts = {}
+    counts["conv1"] = batch * 28 * 28 * 6 * (2 * 25 + 1)
+    counts["pool1"] = batch * 14 * 14 * 6 * 4
+    counts["conv2"] = batch * 10 * 10 * 16 * (2 * 25 * 6 + 1)
+    counts["pool2"] = batch * 5 * 5 * 16 * 4
+    counts["conv3"] = batch * 1 * 1 * 120 * (2 * 25 * 16 + 1)
+    counts["fc"] = batch * (2 * 120 * 84 + 84 + 2 * 84 * 10 + 10)
+    tanh_elems = batch * (28 * 28 * 6 + 10 * 10 * 16 + 120 + 84)
+    counts["tanh"] = tanh_elems * 8
+    counts["internal"] = batch * (10 * 9 + 10 + 10)
+    return counts

@@ -1,0 +1,80 @@
+"""Train LeNet-5 on the synthetic digit corpus (build-time only).
+
+Runs once inside `make artifacts`; the trained weights are serialized for
+the Rust runtime. Training uses the pure-jnp model path at full precision
+(bits = 24 everywhere) — precision exploration happens later, on the Rust
+side, against the AOT-compiled inference module.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dataset, model
+
+TRAIN_N = 6000
+EVAL_N = 1024
+TRAIN_SEED = 1234
+EVAL_SEED = 5678
+BATCH = 64
+EPOCHS = 8
+LR = 0.05
+MOMENTUM = 0.9
+
+
+def _loss_fn(params, images, labels):
+    # bits=None: the untruncated differentiable path (bitcast has no grad)
+    logits = model.lenet_forward(params, images, None, use_pallas=False)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    return nll
+
+
+@jax.jit
+def _train_step(params, velocity, images, labels):
+    loss, grads = jax.value_and_grad(_loss_fn)(params, images, labels)
+    new_v = {k: MOMENTUM * velocity[k] - LR * grads[k] for k in params}
+    new_p = {k: params[k] + new_v[k] for k in params}
+    return new_p, new_v, loss
+
+
+@jax.jit
+def _accuracy(params, images, labels):
+    logits = model.lenet_forward(params, images, None, use_pallas=False)
+    return (jnp.argmax(logits, axis=1) == labels).mean()
+
+
+def train(verbose=True):
+    """Train and return (params, eval_images, eval_labels, eval_accuracy)."""
+    train_x, train_y = dataset.generate(TRAIN_N, TRAIN_SEED)
+    eval_x, eval_y = dataset.generate(EVAL_N, EVAL_SEED)
+
+    params = model.init_params(jax.random.PRNGKey(0))
+    velocity = {k: jnp.zeros_like(v) for k, v in params.items()}
+
+    rng = np.random.default_rng(99)
+    steps_per_epoch = TRAIN_N // BATCH
+    t0 = time.time()
+    for epoch in range(EPOCHS):
+        order = rng.permutation(TRAIN_N)
+        total = 0.0
+        for step in range(steps_per_epoch):
+            idx = order[step * BATCH : (step + 1) * BATCH]
+            params, velocity, loss = _train_step(
+                params, velocity, jnp.asarray(train_x[idx]), jnp.asarray(train_y[idx])
+            )
+            total += float(loss)
+        acc = float(_accuracy(params, jnp.asarray(eval_x), jnp.asarray(eval_y)))
+        if verbose:
+            print(
+                f"epoch {epoch + 1}/{EPOCHS}  loss={total / steps_per_epoch:.4f}  "
+                f"eval_acc={acc:.4f}  ({time.time() - t0:.1f}s)"
+            )
+
+    return params, eval_x, eval_y, acc
+
+
+if __name__ == "__main__":
+    train()

@@ -1,0 +1,54 @@
+"""Tests for the synthetic digit corpus generator."""
+
+import numpy as np
+
+from compile import dataset
+
+
+def test_shapes_and_dtypes():
+    x, y = dataset.generate(50, seed=1)
+    assert x.shape == (50, 32, 32, 1) and x.dtype == np.float32
+    assert y.shape == (50,) and y.dtype == np.int32
+
+
+def test_deterministic():
+    a = dataset.generate(20, seed=7)
+    b = dataset.generate(20, seed=7)
+    assert np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1])
+
+
+def test_seeds_differ():
+    a, _ = dataset.generate(20, seed=7)
+    b, _ = dataset.generate(20, seed=8)
+    assert not np.array_equal(a, b)
+
+
+def test_value_range():
+    x, _ = dataset.generate(100, seed=2)
+    assert x.min() >= 0.0 and x.max() <= 1.0
+
+
+def test_labels_balanced():
+    _, y = dataset.generate(1000, seed=3)
+    counts = np.bincount(y, minlength=10)
+    assert counts.min() == counts.max() == 100
+
+
+def test_images_have_signal():
+    """Every image should contain actual glyph strokes, not just noise."""
+    x, _ = dataset.generate(100, seed=4)
+    bright = (x > 0.5).mean(axis=(1, 2, 3))
+    assert (bright > 0.02).all(), "some images are blank"
+    assert (bright < 0.6).all(), "some images are saturated"
+
+
+def test_classes_distinguishable_by_template():
+    """Nearest-mean-template classification should beat chance by a lot —
+    a smoke test that the renderer actually encodes the label."""
+    x, y = dataset.generate(600, seed=5)
+    tx, ty = x[:500], y[:500]
+    ex, ey = x[500:], y[500:]
+    templates = np.stack([tx[ty == d].mean(axis=0) for d in range(10)])
+    dists = ((ex[:, None] - templates[None]) ** 2).sum(axis=(2, 3, 4))
+    pred = dists.argmin(axis=1)
+    assert (pred == ey).mean() > 0.5

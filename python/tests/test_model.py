@@ -1,0 +1,102 @@
+"""Tests for the LeNet-5 model: pallas path vs ref path, shapes, FLOPs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import dataset, model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(42))
+
+
+@pytest.fixture(scope="module")
+def batch():
+    x, y = dataset.generate(16, seed=21)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def test_logit_shape(params, batch):
+    x, _ = batch
+    out = model.lenet_forward(params, x, model.FULL_PRECISION, use_pallas=False)
+    assert out.shape == (16, 10)
+
+
+@pytest.mark.parametrize(
+    "bits",
+    [
+        [24] * 8,
+        [10, 23, 14, 4, 19, 4, 20, 17],  # paper Table V @1%
+        [6, 16, 12, 9, 13, 1, 17, 11],  # paper Table V @10%
+        [1] * 8,
+    ],
+)
+def test_pallas_matches_ref(params, batch, bits):
+    """Pallas and ref paths agree up to gemm reassociation ULPs (the
+    truncation steps themselves are bit-exact; see test_qmatmul.py), and
+    they must agree on every predicted class."""
+    x, _ = batch
+    bv = jnp.asarray(bits, jnp.int32)
+    a = np.asarray(model.lenet_forward(params, x, bv, use_pallas=True))
+    b = np.asarray(model.lenet_forward(params, x, bv, use_pallas=False))
+    step = 2.0 ** (1 - min(bits))
+    tol = np.maximum(np.abs(b), 1.0) * (1e-5 + step)
+    assert np.all(np.abs(a - b) <= tol)
+    assert np.array_equal(a.argmax(axis=1), b.argmax(axis=1))
+
+
+def test_full_precision_matches_untruncated_conv(params, batch):
+    """bits=24 must reproduce a plain lax.conv LeNet bit-for-bit."""
+    x, _ = batch
+
+    def plain(params, x):
+        def conv(x, w, b):
+            out = jax.lax.conv_general_dilated(
+                x, w, (1, 1), "VALID",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+            return out + b
+
+        x = conv(x, params["conv1_w"], params["conv1_b"])
+        x = jnp.tanh(x)
+        x = x.reshape(x.shape[0], 14, 2, 14, 2, 6).mean(axis=(2, 4))
+        x = conv(x, params["conv2_w"], params["conv2_b"])
+        x = jnp.tanh(x)
+        x = x.reshape(x.shape[0], 5, 2, 5, 2, 16).mean(axis=(2, 4))
+        x = conv(x, params["conv3_w"], params["conv3_b"])
+        x = jnp.tanh(x)
+        x = x.reshape(x.shape[0], 120)
+        x = jnp.tanh(x @ params["fc1_w"] + params["fc1_b"])
+        return x @ params["fc2_w"] + params["fc2_b"]
+
+    got = model.lenet_forward(params, x, model.FULL_PRECISION, use_pallas=False)
+    want = plain(params, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_lower_precision_changes_output(params, batch):
+    x, _ = batch
+    full = model.lenet_forward(params, x, model.FULL_PRECISION, use_pallas=False)
+    low = model.lenet_forward(
+        params, x, jnp.full((8,), 2, jnp.int32), use_pallas=False
+    )
+    assert not np.array_equal(np.asarray(full), np.asarray(low))
+
+
+def test_param_specs_order_and_sizes():
+    sizes = {n: int(np.prod(s)) for n, s in model.PARAM_SPECS}
+    assert sizes["conv1_w"] == 150 and sizes["conv3_w"] == 48000
+    assert sum(sizes.values()) == 61706  # LeNet-5 parameter count
+
+
+def test_flop_counts_shape_of_fig10():
+    """Paper Fig 10: conv layers dominate (>69% combined for conv+pool
+    feature extraction); FLOPs shrink toward later conv layers' outputs."""
+    c = model.flop_counts()
+    total = sum(c.values())
+    conv_share = (c["conv1"] + c["conv2"] + c["conv3"]) / total
+    assert conv_share > 0.69
+    assert c["internal"] < c["fc"] < c["conv2"]

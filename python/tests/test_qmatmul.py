@@ -1,0 +1,94 @@
+"""Pallas qmatmul kernel vs the pure-jnp oracle (hypothesis sweeps).
+
+The operand/result *truncation* inside the kernel is an exact bit
+operation; the f32 *accumulation* order is shape-dependent (per-block
+padded gemm vs one full gemm in the oracle), so comparisons allow a
+reassociation tolerance: a few ULPs of the accumulator, widened by the
+output truncation step 2^(1-bits_out) (a sub-ULP difference straddling a
+mask boundary moves the truncated value by one step).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import qmatmul, ref
+
+COMMON = dict(deadline=None, max_examples=20)
+
+
+def assert_close(got, want, x, w, bits_out):
+    """|got - want| <= accumulation slack + one output-truncation step.
+
+    Reassociation error scales with the *accumulated magnitude*
+    sum_k |x_ik w_kj| (cancellation can make |want| arbitrarily smaller),
+    so the slack term uses the absolute-value product as its scale.
+    """
+    absprod = np.abs(x) @ np.abs(w)
+    acc_slack = absprod * (8 * 2.0**-23)
+    step = 2.0 ** (1 - bits_out) * np.maximum(np.abs(want), np.abs(got))
+    tol = acc_slack + step + 1e-30
+    assert np.all(np.abs(got - want) <= tol), np.abs(got - want).max()
+
+
+@st.composite
+def matmul_case(draw):
+    m = draw(st.sampled_from([1, 3, 8, 37, 120, 300]))
+    k = draw(st.sampled_from([1, 5, 25, 120, 400]))
+    n = draw(st.sampled_from([1, 6, 10, 16, 84, 120]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    return x, w
+
+
+@given(case=matmul_case(), bits_in=st.integers(1, 24), bits_out=st.integers(1, 24))
+@settings(**COMMON)
+def test_matches_oracle(case, bits_in, bits_out):
+    x, w = case
+    got = np.asarray(qmatmul.qmatmul(jnp.asarray(x), jnp.asarray(w), bits_in, bits_out))
+    want = np.asarray(ref.qmatmul_ref(x, w, bits_in, bits_out))
+    assert_close(got, want, x, w, bits_out)
+
+
+@given(case=matmul_case())
+@settings(**COMMON)
+def test_full_precision_is_plain_matmul(case):
+    x, w = case
+    got = np.asarray(qmatmul.qmatmul(jnp.asarray(x), jnp.asarray(w), 24, 24))
+    want = np.asarray(jnp.matmul(jnp.asarray(x), jnp.asarray(w)))
+    assert_close(got, want, x, w, 24)
+
+
+def test_operand_truncation_is_exact():
+    """With a single-element K there is no accumulation: results must be
+    bit-exact against the oracle for every bit width."""
+    rng = np.random.default_rng(10)
+    x = rng.standard_normal((33, 1)).astype(np.float32)
+    w = rng.standard_normal((1, 7)).astype(np.float32)
+    for bits in (1, 5, 13, 24):
+        got = np.asarray(qmatmul.qmatmul(jnp.asarray(x), jnp.asarray(w), bits, bits))
+        want = np.asarray(ref.qmatmul_ref(x, w, bits, bits))
+        assert np.array_equal(got, want)
+
+
+def test_blocking_is_invisible():
+    """Results stay within tolerance when M spans many blocks."""
+    rng = np.random.default_rng(11)
+    x = rng.standard_normal((qmatmul.BLOCK_M * 2 + 17, 25)).astype(np.float32)
+    w = rng.standard_normal((25, 6)).astype(np.float32)
+    got = np.asarray(qmatmul.qmatmul(jnp.asarray(x), jnp.asarray(w), 9, 9))
+    want = np.asarray(ref.qmatmul_ref(x, w, 9, 9))
+    assert_close(got, want, x, w, 9)
+
+
+def test_padding_rows_do_not_leak():
+    """Zero padding must not perturb real output rows/cols."""
+    rng = np.random.default_rng(12)
+    x = rng.standard_normal((5, 7)).astype(np.float32)
+    w = rng.standard_normal((7, 3)).astype(np.float32)
+    small = np.asarray(qmatmul.qmatmul(jnp.asarray(x), jnp.asarray(w), 13, 13))
+    assert small.shape == (5, 3)
+    want = np.asarray(ref.qmatmul_ref(x, w, 13, 13))
+    assert_close(small, want, x, w, 13)

@@ -1,0 +1,70 @@
+"""Pallas quantize kernel vs the pure-jnp oracle (hypothesis sweeps).
+
+The kernel must agree with `ref.quantize_ref` exactly (truncation is a
+deterministic bit operation, so comparison is bit equality, not
+allclose).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quantize, ref
+
+# Keep hypothesis example counts moderate: each example round-trips a
+# pallas_call in interpret mode.
+COMMON = dict(deadline=None, max_examples=25)
+
+
+@st.composite
+def f32_arrays(draw):
+    shape = draw(
+        st.sampled_from(
+            [(1,), (7,), (128,), (3, 5), (65, 3), (2, 3, 4), (512,), (1, 1, 1, 9)]
+        )
+    )
+    n = int(np.prod(shape))
+    scale = draw(st.sampled_from([1e-20, 1e-3, 1.0, 1e4, 1e30]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(n).reshape(shape) * scale).astype(np.float32)
+
+
+@given(x=f32_arrays(), bits=st.integers(1, 24))
+@settings(**COMMON)
+def test_matches_oracle(x, bits):
+    got = np.asarray(quantize.quantize(jnp.asarray(x), bits))
+    want = np.asarray(ref.quantize_ref(x, bits))
+    assert np.array_equal(got, want)
+
+
+@given(x=f32_arrays())
+@settings(**COMMON)
+def test_full_precision_identity(x):
+    got = np.asarray(quantize.quantize(jnp.asarray(x), 24))
+    assert np.array_equal(got, x)
+
+
+@given(x=f32_arrays(), bits=st.integers(1, 23))
+@settings(**COMMON)
+def test_magnitude_never_grows(x, bits):
+    got = np.asarray(quantize.quantize(jnp.asarray(x), bits))
+    assert np.all(np.abs(got) <= np.abs(x))
+
+
+@given(bits=st.integers(1, 24))
+@settings(**COMMON)
+def test_nonfinite_passthrough(bits):
+    x = np.array([np.nan, np.inf, -np.inf, 1.5], np.float32)
+    got = np.asarray(quantize.quantize(jnp.asarray(x), bits))
+    assert np.isnan(got[0]) and got[1] == np.inf and got[2] == -np.inf
+
+
+@given(x=f32_arrays(), b1=st.integers(1, 24), b2=st.integers(1, 24))
+@settings(**COMMON)
+def test_coarser_truncation_dominates(x, b1, b2):
+    """trunc_k2(trunc_k1(x)) == trunc_min(k1,k2)(x) — masks compose."""
+    lo = min(b1, b2)
+    a = quantize.quantize(quantize.quantize(jnp.asarray(x), b1), b2)
+    b = quantize.quantize(jnp.asarray(x), lo)
+    assert np.array_equal(np.asarray(a), np.asarray(b))

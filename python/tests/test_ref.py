@@ -1,0 +1,138 @@
+"""Unit tests for the truncation semantics (the FPI contract).
+
+These pin the exact bit-level behaviour that the Rust FPI layer
+(`rust/src/fpi/truncate.rs`) replicates — both sides must agree
+bit-for-bit for the L1/L3 energy accounting to line up.
+"""
+
+import math
+import struct
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+
+def f32_bits(x):
+    return struct.unpack("<I", struct.pack("<f", x))[0]
+
+
+def trunc32(x, k):
+    return float(np.asarray(ref.truncate_f32(np.float32(x), k)))
+
+
+def trunc64(x, k):
+    return float(np.asarray(ref.truncate_f64(np.float64(x), k)))
+
+
+class TestTruncateF32:
+    def test_full_precision_is_identity(self):
+        xs = np.array([1.0, -3.14159, 1e-30, 6.02e23], np.float32)
+        out = np.asarray(ref.truncate_f32(xs, 24))
+        assert np.array_equal(out, xs)
+
+    def test_one_bit_keeps_only_implicit_leading_one(self):
+        # keep=1 zeroes all 23 explicit bits: any x in [2^e, 2^{e+1}) -> 2^e
+        assert trunc32(1.75, 1) == 1.0
+        assert trunc32(7.99, 1) == 4.0
+        assert trunc32(-1.75, 1) == -1.0
+
+    def test_known_bit_pattern(self):
+        # 1.5 = 1.1b; keeping 2 bits preserves it, keeping 1 floors to 1.0
+        assert trunc32(1.5, 2) == 1.5
+        assert trunc32(1.5, 1) == 1.0
+        # 1.25 = 1.01b needs 3 bits
+        assert trunc32(1.25, 3) == 1.25
+        assert trunc32(1.25, 2) == 1.0
+
+    def test_rounds_toward_zero(self):
+        rng = np.random.default_rng(3)
+        xs = (rng.standard_normal(500) * 100).astype(np.float32)
+        for k in (1, 5, 12, 20):
+            out = np.asarray(ref.truncate_f32(xs, k))
+            assert np.all(np.abs(out) <= np.abs(xs))
+            assert np.array_equal(np.signbit(out), np.signbit(xs))
+
+    def test_relative_error_bound(self):
+        # truncating to k bits gives relative error < 2^{1-k}
+        rng = np.random.default_rng(4)
+        xs = (rng.standard_normal(500) * 1e3).astype(np.float32)
+        for k in (2, 8, 16, 23):
+            out = np.asarray(ref.truncate_f32(xs, k))
+            rel = np.abs(out - xs) / np.abs(xs)
+            assert np.all(rel < 2.0 ** (1 - k))
+
+    def test_idempotent(self):
+        rng = np.random.default_rng(5)
+        xs = rng.standard_normal(200).astype(np.float32)
+        for k in (1, 7, 13):
+            once = np.asarray(ref.truncate_f32(xs, k))
+            twice = np.asarray(ref.truncate_f32(once, k))
+            assert np.array_equal(once, twice)
+
+    def test_nan_inf_passthrough(self):
+        xs = np.array([np.nan, np.inf, -np.inf], np.float32)
+        out = np.asarray(ref.truncate_f32(xs, 3))
+        assert math.isnan(out[0])
+        assert out[1] == np.inf and out[2] == -np.inf
+
+    def test_zero_preserved(self):
+        for k in (1, 12, 24):
+            assert trunc32(0.0, k) == 0.0
+            assert f32_bits(trunc32(-0.0, k)) == f32_bits(-0.0)
+
+    def test_bits_clamped_out_of_range(self):
+        # keep > 24 behaves as 24; keep < 1 behaves as 1 (clamp in kernel)
+        assert trunc32(1.75, 30) == 1.75
+        assert trunc32(1.75, 0) == 1.0
+
+
+class TestTruncateF64:
+    def test_full_precision_is_identity(self):
+        xs = np.array([1.0, -3.141592653589793, 1e-300], np.float64)
+        out = np.asarray(ref.truncate_f64(xs, 53))
+        assert np.array_equal(out, xs)
+
+    def test_one_bit(self):
+        assert trunc64(1.999999, 1) == 1.0
+        assert trunc64(-7.5, 1) == -4.0
+
+    def test_relative_error_bound(self):
+        rng = np.random.default_rng(6)
+        xs = rng.standard_normal(500) * 1e6
+        for k in (4, 24, 52):
+            out = np.asarray(ref.truncate_f64(xs, k))
+            rel = np.abs(out - xs) / np.abs(xs)
+            assert np.all(rel < 2.0 ** (1 - k))
+
+    def test_f32_embedding_consistency(self):
+        # a f32 value truncated to k via the f64 path (k<=24) matches f32 path
+        rng = np.random.default_rng(7)
+        xs = rng.standard_normal(100).astype(np.float32)
+        for k in (3, 11):
+            via32 = np.asarray(ref.truncate_f32(xs, k), np.float64)
+            via64 = np.asarray(ref.truncate_f64(xs.astype(np.float64), k))
+            assert np.array_equal(via32, via64)
+
+
+class TestQmatmulRef:
+    def test_full_precision_is_plain_matmul(self):
+        import jax.numpy as jnp
+        rng = np.random.default_rng(8)
+        x = rng.standard_normal((9, 17)).astype(np.float32)
+        w = rng.standard_normal((17, 5)).astype(np.float32)
+        got = np.asarray(ref.qmatmul_ref(x, w, 24, 24))
+        # compare against the same backend's gemm (numpy's own gemm may
+        # reassociate differently; the contract is "no truncation applied")
+        want = np.asarray(jnp.matmul(jnp.asarray(x), jnp.asarray(w)))
+        assert np.array_equal(got, want)
+
+    def test_truncation_order(self):
+        # operands truncated before the product, result after
+        x = np.array([[1.75]], np.float32)
+        w = np.array([[1.75]], np.float32)
+        got = float(np.asarray(ref.qmatmul_ref(x, w, 1, 24))[0, 0])
+        assert got == 1.0  # 1.0 * 1.0
+        got2 = float(np.asarray(ref.qmatmul_ref(x, w, 24, 1))[0, 0])
+        assert got2 == 2.0  # trunc(3.0625, 1 bit) = 2.0

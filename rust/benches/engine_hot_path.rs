@@ -1,0 +1,110 @@
+//! Bench: the engine's per-FLOP interception cost — the L3 hot path
+//! (every NSGA-II evaluation is millions of these).
+//!
+//! §Perf target (DESIGN.md): ≥50M instrumented FLOPs/s on this core.
+//!
+//!     cargo bench --bench engine_hot_path
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::collections::HashMap;
+
+use harness::bench;
+use neat::engine::FpContext;
+use neat::fpi::{FpiLibrary, Precision};
+use neat::placement::Placement;
+
+const N: u64 = 200_000;
+
+fn hot_loop32(ctx: &mut FpContext) -> f32 {
+    let mut acc = 1.000_123f32;
+    for i in 0..N {
+        acc = ctx.add32(acc, 0.25);
+        acc = ctx.mul32(acc, 0.999_9);
+        if i % 64 == 0 {
+            acc = ctx.div32(acc, 1.000_1);
+        }
+    }
+    acc
+}
+
+fn main() {
+    let mut reports = Vec::new();
+
+    // raw (uninstrumented) floor for reference
+    reports.push(
+        bench("raw f32 loop (no engine)", 2 * N, "flops", || {
+            let mut acc = 1.000_123f32;
+            for i in 0..N {
+                acc += 0.25;
+                acc *= 0.999_9;
+                if i % 64 == 0 {
+                    acc /= 1.000_1;
+                }
+            }
+            std::hint::black_box(acc);
+        })
+        .report(),
+    );
+
+    // exact (profiling) interception
+    let mut ctx = FpContext::profiler();
+    reports.push(
+        bench("engine exact (profiler)", 2 * N, "flops", || {
+            std::hint::black_box(hot_loop32(&mut ctx));
+        })
+        .report(),
+    );
+
+    // truncation fast path
+    let lib = FpiLibrary::truncation_family(Precision::Single);
+    let mut ctx =
+        FpContext::new(lib.clone(), Placement::whole_program(FpiLibrary::truncation_id(8)));
+    reports.push(
+        bench("engine truncate[8b] (WP)", 2 * N, "flops", || {
+            std::hint::black_box(hot_loop32(&mut ctx));
+        })
+        .report(),
+    );
+
+    // CIP with function scopes entered per 1000 FLOPs
+    let mut map = HashMap::new();
+    map.insert("hot".to_string(), FpiLibrary::truncation_id(8));
+    let mut ctx = FpContext::new(lib.clone(), Placement::current_function(map.clone()));
+    let hot = ctx.register("hot");
+    reports.push(
+        bench("engine truncate[8b] (CIP + scopes)", 2 * N, "flops", || {
+            let out = ctx.call(hot, |c| {
+                let mut acc = 1.000_123f32;
+                for i in 0..N {
+                    acc = c.add32(acc, 0.25);
+                    acc = c.mul32(acc, 0.999_9);
+                    if i % 64 == 0 {
+                        acc = c.div32(acc, 1.000_1);
+                    }
+                }
+                acc
+            });
+            std::hint::black_box(out);
+        })
+        .report(),
+    );
+
+    // scope enter/exit cost in isolation
+    let mut ctx = FpContext::new(lib, Placement::call_stack(map));
+    let f = ctx.register("hot");
+    reports.push(
+        bench("scope enter/exit (FCS rule)", 100_000, "calls", || {
+            for _ in 0..100_000 {
+                ctx.call(f, |c| std::hint::black_box(c.depth()));
+            }
+        })
+        .report(),
+    );
+
+    println!("== engine hot path ==");
+    for r in reports {
+        println!("{r}");
+    }
+}

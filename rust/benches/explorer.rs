@@ -1,0 +1,39 @@
+//! Bench: end-to-end exploration cost — one full NSGA-II configuration
+//! evaluation (the figure-harness unit) and a complete quick search.
+//!
+//!     cargo bench --bench explorer
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::bench;
+use neat::bench_suite::blackscholes::Blackscholes;
+use neat::coordinator::experiments::{explore_rule, Budget};
+use neat::coordinator::{EvalProblem, Evaluator, RuleKind};
+use neat::explore::Problem;
+
+fn main() {
+    println!("== explorer ==");
+    let eval = Evaluator::new(Box::new(Blackscholes::default()), None);
+
+    // one configuration evaluation (5 training inputs)
+    let problem = EvalProblem::new(&eval, RuleKind::Cip);
+    let genome = vec![12u32; problem.genome_len()];
+    let m = bench("one CIP config evaluation", 1, "configs", || {
+        std::hint::black_box(problem.evaluate(&genome));
+    });
+    println!("{}", m.report());
+    let _ = problem.take_details();
+
+    // a full quick search (~60 evaluations)
+    let m = bench("quick NSGA-II search (60 evals)", 60, "configs", || {
+        std::hint::black_box(explore_rule(&eval, RuleKind::Cip, Budget::quick()));
+    });
+    println!("{}", m.report());
+
+    // WP exhaustive sweep (24 evaluations)
+    let m = bench("WP exhaustive sweep (24 evals)", 24, "configs", || {
+        std::hint::black_box(explore_rule(&eval, RuleKind::Wp, Budget::quick()));
+    });
+    println!("{}", m.report());
+}

@@ -1,0 +1,98 @@
+//! Minimal timing harness shared by the bench targets (criterion is not
+//! available in the offline crate cache — see Cargo.toml).
+//!
+//! Methodology: warm up, then run timed batches until either the target
+//! wall time or the iteration cap is hit; report min / median / mean
+//! per-iteration times (min is the least noisy estimator on a busy
+//! single-core box).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+pub struct Measurement {
+    /// Bench label.
+    pub name: String,
+    /// Per-iteration wall times.
+    pub samples: Vec<Duration>,
+    /// Work units per iteration (for throughput lines); 0 = no rate.
+    pub units_per_iter: u64,
+    /// Unit label ("flops", "configs", ...).
+    pub unit: &'static str,
+}
+
+impl Measurement {
+    fn sorted_nanos(&self) -> Vec<f64> {
+        let mut ns: Vec<f64> = self.samples.iter().map(|d| d.as_nanos() as f64).collect();
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ns
+    }
+
+    /// Render one report line.
+    pub fn report(&self) -> String {
+        let ns = self.sorted_nanos();
+        let min = ns.first().copied().unwrap_or(0.0);
+        let median = ns[ns.len() / 2];
+        let mean = ns.iter().sum::<f64>() / ns.len() as f64;
+        let mut line = format!(
+            "{:<38} min {:>12}  med {:>12}  mean {:>12}  (n={})",
+            self.name,
+            fmt_ns(min),
+            fmt_ns(median),
+            fmt_ns(mean),
+            ns.len()
+        );
+        if self.units_per_iter > 0 && min > 0.0 {
+            let rate = self.units_per_iter as f64 / (min * 1e-9);
+            line.push_str(&format!("  [{} {}/s]", fmt_rate(rate), self.unit));
+        }
+        line
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+fn fmt_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2}G", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2}M", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2}K", r / 1e3)
+    } else {
+        format!("{r:.0}")
+    }
+}
+
+/// Time `body` repeatedly. `units_per_iter` enables a throughput line.
+pub fn bench(
+    name: &str,
+    units_per_iter: u64,
+    unit: &'static str,
+    mut body: impl FnMut(),
+) -> Measurement {
+    // warm-up
+    let warm_start = Instant::now();
+    while warm_start.elapsed() < Duration::from_millis(80) {
+        body();
+    }
+    // timed samples
+    let mut samples = Vec::new();
+    let budget = Duration::from_secs(2);
+    let start = Instant::now();
+    while start.elapsed() < budget && samples.len() < 200 {
+        let t0 = Instant::now();
+        body();
+        samples.push(t0.elapsed());
+    }
+    Measurement { name: name.to_string(), samples, units_per_iter, unit }
+}

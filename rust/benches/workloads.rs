@@ -1,0 +1,49 @@
+//! Bench: one instrumented run of every workload (the unit of work the
+//! explorer repeats ~2000× per benchmark per figure).
+//!
+//!     cargo bench --bench workloads
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::bench;
+use neat::bench_suite;
+use neat::engine::FpContext;
+use neat::fpi::{FpiLibrary, Precision};
+use neat::placement::Placement;
+
+fn main() {
+    println!("== workload runs (exact profiling context) ==");
+    for w in bench_suite::all() {
+        let seed = w.train_seeds()[0];
+        // count FLOPs once for the throughput line
+        let mut counter = FpContext::profiler();
+        w.run(&mut counter, seed);
+        let flops = counter.counters().total_flops();
+
+        let m = bench(w.name(), flops, "flops", || {
+            let mut ctx = FpContext::profiler();
+            std::hint::black_box(w.run(&mut ctx, seed));
+        });
+        println!("{}", m.report());
+    }
+
+    println!("\n== workload runs (truncate[6b] whole-program) ==");
+    for w in bench_suite::all() {
+        let seed = w.train_seeds()[0];
+        let target = w.default_target();
+        let lib = FpiLibrary::truncation_family(target);
+        let m = bench(w.name(), 0, "", || {
+            let mut ctx = FpContext::new(
+                lib.clone(),
+                Placement::whole_program(FpiLibrary::truncation_id(6)),
+            );
+            ctx.set_target(target);
+            std::hint::black_box(w.run(&mut ctx, seed));
+        });
+        println!("{}", m.report());
+    }
+
+    // suppress unused warnings for the Precision import pattern
+    let _ = Precision::Single;
+}

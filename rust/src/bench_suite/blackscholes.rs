@@ -1,0 +1,217 @@
+//! Blackscholes (Parsec): closed-form European option pricing.
+//!
+//! Table II: single precision, 4 placement-candidate functions
+//! (tradeoff space 24⁴). The decomposition mirrors the Parsec kernel:
+//! `cndf` (the CNDF rational approximation), `d1d2` (the log/sqrt term
+//! computation), `price_call` and `price_put` (the discounting
+//! combinations). `cndf` is by far the hottest and the least accuracy
+//! sensitive; `d1d2`'s `ln` is the touchiest — giving the heterogeneous
+//! sensitivity per-function placement exploits.
+
+use crate::engine::{FpContext, FuncId};
+use crate::fpi::Precision;
+use crate::util::Pcg64;
+
+use super::math32::{cndf32, exp32, ln32, sqrt32};
+use super::Workload;
+
+/// One option contract.
+#[derive(Clone, Copy)]
+struct Option32 {
+    spot: f32,
+    strike: f32,
+    rate: f32,
+    volatility: f32,
+    time: f32,
+    is_call: bool,
+}
+
+/// Blackscholes workload configuration.
+pub struct Blackscholes {
+    /// Number of options priced per input.
+    pub options: usize,
+}
+
+impl Default for Blackscholes {
+    fn default() -> Self {
+        Self { options: 500 }
+    }
+}
+
+struct Funcs {
+    d1d2: FuncId,
+    cndf: FuncId,
+    price_call: FuncId,
+    price_put: FuncId,
+}
+
+impl Blackscholes {
+    fn gen_inputs(&self, seed: u64) -> Vec<Option32> {
+        let mut rng = Pcg64::new(seed ^ 0xB5);
+        (0..self.options)
+            .map(|_| Option32 {
+                spot: rng.uniform(20.0, 180.0) as f32,
+                strike: rng.uniform(20.0, 180.0) as f32,
+                rate: rng.uniform(0.01, 0.08) as f32,
+                volatility: rng.uniform(0.08, 0.6) as f32,
+                time: rng.uniform(0.1, 2.0) as f32,
+                is_call: rng.chance(0.5),
+            })
+            .collect()
+    }
+
+    fn price(&self, ctx: &mut FpContext, f: &Funcs, opt: Option32) -> f32 {
+        // d1 = (ln(S/K) + (r + v²/2) T) / (v √T);  d2 = d1 - v √T
+        let (d1, d2, disc) = ctx.call(f.d1d2, |c| {
+            let ratio = c.div32(opt.spot, opt.strike);
+            let log_term = ln32(c, ratio);
+            let v2 = c.mul32(opt.volatility, opt.volatility);
+            let half_v2 = c.mul32(0.5, v2);
+            let drift = c.add32(opt.rate, half_v2);
+            let drift_t = c.mul32(drift, opt.time);
+            let num = c.add32(log_term, drift_t);
+            let sqrt_t = sqrt32(c, opt.time);
+            let v_sqrt_t = c.mul32(opt.volatility, sqrt_t);
+            let d1 = c.div32(num, v_sqrt_t);
+            let d2 = c.sub32(d1, v_sqrt_t);
+            let neg_rt = c.mul32(-opt.rate, opt.time);
+            let disc = exp32(c, neg_rt);
+            (d1, d2, disc)
+        });
+        if opt.is_call {
+            ctx.call(f.price_call, |c| {
+                let n1 = c.call_cndf(f.cndf, d1);
+                let n2 = c.call_cndf(f.cndf, d2);
+                let sn1 = c.mul32(opt.spot, n1);
+                let kd = c.mul32(opt.strike, disc);
+                let kdn2 = c.mul32(kd, n2);
+                let price = c.sub32(sn1, kdn2);
+                c.store32(price)
+            })
+        } else {
+            ctx.call(f.price_put, |c| {
+                let neg_d1 = c.sub32(0.0, d1);
+                let neg_d2 = c.sub32(0.0, d2);
+                let n1 = c.call_cndf(f.cndf, neg_d1);
+                let n2 = c.call_cndf(f.cndf, neg_d2);
+                let kd = c.mul32(opt.strike, disc);
+                let kdn2 = c.mul32(kd, n2);
+                let sn1 = c.mul32(opt.spot, n1);
+                let price = c.sub32(kdn2, sn1);
+                c.store32(price)
+            })
+        }
+    }
+}
+
+/// Scoped-CNDF helper: the CNDF body always runs in its own frame.
+trait CndfExt {
+    fn call_cndf(&mut self, id: FuncId, x: f32) -> f32;
+}
+
+impl CndfExt for FpContext {
+    fn call_cndf(&mut self, id: FuncId, x: f32) -> f32 {
+        self.call(id, |c| cndf32(c, x))
+    }
+}
+
+impl Workload for Blackscholes {
+    fn name(&self) -> &'static str {
+        "blackscholes"
+    }
+
+    fn default_target(&self) -> Precision {
+        Precision::Single
+    }
+
+    fn functions(&self) -> Vec<&'static str> {
+        vec!["cndf", "d1d2", "price_call", "price_put"]
+    }
+
+    fn train_seeds(&self) -> Vec<u64> {
+        (0..10).map(|i| 0x5EED + i).collect() // Table II: 10 training lists
+    }
+
+    fn test_seeds(&self) -> Vec<u64> {
+        (0..30).map(|i| 0x7E57 + i).collect() // 30 test lists
+    }
+
+    fn run(&self, ctx: &mut FpContext, seed: u64) -> Vec<f64> {
+        let funcs = Funcs {
+            d1d2: ctx.register("d1d2"),
+            cndf: ctx.register("cndf"),
+            price_call: ctx.register("price_call"),
+            price_put: ctx.register("price_put"),
+        };
+        let options = self.gen_inputs(seed);
+        options
+            .into_iter()
+            .map(|opt| {
+                ctx.load32(opt.spot);
+                ctx.load32(opt.strike);
+                self.price(ctx, &funcs, opt) as f64
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_prices_are_sane() {
+        let w = Blackscholes { options: 50 };
+        let mut ctx = FpContext::profiler();
+        let out = w.run(&mut ctx, 1);
+        assert_eq!(out.len(), 50);
+        // option prices are positive and bounded by spot/strike scale
+        assert!(out.iter().all(|&p| p > -1.0 && p < 400.0));
+        assert!(out.iter().any(|&p| p > 1.0));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let w = Blackscholes { options: 20 };
+        let a = w.run(&mut FpContext::profiler(), 3);
+        let b = w.run(&mut FpContext::profiler(), 3);
+        assert_eq!(a, b);
+        let c = w.run(&mut FpContext::profiler(), 4);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn all_functions_execute_flops() {
+        let w = Blackscholes { options: 50 };
+        let mut ctx = FpContext::profiler();
+        w.run(&mut ctx, 1);
+        let stats = ctx.function_stats();
+        for f in w.functions() {
+            let row = stats.iter().find(|(n, _)| n == f);
+            assert!(row.is_some_and(|(_, s)| s.total_flops() > 0), "{f} executed no FLOPs");
+        }
+    }
+
+    #[test]
+    fn known_price_spot_check() {
+        // S=100, K=100, r=0.05, v=0.2, T=1: call ≈ 10.45 (textbook value)
+        let w = Blackscholes::default();
+        let mut ctx = FpContext::profiler();
+        let f = Funcs {
+            d1d2: ctx.register("d1d2"),
+            cndf: ctx.register("cndf"),
+            price_call: ctx.register("price_call"),
+            price_put: ctx.register("price_put"),
+        };
+        let opt = Option32 {
+            spot: 100.0,
+            strike: 100.0,
+            rate: 0.05,
+            volatility: 0.2,
+            time: 1.0,
+            is_call: true,
+        };
+        let p = w.price(&mut ctx, &f, opt);
+        assert!((p - 10.45).abs() < 0.05, "got {p}");
+    }
+}

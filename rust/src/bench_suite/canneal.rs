@@ -1,0 +1,199 @@
+//! Canneal (Parsec): simulated-annealing placement of netlist elements
+//! to minimize total routing cost.
+//!
+//! Fig. 4 shows canneal as a *double*-dominant benchmark; it anchors the
+//! paper's Fig. 8 "optimization target" study together with
+//! particlefilter and ferret. Six FLOP-bearing functions: routing cost,
+//! swap delta, Metropolis acceptance (exp), temperature schedule, the
+//! initial cost pass, and the final quality summary.
+
+use crate::engine::{FpContext, FuncId};
+use crate::fpi::Precision;
+use crate::util::Pcg64;
+
+use super::math64::{exp64, sqrt64};
+use super::Workload;
+
+const ELEMENTS: usize = 96;
+const NETS_PER_ELEM: usize = 4;
+const MOVES: usize = 1200;
+
+/// Canneal workload configuration.
+#[derive(Default)]
+pub struct Canneal;
+
+struct Funcs {
+    initial_cost: FuncId,
+    net_cost: FuncId,
+    swap_delta: FuncId,
+    accept: FuncId,
+    cool: FuncId,
+    summarize: FuncId,
+}
+
+fn funcs(ctx: &mut FpContext) -> Funcs {
+    Funcs {
+        initial_cost: ctx.register("initial_cost"),
+        net_cost: ctx.register("net_cost"),
+        swap_delta: ctx.register("swap_delta"),
+        accept: ctx.register("accept"),
+        cool: ctx.register("cool"),
+        summarize: ctx.register("summarize"),
+    }
+}
+
+/// Manhattan-ish routing cost of one net (instrumented; the sqrt gives
+/// the cost function curvature that makes low-bit runs misorder swaps).
+fn net_cost(c: &mut FpContext, f: &Funcs, pos: &[(f64, f64)], a: usize, b: usize) -> f64 {
+    c.call(f.net_cost, |c| {
+        let dx = c.sub64(pos[a].0, pos[b].0);
+        let dy = c.sub64(pos[a].1, pos[b].1);
+        let dx2 = c.mul64(dx, dx);
+        let dy2 = c.mul64(dy, dy);
+        let d2 = c.add64(dx2, dy2);
+        sqrt64(c, d2)
+    })
+}
+
+impl Workload for Canneal {
+    fn name(&self) -> &'static str {
+        "canneal"
+    }
+
+    fn default_target(&self) -> Precision {
+        Precision::Double
+    }
+
+    fn functions(&self) -> Vec<&'static str> {
+        vec!["net_cost", "swap_delta", "accept", "initial_cost", "cool", "summarize"]
+    }
+
+    fn run(&self, ctx: &mut FpContext, seed: u64) -> Vec<f64> {
+        let f = funcs(ctx);
+        let mut rng = Pcg64::new(seed ^ 0xCA44EA1);
+
+        // random placement on a grid + random netlist
+        let mut pos: Vec<(f64, f64)> = (0..ELEMENTS)
+            .map(|_| (rng.uniform(0.0, 10.0), rng.uniform(0.0, 10.0)))
+            .collect();
+        let nets: Vec<(usize, usize)> = (0..ELEMENTS * NETS_PER_ELEM / 2)
+            .map(|_| {
+                let a = rng.below(ELEMENTS as u64) as usize;
+                let b = rng.below(ELEMENTS as u64) as usize;
+                (a, b.max(1).min(ELEMENTS - 1))
+            })
+            .filter(|(a, b)| a != b)
+            .collect();
+        // adjacency: nets touching each element
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); ELEMENTS];
+        for (ni, &(a, b)) in nets.iter().enumerate() {
+            adj[a].push(ni);
+            adj[b].push(ni);
+        }
+
+        let mut cost = ctx.call(f.initial_cost, |c| {
+            let mut total = 0.0f64;
+            for &(a, b) in &nets {
+                let d = net_cost(c, &f, &pos, a, b);
+                total = c.add64(total, d);
+            }
+            total
+        });
+
+        let mut temperature = 4.0f64;
+        let mut cost_curve = Vec::new();
+        for m in 0..MOVES {
+            let i = rng.below(ELEMENTS as u64) as usize;
+            let j = rng.below(ELEMENTS as u64) as usize;
+            if i == j {
+                continue;
+            }
+            // delta cost of swapping placements of i and j
+            let delta = ctx.call(f.swap_delta, |c| {
+                let mut before = 0.0f64;
+                for &ni in adj[i].iter().chain(&adj[j]) {
+                    let (a, b) = nets[ni];
+                    let d = net_cost(c, &f, &pos, a, b);
+                    before = c.add64(before, d);
+                }
+                pos.swap(i, j);
+                let mut after = 0.0f64;
+                for &ni in adj[i].iter().chain(&adj[j]) {
+                    let (a, b) = nets[ni];
+                    let d = net_cost(c, &f, &pos, a, b);
+                    after = c.add64(after, d);
+                }
+                pos.swap(i, j); // restore; apply only on accept
+                c.sub64(after, before)
+            });
+
+            let take = ctx.call(f.accept, |c| {
+                if delta < 0.0 {
+                    true
+                } else {
+                    let ratio = c.div64(delta, temperature.max(1e-12));
+                    let neg = c.mul64(-1.0, ratio);
+                    let p = exp64(c, neg);
+                    rng.f64() < p
+                }
+            });
+            if take {
+                pos.swap(i, j);
+                cost = ctx.add64(cost, delta);
+            }
+
+            if m % 100 == 99 {
+                temperature = ctx.call(f.cool, |c| c.mul64(temperature, 0.85));
+                cost_curve.push(cost);
+            }
+        }
+
+        // final summary: cost recomputed exactly from the layout + curve
+        ctx.call(f.summarize, |c| {
+            let mut total = 0.0f64;
+            for &(a, b) in &nets {
+                let d = net_cost(c, &f, &pos, a, b);
+                total = c.add64(total, d);
+            }
+            let mut out = vec![total];
+            out.extend(cost_curve.iter().copied());
+            out
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn annealing_reduces_cost() {
+        let w = Canneal;
+        let mut ctx = FpContext::profiler();
+        let out = w.run(&mut ctx, 3);
+        let final_cost = out[0];
+        let first_logged = out[1];
+        assert!(
+            final_cost < first_logged,
+            "no improvement: {first_logged} -> {final_cost}"
+        );
+    }
+
+    #[test]
+    fn double_dominant() {
+        let w = Canneal;
+        let mut ctx = FpContext::profiler();
+        w.run(&mut ctx, 1);
+        let p = crate::engine::profile::Profile::from_context(&ctx);
+        assert_eq!(p.dominant_precision(), Precision::Double);
+        assert!(p.single_fraction() < 0.05);
+    }
+
+    #[test]
+    fn deterministic() {
+        let w = Canneal;
+        let a = w.run(&mut FpContext::profiler(), 6);
+        let b = w.run(&mut FpContext::profiler(), 6);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,416 @@
+//! Ferret (Parsec): content-based image similarity search.
+//!
+//! Table II: 12 functions (24¹²), and — per Fig. 4 — the benchmark with
+//! a genuinely *mixed* precision profile: the feature-extraction stages
+//! (segmentation, histogramming, moments) run in f32 while the ranking
+//! stages (EMD-style distance, kNN ordering) run in f64, mirroring how
+//! the original ferret links an f32 image pipeline against an f64 LSH/
+//! ranking library. This is the benchmark for the paper's §V-E
+//! "flexible optimization target" experiment (Fig. 8): NEAT can target
+//! either half.
+
+use crate::engine::{FpContext, FuncId};
+use crate::fpi::Precision;
+use crate::util::Pcg64;
+
+use super::math32::sqrt32;
+use super::math64::{exp64, sqrt64};
+use super::Workload;
+
+const IMG: usize = 16;
+const BINS: usize = 16;
+const DB: usize = 8; // database images per input
+const QUERIES: usize = 3;
+const TOPK: usize = 4;
+
+/// Ferret workload configuration.
+#[derive(Default)]
+pub struct Ferret;
+
+struct Funcs {
+    synth_image: FuncId,
+    segment: FuncId,
+    histogram: FuncId,
+    moments: FuncId,
+    normalize_feat: FuncId,
+    texture_energy: FuncId,
+    emd: FuncId,
+    flow_cost: FuncId,
+    rank: FuncId,
+    knn: FuncId,
+    score_merge: FuncId,
+    query_expand: FuncId,
+}
+
+fn funcs(ctx: &mut FpContext) -> Funcs {
+    Funcs {
+        synth_image: ctx.register("synth_image"),
+        segment: ctx.register("segment"),
+        histogram: ctx.register("histogram"),
+        moments: ctx.register("moments"),
+        normalize_feat: ctx.register("normalize_feat"),
+        texture_energy: ctx.register("texture_energy"),
+        emd: ctx.register("emd"),
+        flow_cost: ctx.register("flow_cost"),
+        rank: ctx.register("rank"),
+        knn: ctx.register("knn"),
+        score_merge: ctx.register("score_merge"),
+        query_expand: ctx.register("query_expand"),
+    }
+}
+
+/// Feature vector: histogram (BINS) + 4 moments + 1 texture energy.
+const FEAT: usize = BINS + 5;
+
+fn extract_features(ctx: &mut FpContext, f: &Funcs, img: &[f32]) -> Vec<f32> {
+    // --- segmentation: threshold at the image mean (one pass)
+    let fg = ctx.call(f.segment, |c| {
+        let mut mean = 0.0f32;
+        for &v in img {
+            let lv = c.load32(v);
+            mean = c.add32(mean, lv);
+        }
+        mean = c.div32(mean, (IMG * IMG) as f32);
+        let mut mask = vec![false; IMG * IMG];
+        for (i, &v) in img.iter().enumerate() {
+            let d = c.sub32(v, mean);
+            mask[i] = d > 0.0;
+        }
+        mask
+    });
+
+    // --- intensity histogram over the foreground
+    let mut feat = ctx.call(f.histogram, |c| {
+        let mut hist = vec![0.0f32; BINS];
+        for (i, &v) in img.iter().enumerate() {
+            if !fg[i] {
+                continue;
+            }
+            let scaled = c.mul32(v, (BINS - 1) as f32);
+            let bin = (scaled as usize).min(BINS - 1);
+            hist[bin] = c.add32(hist[bin], 1.0);
+        }
+        hist
+    });
+
+    // --- spatial moments of the foreground
+    let moments = ctx.call(f.moments, |c| {
+        let mut m00 = 0.0f32;
+        let mut m10 = 0.0f32;
+        let mut m01 = 0.0f32;
+        let mut m11 = 0.0f32;
+        for y in 0..IMG {
+            for x in 0..IMG {
+                let i = y * IMG + x;
+                if !fg[i] {
+                    continue;
+                }
+                let v = c.load32(img[i]);
+                m00 = c.add32(m00, v);
+                let vx = c.mul32(v, x as f32);
+                let vy = c.mul32(v, y as f32);
+                m10 = c.add32(m10, vx);
+                m01 = c.add32(m01, vy);
+                let vxy = c.mul32(vx, y as f32);
+                m11 = c.add32(m11, vxy);
+            }
+        }
+        let denom = m00.max(1e-6);
+        let cx = c.div32(m10, denom);
+        let cy = c.div32(m01, denom);
+        let cross = c.div32(m11, denom);
+        vec![m00, cx, cy, cross]
+    });
+    feat.extend(moments);
+
+    // --- texture energy (gradient magnitude sum)
+    let energy = ctx.call(f.texture_energy, |c| {
+        let mut acc = 0.0f32;
+        for y in 0..IMG - 1 {
+            for x in 0..IMG - 1 {
+                let gx = c.sub32(img[y * IMG + x + 1], img[y * IMG + x]);
+                let gy = c.sub32(img[(y + 1) * IMG + x], img[y * IMG + x]);
+                let gx2 = c.mul32(gx, gx);
+                let gy2 = c.mul32(gy, gy);
+                let g2 = c.add32(gx2, gy2);
+                acc = c.add32(acc, g2);
+            }
+        }
+        sqrt32(c, acc)
+    });
+    feat.push(energy);
+
+    // --- L2 normalisation
+    ctx.call(f.normalize_feat, |c| {
+        let mut norm2 = 0.0f32;
+        for &v in &feat {
+            let v2 = c.mul32(v, v);
+            norm2 = c.add32(norm2, v2);
+        }
+        let norm = sqrt32(c, norm2);
+        let inv = c.div32(1.0, norm.max(1e-9));
+        for v in feat.iter_mut() {
+            *v = c.mul32(*v, inv);
+        }
+    });
+    feat
+}
+
+/// EMD-style distance between feature vectors (double precision — the
+/// ranking half of ferret). A greedy 1-D earth-mover over the histogram
+/// prefix plus Euclidean tail over the moments.
+fn emd_distance(ctx: &mut FpContext, f: &Funcs, a: &[f32], b: &[f32]) -> f64 {
+    ctx.call(f.emd, |c| {
+        // 1-D EMD over the histogram prefix: |cumsum(a) - cumsum(b)|
+        let mut flow = 0.0f64;
+        let mut ca = 0.0f64;
+        let mut cb = 0.0f64;
+        for k in 0..BINS {
+            // the ranking library streams both feature vectors from
+            // memory (doubles on its side of the ABI)...
+            let av = c.load64(a[k] as f64);
+            let bv = c.load64(b[k] as f64);
+            ca = c.add64(ca, av);
+            cb = c.add64(cb, bv);
+            // ...and materializes the cumulative tables it flows over
+            // (these carry the FPI-truncated values, so their memory
+            // traffic shrinks with the double-target precision)
+            c.store64(ca);
+            c.store64(cb);
+            let d = c.call(f.flow_cost, |c| {
+                let diff = c.sub64(ca, cb);
+                let d2 = c.mul64(diff, diff);
+                sqrt64(c, d2) // |diff| through the instrumented path
+            });
+            flow = c.add64(flow, d);
+        }
+        // cross-bin ground-distance term (the quadratic EMD relaxation
+        // ferret's ranking library computes): Σᵢⱼ |i−j|·aᵢ·bⱼ
+        let mut ground = 0.0f64;
+        c.call(f.flow_cost, |c| {
+            for i in 0..BINS {
+                if a[i] == 0.0 {
+                    continue;
+                }
+                for j in 0..BINS {
+                    let w = (i as f64 - j as f64).abs() / BINS as f64;
+                    let ab = c.mul64(a[i] as f64, b[j] as f64);
+                    let wab = c.mul64(w, ab);
+                    ground = c.add64(ground, wab);
+                }
+            }
+        });
+        flow = c.add64(flow, ground);
+        // Euclidean tail over moments + texture
+        let mut tail = 0.0f64;
+        for k in BINS..FEAT {
+            let diff = c.sub64(a[k] as f64, b[k] as f64);
+            let d2 = c.mul64(diff, diff);
+            tail = c.add64(tail, d2);
+        }
+        let tail_d = sqrt64(c, tail);
+        let scaled = c.mul64(0.5, tail_d);
+        c.add64(flow, scaled)
+    })
+}
+
+impl Workload for Ferret {
+    fn name(&self) -> &'static str {
+        "ferret"
+    }
+
+    fn default_target(&self) -> Precision {
+        // Fig. 8 shows double is the more profitable target for ferret
+        Precision::Double
+    }
+
+    fn functions(&self) -> Vec<&'static str> {
+        vec![
+            "emd",
+            "flow_cost",
+            "histogram",
+            "moments",
+            "segment",
+            "texture_energy",
+            "normalize_feat",
+            "knn",
+            "rank",
+            "synth_image",
+            "score_merge",
+            "query_expand",
+        ]
+    }
+
+    fn train_seeds(&self) -> Vec<u64> {
+        (0..5).map(|i| 0x5EED + i).collect() // 5 databases
+    }
+
+    fn test_seeds(&self) -> Vec<u64> {
+        (0..15).map(|i| 0x7E57 + i).collect()
+    }
+
+    fn run(&self, ctx: &mut FpContext, seed: u64) -> Vec<f64> {
+        let f = funcs(ctx);
+        let mut rng = Pcg64::new(seed ^ 0xFE44E7);
+
+        // synthesize a database of images from two latent classes with
+        // genuinely different intensity statistics: soft blobs (class 0)
+        // vs. stripe textures (class 1)
+        let synth = |ctx: &mut FpContext, rng: &mut Pcg64, class: usize| -> Vec<f32> {
+            ctx.call(f.synth_image, |c| {
+                let mut img = vec![0.0f32; IMG * IMG];
+                if class == 0 {
+                    let cx = rng.uniform(5.0, 11.0) as f32;
+                    let cy = rng.uniform(5.0, 11.0) as f32;
+                    for y in 0..IMG {
+                        for x in 0..IMG {
+                            let dx = c.sub32(x as f32, cx);
+                            let dy = c.sub32(y as f32, cy);
+                            let dx2 = c.mul32(dx, dx);
+                            let dy2 = c.mul32(dy, dy);
+                            let d2 = c.add32(dx2, dy2);
+                            let arg = c.mul32(-0.12, d2);
+                            let base = super::math32::exp32(c, arg);
+                            let noise = (rng.normal() * 0.08) as f32;
+                            let v = c.add32(base, noise);
+                            img[y * IMG + x] = c.store32(v.clamp(0.0, 1.0));
+                        }
+                    }
+                } else {
+                    let phase = rng.f32() * 3.0;
+                    for y in 0..IMG {
+                        for x in 0..IMG {
+                            let arg = 0.9 * (x as f32 + phase);
+                            let base = super::math32::sin32(c, arg);
+                            let noise = (rng.normal() * 0.08) as f32;
+                            let shifted = c.add32(base, 1.0);
+                            let scaled = c.mul32(shifted, 0.5);
+                            let v = c.add32(scaled, noise);
+                            img[y * IMG + x] = c.store32(v.clamp(0.0, 1.0));
+                        }
+                    }
+                }
+                img
+            })
+        };
+
+        let db_feats: Vec<Vec<f32>> = (0..DB)
+            .map(|i| {
+                let img = synth(ctx, &mut rng, i % 2);
+                extract_features(ctx, &f, &img)
+            })
+            .collect();
+
+        let mut out = Vec::new();
+        for q in 0..QUERIES {
+            let img = synth(ctx, &mut rng, q % 2);
+            let qf = extract_features(ctx, &f, &img);
+            // tiny query expansion: blend the query with itself shifted
+            let qf2 = ctx.call(f.query_expand, |c| {
+                let mut v = qf.clone();
+                for k in 1..FEAT {
+                    let blend = c.mul32(qf[k - 1], 0.1);
+                    v[k] = c.add32(v[k], blend);
+                }
+                v
+            });
+
+            // rank the database
+            let mut scored: Vec<(f64, usize)> = db_feats
+                .iter()
+                .enumerate()
+                .map(|(i, df)| {
+                    let d1 = emd_distance(ctx, &f, &qf, df);
+                    let d2 = emd_distance(ctx, &f, &qf2, df);
+                    let s = ctx.call(f.score_merge, |c| {
+                        let half = c.mul64(0.3, d2);
+                        c.add64(d1, half)
+                    });
+                    (s, i)
+                })
+                .collect();
+            ctx.call(f.rank, |c| {
+                // similarity weights for stable output (softmin)
+                for (s, _) in scored.iter_mut() {
+                    let arg = c.mul64(-1.0, *s);
+                    *s = exp64(c, arg);
+                }
+            });
+            let top = ctx.call(f.knn, |c| {
+                let mut order: Vec<usize> = (0..DB).collect();
+                order.sort_by(|&a, &b| scored[b].0.partial_cmp(&scored[a].0).unwrap());
+                // weighted score of the top-k
+                let mut acc = 0.0f64;
+                for &i in order.iter().take(TOPK) {
+                    acc = c.add64(acc, scored[i].0);
+                }
+                (order, acc)
+            });
+            out.push(top.1);
+            out.extend(scored.iter().map(|(s, _)| *s));
+            let _ = top.0;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixed_precision_profile() {
+        let w = Ferret;
+        let mut ctx = FpContext::profiler();
+        w.run(&mut ctx, 1);
+        let profile = crate::engine::profile::Profile::from_context(&ctx);
+        let frac = profile.single_fraction();
+        // both halves must be substantial (paper Fig. 4 shows ferret mixed)
+        assert!(frac > 0.2 && frac < 0.8, "single fraction {frac}");
+    }
+
+    #[test]
+    fn same_class_images_rank_closer() {
+        let mut ctx = FpContext::profiler();
+        let f = funcs(&mut ctx);
+        let mut rng = Pcg64::new(5);
+        // two blob images (class 0), one stripe image (class 1)
+        let mk = |ctx: &mut FpContext, rng: &mut Pcg64, class: usize| {
+            let img: Vec<f32> = if class == 0 {
+                let cx = rng.uniform(5.0, 11.0) as f32;
+                let cy = rng.uniform(5.0, 11.0) as f32;
+                (0..IMG * IMG)
+                    .map(|i| {
+                        let (x, y) = ((i % IMG) as f32, (i / IMG) as f32);
+                        let d2 = (x - cx).powi(2) + (y - cy).powi(2);
+                        ((-0.12 * d2).exp() + (rng.normal() * 0.08) as f32).clamp(0.0, 1.0)
+                    })
+                    .collect()
+            } else {
+                let phase = rng.f32() * 3.0;
+                (0..IMG * IMG)
+                    .map(|i| {
+                        let x = (i % IMG) as f32;
+                        let base = (0.9 * (x + phase)).sin();
+                        ((base + 1.0) * 0.5 + (rng.normal() * 0.08) as f32).clamp(0.0, 1.0)
+                    })
+                    .collect()
+            };
+            extract_features(ctx, &f, &img)
+        };
+        let a0 = mk(&mut ctx, &mut rng, 0);
+        let a1 = mk(&mut ctx, &mut rng, 0);
+        let b = mk(&mut ctx, &mut rng, 1);
+        let d_same = emd_distance(&mut ctx, &f, &a0, &a1);
+        let d_diff = emd_distance(&mut ctx, &f, &a0, &b);
+        assert!(d_same < d_diff, "same-class {d_same} vs cross-class {d_diff}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let w = Ferret;
+        let a = w.run(&mut FpContext::profiler(), 4);
+        let b = w.run(&mut FpContext::profiler(), 4);
+        assert_eq!(a, b);
+    }
+}

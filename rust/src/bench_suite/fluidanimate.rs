@@ -1,0 +1,385 @@
+//! Fluidanimate (Parsec): smoothed-particle-hydrodynamics fluid
+//! simulation.
+//!
+//! Table II: single precision, 9 functions (24⁹). The decomposition
+//! follows the Parsec kernel's phases: cell-grid rebuild, density
+//! computation (poly6 kernel), pressure from the Tait equation of
+//! state, force accumulation (spiky kernel + viscosity), boundary
+//! handling, and time integration. Memory traffic is heavy (particle
+//! arrays are streamed every phase), which is why the paper sees >60%
+//! memory-energy savings here (Fig. 7).
+
+use crate::engine::{FpContext, FuncId};
+use crate::fpi::Precision;
+use crate::util::Pcg64;
+
+use super::math32::sqrt32;
+use super::Workload;
+
+const H: f32 = 0.12; // smoothing radius
+const DT: f32 = 0.004;
+const REST_DENSITY: f32 = 1000.0;
+const GRID: usize = 9; // cells per side (domain is the unit square)
+
+/// Fluidanimate workload configuration.
+pub struct Fluidanimate {
+    /// Particle count.
+    pub particles: usize,
+    /// Simulation steps per input.
+    pub steps: usize,
+}
+
+impl Default for Fluidanimate {
+    fn default() -> Self {
+        Self { particles: 120, steps: 3 }
+    }
+}
+
+struct Funcs {
+    rebuild_grid: FuncId,
+    compute_density: FuncId,
+    poly6: FuncId,
+    eos: FuncId,
+    compute_forces: FuncId,
+    spiky: FuncId,
+    viscosity: FuncId,
+    boundary: FuncId,
+    advance: FuncId,
+}
+
+fn funcs(ctx: &mut FpContext) -> Funcs {
+    Funcs {
+        rebuild_grid: ctx.register("rebuild_grid"),
+        compute_density: ctx.register("compute_density"),
+        poly6: ctx.register("poly6"),
+        eos: ctx.register("eos"),
+        compute_forces: ctx.register("compute_forces"),
+        spiky: ctx.register("spiky"),
+        viscosity: ctx.register("viscosity"),
+        boundary: ctx.register("boundary"),
+        advance: ctx.register("advance"),
+    }
+}
+
+struct State {
+    px: Vec<f32>,
+    py: Vec<f32>,
+    vx: Vec<f32>,
+    vy: Vec<f32>,
+    density: Vec<f32>,
+    pressure: Vec<f32>,
+    fx: Vec<f32>,
+    fy: Vec<f32>,
+}
+
+impl Fluidanimate {
+    fn init(&self, seed: u64) -> State {
+        let mut rng = Pcg64::new(seed ^ 0xF1);
+        let n = self.particles;
+        // dam-break block of fluid in the lower-left quadrant
+        let (mut px, mut py) = (Vec::with_capacity(n), Vec::with_capacity(n));
+        for i in 0..n {
+            let col = i % 10;
+            let row = i / 10;
+            px.push(0.08 + col as f32 * 0.035 + (rng.f32() - 0.5) * 0.004);
+            py.push(0.08 + row as f32 * 0.035 + (rng.f32() - 0.5) * 0.004);
+        }
+        State {
+            px,
+            py,
+            vx: vec![0.0; n],
+            vy: vec![0.0; n],
+            density: vec![0.0; n],
+            pressure: vec![0.0; n],
+            fx: vec![0.0; n],
+            fy: vec![0.0; n],
+        }
+    }
+
+    fn step(&self, ctx: &mut FpContext, f: &Funcs, s: &mut State) {
+        let n = self.particles;
+        let h2 = H * H;
+        let mass = 0.3f32;
+
+        // --- cell grid (spatial hash; index math only, loads counted)
+        let mut cells: Vec<Vec<usize>> = vec![Vec::new(); GRID * GRID];
+        ctx.call(f.rebuild_grid, |c| {
+            for i in 0..n {
+                let x = c.load32(s.px[i]);
+                let y = c.load32(s.py[i]);
+                let cx = ((x * GRID as f32) as usize).min(GRID - 1);
+                let cy = ((y * GRID as f32) as usize).min(GRID - 1);
+                cells[cy * GRID + cx].push(i);
+            }
+        });
+        let neighbors = |i: usize, s: &State| -> Vec<usize> {
+            let cx = ((s.px[i] * GRID as f32) as usize).min(GRID - 1);
+            let cy = ((s.py[i] * GRID as f32) as usize).min(GRID - 1);
+            let mut out = Vec::with_capacity(16);
+            for dy in -1i32..=1 {
+                for dx in -1i32..=1 {
+                    let (gx, gy) = (cx as i32 + dx, cy as i32 + dy);
+                    if gx < 0 || gy < 0 || gx >= GRID as i32 || gy >= GRID as i32 {
+                        continue;
+                    }
+                    out.extend(&cells[gy as usize * GRID + gx as usize]);
+                }
+            }
+            out
+        };
+
+        // --- density + pressure
+        ctx.call(f.compute_density, |c| {
+            for i in 0..n {
+                let mut rho = 0.0f32;
+                for &j in &neighbors(i, s) {
+                    let dx = c.sub32(s.px[i], s.px[j]);
+                    let dy = c.sub32(s.py[i], s.py[j]);
+                    let r2 = {
+                        let xx = c.mul32(dx, dx);
+                        let yy = c.mul32(dy, dy);
+                        c.add32(xx, yy)
+                    };
+                    if r2 < h2 {
+                        let w = c.call(f.poly6, |c| {
+                            // poly6: (h² - r²)³ (normalisation folded in mass)
+                            let d = c.sub32(h2, r2);
+                            let d2 = c.mul32(d, d);
+                            c.mul32(d2, d)
+                        });
+                        let mw = c.mul32(mass, w);
+                        rho = c.add32(rho, mw);
+                    }
+                }
+                // scale to physical range
+                let scaled = c.mul32(rho, 3.0e6);
+                s.density[i] = c.store32(scaled.max(1.0));
+            }
+        });
+        ctx.call(f.eos, |c| {
+            for i in 0..n {
+                // Tait EOS (linearized): p = k (ρ - ρ₀)
+                let diff = c.sub32(s.density[i], REST_DENSITY);
+                let p = c.mul32(3.0, diff);
+                s.pressure[i] = c.store32(p.max(0.0));
+            }
+        });
+
+        // --- forces
+        ctx.call(f.compute_forces, |c| {
+            for i in 0..n {
+                let mut fx = 0.0f32;
+                let mut fy = c.mul32(mass, -9.8); // gravity
+                for &j in &neighbors(i, s) {
+                    if i == j {
+                        continue;
+                    }
+                    let dx = c.sub32(s.px[i], s.px[j]);
+                    let dy = c.sub32(s.py[i], s.py[j]);
+                    let r2 = {
+                        let xx = c.mul32(dx, dx);
+                        let yy = c.mul32(dy, dy);
+                        c.add32(xx, yy)
+                    };
+                    if r2 >= h2 || r2 <= 1e-12 {
+                        continue;
+                    }
+                    let r = sqrt32(c, r2);
+                    // pressure force (spiky gradient)
+                    let fp = c.call(f.spiky, |c| {
+                        let d = c.sub32(H, r);
+                        let d2 = c.mul32(d, d);
+                        let pij = c.add32(s.pressure[i], s.pressure[j]);
+                        let rho2 = c.mul32(s.density[j], 2.0);
+                        let mag = c.div32(pij, rho2);
+                        let scaled = c.mul32(mag, d2);
+                        c.mul32(scaled, 2.0e-4)
+                    });
+                    let inv_r = c.div32(1.0, r);
+                    let ux = c.mul32(dx, inv_r);
+                    let uy = c.mul32(dy, inv_r);
+                    let fpx = c.mul32(fp, ux);
+                    let fpy = c.mul32(fp, uy);
+                    fx = c.add32(fx, fpx);
+                    fy = c.add32(fy, fpy);
+                    // viscosity
+                    let (fvx, fvy) = c.call(f.viscosity, |c| {
+                        let dvx = c.sub32(s.vx[j], s.vx[i]);
+                        let dvy = c.sub32(s.vy[j], s.vy[i]);
+                        let d = c.sub32(H, r);
+                        let k = c.mul32(0.15, d);
+                        let kd = c.div32(k, s.density[j]);
+                        let sx = c.mul32(kd, dvx);
+                        let sy = c.mul32(kd, dvy);
+                        (sx, sy)
+                    });
+                    fx = c.add32(fx, fvx);
+                    fy = c.add32(fy, fvy);
+                }
+                s.fx[i] = c.store32(fx);
+                s.fy[i] = c.store32(fy);
+            }
+        });
+
+        // --- integrate + boundary
+        ctx.call(f.advance, |c| {
+            for i in 0..n {
+                let ax = c.div32(s.fx[i], mass);
+                let ay = c.div32(s.fy[i], mass);
+                let dvx = c.mul32(ax, DT);
+                let dvy = c.mul32(ay, DT);
+                let nvx = c2(c, s.vx[i], dvx);
+                let nvy = c2(c, s.vy[i], dvy);
+                s.vx[i] = c.store32(nvx);
+                s.vy[i] = c.store32(nvy);
+                let dx = c.mul32(s.vx[i], DT);
+                let dy = c.mul32(s.vy[i], DT);
+                let npx = c2(c, s.px[i], dx);
+                let npy = c2(c, s.py[i], dy);
+                s.px[i] = c.store32(npx);
+                s.py[i] = c.store32(npy);
+            }
+        });
+        ctx.call(f.boundary, |c| {
+            const MARGIN: f32 = 0.1;
+            for i in 0..n {
+                // soft repulsion near each wall (runs for any particle
+                // in the margin zone), then hard clamp + bounce
+                for (pos, vel) in [(&mut s.px[i], &mut s.vx[i]), (&mut s.py[i], &mut s.vy[i])] {
+                    if *pos < MARGIN {
+                        let depth = c.sub32(MARGIN, *pos);
+                        let push = c.mul32(depth, 0.05);
+                        *vel = c.add32(*vel, push);
+                    } else if *pos > 1.0 - MARGIN {
+                        let depth = c.sub32(*pos, 1.0 - MARGIN);
+                        let push = c.mul32(depth, 0.05);
+                        *vel = c.sub32(*vel, push);
+                    }
+                    if *pos < 0.02 {
+                        *pos = 0.02;
+                        *vel = c.mul32(*vel, -0.4);
+                    } else if *pos > 0.98 {
+                        *pos = 0.98;
+                        *vel = c.mul32(*vel, -0.4);
+                    }
+                }
+            }
+        });
+    }
+}
+
+#[inline]
+fn c2(c: &mut FpContext, a: f32, b: f32) -> f32 {
+    c.add32(a, b)
+}
+
+impl Workload for Fluidanimate {
+    fn name(&self) -> &'static str {
+        "fluidanimate"
+    }
+
+    fn default_target(&self) -> Precision {
+        Precision::Single
+    }
+
+    fn functions(&self) -> Vec<&'static str> {
+        vec![
+            "compute_forces",
+            "compute_density",
+            "spiky",
+            "viscosity",
+            "poly6",
+            "advance",
+            "eos",
+            "boundary",
+            "rebuild_grid",
+        ]
+    }
+
+    fn train_seeds(&self) -> Vec<u64> {
+        (0..5).map(|i| 0x5EED + i).collect() // Table II: 5 fluids
+    }
+
+    fn test_seeds(&self) -> Vec<u64> {
+        (0..15).map(|i| 0x7E57 + i).collect()
+    }
+
+    fn run(&self, ctx: &mut FpContext, seed: u64) -> Vec<f64> {
+        let f = funcs(ctx);
+        let mut s = self.init(seed);
+        for _ in 0..self.steps {
+            self.step(ctx, &f, &mut s);
+        }
+        // output: particle positions + kinetic energy
+        let mut out: Vec<f64> = Vec::with_capacity(2 * self.particles + 1);
+        let mut ke = 0.0f64;
+        for i in 0..self.particles {
+            out.push(s.px[i] as f64);
+            out.push(s.py[i] as f64);
+            ke += (s.vx[i] * s.vx[i] + s.vy[i] * s.vy[i]) as f64;
+        }
+        out.push(ke);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn particles_stay_in_bounds() {
+        let w = Fluidanimate::default();
+        let mut ctx = FpContext::profiler();
+        let out = w.run(&mut ctx, 3);
+        for chunk in out[..2 * w.particles].chunks(2) {
+            assert!((0.0..=1.0).contains(&chunk[0]), "x {}", chunk[0]);
+            assert!((0.0..=1.0).contains(&chunk[1]), "y {}", chunk[1]);
+        }
+    }
+
+    #[test]
+    fn fluid_falls_under_gravity() {
+        let w = Fluidanimate { particles: 60, steps: 6 };
+        let mut ctx = FpContext::profiler();
+        let mut s = w.init(9);
+        let f = funcs(&mut ctx);
+        let y0: f32 = s.py.iter().sum::<f32>() / s.py.len() as f32;
+        for _ in 0..w.steps {
+            w.step(&mut ctx, &f, &mut s);
+        }
+        let y1: f32 = s.py.iter().sum::<f32>() / s.py.len() as f32;
+        assert!(y1 < y0, "fluid should fall: {y0} -> {y1}");
+    }
+
+    #[test]
+    fn density_is_positive() {
+        let w = Fluidanimate::default();
+        let mut ctx = FpContext::profiler();
+        let f = funcs(&mut ctx);
+        let mut s = w.init(1);
+        w.step(&mut ctx, &f, &mut s);
+        assert!(s.density.iter().all(|&d| d > 0.0));
+    }
+
+    #[test]
+    fn deterministic() {
+        let w = Fluidanimate::default();
+        let a = w.run(&mut FpContext::profiler(), 4);
+        let b = w.run(&mut FpContext::profiler(), 4);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn forces_dominate_flop_census() {
+        let w = Fluidanimate::default();
+        let mut ctx = FpContext::profiler();
+        w.run(&mut ctx, 2);
+        let profile = crate::engine::profile::Profile::from_context(&ctx);
+        assert!(
+            profile.rows[0].name == "compute_forces" || profile.rows[0].name == "compute_density",
+            "hottest was {}",
+            profile.rows[0].name
+        );
+    }
+}

@@ -1,0 +1,272 @@
+//! Heartwall (Rodinia): tracking points on a deforming heart-wall
+//! boundary via normalized cross-correlation template matching.
+//!
+//! Table II: single precision, only 4 FLOP-bearing functions (24⁴) — and
+//! the paper notes they are *very* bit-width sensitive: "any
+//! modification leads to more than 20% error" below ~71% of baseline
+//! FPU energy. NCC is indeed brittle (a ratio of small differences of
+//! large sums), which this reimplementation preserves: the correlation
+//! and normalisation stages lose rank order quickly as mantissas shrink.
+
+use crate::engine::{FpContext, FuncId};
+use crate::fpi::Precision;
+use crate::util::Pcg64;
+
+use super::math32::{sin32, sqrt32};
+use super::Workload;
+
+const FRAME: usize = 20; // search frame side
+const TPL: usize = 6; // template side
+const SEARCH: usize = 5; // search window side (offsets)
+const POINTS: usize = 6; // tracked wall points
+
+/// Heartwall workload configuration.
+pub struct Heartwall {
+    /// Frames tracked per input.
+    pub frames: usize,
+}
+
+impl Default for Heartwall {
+    fn default() -> Self {
+        Self { frames: 5 }
+    }
+}
+
+struct Funcs {
+    synth_frame: FuncId,
+    ncc: FuncId,
+    template_stats: FuncId,
+    track_update: FuncId,
+}
+
+fn funcs(ctx: &mut FpContext) -> Funcs {
+    Funcs {
+        synth_frame: ctx.register("synth_frame"),
+        ncc: ctx.register("ncc"),
+        template_stats: ctx.register("template_stats"),
+        track_update: ctx.register("track_update"),
+    }
+}
+
+/// Synthesize a heart-wall-ish frame: a ring of tissue texture whose
+/// radius breathes with the cardiac phase.
+fn synth(ctx: &mut FpContext, f: &Funcs, rng_texture: &[f32], phase: f32) -> Vec<f32> {
+    ctx.call(f.synth_frame, |c| {
+        let mut img = vec![0.0f32; FRAME * FRAME];
+        let center = FRAME as f32 / 2.0;
+        let sp = sin32(c, phase);
+        let breathing = c.mul32(1.5, sp);
+        let radius = c.add32(6.0, breathing);
+        for y in 0..FRAME {
+            for x in 0..FRAME {
+                let dx = c.sub32(x as f32, center);
+                let dy = c.sub32(y as f32, center);
+                let d2 = {
+                    let xx = c.mul32(dx, dx);
+                    let yy = c.mul32(dy, dy);
+                    c.add32(xx, yy)
+                };
+                let d = sqrt32(c, d2);
+                // ring profile: bright near |d - radius| = 0
+                let off = c.sub32(d, radius);
+                let off2 = c.mul32(off, off);
+                let denom = c.add32(1.0, off2);
+                let ring = c.div32(1.0, denom);
+                // fixed texture modulates the tissue
+                let tex = rng_texture[y * FRAME + x];
+                let v = c.mul32(ring, tex);
+                img[y * FRAME + x] = c.store32(v);
+            }
+        }
+        img
+    })
+}
+
+impl Workload for Heartwall {
+    fn name(&self) -> &'static str {
+        "heartwall"
+    }
+
+    fn default_target(&self) -> Precision {
+        Precision::Single
+    }
+
+    fn functions(&self) -> Vec<&'static str> {
+        vec!["ncc", "synth_frame", "template_stats", "track_update"]
+    }
+
+    fn train_seeds(&self) -> Vec<u64> {
+        (0..3).map(|i| 0x5EED + i).collect() // 15 train frames
+    }
+
+    fn test_seeds(&self) -> Vec<u64> {
+        (0..12).map(|i| 0x7E57 + i).collect() // 60 test frames
+    }
+
+    fn run(&self, ctx: &mut FpContext, seed: u64) -> Vec<f64> {
+        let f = funcs(ctx);
+        let mut rng = Pcg64::new(seed ^ 0x4EA7);
+        let texture: Vec<f32> =
+            (0..FRAME * FRAME).map(|_| 0.6 + rng.f32() * 0.4).collect();
+
+        // initial tracked points on the ring
+        let center = FRAME as f32 / 2.0;
+        let mut points: Vec<(f32, f32)> = (0..POINTS)
+            .map(|i| {
+                let ang = std::f32::consts::TAU * i as f32 / POINTS as f32;
+                (center + 6.0 * ang.cos(), center + 6.0 * ang.sin())
+            })
+            .collect();
+
+        // extract templates from frame 0
+        let frame0 = synth(ctx, &f, &texture, 0.0);
+        let grab = |img: &[f32], cx: f32, cy: f32| -> Vec<f32> {
+            let mut t = vec![0.0f32; TPL * TPL];
+            for ty in 0..TPL {
+                for tx in 0..TPL {
+                    let ix = (cx as isize + tx as isize - TPL as isize / 2)
+                        .clamp(0, FRAME as isize - 1) as usize;
+                    let iy = (cy as isize + ty as isize - TPL as isize / 2)
+                        .clamp(0, FRAME as isize - 1) as usize;
+                    t[ty * TPL + tx] = img[iy * FRAME + ix];
+                }
+            }
+            t
+        };
+        let templates: Vec<Vec<f32>> =
+            points.iter().map(|&(x, y)| grab(&frame0, x, y)).collect();
+
+        // template statistics (mean, centered norm) — used every NCC
+        let tstats: Vec<(f32, f32)> = templates
+            .iter()
+            .map(|tpl| {
+                ctx.call(f.template_stats, |c| {
+                    let mut mean = 0.0f32;
+                    for &v in tpl {
+                        let lv = c.load32(v);
+                        mean = c.add32(mean, lv);
+                    }
+                    mean = c.div32(mean, (TPL * TPL) as f32);
+                    let mut norm2 = 0.0f32;
+                    for &v in tpl {
+                        let d = c.sub32(v, mean);
+                        let d2 = c.mul32(d, d);
+                        norm2 = c.add32(norm2, d2);
+                    }
+                    (mean, sqrt32(c, norm2))
+                })
+            })
+            .collect();
+
+        let mut out = Vec::new();
+        for frame_i in 1..=self.frames {
+            let phase = frame_i as f32 * 0.6;
+            let frame = synth(ctx, &f, &texture, phase);
+            for (pi, pt) in points.iter_mut().enumerate() {
+                let tpl = &templates[pi];
+                let (tmean, tnorm) = tstats[pi];
+                // search the window for the max-NCC offset
+                let mut best = (f32::MIN, 0i32, 0i32);
+                for oy in -(SEARCH as i32) / 2..=(SEARCH as i32) / 2 {
+                    for ox in -(SEARCH as i32) / 2..=(SEARCH as i32) / 2 {
+                        let score = ctx.call(f.ncc, |c| {
+                            // window mean
+                            let mut wmean = 0.0f32;
+                            let mut vals = [0.0f32; TPL * TPL];
+                            for ty in 0..TPL {
+                                for tx in 0..TPL {
+                                    let ix = (pt.0 as i32 + ox + tx as i32 - TPL as i32 / 2)
+                                        .clamp(0, FRAME as i32 - 1)
+                                        as usize;
+                                    let iy = (pt.1 as i32 + oy + ty as i32 - TPL as i32 / 2)
+                                        .clamp(0, FRAME as i32 - 1)
+                                        as usize;
+                                    let v = c.load32(frame[iy * FRAME + ix]);
+                                    vals[ty * TPL + tx] = v;
+                                    wmean = c.add32(wmean, v);
+                                }
+                            }
+                            wmean = c.div32(wmean, (TPL * TPL) as f32);
+                            // centered correlation / norms
+                            let mut corr = 0.0f32;
+                            let mut wnorm2 = 0.0f32;
+                            for (k, &v) in vals.iter().enumerate() {
+                                let dv = c.sub32(v, wmean);
+                                let dt = c.sub32(tpl[k], tmean);
+                                let p = c.mul32(dv, dt);
+                                corr = c.add32(corr, p);
+                                let dv2 = c.mul32(dv, dv);
+                                wnorm2 = c.add32(wnorm2, dv2);
+                            }
+                            let wnorm = sqrt32(c, wnorm2);
+                            let denom = c.mul32(wnorm, tnorm);
+                            c.div32(corr, denom.max(1e-9))
+                        });
+                        if score > best.0 {
+                            best = (score, ox, oy);
+                        }
+                    }
+                }
+                ctx.call(f.track_update, |c| {
+                    // damped update toward the best offset
+                    let nx = c.add32(pt.0, 0.8 * best.1 as f32);
+                    let ny = c.add32(pt.1, 0.8 * best.2 as f32);
+                    pt.0 = c.store32(nx.clamp(1.0, (FRAME - 2) as f32));
+                    pt.1 = c.store32(ny.clamp(1.0, (FRAME - 2) as f32));
+                });
+                out.push(pt.0 as f64);
+                out.push(pt.1 as f64);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn points_stay_in_frame() {
+        let w = Heartwall::default();
+        let out = w.run(&mut FpContext::profiler(), 2);
+        assert_eq!(out.len(), POINTS * 2 * w.frames);
+        for v in &out {
+            assert!((0.0..FRAME as f64).contains(v));
+        }
+    }
+
+    #[test]
+    fn tracks_move_with_breathing() {
+        // the wall breathes; at least some tracked points must move
+        let w = Heartwall { frames: 4 };
+        let out = w.run(&mut FpContext::profiler(), 1);
+        let first = &out[..POINTS * 2];
+        let last = &out[out.len() - POINTS * 2..];
+        let moved: f64 = first
+            .iter()
+            .zip(last)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(moved > 1.0, "points did not move ({moved})");
+    }
+
+    #[test]
+    fn ncc_is_hot_function() {
+        let w = Heartwall::default();
+        let mut ctx = FpContext::profiler();
+        w.run(&mut ctx, 2);
+        let profile = crate::engine::profile::Profile::from_context(&ctx);
+        assert_eq!(profile.rows[0].name, "ncc");
+        // heartwall has only 4 functions: coverage at k=4 is total
+        assert_eq!(profile.coverage(4), 1.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let w = Heartwall::default();
+        let a = w.run(&mut FpContext::profiler(), 8);
+        let b = w.run(&mut FpContext::profiler(), 8);
+        assert_eq!(a, b);
+    }
+}

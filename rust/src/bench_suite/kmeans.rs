@@ -1,0 +1,265 @@
+//! Kmeans (Rodinia): Lloyd iterations over dense feature vectors.
+//!
+//! Table II: single precision, 9 candidate functions (24⁹). The
+//! decomposition follows Rodinia's kmeans: feature normalisation, the
+//! point-to-centroid distance kernel, assignment, centroid accumulation
+//! and division, convergence delta, plus the RMSE-style quality pass.
+
+use crate::engine::{FpContext, FuncId};
+use crate::fpi::Precision;
+use crate::util::Pcg64;
+
+use super::math32::sqrt32;
+use super::Workload;
+
+/// Kmeans workload configuration.
+pub struct Kmeans {
+    /// Points per input.
+    pub points: usize,
+    /// Feature dimensionality.
+    pub dims: usize,
+    /// Cluster count.
+    pub clusters: usize,
+    /// Lloyd iterations.
+    pub iters: usize,
+}
+
+impl Default for Kmeans {
+    fn default() -> Self {
+        Self { points: 128, dims: 8, clusters: 6, iters: 8 }
+    }
+}
+
+struct Funcs {
+    normalize: FuncId,
+    dist2: FuncId,
+    assign: FuncId,
+    accumulate: FuncId,
+    divide_centers: FuncId,
+    delta: FuncId,
+    rmse: FuncId,
+    min_select: FuncId,
+    init_centers: FuncId,
+}
+
+impl Kmeans {
+    fn gen_points(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed ^ 0x4B4D);
+        // clustered blobs so the algorithm has real structure to find
+        let centers: Vec<f64> =
+            (0..self.clusters * self.dims).map(|_| rng.uniform(-4.0, 4.0)).collect();
+        let mut pts = Vec::with_capacity(self.points * self.dims);
+        for i in 0..self.points {
+            let c = i % self.clusters;
+            for d in 0..self.dims {
+                pts.push((centers[c * self.dims + d] + rng.normal() * 0.7) as f32);
+            }
+        }
+        pts
+    }
+}
+
+impl Workload for Kmeans {
+    fn name(&self) -> &'static str {
+        "kmeans"
+    }
+
+    fn default_target(&self) -> Precision {
+        Precision::Single
+    }
+
+    fn functions(&self) -> Vec<&'static str> {
+        vec![
+            "dist2",
+            "accumulate",
+            "assign",
+            "normalize",
+            "divide_centers",
+            "rmse",
+            "delta",
+            "min_select",
+            "init_centers",
+        ]
+    }
+
+    fn train_seeds(&self) -> Vec<u64> {
+        (0..10).map(|i| 0x5EED + i).collect() // Table II: 10 vectors
+    }
+
+    fn test_seeds(&self) -> Vec<u64> {
+        (0..30).map(|i| 0x7E57 + i).collect()
+    }
+
+    fn run(&self, ctx: &mut FpContext, seed: u64) -> Vec<f64> {
+        let f = Funcs {
+            normalize: ctx.register("normalize"),
+            dist2: ctx.register("dist2"),
+            assign: ctx.register("assign"),
+            accumulate: ctx.register("accumulate"),
+            divide_centers: ctx.register("divide_centers"),
+            delta: ctx.register("delta"),
+            rmse: ctx.register("rmse"),
+            min_select: ctx.register("min_select"),
+            init_centers: ctx.register("init_centers"),
+        };
+        let (n, d, k) = (self.points, self.dims, self.clusters);
+        let mut pts = self.gen_points(seed);
+
+        // normalize features to zero mean (per dimension)
+        ctx.call(f.normalize, |c| {
+            for dim in 0..d {
+                let mut sum = 0.0f32;
+                for p in 0..n {
+                    let v = c.load32(pts[p * d + dim]);
+                    sum = c.add32(sum, v);
+                }
+                let mean = c.div32(sum, n as f32);
+                for p in 0..n {
+                    let centered = c.sub32(pts[p * d + dim], mean);
+                    pts[p * d + dim] = c.store32(centered);
+                }
+            }
+        });
+
+        // deterministic farthest-point-ish init
+        let mut centers = vec![0.0f32; k * d];
+        ctx.call(f.init_centers, |c| {
+            for ci in 0..k {
+                let p = (ci * n) / k;
+                for dim in 0..d {
+                    centers[ci * d + dim] = c.load32(pts[p * d + dim]);
+                }
+            }
+        });
+
+        let mut assignment = vec![0usize; n];
+        for _iter in 0..self.iters {
+            // assignment step
+            ctx.call(f.assign, |c| {
+                for p in 0..n {
+                    let mut best = f32::MAX;
+                    let mut best_c = 0;
+                    for ci in 0..k {
+                        let d2 = c.call(f.dist2, |c| {
+                            let mut acc = 0.0f32;
+                            for dim in 0..d {
+                                let diff =
+                                    c.sub32(pts[p * d + dim], centers[ci * d + dim]);
+                                let sq = c.mul32(diff, diff);
+                                acc = c.add32(acc, sq);
+                            }
+                            acc
+                        });
+                        c.call(f.min_select, |c| {
+                            let delta = c.sub32(d2, best);
+                            if delta < 0.0 {
+                                best = d2;
+                                best_c = ci;
+                            }
+                        });
+                    }
+                    assignment[p] = best_c;
+                    // write the membership distance (Rodinia keeps a
+                    // per-point distance array)
+                    c.store32(best);
+                }
+            });
+
+            // update step
+            let mut sums = vec![0.0f32; k * d];
+            let mut counts = vec![0u32; k];
+            ctx.call(f.accumulate, |c| {
+                for p in 0..n {
+                    let ci = assignment[p];
+                    counts[ci] += 1;
+                    for dim in 0..d {
+                        let v = c.load32(pts[p * d + dim]);
+                        sums[ci * d + dim] = c.add32(sums[ci * d + dim], v);
+                    }
+                }
+            });
+            let mut moved = 0.0f32;
+            ctx.call(f.divide_centers, |c| {
+                for ci in 0..k {
+                    if counts[ci] == 0 {
+                        continue;
+                    }
+                    for dim in 0..d {
+                        let nc = c.div32(sums[ci * d + dim], counts[ci] as f32);
+                        let shift = c.call(f.delta, |c| {
+                            let diff = c.sub32(nc, centers[ci * d + dim]);
+                            c.mul32(diff, diff)
+                        });
+                        moved = c.add32(moved, shift);
+                        centers[ci * d + dim] = c.store32(nc);
+                    }
+                }
+            });
+            let _ = moved;
+        }
+
+        // quality: per-cluster RMSE + final centers
+        let mut out: Vec<f64> = Vec::with_capacity(k * d + 1);
+        let rmse = ctx.call(f.rmse, |c| {
+            let mut acc = 0.0f32;
+            for p in 0..n {
+                let ci = assignment[p];
+                for dim in 0..d {
+                    let diff = c.sub32(pts[p * d + dim], centers[ci * d + dim]);
+                    let sq = c.mul32(diff, diff);
+                    acc = c.add32(acc, sq);
+                }
+            }
+            let m = c.div32(acc, (n * d) as f32);
+            sqrt32(c, m)
+        });
+        out.push(rmse as f64);
+        out.extend(centers.iter().map(|&v| v as f64));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_to_low_rmse() {
+        let w = Kmeans::default();
+        let mut ctx = FpContext::profiler();
+        let out = w.run(&mut ctx, 5);
+        // blobs have sigma 0.7: a correct clustering lands near it
+        assert!(out[0] > 0.1 && out[0] < 2.0, "rmse {}", out[0]);
+    }
+
+    #[test]
+    fn deterministic() {
+        let w = Kmeans::default();
+        let a = w.run(&mut FpContext::profiler(), 9);
+        let b = w.run(&mut FpContext::profiler(), 9);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn function_census_covers_all() {
+        let w = Kmeans::default();
+        let mut ctx = FpContext::profiler();
+        w.run(&mut ctx, 2);
+        let stats = ctx.function_stats();
+        for f in ["dist2", "accumulate", "normalize", "rmse"] {
+            assert!(
+                stats.iter().any(|(n, s)| n == f && s.total_flops() > 0),
+                "{f} missing"
+            );
+        }
+    }
+
+    #[test]
+    fn dist2_dominates_flops() {
+        let w = Kmeans::default();
+        let mut ctx = FpContext::profiler();
+        w.run(&mut ctx, 2);
+        let profile = crate::engine::profile::Profile::from_context(&ctx);
+        assert_eq!(profile.rows[0].name, "dist2");
+    }
+}

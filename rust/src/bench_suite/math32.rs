@@ -1,0 +1,225 @@
+//! Instrumented single-precision math kernels.
+//!
+//! The Parsec binaries reach transcendental functions through libm,
+//! whose SSE arithmetic Pin instruments like any other code. Here the
+//! equivalents are implemented directly against [`FpContext`] so their
+//! FLOPs are visible to the engine and sensitive to the active FPI —
+//! `exp` under a 4-bit FPI really does lose accuracy, which is exactly
+//! the behaviour the benchmarks' quality metrics must see.
+//!
+//! All routines execute in the *caller's* scope (no frame of their own),
+//! matching how inlined/libm FLOPs attribute in the paper's CIP model.
+
+use crate::engine::FpContext;
+
+/// exp(x) via range reduction `x = k·ln2 + r` and a degree-6 Horner
+/// polynomial on `r ∈ [-ln2/2, ln2/2]`.
+pub fn exp32(ctx: &mut FpContext, x: f32) -> f32 {
+    if x > 88.0 {
+        return f32::INFINITY;
+    }
+    if x < -87.0 {
+        return 0.0;
+    }
+    const LN2: f32 = std::f32::consts::LN_2;
+    const INV_LN2: f32 = 1.442_695;
+    let k = ctx.mul32(x, INV_LN2).round();
+    let k_ln2 = ctx.mul32(k, LN2);
+    let r = ctx.sub32(x, k_ln2);
+    // Horner: 1 + r(1 + r/2(1 + r/3(1 + r/4(1 + r/5(1 + r/6)))))
+    let mut p = {
+        let t = ctx.div32(r, 6.0);
+        ctx.add32(1.0, t)
+    };
+    for denom in [5.0f32, 4.0, 3.0, 2.0] {
+        let rd = ctx.div32(r, denom);
+        let t = ctx.mul32(rd, p);
+        p = ctx.add32(1.0, t);
+    }
+    let rp = ctx.mul32(r, p);
+    let poly = ctx.add32(1.0, rp);
+    // scale by 2^k exactly (exponent arithmetic — no mantissa FLOP)
+    poly * (2.0f32).powi(k as i32)
+}
+
+/// ln(x) via mantissa/exponent split and the atanh series
+/// `ln(m) = 2s(1 + s²/3 + s⁴/5 + s⁶/7)`, `s = (m-1)/(m+1)`.
+pub fn ln32(ctx: &mut FpContext, x: f32) -> f32 {
+    if x <= 0.0 {
+        return if x == 0.0 { f32::NEG_INFINITY } else { f32::NAN };
+    }
+    let bits = x.to_bits();
+    let e = ((bits >> 23) as i32 & 0xff) - 127;
+    let m = f32::from_bits((bits & 0x007f_ffff) | 0x3f80_0000); // [1, 2)
+    let num = ctx.sub32(m, 1.0);
+    let den = ctx.add32(m, 1.0);
+    let s = ctx.div32(num, den);
+    let s2 = ctx.mul32(s, s);
+    let mut p = 1.0 / 7.0;
+    for c in [1.0f32 / 5.0, 1.0 / 3.0, 1.0] {
+        let t = ctx.mul32(s2, p);
+        p = ctx.add32(c, t);
+    }
+    let two_s = ctx.mul32(2.0, s);
+    let ln_m = ctx.mul32(two_s, p);
+    ctx.add32(ln_m, e as f32 * std::f32::consts::LN_2)
+}
+
+/// sqrt(x) by Newton–Raphson on `1/sqrt(x)` (bit-trick seed, three
+/// refinement steps), finished with one multiply.
+pub fn sqrt32(ctx: &mut FpContext, x: f32) -> f32 {
+    if x < 0.0 {
+        return f32::NAN;
+    }
+    if x == 0.0 {
+        return 0.0;
+    }
+    let mut y = f32::from_bits(0x5f37_59df - (x.to_bits() >> 1));
+    for _ in 0..3 {
+        // y = y (1.5 - 0.5 x y²)
+        let hx = ctx.mul32(0.5, x);
+        let hxy = ctx.mul32(hx, y);
+        let hxy2 = ctx.mul32(hxy, y);
+        let corr = ctx.sub32(1.5, hxy2);
+        y = ctx.mul32(y, corr);
+    }
+    ctx.mul32(x, y)
+}
+
+/// sin(x): reduce to `[-π, π]`, fold into `[-π/2, π/2]` via
+/// `sin(π − r) = sin(r)`, then a degree-7 Taylor/Horner polynomial
+/// `sin r = r(1 - r²/6(1 - r²/20(1 - r²/42)))` (error < 2e-4 there).
+pub fn sin32(ctx: &mut FpContext, x: f32) -> f32 {
+    let tau = std::f32::consts::TAU;
+    let pi = std::f32::consts::PI;
+    let k = (x / tau).round();
+    let ktau = ctx.mul32(k, tau);
+    let mut r = ctx.sub32(x, ktau);
+    if r > pi / 2.0 {
+        r = ctx.sub32(pi, r);
+    } else if r < -pi / 2.0 {
+        r = ctx.sub32(-pi, r);
+    }
+    let r2 = ctx.mul32(r, r);
+    let mut p = {
+        let t = ctx.div32(r2, 42.0);
+        ctx.sub32(1.0, t)
+    };
+    for denom in [20.0f32, 6.0] {
+        let rd = ctx.div32(r2, denom);
+        let t = ctx.mul32(rd, p);
+        p = ctx.sub32(1.0, t);
+    }
+    ctx.mul32(r, p)
+}
+
+/// cos(x) = sin(x + π/2).
+pub fn cos32(ctx: &mut FpContext, x: f32) -> f32 {
+    let y = ctx.add32(x, std::f32::consts::FRAC_PI_2);
+    sin32(ctx, y)
+}
+
+/// Cumulative normal distribution via the Abramowitz–Stegun 7.1.26
+/// rational approximation — Black-Scholes' `CNDF` hot kernel.
+pub fn cndf32(ctx: &mut FpContext, x: f32) -> f32 {
+    let neg = x < 0.0;
+    let ax = x.abs();
+    // t = 1 / (1 + 0.2316419 |x|)
+    let bt = ctx.mul32(0.2316419, ax);
+    let bt1 = ctx.add32(1.0, bt);
+    let t = ctx.div32(1.0, bt1);
+    // p = t(a1 + t(a2 + t(a3 + t(a4 + t·a5))))
+    let mut p = ctx.mul32(t, 1.330274429);
+    for a in [-1.821255978f32, 1.781477937, -0.356563782, 0.319381530] {
+        let s = ctx.add32(a, p);
+        p = ctx.mul32(t, s);
+    }
+    // pdf = exp(-x²/2) / sqrt(2π)
+    let x2 = ctx.mul32(ax, ax);
+    let arg = ctx.mul32(-0.5, x2);
+    let e = exp32(ctx, arg);
+    let pdf = ctx.mul32(e, 0.398_942_28);
+    let tail = ctx.mul32(pdf, p);
+    let cdf = ctx.sub32(1.0, tail);
+    if neg {
+        ctx.sub32(1.0, cdf)
+    } else {
+        cdf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> FpContext {
+        FpContext::profiler()
+    }
+
+    #[test]
+    fn exp_close_to_libm() {
+        let mut c = ctx();
+        for &x in &[-4.0f32, -1.0, 0.0, 0.5, 1.0, 3.0, 10.0] {
+            let got = exp32(&mut c, x);
+            let want = x.exp();
+            assert!((got - want).abs() / want.max(1e-6) < 1e-4, "exp({x}): {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn ln_close_to_libm() {
+        let mut c = ctx();
+        for &x in &[0.1f32, 0.5, 1.0, 2.0, 10.0, 12345.0] {
+            let got = ln32(&mut c, x);
+            let want = x.ln();
+            assert!((got - want).abs() < 1e-4 * want.abs().max(1.0), "ln({x}): {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn sqrt_close_to_libm() {
+        let mut c = ctx();
+        for &x in &[1e-6f32, 0.25, 1.0, 2.0, 144.0, 1e8] {
+            let got = sqrt32(&mut c, x);
+            let want = x.sqrt();
+            assert!((got - want).abs() / want.max(1e-9) < 1e-5, "sqrt({x}): {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn trig_close_to_libm() {
+        let mut c = ctx();
+        for i in -8..=8 {
+            let x = i as f32 * 0.7;
+            assert!((sin32(&mut c, x) - x.sin()).abs() < 2e-3, "sin({x})");
+            assert!((cos32(&mut c, x) - x.cos()).abs() < 2e-3, "cos({x})");
+        }
+    }
+
+    #[test]
+    fn cndf_matches_known_values() {
+        let mut c = ctx();
+        assert!((cndf32(&mut c, 0.0) - 0.5).abs() < 1e-4);
+        assert!((cndf32(&mut c, 1.96) - 0.975).abs() < 1e-3);
+        assert!((cndf32(&mut c, -1.96) - 0.025).abs() < 1e-3);
+    }
+
+    #[test]
+    fn truncation_degrades_cndf() {
+        use crate::fpi::{FpiLibrary, Precision};
+        use crate::placement::Placement;
+        let lib = FpiLibrary::truncation_family(Precision::Single);
+        let mut narrow =
+            FpContext::new(lib, Placement::whole_program(FpiLibrary::truncation_id(3)));
+        let approx = cndf32(&mut narrow, 0.8);
+        let exact = cndf32(&mut ctx(), 0.8);
+        assert!((approx - exact).abs() > 1e-4, "3-bit cndf should differ");
+    }
+
+    #[test]
+    fn flops_are_counted() {
+        let mut c = ctx();
+        let _ = cndf32(&mut c, 0.3);
+        assert!(c.counters().total_flops() > 15);
+    }
+}

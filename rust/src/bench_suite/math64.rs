@@ -1,0 +1,166 @@
+//! Instrumented double-precision math kernels (see [`super::math32`]).
+//!
+//! Used by the double-dominant workloads (particlefilter, canneal) and
+//! the f64 halves of the mixed ones (ferret, srad).
+
+use crate::engine::FpContext;
+
+/// exp(x), double precision: range reduction + degree-9 Horner.
+pub fn exp64(ctx: &mut FpContext, x: f64) -> f64 {
+    if x > 709.0 {
+        return f64::INFINITY;
+    }
+    if x < -708.0 {
+        return 0.0;
+    }
+    const LN2: f64 = std::f64::consts::LN_2;
+    const INV_LN2: f64 = std::f64::consts::LOG2_E;
+    let k = ctx.mul64(x, INV_LN2).round();
+    let k_ln2 = ctx.mul64(k, LN2);
+    let r = ctx.sub64(x, k_ln2);
+    let mut p = {
+        let t = ctx.div64(r, 9.0);
+        ctx.add64(1.0, t)
+    };
+    for denom in [8.0f64, 7.0, 6.0, 5.0, 4.0, 3.0, 2.0] {
+        let rd = ctx.div64(r, denom);
+        let t = ctx.mul64(rd, p);
+        p = ctx.add64(1.0, t);
+    }
+    let rp = ctx.mul64(r, p);
+    let poly = ctx.add64(1.0, rp);
+    poly * (2.0f64).powi(k as i32)
+}
+
+/// ln(x), double precision (atanh series, degree 11).
+pub fn ln64(ctx: &mut FpContext, x: f64) -> f64 {
+    if x <= 0.0 {
+        return if x == 0.0 { f64::NEG_INFINITY } else { f64::NAN };
+    }
+    let bits = x.to_bits();
+    let e = ((bits >> 52) as i64 & 0x7ff) - 1023;
+    let m = f64::from_bits((bits & 0x000f_ffff_ffff_ffff) | 0x3ff0_0000_0000_0000);
+    let num = ctx.sub64(m, 1.0);
+    let den = ctx.add64(m, 1.0);
+    let s = ctx.div64(num, den);
+    let s2 = ctx.mul64(s, s);
+    let mut p = 1.0 / 19.0;
+    for c in [
+        1.0f64 / 17.0,
+        1.0 / 15.0,
+        1.0 / 13.0,
+        1.0 / 11.0,
+        1.0 / 9.0,
+        1.0 / 7.0,
+        1.0 / 5.0,
+        1.0 / 3.0,
+        1.0,
+    ] {
+        let t = ctx.mul64(s2, p);
+        p = ctx.add64(c, t);
+    }
+    let two_s = ctx.mul64(2.0, s);
+    let ln_m = ctx.mul64(two_s, p);
+    ctx.add64(ln_m, e as f64 * std::f64::consts::LN_2)
+}
+
+/// sqrt(x), double precision (Newton on 1/sqrt, four refinements).
+pub fn sqrt64(ctx: &mut FpContext, x: f64) -> f64 {
+    if x < 0.0 {
+        return f64::NAN;
+    }
+    if x == 0.0 {
+        return 0.0;
+    }
+    let mut y = f64::from_bits(0x5fe6_eb50_c7b5_37a9 - (x.to_bits() >> 1));
+    for _ in 0..4 {
+        let hx = ctx.mul64(0.5, x);
+        let hxy = ctx.mul64(hx, y);
+        let hxy2 = ctx.mul64(hxy, y);
+        let corr = ctx.sub64(1.5, hxy2);
+        y = ctx.mul64(y, corr);
+    }
+    ctx.mul64(x, y)
+}
+
+/// sin(x), double precision: reduce to `[-π/2, π/2]` (via
+/// `sin(π − r) = sin r`), degree-11 Horner.
+pub fn sin64(ctx: &mut FpContext, x: f64) -> f64 {
+    let tau = std::f64::consts::TAU;
+    let pi = std::f64::consts::PI;
+    let k = (x / tau).round();
+    let ktau = ctx.mul64(k, tau);
+    let mut r = ctx.sub64(x, ktau);
+    if r > pi / 2.0 {
+        r = ctx.sub64(pi, r);
+    } else if r < -pi / 2.0 {
+        r = ctx.sub64(-pi, r);
+    }
+    let r2 = ctx.mul64(r, r);
+    let mut p = {
+        let t = ctx.div64(r2, 110.0);
+        ctx.sub64(1.0, t)
+    };
+    for denom in [72.0f64, 42.0, 20.0, 6.0] {
+        let rd = ctx.div64(r2, denom);
+        let t = ctx.mul64(rd, p);
+        p = ctx.sub64(1.0, t);
+    }
+    ctx.mul64(r, p)
+}
+
+/// cos(x) = sin(x + π/2).
+pub fn cos64(ctx: &mut FpContext, x: f64) -> f64 {
+    let y = ctx.add64(x, std::f64::consts::FRAC_PI_2);
+    sin64(ctx, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> FpContext {
+        FpContext::profiler()
+    }
+
+    #[test]
+    fn exp_close_to_libm() {
+        let mut c = ctx();
+        for &x in &[-20.0f64, -1.0, 0.0, 1.0, 5.0, 50.0] {
+            let got = exp64(&mut c, x);
+            let want = x.exp();
+            assert!(
+                (got - want).abs() / want.max(1e-12) < 1e-9,
+                "exp({x}): {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn ln_close_to_libm() {
+        let mut c = ctx();
+        for &x in &[1e-9f64, 0.5, 1.0, 3.0, 1e9] {
+            let got = ln64(&mut c, x);
+            assert!((got - x.ln()).abs() < 1e-9 * x.ln().abs().max(1.0), "ln({x})");
+        }
+    }
+
+    #[test]
+    fn sqrt_close_to_libm() {
+        let mut c = ctx();
+        for &x in &[1e-12f64, 0.04, 1.0, 77.0, 1e12] {
+            let got = sqrt64(&mut c, x);
+            assert!((got - x.sqrt()).abs() / x.sqrt().max(1e-12) < 1e-9, "sqrt({x})");
+        }
+    }
+
+    #[test]
+    fn trig_close_to_libm() {
+        let mut c = ctx();
+        for i in -10..=10 {
+            let x = i as f64 * 0.61;
+            assert!((sin64(&mut c, x) - x.sin()).abs() < 1e-6, "sin({x})");
+            assert!((cos64(&mut c, x) - x.cos()).abs() < 1e-6, "cos({x})");
+        }
+    }
+}

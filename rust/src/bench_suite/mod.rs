@@ -1,0 +1,163 @@
+//! The evaluated workloads — Rust reimplementations of the paper's
+//! Parsec 3.0 / Rodinia 3.1 benchmark selection (Table II) plus the two
+//! extra Fig. 4 entries (canneal, srad) and the radar GMTI application.
+//!
+//! Each workload is written against [`FpContext`]: all of its floating
+//! point arithmetic flows through the instrumented ops, and its hot
+//! functions are real named scopes (the paper's per-function placement
+//! targets). Inputs are generated deterministically from a seed, with
+//! disjoint train/test seed sets mirroring the paper's §V-G protocol.
+//!
+//! Substitution note (DESIGN.md): these are reimplementations of the
+//! benchmark *algorithms* at reduced problem sizes, not the Parsec
+//! sources — what the experiments need is (a) realistic per-function
+//! FLOP mixes and (b) heterogeneous precision sensitivity across
+//! functions, both of which the algorithmic kernels preserve.
+
+pub mod blackscholes;
+pub mod bodytrack;
+pub mod canneal;
+pub mod ferret;
+pub mod fluidanimate;
+pub mod heartwall;
+pub mod kmeans;
+pub mod math32;
+pub mod math64;
+pub mod particlefilter;
+pub mod radar;
+pub mod srad;
+
+use crate::engine::FpContext;
+use crate::fpi::Precision;
+
+/// A benchmark program runnable under the instrumented engine.
+pub trait Workload: Send + Sync {
+    /// Stable name (CLI, reports, Table II row).
+    fn name(&self) -> &'static str;
+
+    /// Default optimization target — the dominant precision (paper
+    /// §V-B: most benchmarks hold one precision across the code base).
+    fn default_target(&self) -> Precision;
+
+    /// Candidate functions for per-function placement, hot-first. The
+    /// evaluator takes the top 10 (paper §IV-4).
+    fn functions(&self) -> Vec<&'static str>;
+
+    /// Functions that act as *callers* of a shared kernel for the FCS
+    /// rule (paper Fig. 3): these stay in the FCS map while the shared
+    /// kernels named in [`Workload::fcs_shared`] are removed, letting
+    /// the kernel's precision follow its caller. Empty = FCS ≡ CIP.
+    fn fcs_shared(&self) -> Vec<&'static str> {
+        Vec::new()
+    }
+
+    /// Seeds of the training inputs (paper Table II "training inputs").
+    fn train_seeds(&self) -> Vec<u64> {
+        (0..5).map(|i| 0x5EED + i).collect()
+    }
+
+    /// Seeds of the held-out test inputs.
+    fn test_seeds(&self) -> Vec<u64> {
+        (0..15).map(|i| 0x7E57 + i).collect()
+    }
+
+    /// Execute one input; every FLOP must flow through `ctx`. Returns
+    /// the program output as a flat vector for the quality metric.
+    fn run(&self, ctx: &mut FpContext, seed: u64) -> Vec<f64>;
+
+    /// Output quality loss vs. the exact baseline (0.01 = 1%). The
+    /// default is the mean relative error, the paper's generic metric.
+    fn error(&self, baseline: &[f64], approx: &[f64]) -> f64 {
+        mean_relative_error(baseline, approx)
+    }
+}
+
+/// Mean relative error with an absolute floor, robust to zeros; NaN or
+/// length mismatch count as total (100%) error.
+pub fn mean_relative_error(baseline: &[f64], approx: &[f64]) -> f64 {
+    if baseline.len() != approx.len() || baseline.is_empty() {
+        return 1.0;
+    }
+    let mut total = 0.0;
+    for (b, a) in baseline.iter().zip(approx) {
+        if !a.is_finite() || !b.is_finite() {
+            return 1.0;
+        }
+        let denom = b.abs().max(1e-6);
+        total += ((a - b).abs() / denom).min(1.0);
+    }
+    total / baseline.len() as f64
+}
+
+/// All workloads, Table II order then the Fig. 4 extras.
+pub fn all() -> Vec<Box<dyn Workload>> {
+    vec![
+        Box::new(blackscholes::Blackscholes::default()),
+        Box::new(bodytrack::Bodytrack::default()),
+        Box::new(fluidanimate::Fluidanimate::default()),
+        Box::new(ferret::Ferret::default()),
+        Box::new(heartwall::Heartwall::default()),
+        Box::new(kmeans::Kmeans::default()),
+        Box::new(particlefilter::Particlefilter::default()),
+        Box::new(radar::Radar::default()),
+        Box::new(canneal::Canneal::default()),
+        Box::new(srad::Srad::default()),
+    ]
+}
+
+/// The eight Table II benchmarks (the Fig. 5/6/7 set).
+pub fn table2() -> Vec<Box<dyn Workload>> {
+    all().into_iter().filter(|w| !matches!(w.name(), "canneal" | "srad")).collect()
+}
+
+/// Look a workload up by name.
+pub fn by_name(name: &str) -> Option<Box<dyn Workload>> {
+    all().into_iter().find(|w| w.name() == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_ten_workloads() {
+        assert_eq!(all().len(), 10);
+        assert_eq!(table2().len(), 8);
+    }
+
+    #[test]
+    fn names_unique() {
+        let mut names: Vec<_> = all().iter().map(|w| w.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 10);
+    }
+
+    #[test]
+    fn by_name_round_trips() {
+        for w in all() {
+            assert!(by_name(w.name()).is_some());
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn train_test_seeds_disjoint() {
+        for w in all() {
+            let train = w.train_seeds();
+            let test = w.test_seeds();
+            assert!(!train.is_empty() && !test.is_empty());
+            for s in &train {
+                assert!(!test.contains(s), "{} shares seed {s}", w.name());
+            }
+        }
+    }
+
+    #[test]
+    fn mean_relative_error_basics() {
+        assert_eq!(mean_relative_error(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!(mean_relative_error(&[1.0], &[1.1]) > 0.05);
+        assert_eq!(mean_relative_error(&[1.0], &[f64::NAN]), 1.0);
+        assert_eq!(mean_relative_error(&[1.0], &[1.0, 2.0]), 1.0);
+    }
+}

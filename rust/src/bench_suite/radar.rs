@@ -1,0 +1,399 @@
+//! Radar (GMTI signal processing, the paper's §III-B4/Fig. 3 & Fig. 9
+//! application): a pulse-Doppler pipeline with a *shared FFT kernel*.
+//!
+//! The pipeline per frame: synthesize a noisy pulse train containing a
+//! moving target → low-pass filter (frequency-domain FIR — calls `fft`)
+//! → decimate → pulse compression (matched filter — calls `fft` again)
+//! → Doppler magnitude accumulation → threshold detection.
+//!
+//! `fft` is called from two stages with very different accuracy demands,
+//! which is exactly the structure that separates the CIP and FCS rules:
+//! CIP must give both FFT call sites one precision; FCS (with `fft` left
+//! out of the map — paper Fig. 3) lets `fft@lpf` differ from `fft@pc`.
+//!
+//! Table II: single precision, 13 functions, 10 train / 40 test frames.
+
+use crate::engine::{FpContext, FuncId};
+use crate::fpi::Precision;
+use crate::util::Pcg64;
+
+use super::math32::{cos32, sin32, sqrt32};
+use super::Workload;
+
+const N: usize = 128; // samples per pulse (FFT size)
+const PULSES: usize = 6;
+const DECIMATE: usize = 2;
+
+/// Radar workload configuration.
+pub struct Radar {
+    /// Frames processed per input.
+    pub frames: usize,
+}
+
+impl Default for Radar {
+    fn default() -> Self {
+        Self { frames: 2 }
+    }
+}
+
+struct Funcs {
+    gen_pulse: FuncId,
+    window: FuncId,
+    lpf: FuncId,
+    decimate: FuncId,
+    pc: FuncId,
+    fft: FuncId,
+    twiddle: FuncId,
+    complex_mul: FuncId,
+    magnitude: FuncId,
+    doppler: FuncId,
+    detect: FuncId,
+    ref_chirp: FuncId,
+    accumulate: FuncId,
+}
+
+fn funcs(ctx: &mut FpContext) -> Funcs {
+    Funcs {
+        gen_pulse: ctx.register("gen_pulse"),
+        window: ctx.register("window"),
+        lpf: ctx.register("lpf"),
+        decimate: ctx.register("decimate"),
+        pc: ctx.register("pc"),
+        fft: ctx.register("fft"),
+        twiddle: ctx.register("twiddle"),
+        complex_mul: ctx.register("complex_mul"),
+        magnitude: ctx.register("magnitude"),
+        doppler: ctx.register("doppler"),
+        detect: ctx.register("detect"),
+        ref_chirp: ctx.register("ref_chirp"),
+        accumulate: ctx.register("accumulate"),
+    }
+}
+
+/// In-place radix-2 DIT FFT over split complex data. `inverse` flips the
+/// twiddle sign and scales by 1/n. All arithmetic is instrumented; the
+/// butterfly's complex multiplies run in the `complex_mul` scope and
+/// twiddle updates in `twiddle` (both FFT helpers for FCS purposes).
+fn fft_in_place(ctx: &mut FpContext, f: &Funcs, re: &mut [f32], im: &mut [f32], inverse: bool) {
+    let n = re.len();
+    debug_assert!(n.is_power_of_two());
+    // bit-reversal permutation (pointer shuffling, no FLOPs)
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0f32 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let base = sign * std::f32::consts::TAU / len as f32;
+        // per-stage twiddle table, computed directly (no incremental
+        // accumulation — its rounding error compounds over the stage)
+        let half = len / 2;
+        let mut tw_r = vec![0.0f32; half];
+        let mut tw_i = vec![0.0f32; half];
+        ctx.call(f.twiddle, |c| {
+            for (k, (tr, ti)) in tw_r.iter_mut().zip(tw_i.iter_mut()).enumerate() {
+                let ang = c.mul32(base, k as f32);
+                *tr = cos32(c, ang);
+                *ti = sin32(c, ang);
+            }
+        });
+        let mut i = 0;
+        while i < n {
+            for k in 0..half {
+                let (ur, ui) = (re[i + k], im[i + k]);
+                let a = re[i + k + half];
+                let b = im[i + k + half];
+                let (cur_r, cur_i) = (tw_r[k], tw_i[k]);
+                let (vr, vi) = ctx.call(f.complex_mul, |c| {
+                    let t1 = c.mul32(a, cur_r);
+                    let t2 = c.mul32(b, cur_i);
+                    let t3 = c.mul32(a, cur_i);
+                    let t4 = c.mul32(b, cur_r);
+                    let vr = c.sub32(t1, t2);
+                    let vi = c.add32(t3, t4);
+                    (vr, vi)
+                });
+                re[i + k] = ctx.add32(ur, vr);
+                im[i + k] = ctx.add32(ui, vi);
+                re[i + k + half] = ctx.sub32(ur, vr);
+                im[i + k + half] = ctx.sub32(ui, vi);
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+    if inverse {
+        let inv_n = 1.0 / n as f32;
+        for k in 0..n {
+            re[k] = ctx.mul32(re[k], inv_n);
+            im[k] = ctx.mul32(im[k], inv_n);
+        }
+    }
+}
+
+impl Radar {
+    fn run_frame(&self, ctx: &mut FpContext, f: &Funcs, rng: &mut Pcg64) -> Vec<f64> {
+        let target_delay = rng.below((N / 2) as u64) as usize + N / 8;
+        let target_doppler = rng.uniform(-0.3, 0.3) as f32;
+
+        // reference chirp (matched filter template)
+        let mut chirp_fr = vec![0.0f32; N];
+        let mut chirp_fi = vec![0.0f32; N];
+        ctx.call(f.ref_chirp, |c| {
+            for t in 0..N / 4 {
+                let phase = 0.02 * (t * t) as f32;
+                chirp_fr[t] = cos32(c, phase);
+                chirp_fi[t] = sin32(c, phase);
+            }
+        });
+        ctx.call(f.pc, |c| {
+            c.call(f.fft, |c| fft_in_place(c, f, &mut chirp_fr, &mut chirp_fi, false));
+        });
+
+        let m = N / DECIMATE;
+        let mut doppler_acc = vec![0.0f32; m];
+        for p in 0..PULSES {
+            // --- synthesize the received pulse
+            let mut rx_re = vec![0.0f32; N];
+            let mut rx_im = vec![0.0f32; N];
+            ctx.call(f.gen_pulse, |c| {
+                for t in 0..N {
+                    rx_re[t] = c.store32((rng.normal() * 0.4) as f32);
+                    rx_im[t] = c.store32((rng.normal() * 0.4) as f32);
+                }
+                let dop = c.mul32(target_doppler, p as f32);
+                for t in 0..N / 4 {
+                    let idx = (target_delay + t) % N;
+                    let phase = c.add32(0.02 * (t * t) as f32, dop);
+                    let cr0 = cos32(c, phase);
+                    let ci0 = sin32(c, phase);
+                    let cr = c.mul32(1.5, cr0);
+                    let ci = c.mul32(1.5, ci0);
+                    rx_re[idx] = c.add32(rx_re[idx], cr);
+                    rx_im[idx] = c.add32(rx_im[idx], ci);
+                }
+            });
+
+            // --- Hann window
+            ctx.call(f.window, |c| {
+                for t in 0..N {
+                    let arg = std::f32::consts::TAU * t as f32 / N as f32;
+                    let cv = cos32(c, arg);
+                    let half = c.mul32(0.5, cv);
+                    let w = c.sub32(0.5, half);
+                    rx_re[t] = c.mul32(rx_re[t], w);
+                    rx_im[t] = c.mul32(rx_im[t], w);
+                }
+            });
+
+            // --- low-pass filter in the frequency domain (calls fft)
+            ctx.call(f.lpf, |c| {
+                c.call(f.fft, |c| fft_in_place(c, f, &mut rx_re, &mut rx_im, false));
+                for k in 0..N {
+                    let bin = k.min(N - k);
+                    let gain = if bin < N / 8 {
+                        1.0
+                    } else if bin < N / 4 {
+                        let x = (bin - N / 8) as f32 / (N / 8) as f32;
+                        let cv = cos32(c, std::f32::consts::PI * x);
+                        let half = c.mul32(0.5, cv);
+                        c.add32(0.5, half)
+                    } else {
+                        0.0
+                    };
+                    rx_re[k] = c.mul32(rx_re[k], gain);
+                    rx_im[k] = c.mul32(rx_im[k], gain);
+                }
+                c.call(f.fft, |c| fft_in_place(c, f, &mut rx_re, &mut rx_im, true));
+            });
+
+            // --- decimate (zero-padded back to N for pulse compression)
+            let mut dec_re = vec![0.0f32; N];
+            let mut dec_im = vec![0.0f32; N];
+            ctx.call(f.decimate, |c| {
+                for k in 0..m {
+                    dec_re[k] = c.load32(rx_re[k * DECIMATE]);
+                    dec_im[k] = c.load32(rx_im[k * DECIMATE]);
+                }
+            });
+
+            // --- pulse compression: multiply by conj(chirp) in frequency
+            ctx.call(f.pc, |c| {
+                c.call(f.fft, |c| fft_in_place(c, f, &mut dec_re, &mut dec_im, false));
+                // matched filter: multiply by conj(chirp) — PC's own FLOPs
+                for k in 0..N {
+                    let (ar, ai) = (dec_re[k], dec_im[k]);
+                    let (br, bi) = (chirp_fr[k], chirp_fi[k]);
+                    let t1 = c.mul32(ar, br);
+                    let t2 = c.mul32(ai, bi);
+                    let t3 = c.mul32(ai, br);
+                    let t4 = c.mul32(ar, bi);
+                    dec_re[k] = c.add32(t1, t2);
+                    dec_im[k] = c.sub32(t3, t4);
+                }
+                c.call(f.fft, |c| fft_in_place(c, f, &mut dec_re, &mut dec_im, true));
+            });
+
+            // --- Doppler accumulation of compressed magnitude
+            ctx.call(f.doppler, |c| {
+                let mut frame_energy = 0.0f32;
+                for (k, acc) in doppler_acc.iter_mut().enumerate() {
+                    let mag = c.call(f.magnitude, |c| {
+                        let rr = c.mul32(dec_re[k], dec_re[k]);
+                        let ii = c.mul32(dec_im[k], dec_im[k]);
+                        let s = c.add32(rr, ii);
+                        sqrt32(c, s)
+                    });
+                    c.call(f.accumulate, |c| {
+                        let sum = c.add32(*acc, mag);
+                        *acc = c.store32(sum);
+                    });
+                    frame_energy = c.add32(frame_energy, mag);
+                }
+                let _ = frame_energy;
+            });
+        }
+
+        // --- detection: mean-normalized range scores
+        ctx.call(f.detect, |c| {
+            let mut mean = 0.0f32;
+            for &v in doppler_acc.iter() {
+                mean = c.add32(mean, v);
+            }
+            mean = c.div32(mean, doppler_acc.len() as f32);
+            let floor = mean.max(1e-9);
+            doppler_acc
+                .iter()
+                .map(|&v| c.div32(v, floor) as f64)
+                .collect()
+        })
+    }
+}
+
+impl Workload for Radar {
+    fn name(&self) -> &'static str {
+        "radar"
+    }
+
+    fn default_target(&self) -> Precision {
+        Precision::Single
+    }
+
+    fn functions(&self) -> Vec<&'static str> {
+        vec![
+            "fft",
+            "complex_mul",
+            "twiddle",
+            "lpf",
+            "pc",
+            "gen_pulse",
+            "window",
+            "magnitude",
+            "doppler",
+            "accumulate",
+            "decimate",
+            "detect",
+            "ref_chirp",
+        ]
+    }
+
+    fn fcs_shared(&self) -> Vec<&'static str> {
+        // leave the FFT (and its helpers) out of the FCS map: their
+        // precision then follows the caller (lpf vs pc) — paper Fig. 3.
+        vec!["fft", "complex_mul", "twiddle"]
+    }
+
+    fn train_seeds(&self) -> Vec<u64> {
+        (0..5).map(|i| 0x5EED + i).collect() // 10 train frames (2/run)
+    }
+
+    fn test_seeds(&self) -> Vec<u64> {
+        (0..20).map(|i| 0x7E57 + i).collect() // 40 test frames
+    }
+
+    fn run(&self, ctx: &mut FpContext, seed: u64) -> Vec<f64> {
+        let f = funcs(ctx);
+        let mut rng = Pcg64::new(seed ^ 0x5241_4441);
+        let mut out = Vec::new();
+        for _ in 0..self.frames {
+            out.extend(self.run_frame(ctx, &f, &mut rng));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft_round_trip_recovers_signal() {
+        let mut ctx = FpContext::profiler();
+        let f = funcs(&mut ctx);
+        let mut rng = Pcg64::new(3);
+        let orig: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        let mut re = orig.clone();
+        let mut im = vec![0.0f32; 64];
+        fft_in_place(&mut ctx, &f, &mut re, &mut im, false);
+        fft_in_place(&mut ctx, &f, &mut re, &mut im, true);
+        for (a, b) in re.iter().zip(&orig) {
+            // twiddles come from the instrumented approximate sin/cos
+            // (abs err ~2e-4), compounded over log2(n) stages
+            assert!((a - b).abs() < 6e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fft_parseval_energy_conserved() {
+        let mut ctx = FpContext::profiler();
+        let f = funcs(&mut ctx);
+        let mut re: Vec<f32> = (0..32).map(|i| (i as f32 * 0.3).sin()).collect();
+        let mut im = vec![0.0f32; 32];
+        let time_energy: f32 = re.iter().map(|x| x * x).sum();
+        fft_in_place(&mut ctx, &f, &mut re, &mut im, false);
+        let freq_energy: f32 =
+            re.iter().zip(&im).map(|(r, i)| r * r + i * i).sum::<f32>() / 32.0;
+        assert!((time_energy - freq_energy).abs() / time_energy < 1e-3);
+    }
+
+    #[test]
+    fn detects_target_peak() {
+        let w = Radar { frames: 1 };
+        let mut ctx = FpContext::profiler();
+        let out = w.run(&mut ctx, 11);
+        let peak = out.iter().cloned().fold(0.0f64, f64::max);
+        assert!(peak > 2.5, "peak score {peak}");
+    }
+
+    #[test]
+    fn fft_called_from_both_stages() {
+        let w = Radar { frames: 1 };
+        let mut ctx = FpContext::profiler();
+        w.run(&mut ctx, 1);
+        let stats = ctx.function_stats();
+        for name in ["fft", "lpf", "pc"] {
+            assert!(
+                stats.iter().any(|(n, s)| n == name && s.total_flops() > 0),
+                "{name} has no FLOPs"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let w = Radar { frames: 1 };
+        let a = w.run(&mut FpContext::profiler(), 7);
+        let b = w.run(&mut FpContext::profiler(), 7);
+        assert_eq!(a, b);
+    }
+}

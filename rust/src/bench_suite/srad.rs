@@ -1,0 +1,289 @@
+//! SRAD (Rodinia): speckle-reducing anisotropic diffusion on an
+//! ultrasound-like image.
+//!
+//! Fig. 4 shows srad carrying *both* precisions: the per-pixel stencil
+//! runs in f32 while the global statistics pass (mean/variance of the
+//! whole image, which feeds the diffusion coefficient) runs in f64 —
+//! matching the Rodinia code, where the reduction is done in double to
+//! avoid catastrophic cancellation. Eight FLOP-bearing functions.
+
+use crate::engine::{FpContext, FuncId};
+use crate::fpi::Precision;
+use crate::util::Pcg64;
+
+use super::math32::exp32;
+use super::Workload;
+
+const SIZE: usize = 20; // image side
+const LAMBDA: f32 = 0.12;
+
+/// SRAD workload configuration.
+pub struct Srad {
+    /// Diffusion iterations.
+    pub iters: usize,
+}
+
+impl Default for Srad {
+    fn default() -> Self {
+        Self { iters: 8 }
+    }
+}
+
+struct Funcs {
+    synth: FuncId,
+    stats: FuncId,
+    gradients: FuncId,
+    laplacian: FuncId,
+    diff_coef: FuncId,
+    clamp_coef: FuncId,
+    update: FuncId,
+    extract: FuncId,
+}
+
+fn funcs(ctx: &mut FpContext) -> Funcs {
+    Funcs {
+        synth: ctx.register("synth"),
+        stats: ctx.register("stats"),
+        gradients: ctx.register("gradients"),
+        laplacian: ctx.register("laplacian"),
+        diff_coef: ctx.register("diff_coef"),
+        clamp_coef: ctx.register("clamp_coef"),
+        update: ctx.register("update"),
+        extract: ctx.register("extract"),
+    }
+}
+
+impl Workload for Srad {
+    fn name(&self) -> &'static str {
+        "srad"
+    }
+
+    fn default_target(&self) -> Precision {
+        Precision::Single
+    }
+
+    fn functions(&self) -> Vec<&'static str> {
+        vec![
+            "gradients",
+            "diff_coef",
+            "update",
+            "laplacian",
+            "stats",
+            "synth",
+            "clamp_coef",
+            "extract",
+        ]
+    }
+
+    fn run(&self, ctx: &mut FpContext, seed: u64) -> Vec<f64> {
+        let f = funcs(ctx);
+        let mut rng = Pcg64::new(seed ^ 0x54AD);
+        let n = SIZE * SIZE;
+
+        // --- synthesize a speckled image: smooth phantom × noise
+        let mut img = vec![0.0f32; n];
+        ctx.call(f.synth, |c| {
+            for y in 0..SIZE {
+                for x in 0..SIZE {
+                    // phantom: two intensity plateaus + gradient
+                    let base = if (x as i32 - 10).pow(2) + (y as i32 - 10).pow(2) < 25 {
+                        0.8f32
+                    } else {
+                        0.3
+                    };
+                    let speckle = (1.0 + rng.normal() * 0.25) as f32;
+                    let v = c.mul32(base, speckle.max(0.05));
+                    img[y * SIZE + x] = c.store32(v.max(1e-3));
+                }
+            }
+        });
+
+        let idx = |x: usize, y: usize| y * SIZE + x;
+        for _ in 0..self.iters {
+            // --- global statistics in f64 (Rodinia does this reduction
+            //     in double for stability)
+            let q0_sq = ctx.call(f.stats, |c| {
+                let mut sum = 0.0f64;
+                let mut sum2 = 0.0f64;
+                for &v in &img {
+                    let vd = c.load64(v as f64);
+                    sum = c.add64(sum, vd);
+                    let v2 = c.mul64(vd, vd);
+                    sum2 = c.add64(sum2, v2);
+                }
+                let nn = n as f64;
+                let mean = c.div64(sum, nn);
+                let ms = c.div64(sum2, nn);
+                let mean2 = c.mul64(mean, mean);
+                let var = c.sub64(ms, mean2);
+                let rel_var = c.div64(var, mean2.max(1e-30));
+                rel_var as f32
+            });
+
+            // --- per-pixel diffusion coefficient from gradients
+            let mut coef = vec![0.0f32; n];
+            for y in 0..SIZE {
+                for x in 0..SIZE {
+                    let center = img[idx(x, y)];
+                    let north = img[idx(x, y.saturating_sub(1))];
+                    let south = img[idx(x, (y + 1).min(SIZE - 1))];
+                    let west = img[idx(x.saturating_sub(1), y)];
+                    let east = img[idx((x + 1).min(SIZE - 1), y)];
+
+                    let (g2, lap) = ctx.call(f.gradients, |c| {
+                        let dn = c.sub32(north, center);
+                        let ds = c.sub32(south, center);
+                        let dw = c.sub32(west, center);
+                        let de = c.sub32(east, center);
+                        let mut g2 = 0.0f32;
+                        for d in [dn, ds, dw, de] {
+                            let dd = c.mul32(d, d);
+                            g2 = c.add32(g2, dd);
+                        }
+                        let c2 = c.mul32(center, center);
+                        let g2n = c.div32(g2, c2.max(1e-12));
+                        let lap = c.call(f.laplacian, |c| {
+                            let s1 = c.add32(dn, ds);
+                            let s2 = c.add32(dw, de);
+                            let s = c.add32(s1, s2);
+                            c.div32(s, center.max(1e-12))
+                        });
+                        (g2n, lap)
+                    });
+
+                    let q = ctx.call(f.diff_coef, |c| {
+                        // q² = (½g² − (¼lap)²) / (1 + ¼lap)²
+                        let half_g = c.mul32(0.5, g2);
+                        let ql = c.mul32(0.25, lap);
+                        let ql2 = c.mul32(ql, ql);
+                        let num = c.sub32(half_g, ql2);
+                        let onep = c.add32(1.0, ql);
+                        let den = c.mul32(onep, onep);
+                        let q2 = c.div32(num, den.max(1e-12));
+                        // c = 1 / (1 + (q² − q0²)/(q0²(1+q0²)))
+                        let diff = c.sub32(q2, q0_sq);
+                        let onep_q0 = c.add32(1.0, q0_sq);
+                        let q0p = c.mul32(q0_sq, onep_q0);
+                        let ratio = c.div32(diff, q0p.max(1e-12));
+                        let denom = c.add32(1.0, ratio);
+                        c.div32(1.0, denom.max(1e-6))
+                    });
+                    coef[idx(x, y)] = ctx.call(f.clamp_coef, |c| {
+                        c.store32(q.clamp(0.0, 1.0))
+                    });
+                }
+            }
+
+            // --- diffusion update
+            ctx.call(f.update, |c| {
+                let old = img.clone();
+                for y in 0..SIZE {
+                    for x in 0..SIZE {
+                        let cn = coef[idx(x, y.saturating_sub(1))];
+                        let cs = coef[idx(x, (y + 1).min(SIZE - 1))];
+                        let cw = coef[idx(x.saturating_sub(1), y)];
+                        let ce = coef[idx((x + 1).min(SIZE - 1), y)];
+                        let center = old[idx(x, y)];
+                        let mut div = 0.0f32;
+                        for (cc, vv) in [
+                            (cn, old[idx(x, y.saturating_sub(1))]),
+                            (cs, old[idx(x, (y + 1).min(SIZE - 1))]),
+                            (cw, old[idx(x.saturating_sub(1), y)]),
+                            (ce, old[idx((x + 1).min(SIZE - 1), y)]),
+                        ] {
+                            let d = c.sub32(vv, center);
+                            let cd = c.mul32(cc, d);
+                            div = c.add32(div, cd);
+                        }
+                        let scaled = c.mul32(LAMBDA, div);
+                        let nv = c.add32(center, scaled);
+                        img[idx(x, y)] = c.store32(nv.max(1e-4));
+                    }
+                }
+            });
+        }
+
+        // --- output: denoised image (subsampled) + edge-preservation proxy
+        ctx.call(f.extract, |c| {
+            let mut out = Vec::new();
+            for y in (0..SIZE).step_by(2) {
+                for x in (0..SIZE).step_by(2) {
+                    out.push(img[idx(x, y)] as f64);
+                }
+            }
+            // contrast between phantom interior and exterior
+            let inside = img[idx(10, 10)];
+            let outside = img[idx(2, 2)];
+            let contrast = c.sub32(inside, outside);
+            out.push(contrast as f64);
+            // smoothness: mean |gradient| after diffusion
+            let mut rough = 0.0f32;
+            for y in 0..SIZE - 1 {
+                for x in 0..SIZE - 1 {
+                    let gx = c.sub32(img[idx(x + 1, y)], img[idx(x, y)]);
+                    let gy = c.sub32(img[idx(x, y + 1)], img[idx(x, y)]);
+                    let gx2 = c.mul32(gx, gx);
+                    let gy2 = c.mul32(gy, gy);
+                    let g2 = c.add32(gx2, gy2);
+                    rough = c.add32(rough, g2);
+                }
+            }
+            out.push(rough as f64);
+            out
+        })
+    }
+}
+
+/// Exp helper retained for parity with the Rodinia exponential variant
+/// of the diffusion coefficient (used by the `custom_fpi` example).
+#[allow(dead_code)]
+fn exp_coef(ctx: &mut FpContext, g2: f32, kappa: f32) -> f32 {
+    let r = g2 / (kappa * kappa);
+    exp32(ctx, -r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diffusion_smooths_speckle() {
+        let run_rough = |iters| {
+            let w = Srad { iters };
+            let out = w.run(&mut FpContext::profiler(), 3);
+            *out.last().unwrap()
+        };
+        let rough_before = run_rough(0);
+        let rough_after = run_rough(8);
+        assert!(
+            rough_after < rough_before * 0.6,
+            "no smoothing: {rough_before} -> {rough_after}"
+        );
+    }
+
+    #[test]
+    fn edges_preserved() {
+        let w = Srad::default();
+        let out = w.run(&mut FpContext::profiler(), 3);
+        let contrast = out[out.len() - 2];
+        assert!(contrast > 0.2, "phantom contrast lost: {contrast}");
+    }
+
+    #[test]
+    fn mixed_precision_profile() {
+        let w = Srad::default();
+        let mut ctx = FpContext::profiler();
+        w.run(&mut ctx, 1);
+        let p = crate::engine::profile::Profile::from_context(&ctx);
+        let frac = p.single_fraction();
+        assert!(frac > 0.5 && frac < 0.99, "single fraction {frac}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let w = Srad::default();
+        let a = w.run(&mut FpContext::profiler(), 5);
+        let b = w.run(&mut FpContext::profiler(), 5);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,281 @@
+//! The CNN case study (paper §V-H): per-layer precision tuning of the
+//! AOT-compiled LeNet-5 via the PJRT runtime.
+//!
+//! The genome maps to the model's `bits` input (one mantissa width per
+//! Table-V slot). Two placement policies mirror the paper:
+//!
+//! * **PLC** — per layer *category*: all conv layers share one width,
+//!   both pools share one, plus fc / tanh / internal (5 genes);
+//! * **PLI** — per layer *instance*: all 8 slots independent.
+//!
+//! Energy is modeled analytically from the per-slot FLOP counts the
+//! artifact metadata records (paper Fig. 10) scaled by the slot's
+//! mantissa width — the same datapath-width scaling the engine uses for
+//! the benchmarks, with no 'used-bits' term because here the width is
+//! enforced uniformly on whole tensors by the L1 kernel. Accuracy comes
+//! from actually executing the Pallas-backed module under each
+//! configuration (error = accuracy loss vs. the full-precision
+//! baseline, like Fig. 11).
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::explore::{Genome, Objectives, Problem};
+use crate::runtime::{LenetRuntime, NUM_SLOTS, SLOT_NAMES};
+
+/// Per-slot EPI weights, pJ at full width: convs and fc are MAC-mix
+/// (mean of fadd32/fmul32), pools are adds, tanh is polynomial mix,
+/// 'internal' (softmax: exp + div) leans on fdiv32.
+pub const SLOT_EPI_PJ: [f64; NUM_SLOTS] =
+    [370.0, 350.0, 370.0, 350.0, 370.0, 370.0, 370.0, 400.0];
+
+/// Placement policy for the CNN genome (paper §V-H).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CnnRule {
+    /// Per layer category: [conv, pool, fc, tanh, internal].
+    Plc,
+    /// Per layer instance: all 8 slots.
+    Pli,
+}
+
+impl CnnRule {
+    /// Stable name.
+    pub fn name(self) -> &'static str {
+        match self {
+            CnnRule::Plc => "PLC",
+            CnnRule::Pli => "PLI",
+        }
+    }
+
+    /// Genome length.
+    pub fn genome_len(self) -> usize {
+        match self {
+            CnnRule::Plc => 5,
+            CnnRule::Pli => NUM_SLOTS,
+        }
+    }
+
+    /// Expand a genome to the 8 per-slot widths the model consumes.
+    pub fn expand(self, genome: &Genome) -> [u32; NUM_SLOTS] {
+        match self {
+            CnnRule::Pli => {
+                let mut bits = [24u32; NUM_SLOTS];
+                for (b, &g) in bits.iter_mut().zip(genome) {
+                    *b = g.clamp(1, 24);
+                }
+                bits
+            }
+            CnnRule::Plc => {
+                let g = |i: usize| genome[i].clamp(1, 24);
+                // categories: conv{0,2,4}, pool{1,3}, fc{5}, tanh{6}, internal{7}
+                [g(0), g(1), g(0), g(1), g(0), g(2), g(3), g(4)]
+            }
+        }
+    }
+}
+
+/// Analytical FPU energy of one inference, pJ, under per-slot widths.
+pub fn cnn_energy_pj(flop_counts: &[(String, f64)], bits: &[u32; NUM_SLOTS]) -> f64 {
+    flop_counts
+        .iter()
+        .enumerate()
+        .map(|(i, (_, flops))| {
+            SLOT_EPI_PJ[i] * flops * (bits[i].clamp(1, 24) as f64 / 24.0)
+        })
+        .sum()
+}
+
+/// Evaluation detail for one CNN configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct CnnDetail {
+    /// Accuracy loss vs. the full-precision baseline (0.01 = 1 point).
+    pub error: f64,
+    /// Normalized FPU energy.
+    pub nec: f64,
+    /// Raw accuracy.
+    pub accuracy: f64,
+}
+
+/// [`Problem`] over the LeNet runtime for one placement policy.
+pub struct CnnProblem<'a> {
+    runtime: &'a LenetRuntime,
+    /// The placement policy.
+    pub rule: CnnRule,
+    /// Eval batches used per evaluation during search (more = finer
+    /// accuracy resolution, slower).
+    pub search_batches: usize,
+    baseline_energy: f64,
+    baseline_accuracy: f64,
+    /// `(expanded bits, detail)` per evaluation.
+    pub details: Mutex<Vec<([u32; NUM_SLOTS], CnnDetail)>>,
+}
+
+impl<'a> CnnProblem<'a> {
+    /// Wrap the runtime. The baseline accuracy is measured (not taken
+    /// from metadata) so search-time batch subsetting is consistent.
+    pub fn new(runtime: &'a LenetRuntime, rule: CnnRule, search_batches: usize) -> Result<Self> {
+        let full = [24u32; NUM_SLOTS];
+        let baseline_energy = cnn_energy_pj(&runtime.flop_counts, &full);
+        let baseline_accuracy = runtime.accuracy(&full, search_batches)?;
+        Ok(Self {
+            runtime,
+            rule,
+            search_batches,
+            baseline_energy,
+            baseline_accuracy,
+            details: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Evaluate a configuration, returning full detail.
+    pub fn evaluate_detail(&self, genome: &Genome) -> Result<CnnDetail> {
+        let bits = self.rule.expand(genome);
+        let accuracy = self.runtime.accuracy(&bits, self.search_batches)?;
+        let error = (self.baseline_accuracy - accuracy).max(0.0);
+        let nec = cnn_energy_pj(&self.runtime.flop_counts, &bits) / self.baseline_energy;
+        let detail = CnnDetail { error, nec, accuracy };
+        self.details.lock().unwrap().push((bits, detail));
+        Ok(detail)
+    }
+
+    /// Drain recorded details.
+    pub fn take_details(&self) -> Vec<([u32; NUM_SLOTS], CnnDetail)> {
+        std::mem::take(&mut self.details.lock().unwrap())
+    }
+
+    /// Measured baseline accuracy on the search subset.
+    pub fn baseline_accuracy(&self) -> f64 {
+        self.baseline_accuracy
+    }
+}
+
+impl Problem for CnnProblem<'_> {
+    fn genome_len(&self) -> usize {
+        self.rule.genome_len()
+    }
+
+    fn max_bits(&self) -> u32 {
+        24
+    }
+
+    fn evaluate(&self, genome: &Genome) -> Objectives {
+        match self.evaluate_detail(genome) {
+            Ok(d) => Objectives { error: d.error, energy: d.nec },
+            // PJRT failures surface as a worst-case point rather than a
+            // panic inside the GA loop.
+            Err(_) => Objectives { error: 1.0, energy: 1.0 },
+        }
+    }
+}
+
+/// Fig. 10 rows: per-slot FLOP share of one inference.
+pub fn flop_breakdown(flop_counts: &[(String, f64)]) -> Vec<(String, f64)> {
+    let total: f64 = flop_counts.iter().map(|(_, f)| f).sum();
+    flop_counts
+        .iter()
+        .map(|(n, f)| (n.clone(), f / total.max(1.0)))
+        .collect()
+}
+
+/// Table V: for each error budget pick the lowest-energy recorded
+/// configuration within budget and report its per-slot widths.
+pub fn table5_rows(
+    details: &[([u32; NUM_SLOTS], CnnDetail)],
+    thresholds: &[f64],
+) -> Vec<(f64, Option<[u32; NUM_SLOTS]>)> {
+    thresholds
+        .iter()
+        .map(|&t| {
+            let best = details
+                .iter()
+                .filter(|(_, d)| d.error <= t)
+                .min_by(|a, b| a.1.nec.partial_cmp(&b.1.nec).unwrap())
+                .map(|(bits, _)| *bits);
+            (t, best)
+        })
+        .collect()
+}
+
+/// Table IV (LeNet-5 architecture summary) — static, from the paper.
+pub fn table4() -> Vec<[&'static str; 5]> {
+    vec![
+        ["layer", "feature map", "size", "kernel", "activation"],
+        ["input", "1", "32x32", "-", "-"],
+        ["conv1", "6", "28x28", "5x5", "tanh"],
+        ["avgpool1", "6", "14x14", "2x2", "tanh"],
+        ["conv2", "16", "10x10", "5x5", "tanh"],
+        ["avgpool2", "16", "5x5", "2x2", "tanh"],
+        ["conv3", "120", "1x1", "5x5", "tanh"],
+        ["fc1", "-", "84", "-", "tanh"],
+        ["fc2 (out)", "-", "10", "-", "softmax"],
+    ]
+}
+
+/// Verify the metadata slot order matches this module's constants.
+pub fn validate_slots(flop_counts: &[(String, f64)]) -> bool {
+    flop_counts.len() == NUM_SLOTS
+        && flop_counts.iter().zip(SLOT_NAMES).all(|((n, _), s)| n == s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_counts() -> Vec<(String, f64)> {
+        SLOT_NAMES.iter().map(|&s| (s.to_string(), 1000.0)).collect()
+    }
+
+    #[test]
+    fn plc_ties_categories() {
+        let g = vec![10u32, 4, 7, 20, 2];
+        let bits = CnnRule::Plc.expand(&g);
+        assert_eq!(bits, [10, 4, 10, 4, 10, 7, 20, 2]);
+    }
+
+    #[test]
+    fn pli_is_identity() {
+        let g = vec![1u32, 2, 3, 4, 5, 6, 7, 8];
+        assert_eq!(CnnRule::Pli.expand(&g), [1, 2, 3, 4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn energy_scales_linearly_with_bits() {
+        let counts = fake_counts();
+        let full = cnn_energy_pj(&counts, &[24; NUM_SLOTS]);
+        let half = cnn_energy_pj(&counts, &[12; NUM_SLOTS]);
+        assert!((half / full - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breakdown_sums_to_one() {
+        let shares = flop_breakdown(&fake_counts());
+        let total: f64 = shares.iter().map(|(_, s)| s).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table5_picks_within_budget() {
+        let details = vec![
+            ([24u32; NUM_SLOTS], CnnDetail { error: 0.0, nec: 1.0, accuracy: 0.99 }),
+            ([8; NUM_SLOTS], CnnDetail { error: 0.004, nec: 0.4, accuracy: 0.986 }),
+            ([2; NUM_SLOTS], CnnDetail { error: 0.08, nec: 0.1, accuracy: 0.91 }),
+        ];
+        let rows = table5_rows(&details, &[0.01, 0.10]);
+        assert_eq!(rows[0].1.unwrap(), [8; NUM_SLOTS]);
+        assert_eq!(rows[1].1.unwrap(), [2; NUM_SLOTS]);
+    }
+
+    #[test]
+    fn slot_validation() {
+        assert!(validate_slots(&fake_counts()));
+        assert!(!validate_slots(&fake_counts()[..7]));
+    }
+
+    #[test]
+    fn table4_matches_lenet_shape() {
+        let t = table4();
+        assert_eq!(t.len(), 9);
+        assert_eq!(t[6][1], "120");
+    }
+}

@@ -1,0 +1,843 @@
+//! Experiment drivers: one entry per table/figure in the paper's
+//! evaluation (the DESIGN.md experiment index). Each driver regenerates
+//! its artifact into `results/` as CSV plus a human-readable summary.
+
+use std::fmt::Write as _;
+
+use anyhow::Result;
+
+use crate::bench_suite;
+use crate::cnn::{self, CnnProblem, CnnRule};
+use crate::coordinator::{EvalDetail, EvalProblem, Evaluator, RuleKind};
+use crate::energy::EpiTable;
+use crate::explore::nsga2::pareto_front;
+use crate::explore::{Evaluated, Genome, Nsga2, Nsga2Params, Problem};
+
+use crate::fpi::Precision;
+use crate::report::{ascii_tradeoff_plot, savings_table, ResultsDir};
+use crate::runtime::{ArtifactPaths, LenetRuntime};
+use crate::stats::{self, lower_convex_hull, savings_at_thresholds, TradeoffPoint};
+
+/// The paper's error budgets (Figs. 6/7/9/11, Table V).
+pub const THRESHOLDS: [f64; 3] = [0.01, 0.05, 0.10];
+
+/// Evaluation budget per GA search (paper §V-A: at most 400 configs).
+#[derive(Debug, Clone, Copy)]
+pub struct Budget {
+    /// NSGA-II population.
+    pub population: usize,
+    /// NSGA-II generations.
+    pub generations: usize,
+    /// Seed for the search.
+    pub seed: u64,
+}
+
+impl Default for Budget {
+    fn default() -> Self {
+        Self { population: 40, generations: 9, seed: 42 }
+    }
+}
+
+impl Budget {
+    /// A fast budget for tests and smoke runs (~60 evaluations).
+    pub fn quick() -> Self {
+        Self { population: 12, generations: 4, seed: 42 }
+    }
+
+    fn params(&self) -> Nsga2Params {
+        Nsga2Params {
+            population: self.population,
+            generations: self.generations,
+            seed: self.seed,
+            ..Default::default()
+        }
+    }
+
+    fn params_with_initial(&self, initial: Vec<Genome>) -> Nsga2Params {
+        Nsga2Params { initial, ..self.params() }
+    }
+}
+
+/// One benchmark's exploration results for one rule.
+pub struct RuleResult {
+    /// Rule searched.
+    pub rule: RuleKind,
+    /// Every `(genome, detail)` evaluated.
+    pub details: Vec<(Genome, EvalDetail)>,
+}
+
+impl RuleResult {
+    /// (error, FPU NEC) tradeoff points.
+    pub fn fpu_points(&self) -> Vec<TradeoffPoint> {
+        self.details.iter().map(|(_, d)| TradeoffPoint::new(d.error, d.fpu_nec)).collect()
+    }
+
+    /// (error, target-class FPU NEC) points — the Fig. 8 metric.
+    pub fn fpu_target_points(&self) -> Vec<TradeoffPoint> {
+        self.details
+            .iter()
+            .map(|(_, d)| TradeoffPoint::new(d.error, d.fpu_target_nec))
+            .collect()
+    }
+
+    /// (error, memory NEC) tradeoff points.
+    pub fn mem_points(&self) -> Vec<TradeoffPoint> {
+        self.details.iter().map(|(_, d)| TradeoffPoint::new(d.error, d.mem_nec)).collect()
+    }
+
+    /// Pareto-front genomes (error vs FPU NEC), deduplicated.
+    pub fn front(&self) -> Vec<(Genome, EvalDetail)> {
+        let evals: Vec<Evaluated> = self
+            .details
+            .iter()
+            .map(|(g, d)| Evaluated {
+                genome: g.clone(),
+                objectives: crate::explore::Objectives { error: d.error, energy: d.fpu_nec },
+            })
+            .collect();
+        let front = pareto_front(&evals);
+        let mut out: Vec<(Genome, EvalDetail)> = Vec::new();
+        for ev in front {
+            if out.iter().any(|(g, _)| *g == ev.genome) {
+                continue;
+            }
+            if let Some((_, d)) = self.details.iter().find(|(g, _)| *g == ev.genome) {
+                out.push((ev.genome.clone(), *d));
+            }
+        }
+        out
+    }
+}
+
+/// Run one rule's search on an evaluator.
+pub fn explore_rule(eval: &Evaluator, rule: RuleKind, budget: Budget) -> RuleResult {
+    let problem = EvalProblem::new(eval, rule);
+    match rule {
+        RuleKind::Wp => {
+            // single-gene space: sweep it exhaustively (24 / 53 points)
+            for k in 1..=eval.target.mantissa_bits() {
+                let _ = problem.evaluate(&vec![k]);
+            }
+        }
+        _ => {
+            Nsga2::new(budget.params()).run(&problem);
+        }
+    }
+    RuleResult { rule, details: problem.take_details() }
+}
+
+/// One benchmark's full exploration (WP + CIP).
+pub struct BenchResult {
+    /// Benchmark name.
+    pub name: String,
+    /// The evaluator (profile, baselines, top functions).
+    pub eval: Evaluator,
+    /// WP sweep.
+    pub wp: RuleResult,
+    /// CIP search.
+    pub cip: RuleResult,
+}
+
+/// Explore every Table-II benchmark under WP and CIP (data for Figs.
+/// 5/6/7 and Table III).
+pub fn explore_suite(budget: Budget, log: &mut impl FnMut(&str)) -> Vec<BenchResult> {
+    bench_suite::table2()
+        .into_iter()
+        .map(|w| {
+            let name = w.name().to_string();
+            log(&format!("exploring {name} (WP + CIP)"));
+            let eval = Evaluator::new(w, None);
+            let wp = explore_rule(&eval, RuleKind::Wp, budget);
+            let cip = explore_rule(&eval, RuleKind::Cip, budget);
+            BenchResult { name, eval, wp, cip }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Individual figures
+// ---------------------------------------------------------------------
+
+/// Fig. 1: EPI by instruction class.
+pub fn fig1(rd: &ResultsDir) -> Result<String> {
+    let rows: Vec<String> = EpiTable::reference_classes()
+        .into_iter()
+        .map(|(class, pj)| format!("{class},{pj}"))
+        .collect();
+    rd.write_csv("fig1_epi.csv", "instruction_class,energy_pj", rows.clone())?;
+    let mut text = String::from("Fig 1 — energy per instruction (pJ)\n");
+    for r in &rows {
+        let mut parts = r.split(',');
+        let class = parts.next().unwrap_or_default();
+        let pj: f64 = parts.next().unwrap_or("0").parse().unwrap_or(0.0);
+        let bar = "█".repeat((pj / 25.0).round() as usize);
+        let _ = writeln!(text, "{class:<22} {pj:>6.0}  {bar}");
+    }
+    Ok(text)
+}
+
+/// Table I: the built-in placement rules and their space sizes.
+pub fn table1() -> String {
+    let mut t = String::from("Table I — built-in placement rules\n");
+    let _ = writeln!(t, "{:<6} {:<55} {}", "rule", "description", "space");
+    let _ = writeln!(t, "{:<6} {:<55} {}", "WP", "one FPI for the whole program", "24..53");
+    let _ = writeln!(
+        t,
+        "{:<6} {:<55} {}",
+        "CIP", "one FPI per currently-in-progress function (top 10)", "24^10..53^10"
+    );
+    let _ = writeln!(
+        t,
+        "{:<6} {:<55} {}",
+        "FCS", "one FPI per nearest mapped function on the call stack", "24^10..53^10"
+    );
+    t
+}
+
+/// Table II: benchmarks, input sets, configuration-space size.
+pub fn table2(rd: &ResultsDir) -> Result<String> {
+    let mut rows = Vec::new();
+    let mut text = String::from("Table II — benchmarks\n");
+    let _ = writeln!(
+        text,
+        "{:<16} {:>6} {:>6} {:>8} {:>14}",
+        "benchmark", "train", "test", "top-fns", "config space"
+    );
+    for w in bench_suite::table2() {
+        let eval = Evaluator::new(w, None);
+        let w = eval.workload();
+        let funcs = eval.top_functions.len();
+        let base = eval.target.mantissa_bits();
+        let _ = writeln!(
+            text,
+            "{:<16} {:>6} {:>6} {:>8} {:>11}^{:<2}",
+            w.name(),
+            w.train_seeds().len(),
+            w.test_seeds().len(),
+            funcs,
+            base,
+            funcs
+        );
+        rows.push(format!(
+            "{},{},{},{},{}^{}",
+            w.name(),
+            w.train_seeds().len(),
+            w.test_seeds().len(),
+            funcs,
+            base,
+            funcs
+        ));
+    }
+    rd.write_csv("table2_benchmarks.csv", "benchmark,train,test,functions,space", rows)?;
+    Ok(text)
+}
+
+/// Fig. 4: precision breakdown per benchmark.
+pub fn fig4(rd: &ResultsDir) -> Result<String> {
+    let mut rows = Vec::new();
+    let mut text = String::from("Fig 4 — FLOP type breakdown\n");
+    for w in bench_suite::all() {
+        let mut ctx = crate::engine::FpContext::profiler();
+        w.run(&mut ctx, w.train_seeds()[0]);
+        let profile = crate::engine::profile::Profile::from_context(&ctx);
+        let single = profile.single_fraction();
+        let bar_len = 30usize;
+        let s = (single * bar_len as f64).round() as usize;
+        let _ = writeln!(
+            text,
+            "{:<16} {}{} {:>5.1}% single",
+            w.name(),
+            "▮".repeat(s),
+            "▯".repeat(bar_len - s),
+            single * 100.0
+        );
+        rows.push(format!("{},{:.4},{:.4}", w.name(), single, 1.0 - single));
+    }
+    rd.write_csv("fig4_precision_breakdown.csv", "benchmark,single_frac,double_frac", rows)?;
+    Ok(text)
+}
+
+/// Fig. 5: WP vs CIP lower convex hulls, per benchmark.
+pub fn fig5(rd: &ResultsDir, suite: &[BenchResult]) -> Result<String> {
+    let mut text = String::from("Fig 5 — tradeoff hulls (FPU energy vs error)\n");
+    for b in suite {
+        let mut rows = Vec::new();
+        for (rule, res) in [("WP", &b.wp), ("CIP", &b.cip)] {
+            for (g, d) in &res.details {
+                rows.push(format!(
+                    "{rule},{:.6},{:.6},{:.6},{}",
+                    d.error,
+                    d.fpu_nec,
+                    d.mem_nec,
+                    g.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("|")
+                ));
+            }
+        }
+        rd.write_csv(
+            &format!("fig5_{}.csv", b.name),
+            "rule,error,fpu_nec,mem_nec,genome",
+            rows,
+        )?;
+        let cip_pts = b.cip.fpu_points();
+        let hull = lower_convex_hull(&cip_pts);
+        let _ = writeln!(
+            text,
+            "{}",
+            ascii_tradeoff_plot(
+                &format!("── {} (CIP: {} configs)", b.name, cip_pts.len()),
+                &cip_pts,
+                &hull,
+                56,
+                12
+            )
+        );
+    }
+    Ok(text)
+}
+
+/// Savings rows at the paper thresholds for a point set.
+fn savings_row(points: &[TradeoffPoint]) -> Vec<f64> {
+    savings_at_thresholds(points, &THRESHOLDS)
+}
+
+/// Fig. 6: FPU energy savings at error budgets, WP vs CIP (+ hmean).
+pub fn fig6(rd: &ResultsDir, suite: &[BenchResult]) -> Result<String> {
+    let mut rows_csv = Vec::new();
+    let mut wp_rows = Vec::new();
+    let mut cip_rows = Vec::new();
+    for b in suite {
+        let wp = savings_row(&b.wp.fpu_points());
+        let cip = savings_row(&b.cip.fpu_points());
+        rows_csv.push(format!(
+            "{},{},{}",
+            b.name,
+            wp.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join(","),
+            cip.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join(",")
+        ));
+        wp_rows.push((b.name.clone(), wp));
+        cip_rows.push((b.name.clone(), cip));
+    }
+    // harmonic means of the savings percentages (paper §V-C aggregates
+    // savings, not NEC)
+    let hmean_of = |rows: &[(String, Vec<f64>)], i: usize| {
+        let savings: Vec<f64> =
+            rows.iter().map(|(_, v)| (1.0 - v[i]).max(1e-9)).collect();
+        1.0 - stats::harmonic_mean(&savings)
+    };
+    let wp_h: Vec<f64> = (0..3).map(|i| hmean_of(&wp_rows, i)).collect();
+    let cip_h: Vec<f64> = (0..3).map(|i| hmean_of(&cip_rows, i)).collect();
+    wp_rows.push(("hmean".to_string(), wp_h.clone()));
+    cip_rows.push(("hmean".to_string(), cip_h.clone()));
+    rows_csv.push(format!(
+        "hmean,{},{}",
+        wp_h.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join(","),
+        cip_h.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join(",")
+    ));
+    rd.write_csv(
+        "fig6_fpu_savings.csv",
+        "benchmark,wp@1,wp@5,wp@10,cip@1,cip@5,cip@10",
+        rows_csv,
+    )?;
+    let mut text = savings_table("Fig 6 — FPU energy savings (WP)", &THRESHOLDS, &wp_rows);
+    text.push('\n');
+    text.push_str(&savings_table("Fig 6 — FPU energy savings (CIP)", &THRESHOLDS, &cip_rows));
+    Ok(text)
+}
+
+/// Fig. 7: memory-transfer energy savings at error budgets.
+pub fn fig7(rd: &ResultsDir, suite: &[BenchResult]) -> Result<String> {
+    let mut rows_csv = Vec::new();
+    let mut cip_rows = Vec::new();
+    for b in suite {
+        let cip = savings_row(&b.cip.mem_points());
+        rows_csv.push(format!(
+            "{},{}",
+            b.name,
+            cip.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join(",")
+        ));
+        cip_rows.push((b.name.clone(), cip));
+    }
+    let hmean: Vec<f64> = (0..3)
+        .map(|i| {
+            let savings: Vec<f64> =
+                cip_rows.iter().map(|(_, v)| (1.0 - v[i]).max(1e-9)).collect();
+            1.0 - stats::harmonic_mean(&savings)
+        })
+        .collect();
+    cip_rows.push(("hmean".to_string(), hmean.clone()));
+    rows_csv.push(format!(
+        "hmean,{}",
+        hmean.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join(",")
+    ));
+    rd.write_csv("fig7_mem_savings.csv", "benchmark,cip@1,cip@5,cip@10", rows_csv)?;
+    Ok(savings_table("Fig 7 — memory energy savings (CIP)", &THRESHOLDS, &cip_rows))
+}
+
+/// Fig. 8: single vs double optimization targets (canneal,
+/// particlefilter, ferret).
+pub fn fig8(rd: &ResultsDir, budget: Budget, log: &mut impl FnMut(&str)) -> Result<String> {
+    let mut rows_csv = Vec::new();
+    let mut table_rows = Vec::new();
+    for name in ["canneal", "particlefilter", "ferret"] {
+        for target in [Precision::Single, Precision::Double] {
+            log(&format!("fig8: {name} targeting {}", target.name()));
+            let w = bench_suite::by_name(name).expect("known benchmark");
+            let eval = Evaluator::new(w, Some(target));
+            let res = explore_rule(&eval, RuleKind::Cip, budget);
+            // Fig. 8 plots total-FPU savings per target (choosing the
+            // wrong target saves almost nothing of the total); §V-E's
+            // "92% of double-instruction energy" quote is the
+            // class-relative view, emitted to the CSV alongside.
+            let sav = savings_row(&res.fpu_points());
+            let sav_class = savings_row(&res.fpu_target_points());
+            rows_csv.push(format!(
+                "{name},{},{},{}",
+                target.name(),
+                sav.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join(","),
+                sav_class.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join(",")
+            ));
+            table_rows.push((format!("{name}/{}", target.name()), sav));
+        }
+    }
+    rd.write_csv(
+        "fig8_targets.csv",
+        "benchmark,target,nec@1,nec@5,nec@10,class_nec@1,class_nec@5,class_nec@10",
+        rows_csv,
+    )?;
+    Ok(savings_table(
+        "Fig 8 — FPU savings by optimization target (CIP)",
+        &THRESHOLDS,
+        &table_rows,
+    ))
+}
+
+/// Fig. 9: CIP vs FCS on radar.
+pub fn fig9(rd: &ResultsDir, budget: Budget, log: &mut impl FnMut(&str)) -> Result<String> {
+    log("fig9: radar CIP vs FCS");
+    let eval = Evaluator::new(bench_suite::by_name("radar").unwrap(), None);
+    let cip = explore_rule(&eval, RuleKind::Cip, budget);
+    let fcs = explore_rule(&eval, RuleKind::Fcs, budget);
+    let cip_s = savings_row(&cip.fpu_points());
+    let fcs_s = savings_row(&fcs.fpu_points());
+    let rows = vec![
+        format!("CIP,{}", cip_s.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join(",")),
+        format!("FCS,{}", fcs_s.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join(",")),
+    ];
+    rd.write_csv("fig9_radar_fcs.csv", "rule,nec@1,nec@5,nec@10", rows)?;
+    Ok(savings_table(
+        "Fig 9 — radar: CIP vs FCS FPU savings",
+        &THRESHOLDS,
+        &[("radar CIP".to_string(), cip_s), ("radar FCS".to_string(), fcs_s)],
+    ))
+}
+
+/// Table III: train/test correlation of the CIP Pareto front.
+pub fn table3(rd: &ResultsDir, suite: &[BenchResult], log: &mut impl FnMut(&str)) -> Result<String> {
+    let mut rows_csv = Vec::new();
+    let mut text = String::from("Table III — train/test correlation (R values)\n");
+    let _ = writeln!(text, "{:<16} {:>12} {:>12} {:>7}", "benchmark", "error R", "energy R", "front");
+    for b in suite {
+        log(&format!("table3: re-evaluating {} front on test inputs", b.name));
+        let mut front = b.cip.front();
+        front.truncate(24); // cap test-set cost
+        let mut train_err = Vec::new();
+        let mut train_en = Vec::new();
+        let mut test_err = Vec::new();
+        let mut test_en = Vec::new();
+        for (genome, d) in &front {
+            let t = b.eval.evaluate_test(RuleKind::Cip, genome);
+            train_err.push(d.error);
+            train_en.push(d.fpu_nec);
+            test_err.push(t.error);
+            test_en.push(t.fpu_nec);
+        }
+        let r_err = stats::pearson(&train_err, &test_err);
+        let r_en = stats::pearson(&train_en, &test_en);
+        let _ = writeln!(
+            text,
+            "{:<16} {:>12.3} {:>12.3} {:>7}",
+            b.name,
+            r_err,
+            r_en,
+            front.len()
+        );
+        rows_csv.push(format!("{},{r_err:.4},{r_en:.4},{}", b.name, front.len()));
+    }
+    rd.write_csv("table3_correlation.csv", "benchmark,error_r,energy_r,front_size", rows_csv)?;
+    Ok(text)
+}
+
+// ---------------------------------------------------------------------
+// CNN experiments (need artifacts)
+// ---------------------------------------------------------------------
+
+/// Fig. 10 + Table IV: CNN FLOP breakdown and architecture.
+pub fn fig10(rd: &ResultsDir, runtime: &LenetRuntime) -> Result<String> {
+    let mut text = String::from("Table IV — LeNet-5 architecture\n");
+    for row in cnn::table4() {
+        let _ = writeln!(
+            text,
+            "{:<10} {:<12} {:<8} {:<7} {}",
+            row[0], row[1], row[2], row[3], row[4]
+        );
+    }
+    let _ = writeln!(text, "\nFig 10 — FLOP breakdown per slot (one inference)");
+    let shares = cnn::flop_breakdown(&runtime.flop_counts);
+    let mut rows = Vec::new();
+    for (name, share) in &shares {
+        let bar = "█".repeat((share * 50.0).round() as usize);
+        let _ = writeln!(text, "{name:<10} {:>5.1}%  {bar}", share * 100.0);
+        rows.push(format!("{name},{share:.4}"));
+    }
+    rd.write_csv("fig10_cnn_flops.csv", "slot,share", rows)?;
+    let conv_share: f64 = shares
+        .iter()
+        .filter(|(n, _)| n.starts_with("conv"))
+        .map(|(_, s)| s)
+        .sum();
+    let _ = writeln!(
+        text,
+        "convolutional share: {:.1}% (paper: >69%)",
+        conv_share * 100.0
+    );
+    Ok(text)
+}
+
+/// Fig. 11 + Table V: PLC vs PLI exploration of the compiled model.
+pub fn fig11(
+    rd: &ResultsDir,
+    runtime: &LenetRuntime,
+    budget: Budget,
+    search_batches: usize,
+    log: &mut impl FnMut(&str),
+) -> Result<String> {
+    let mut text = String::new();
+    let mut all_rows = Vec::new();
+    let mut savings_rows = Vec::new();
+    let mut pli_details = Vec::new();
+    for rule in [CnnRule::Plc, CnnRule::Pli] {
+        log(&format!("fig11: exploring {} ({} genes)", rule.name(), rule.genome_len()));
+        let problem = CnnProblem::new(runtime, rule, search_batches)?;
+        // warm-start PLI with category-tied genomes: the PLC space is a
+        // subspace of PLI, so the finer search starts no worse than the
+        // coarse one and refines from there (paper Fig. 11's shape)
+        let params = if rule == CnnRule::Pli {
+            let mut rng = crate::util::Pcg64::new(budget.seed ^ 0x511);
+            let tied: Vec<Genome> = (0..10)
+                .map(|_| {
+                    let cat: Genome =
+                        (0..5).map(|_| rng.range_inclusive(1, 24) as u32).collect();
+                    CnnRule::Plc.expand(&cat).to_vec()
+                })
+                .collect();
+            budget.params_with_initial(tied)
+        } else {
+            budget.params()
+        };
+        Nsga2::new(params).run(&problem);
+        let details = problem.take_details();
+        let points: Vec<TradeoffPoint> =
+            details.iter().map(|(_, d)| TradeoffPoint::new(d.error, d.nec)).collect();
+        for (bits, d) in &details {
+            all_rows.push(format!(
+                "{},{:.6},{:.6},{:.6},{}",
+                rule.name(),
+                d.error,
+                d.nec,
+                d.accuracy,
+                bits.iter().map(|b| b.to_string()).collect::<Vec<_>>().join("|")
+            ));
+        }
+        let hull = lower_convex_hull(&points);
+        let _ = writeln!(
+            text,
+            "{}",
+            ascii_tradeoff_plot(
+                &format!("── CNN {} ({} configs)", rule.name(), points.len()),
+                &points,
+                &hull,
+                56,
+                12
+            )
+        );
+        savings_rows.push((format!("lenet5 {}", rule.name()), savings_row(&points)));
+        if rule == CnnRule::Pli {
+            pli_details = details;
+        }
+    }
+    rd.write_csv("fig11_cnn_tradeoff.csv", "rule,error,nec,accuracy,bits", all_rows)?;
+    text.push_str(&savings_table("Fig 11b — CNN FPU savings", &THRESHOLDS, &savings_rows));
+
+    // Table V from the PLI archive
+    let mut t5_rows = Vec::new();
+    let _ = writeln!(text, "\nTable V — mantissa bits per slot (PLI best-in-budget)");
+    let _ = write!(text, "{:<8}", "budget");
+    for s in crate::runtime::SLOT_NAMES {
+        let _ = write!(text, "{s:>10}");
+    }
+    text.push('\n');
+    for (t, bits) in cnn::table5_rows(&pli_details, &THRESHOLDS) {
+        let _ = write!(text, "{:<8}", format!("{:.0}%", t * 100.0));
+        match bits {
+            Some(b) => {
+                for v in b {
+                    let _ = write!(text, "{v:>10}");
+                }
+                t5_rows.push(format!(
+                    "{},{}",
+                    t,
+                    b.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
+                ));
+            }
+            None => {
+                let _ = write!(text, "  (no configuration within budget)");
+            }
+        }
+        text.push('\n');
+    }
+    rd.write_csv(
+        "table5_bits.csv",
+        "threshold,conv1,pool1,conv2,pool2,conv3,fc,tanh,internal",
+        t5_rows,
+    )?;
+    Ok(text)
+}
+
+// ---------------------------------------------------------------------
+// Ablations (DESIGN.md §Ablations)
+// ---------------------------------------------------------------------
+
+/// Ablation: NSGA-II vs random search at equal budget.
+pub fn ablation_random_vs_ga(rd: &ResultsDir, budget: Budget) -> Result<String> {
+    let mut text = String::from("Ablation — NSGA-II vs random search (CIP, equal budget)\n");
+    let mut rows = Vec::new();
+    let _ = writeln!(text, "{:<16} {:>12} {:>12} {:>12}", "benchmark", "ga@5%", "random@5%", "delta");
+    for name in ["blackscholes", "kmeans", "fluidanimate"] {
+        let eval = Evaluator::new(bench_suite::by_name(name).unwrap(), None);
+        let ga = explore_rule(&eval, RuleKind::Cip, budget);
+        let n_evals = ga.details.len();
+        let problem = EvalProblem::new(&eval, RuleKind::Cip);
+        crate::explore::random_search(&problem, n_evals, budget.seed);
+        let rand_details = problem.take_details();
+        let rand = RuleResult { rule: RuleKind::Cip, details: rand_details };
+        let ga_nec = savings_row(&ga.fpu_points())[1];
+        let rand_nec = savings_row(&rand.fpu_points())[1];
+        let _ = writeln!(
+            text,
+            "{name:<16} {:>11.1}% {:>11.1}% {:>11.1}pp",
+            (1.0 - ga_nec) * 100.0,
+            (1.0 - rand_nec) * 100.0,
+            (rand_nec - ga_nec) * 100.0
+        );
+        rows.push(format!("{name},{ga_nec:.4},{rand_nec:.4}"));
+    }
+    rd.write_csv("ablation_random_vs_ga.csv", "benchmark,ga_nec@5,random_nec@5", rows)?;
+    Ok(text)
+}
+
+/// Ablation: GA budget (population×generations) vs hull quality.
+pub fn ablation_ga_budget(rd: &ResultsDir) -> Result<String> {
+    let mut text = String::from("Ablation — GA budget vs hull quality (blackscholes CIP)\n");
+    let mut rows = Vec::new();
+    let eval = Evaluator::new(bench_suite::by_name("blackscholes").unwrap(), None);
+    let _ = writeln!(text, "{:>8} {:>10} {:>10} {:>10}", "evals", "nec@1%", "nec@5%", "nec@10%");
+    for (pop, gens) in [(8, 4), (20, 9), (40, 9), (40, 19)] {
+        let budget = Budget { population: pop, generations: gens, seed: 42 };
+        let res = explore_rule(&eval, RuleKind::Cip, budget);
+        let s = savings_row(&res.fpu_points());
+        let evals = res.details.len();
+        let _ = writeln!(text, "{evals:>8} {:>10.4} {:>10.4} {:>10.4}", s[0], s[1], s[2]);
+        rows.push(format!("{evals},{:.4},{:.4},{:.4}", s[0], s[1], s[2]));
+    }
+    rd.write_csv("ablation_ga_budget.csv", "evals,nec@1,nec@5,nec@10", rows)?;
+    Ok(text)
+}
+
+/// Ablation: top-k cutoff vs FLOP coverage (paper's k = 10 claim).
+pub fn ablation_topk(rd: &ResultsDir) -> Result<String> {
+    let mut text = String::from("Ablation — top-k FLOP coverage (paper: ≥98% at k=10)\n");
+    let mut rows = Vec::new();
+    let _ = writeln!(text, "{:<16} {:>8} {:>8} {:>8}", "benchmark", "k=3", "k=5", "k=10");
+    for w in bench_suite::table2() {
+        let mut ctx = crate::engine::FpContext::profiler();
+        w.run(&mut ctx, w.train_seeds()[0]);
+        let p = crate::engine::profile::Profile::from_context(&ctx);
+        let (c3, c5, c10) = (p.coverage(3), p.coverage(5), p.coverage(10));
+        let _ = writeln!(
+            text,
+            "{:<16} {:>7.1}% {:>7.1}% {:>7.1}%",
+            w.name(),
+            c3 * 100.0,
+            c5 * 100.0,
+            c10 * 100.0
+        );
+        rows.push(format!("{},{c3:.4},{c5:.4},{c10:.4}", w.name()));
+    }
+    rd.write_csv("ablation_topk.csv", "benchmark,k3,k5,k10", rows)?;
+    Ok(text)
+}
+
+/// Ablation: operand-only vs result-only vs both-sides truncation.
+pub fn ablation_fpi_mode(rd: &ResultsDir) -> Result<String> {
+    use crate::engine::FpContext;
+    use crate::fpi::perturb::{PerturbFpi, PerturbMode};
+    use crate::fpi::{FpImplementation, FpiLibrary, TruncateFpi};
+    use crate::placement::Placement;
+    use std::sync::Arc;
+
+    let mut text = String::from("Ablation — FPI injection mode (blackscholes, WP @ 8 bits)\n");
+    let w = bench_suite::by_name("blackscholes").unwrap();
+    let mut base_ctx = FpContext::profiler();
+    let base = w.run(&mut base_ctx, 0x5EED);
+    let base_energy = crate::energy::estimate(&EpiTable::paper(), base_ctx.counters());
+
+    let mut rows = Vec::new();
+    let modes: Vec<(&str, Arc<dyn FpImplementation>)> = vec![
+        ("both", Arc::new(TruncateFpi::new(8))),
+        ("operands", Arc::new(PerturbFpi::new(8, PerturbMode::Operands))),
+        ("result", Arc::new(PerturbFpi::new(8, PerturbMode::Result))),
+    ];
+    let _ = writeln!(text, "{:<10} {:>12} {:>12}", "mode", "error", "fpu NEC");
+    for (label, fpi) in modes {
+        let mut lib = FpiLibrary::new();
+        let id = lib.register(fpi);
+        let mut ctx = FpContext::new(lib, Placement::whole_program(id));
+        let out = w.run(&mut ctx, 0x5EED);
+        let err = w.error(&base, &out);
+        let e = crate::energy::estimate(&EpiTable::paper(), ctx.counters());
+        let nec = e.fpu_pj / base_energy.fpu_pj;
+        let _ = writeln!(text, "{label:<10} {err:>12.6} {nec:>12.4}");
+        rows.push(format!("{label},{err:.6},{nec:.4}"));
+    }
+    rd.write_csv("ablation_fpi_mode.csv", "mode,error,fpu_nec", rows)?;
+    Ok(text)
+}
+
+// ---------------------------------------------------------------------
+// Orchestration
+// ---------------------------------------------------------------------
+
+/// Run every experiment; returns the combined human-readable report.
+pub fn run_all(
+    rd: &ResultsDir,
+    budget: Budget,
+    artifacts: Option<&ArtifactPaths>,
+    log: &mut impl FnMut(&str),
+) -> Result<String> {
+    let mut report = String::new();
+    report.push_str(&fig1(rd)?);
+    report.push('\n');
+    report.push_str(&table1());
+    report.push('\n');
+    report.push_str(&table2(rd)?);
+    report.push('\n');
+    report.push_str(&fig4(rd)?);
+    report.push('\n');
+
+    let suite = explore_suite(budget, log);
+    report.push_str(&fig5(rd, &suite)?);
+    report.push_str(&fig6(rd, &suite)?);
+    report.push('\n');
+    report.push_str(&fig7(rd, &suite)?);
+    report.push('\n');
+    report.push_str(&fig8(rd, budget, log)?);
+    report.push('\n');
+    report.push_str(&fig9(rd, budget, log)?);
+    report.push('\n');
+    report.push_str(&table3(rd, &suite, log)?);
+    report.push('\n');
+
+    if let Some(paths) = artifacts {
+        if paths.all_present() {
+            log("loading AOT LeNet runtime");
+            let runtime = LenetRuntime::load(paths)?;
+            report.push_str(&fig10(rd, &runtime)?);
+            report.push('\n');
+            report.push_str(&fig11(rd, &runtime, budget, 1, log)?);
+            report.push('\n');
+        } else {
+            log("artifacts missing — skipping CNN experiments (run `make artifacts`)");
+        }
+    }
+
+    report.push_str(&ablation_topk(rd)?);
+    report.push('\n');
+    report.push_str(&ablation_random_vs_ga(rd, budget)?);
+    report.push('\n');
+    report.push_str(&ablation_ga_budget(rd)?);
+    report.push('\n');
+    report.push_str(&ablation_fpi_mode(rd)?);
+    rd.write_text("report.txt", &report)?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_rd() -> ResultsDir {
+        ResultsDir::new(std::env::temp_dir().join("neat_experiments_test")).unwrap()
+    }
+
+    #[test]
+    fn fig1_emits_paper_constants() {
+        let text = fig1(&tmp_rd()).unwrap();
+        assert!(text.contains("fadd64"));
+        assert!(text.contains("400"));
+    }
+
+    #[test]
+    fn table1_lists_three_rules() {
+        let t = table1();
+        assert!(t.contains("WP") && t.contains("CIP") && t.contains("FCS"));
+    }
+
+    #[test]
+    fn wp_sweep_is_exhaustive() {
+        let eval = Evaluator::new(
+            Box::new(crate::bench_suite::blackscholes::Blackscholes { options: 40 }),
+            None,
+        );
+        let res = explore_rule(&eval, RuleKind::Wp, Budget::quick());
+        assert_eq!(res.details.len(), 24);
+        // genome k recorded in order
+        assert_eq!(res.details[0].0, vec![1]);
+        assert_eq!(res.details[23].0, vec![24]);
+    }
+
+    #[test]
+    fn cip_search_dominates_wp_somewhere() {
+        let eval = Evaluator::new(
+            Box::new(crate::bench_suite::blackscholes::Blackscholes { options: 60 }),
+            None,
+        );
+        let wp = explore_rule(&eval, RuleKind::Wp, Budget::quick());
+        let cip = explore_rule(&eval, RuleKind::Cip, Budget::default());
+        let wp_s = savings_row(&wp.fpu_points());
+        let cip_s = savings_row(&cip.fpu_points());
+        // CIP should be at least as good at every threshold
+        for i in 0..3 {
+            assert!(
+                cip_s[i] <= wp_s[i] + 0.02,
+                "CIP worse at {:?}: {} vs {}",
+                THRESHOLDS[i],
+                cip_s[i],
+                wp_s[i]
+            );
+        }
+    }
+
+    #[test]
+    fn front_is_nonempty_and_sane() {
+        let eval = Evaluator::new(
+            Box::new(crate::bench_suite::blackscholes::Blackscholes { options: 40 }),
+            None,
+        );
+        let res = explore_rule(&eval, RuleKind::Cip, Budget::quick());
+        let front = res.front();
+        assert!(!front.is_empty());
+        for (g, _) in &front {
+            assert_eq!(g.len(), eval.genome_len(RuleKind::Cip));
+        }
+    }
+}

@@ -1,0 +1,351 @@
+//! The evaluation coordinator: turns (workload, placement rule, genome)
+//! triples into objective values, manages baselines and the train/test
+//! protocol, and exposes each benchmark as an [`crate::explore::Problem`].
+//!
+//! This is the paper's runtime loop (steps 1–6 of §IV): profile once,
+//! fix the top-10 FLOP functions, then repeatedly re-run the program
+//! under candidate configurations while NSGA-II steers the search.
+
+pub mod experiments;
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::bench_suite::Workload;
+use crate::energy::{estimate, EnergyEstimate, EpiTable};
+use crate::engine::profile::Profile;
+use crate::engine::FpContext;
+use crate::explore::{Genome, Objectives, Problem};
+use crate::fpi::{FpiLibrary, Precision};
+use crate::placement::Placement;
+use crate::stats;
+
+/// Which placement rule a genome parameterizes (paper Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RuleKind {
+    /// Whole program: genome has one gene.
+    Wp,
+    /// Currently-in-progress function: one gene per top-k function.
+    Cip,
+    /// Function call stack: one gene per *mapped* function — the
+    /// workload's `fcs_shared` kernels are left out of the map so their
+    /// precision follows the caller (paper Fig. 3).
+    Fcs,
+}
+
+impl RuleKind {
+    /// Stable name for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            RuleKind::Wp => "WP",
+            RuleKind::Cip => "CIP",
+            RuleKind::Fcs => "FCS",
+        }
+    }
+}
+
+/// Per-configuration evaluation detail (beyond the two GA objectives).
+#[derive(Debug, Clone, Copy)]
+pub struct EvalDetail {
+    /// Median output error rate across the evaluated inputs.
+    pub error: f64,
+    /// Median FPU energy, normalized to the exact baseline.
+    pub fpu_nec: f64,
+    /// Median memory-transfer energy, normalized to the baseline.
+    pub mem_nec: f64,
+    /// Median FPU energy of the *targeted precision class only*,
+    /// normalized to that class's baseline energy — the paper's §V-E
+    /// metric ("92% of FPU energy corresponding to double instructions").
+    pub fpu_target_nec: f64,
+}
+
+/// Baseline (exact-run) data for one input seed.
+struct SeedBaseline {
+    seed: u64,
+    output: Vec<f64>,
+    energy: EnergyEstimate,
+    /// FPU energy of the target-precision FLOPs only.
+    target_fpu_pj: f64,
+}
+
+/// Evaluator for one workload under one optimization target.
+pub struct Evaluator {
+    workload: Box<dyn Workload>,
+    /// Optimization target precision (paper step 2).
+    pub target: Precision,
+    /// Top-k FLOP functions, hottest first (paper step 4's candidates).
+    pub top_functions: Vec<String>,
+    /// FCS map keys (top functions minus the shared kernels).
+    pub fcs_functions: Vec<String>,
+    lib: FpiLibrary,
+    epi: EpiTable,
+    train: Vec<SeedBaseline>,
+    test: Vec<SeedBaseline>,
+    profile: Profile,
+}
+
+/// The paper considers the top 10 FLOP-intensive functions (§IV-4).
+pub const TOP_K: usize = 10;
+
+/// FPU energy of one precision class only (the Fig. 8 denominator).
+fn target_class_fpu_pj(epi: &EpiTable, ctx: &FpContext, target: Precision) -> f64 {
+    let agg = ctx.counters().aggregate();
+    let mut single_only = agg.clone();
+    let mut double_only = agg;
+    for o in 0..4 {
+        single_only.flops[1][o] = 0;
+        single_only.flop_bits[1][o] = 0;
+        double_only.flops[0][o] = 0;
+        double_only.flop_bits[0][o] = 0;
+    }
+    match target {
+        Precision::Single => crate::energy::fpu_energy_pj(epi, &single_only),
+        Precision::Double => crate::energy::fpu_energy_pj(epi, &double_only),
+    }
+}
+
+impl Evaluator {
+    /// Profile the workload on its training inputs and prepare
+    /// baselines. `target` overrides the workload's default
+    /// optimization target (paper §V-E explores both).
+    pub fn new(workload: Box<dyn Workload>, target: Option<Precision>) -> Self {
+        let target = target.unwrap_or_else(|| workload.default_target());
+
+        // Step 1: profile (exact run over one training input).
+        let mut profile_ctx = FpContext::profiler();
+        workload.run(&mut profile_ctx, workload.train_seeds()[0]);
+        let profile = Profile::from_context(&profile_ctx);
+        let top_functions: Vec<String> = profile
+            .top_functions(TOP_K)
+            .iter()
+            .map(|r| r.name.clone())
+            .collect();
+        let shared = workload.fcs_shared();
+        let fcs_functions: Vec<String> = top_functions
+            .iter()
+            .filter(|n| !shared.contains(&n.as_str()))
+            .cloned()
+            .collect();
+
+        let epi = EpiTable::paper();
+        let lib = FpiLibrary::truncation_family(target);
+        let baseline = |seeds: Vec<u64>| -> Vec<SeedBaseline> {
+            seeds
+                .into_iter()
+                .map(|seed| {
+                    let mut ctx = FpContext::profiler();
+                    let output = workload.run(&mut ctx, seed);
+                    let energy = estimate(&epi, ctx.counters());
+                    let target_fpu_pj = target_class_fpu_pj(&epi, &ctx, target);
+                    SeedBaseline { seed, output, energy, target_fpu_pj }
+                })
+                .collect()
+        };
+        let train = baseline(workload.train_seeds());
+        let test = baseline(workload.test_seeds());
+
+        Self { workload, target, top_functions, fcs_functions, lib, epi, train, test, profile }
+    }
+
+    /// The workload under evaluation.
+    pub fn workload(&self) -> &dyn Workload {
+        self.workload.as_ref()
+    }
+
+    /// The step-1 profile.
+    pub fn profile(&self) -> &Profile {
+        &self.profile
+    }
+
+    /// Genome length for a rule.
+    pub fn genome_len(&self, rule: RuleKind) -> usize {
+        match rule {
+            RuleKind::Wp => 1,
+            RuleKind::Cip => self.top_functions.len(),
+            RuleKind::Fcs => self.fcs_functions.len(),
+        }
+    }
+
+    /// Build the placement a genome encodes.
+    pub fn placement(&self, rule: RuleKind, genome: &Genome) -> Placement {
+        let bits_of = |g: u32| FpiLibrary::truncation_id(g.clamp(1, self.target.mantissa_bits()));
+        match rule {
+            RuleKind::Wp => Placement::whole_program(bits_of(genome[0])),
+            RuleKind::Cip => {
+                let map: HashMap<String, _> = self
+                    .top_functions
+                    .iter()
+                    .zip(genome)
+                    .map(|(n, &g)| (n.clone(), bits_of(g)))
+                    .collect();
+                Placement::current_function(map)
+            }
+            RuleKind::Fcs => {
+                let map: HashMap<String, _> = self
+                    .fcs_functions
+                    .iter()
+                    .zip(genome)
+                    .map(|(n, &g)| (n.clone(), bits_of(g)))
+                    .collect();
+                Placement::call_stack(map)
+            }
+        }
+    }
+
+    fn eval_on(&self, rule: RuleKind, genome: &Genome, set: &[SeedBaseline]) -> EvalDetail {
+        let placement = self.placement(rule, genome);
+        let mut errors = Vec::with_capacity(set.len());
+        let mut fpu = Vec::with_capacity(set.len());
+        let mut mem = Vec::with_capacity(set.len());
+        let mut fpu_target = Vec::with_capacity(set.len());
+        for base in set {
+            let mut ctx = FpContext::new(self.lib.clone(), placement.clone());
+            ctx.set_target(self.target);
+            let out = self.workload.run(&mut ctx, base.seed);
+            let energy = estimate(&self.epi, ctx.counters());
+            errors.push(self.workload.error(&base.output, &out));
+            fpu.push(energy.fpu_pj / base.energy.fpu_pj.max(1e-12));
+            mem.push(if base.energy.mem_pj > 0.0 {
+                energy.mem_pj / base.energy.mem_pj
+            } else {
+                1.0
+            });
+            let tgt = target_class_fpu_pj(&self.epi, &ctx, self.target);
+            fpu_target.push(tgt / base.target_fpu_pj.max(1e-12));
+        }
+        EvalDetail {
+            error: stats::median(&errors),
+            fpu_nec: stats::median(&fpu),
+            mem_nec: stats::median(&mem),
+            fpu_target_nec: stats::median(&fpu_target),
+        }
+    }
+
+    /// Evaluate a configuration on the training inputs (the search
+    /// objective, paper §V-A).
+    pub fn evaluate_train(&self, rule: RuleKind, genome: &Genome) -> EvalDetail {
+        self.eval_on(rule, genome, &self.train)
+    }
+
+    /// Evaluate a configuration on the held-out test inputs (the
+    /// robustness protocol, paper §V-G).
+    pub fn evaluate_test(&self, rule: RuleKind, genome: &Genome) -> EvalDetail {
+        self.eval_on(rule, genome, &self.test)
+    }
+}
+
+/// [`Problem`] adapter: exposes (evaluator, rule) to the explorers and
+/// records every evaluation's full detail for the figure harnesses.
+pub struct EvalProblem<'a> {
+    /// The evaluator.
+    pub eval: &'a Evaluator,
+    /// The placement rule being searched.
+    pub rule: RuleKind,
+    /// `(genome, detail)` for every evaluation, in evaluation order.
+    pub details: Mutex<Vec<(Genome, EvalDetail)>>,
+}
+
+impl<'a> EvalProblem<'a> {
+    /// Wrap an evaluator for one rule.
+    pub fn new(eval: &'a Evaluator, rule: RuleKind) -> Self {
+        Self { eval, rule, details: Mutex::new(Vec::new()) }
+    }
+
+    /// Drain the recorded evaluation details.
+    pub fn take_details(&self) -> Vec<(Genome, EvalDetail)> {
+        std::mem::take(&mut self.details.lock().unwrap())
+    }
+}
+
+impl Problem for EvalProblem<'_> {
+    fn genome_len(&self) -> usize {
+        self.eval.genome_len(self.rule)
+    }
+
+    fn max_bits(&self) -> u32 {
+        self.eval.target.mantissa_bits()
+    }
+
+    fn evaluate(&self, genome: &Genome) -> Objectives {
+        let detail = self.eval.evaluate_train(self.rule, genome);
+        self.details.lock().unwrap().push((genome.clone(), detail));
+        Objectives { error: detail.error, energy: detail.fpu_nec }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::blackscholes::Blackscholes;
+    use crate::bench_suite::radar::Radar;
+
+    fn small_bs() -> Evaluator {
+        Evaluator::new(Box::new(Blackscholes { options: 60 }), None)
+    }
+
+    #[test]
+    fn full_precision_genome_is_lossless() {
+        let ev = small_bs();
+        let genome = vec![24; ev.genome_len(RuleKind::Cip)];
+        let d = ev.evaluate_train(RuleKind::Cip, &genome);
+        assert_eq!(d.error, 0.0);
+        assert!((d.fpu_nec - 1.0).abs() < 1e-12);
+        assert!((d.mem_nec - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aggressive_truncation_saves_energy_costs_accuracy() {
+        let ev = small_bs();
+        let genome = vec![2; ev.genome_len(RuleKind::Cip)];
+        let d = ev.evaluate_train(RuleKind::Cip, &genome);
+        assert!(d.error > 1e-4, "error {}", d.error);
+        assert!(d.fpu_nec < 0.6, "nec {}", d.fpu_nec);
+        assert!(d.mem_nec < 1.0, "mem {}", d.mem_nec);
+    }
+
+    #[test]
+    fn wp_genome_is_single_gene() {
+        let ev = small_bs();
+        assert_eq!(ev.genome_len(RuleKind::Wp), 1);
+        let d24 = ev.evaluate_train(RuleKind::Wp, &vec![24]);
+        let d4 = ev.evaluate_train(RuleKind::Wp, &vec![4]);
+        assert!(d4.fpu_nec < d24.fpu_nec);
+    }
+
+    #[test]
+    fn top_functions_respect_k() {
+        let ev = small_bs();
+        assert!(ev.top_functions.len() <= TOP_K);
+        assert!(ev.top_functions.contains(&"cndf".to_string()));
+    }
+
+    #[test]
+    fn fcs_genome_excludes_shared_kernels() {
+        let ev = Evaluator::new(Box::new(Radar { frames: 1 }), None);
+        assert!(ev.top_functions.iter().any(|f| f == "fft"));
+        assert!(!ev.fcs_functions.iter().any(|f| f == "fft"));
+        assert!(ev.genome_len(RuleKind::Fcs) < ev.genome_len(RuleKind::Cip));
+    }
+
+    #[test]
+    fn monotone_bits_monotone_energy() {
+        let ev = small_bs();
+        let mut last = f64::MAX;
+        for bits in [24u32, 16, 8, 2] {
+            let d = ev.evaluate_train(RuleKind::Wp, &vec![bits]);
+            assert!(d.fpu_nec <= last + 1e-9, "bits {bits}: {} > {last}", d.fpu_nec);
+            last = d.fpu_nec;
+        }
+    }
+
+    #[test]
+    fn eval_problem_records_details() {
+        let ev = small_bs();
+        let p = EvalProblem::new(&ev, RuleKind::Cip);
+        let genome = vec![12; p.genome_len()];
+        let _ = p.evaluate(&genome);
+        let details = p.take_details();
+        assert_eq!(details.len(), 1);
+        assert_eq!(details[0].0, genome);
+    }
+}

@@ -1,0 +1,153 @@
+//! Per-function FLOP and memory-traffic counters.
+//!
+//! The paper's outputs #3–#5 (FPU energy, memory energy, per-function
+//! FLOP census) are all derived from these counters by the [`crate::energy`]
+//! model. Counters are dense (indexed by `FuncId`), so the per-FLOP
+//! update on the engine hot path is two array increments.
+
+use super::FuncId;
+use crate::fpi::{OpKind, Precision};
+
+/// Statistics for one function scope.
+///
+/// Index convention: `[precision as usize][op as usize]` — precision is
+/// `Single = 0, Double = 1`; ops in [`OpKind::ALL`] order.
+#[derive(Debug, Clone, Default)]
+pub struct FuncStats {
+    /// FLOP counts.
+    pub flops: [[u64; 4]; 2],
+    /// Sum of manipulated mantissa bits per FLOP (operands + result, the
+    /// paper's §III-C bit-counting rule).
+    pub flop_bits: [[u64; 4]; 2],
+    /// Memory accesses (`MOVSS`/`MOVSD` class), by precision.
+    pub mem_ops: [u64; 2],
+    /// Transmitted bits across those accesses.
+    pub mem_bits: [u64; 2],
+}
+
+impl FuncStats {
+    /// Total FLOPs, both precisions.
+    pub fn total_flops(&self) -> u64 {
+        self.flops.iter().flatten().sum()
+    }
+
+    /// Total FLOPs at one precision.
+    pub fn flops_at(&self, p: Precision) -> u64 {
+        self.flops[p as usize].iter().sum()
+    }
+
+    /// Count for one (precision, op) cell.
+    pub fn flops_of(&self, p: Precision, op: OpKind) -> u64 {
+        self.flops[p as usize][op as usize]
+    }
+
+    /// Merge another function's stats into this one (used when
+    /// aggregating whole-program totals).
+    pub fn merge(&mut self, other: &FuncStats) {
+        for p in 0..2 {
+            for o in 0..4 {
+                self.flops[p][o] += other.flops[p][o];
+                self.flop_bits[p][o] += other.flop_bits[p][o];
+            }
+            self.mem_ops[p] += other.mem_ops[p];
+            self.mem_bits[p] += other.mem_bits[p];
+        }
+    }
+}
+
+/// Dense per-function counter table.
+#[derive(Debug, Clone, Default)]
+pub struct Counters {
+    funcs: Vec<FuncStats>,
+}
+
+impl Counters {
+    /// Empty table.
+    pub fn new() -> Self {
+        Self { funcs: Vec::new() }
+    }
+
+    /// Mutable stats for a function, growing the table on demand.
+    #[inline(always)]
+    pub fn stats_mut(&mut self, id: FuncId) -> &mut FuncStats {
+        let idx = id.0 as usize;
+        if idx >= self.funcs.len() {
+            self.funcs.resize_with(idx + 1, FuncStats::default);
+        }
+        // SAFETY-free fast path: plain indexing after the resize above.
+        &mut self.funcs[idx]
+    }
+
+    /// Stats for a function (zeros if it never executed a FLOP).
+    pub fn stats(&self, id: FuncId) -> FuncStats {
+        self.funcs.get(id.0 as usize).cloned().unwrap_or_default()
+    }
+
+    /// Iterate non-empty entries as `(FuncId, &FuncStats)`.
+    pub fn iter(&self) -> impl Iterator<Item = (FuncId, &FuncStats)> {
+        self.funcs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.total_flops() > 0 || s.mem_ops.iter().sum::<u64>() > 0)
+            .map(|(i, s)| (FuncId(i as u16), s))
+    }
+
+    /// Whole-program aggregate.
+    pub fn aggregate(&self) -> FuncStats {
+        let mut total = FuncStats::default();
+        for s in &self.funcs {
+            total.merge(s);
+        }
+        total
+    }
+
+    /// Total FLOPs across every function and precision.
+    pub fn total_flops(&self) -> u64 {
+        self.funcs.iter().map(|s| s.total_flops()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_mut_grows_on_demand() {
+        let mut c = Counters::new();
+        c.stats_mut(FuncId(5)).flops[0][0] = 3;
+        assert_eq!(c.stats(FuncId(5)).flops[0][0], 3);
+        assert_eq!(c.stats(FuncId(99)).total_flops(), 0);
+    }
+
+    #[test]
+    fn aggregate_sums_all_cells() {
+        let mut c = Counters::new();
+        c.stats_mut(FuncId(1)).flops[0][2] = 10;
+        c.stats_mut(FuncId(2)).flops[1][3] = 5;
+        c.stats_mut(FuncId(2)).mem_bits[0] = 64;
+        let agg = c.aggregate();
+        assert_eq!(agg.total_flops(), 15);
+        assert_eq!(agg.mem_bits[0], 64);
+    }
+
+    #[test]
+    fn iter_skips_empty_functions() {
+        let mut c = Counters::new();
+        c.stats_mut(FuncId(3)); // touched but empty
+        c.stats_mut(FuncId(4)).flops[0][0] = 1;
+        let ids: Vec<u16> = c.iter().map(|(id, _)| id.0).collect();
+        assert_eq!(ids, vec![4]);
+    }
+
+    #[test]
+    fn merge_is_cellwise() {
+        let mut a = FuncStats::default();
+        let mut b = FuncStats::default();
+        a.flops[0][1] = 2;
+        b.flops[0][1] = 3;
+        b.mem_ops[1] = 7;
+        a.merge(&b);
+        assert_eq!(a.flops[0][1], 5);
+        assert_eq!(a.mem_ops[1], 7);
+    }
+}

@@ -1,0 +1,530 @@
+//! The instrumented floating point execution engine — NEAT's Pin
+//! substitute (DESIGN.md §Substitutions).
+//!
+//! The paper's tool intercepts scalar SSE arithmetic instructions
+//! (`ADDSS..DIVSD`) in a running binary via Pin's JIT. Here, workloads
+//! are written against [`FpContext`]: every f32/f64 add/sub/mul/div they
+//! perform flows through [`FpContext::add32`] and friends, which is
+//! exactly the interception point Pin gave NEAT — the engine sees each
+//! FLOP's operands and result, knows the current function and call
+//! stack, consults the placement rule, applies the selected FPI, and
+//! accounts FPU + memory energy.
+//!
+//! Scoping works like the paper's function-entry/exit callbacks
+//! (§III-B4): workloads `register` their functions once, then wrap each
+//! function body in [`FpContext::call`]. Frames carry a precomputed
+//! "active FPI" so the per-FLOP rule lookup is O(1) regardless of call
+//! depth (see `placement`).
+
+pub mod counters;
+pub mod profile;
+pub mod trace;
+
+use crate::fpi::{
+    truncate_f32, truncate_f64, used_bits_f32, used_bits_f64, FpiLibrary, OpKind, Precision,
+};
+use crate::placement::{CompiledFpi, Placement};
+use counters::{Counters, FuncStats};
+use trace::TraceSink;
+
+/// Interned function handle. `FuncId(0)` is the implicit `<toplevel>`
+/// frame that is always on the stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FuncId(pub u16);
+
+/// The top-level pseudo-function.
+pub const TOPLEVEL: FuncId = FuncId(0);
+
+struct Frame {
+    func: FuncId,
+    /// FPI chosen for FLOPs executed while this frame is on top.
+    active: CompiledFpi,
+    /// Nearest function on the stack (incl. this one) that the placement
+    /// map names — the FCS resolution state (paper §III-B4).
+    nearest_mapped: Option<FuncId>,
+}
+
+/// The instrumented FP execution context.
+///
+/// One `FpContext` corresponds to one instrumented program run under one
+/// configuration (placement + FPI library). Reuse across runs is allowed
+/// after [`FpContext::reset`].
+pub struct FpContext {
+    lib: FpiLibrary,
+    placement: Placement,
+    names: Vec<String>,
+    stack: Vec<Frame>,
+    counters: Counters,
+    trace: Option<TraceSink>,
+    // Per-function resolution caches (lazy, keyed by FuncId). The
+    // placement is immutable for the context's lifetime, so WP/CIP
+    // resolution depends only on the entered function and FCS resolution
+    // only on the nearest mapped ancestor — both memoizable. This takes
+    // the scope-enter cost from ~80ns (two string hashes + a format!()
+    // inside `compile`) to ~a vector load (§Perf L3, EXPERIMENTS.md).
+    named_cache: Vec<Option<bool>>,
+    resolve_cache: Vec<Option<CompiledFpi>>,
+    // Cached copy of the top frame's active FPI: the per-FLOP fast path
+    // reads this single field instead of chasing the stack.
+    current: CompiledFpi,
+    current_func: FuncId,
+    // Optimization target (paper step 2): when set, the placement's FPI
+    // applies only to FLOPs of this precision; the other class stays
+    // IEEE-exact ("NEAT enhances either single or double precision
+    // instructions at the same time", §IV-2). None = apply to both.
+    target: Option<Precision>,
+}
+
+impl FpContext {
+    /// Create a context with the default (exact-only) library — i.e. a
+    /// pure profiling context: every FLOP is IEEE-exact but fully
+    /// counted. This is the paper's step-1 "profile the program" mode.
+    pub fn profiler() -> Self {
+        Self::new(FpiLibrary::new(), Placement::whole_program_exact())
+    }
+
+    /// Create a context running `placement` over `lib`.
+    pub fn new(lib: FpiLibrary, placement: Placement) -> Self {
+        let mut ctx = Self {
+            lib,
+            placement,
+            names: vec!["<toplevel>".to_string()],
+            stack: Vec::with_capacity(64),
+            counters: Counters::new(),
+            trace: None,
+            named_cache: Vec::new(),
+            resolve_cache: Vec::new(),
+            current: CompiledFpi::Exact,
+            current_func: TOPLEVEL,
+            target: None,
+        };
+        let active = ctx.placement.resolve(&ctx.lib, "<toplevel>", TOPLEVEL, None);
+        ctx.stack.push(Frame { func: TOPLEVEL, active, nearest_mapped: None });
+        ctx.current = ctx.stack[0].active;
+        ctx
+    }
+
+    /// Attach a FLOP trace sink (paper output #2: hex operand trace).
+    pub fn set_trace(&mut self, sink: TraceSink) {
+        self.trace = Some(sink);
+    }
+
+    /// Restrict the placement's FPIs to one precision class (the
+    /// paper's optimization target). FLOPs of the other class run
+    /// IEEE-exact regardless of the placement rule.
+    pub fn set_target(&mut self, target: Precision) {
+        self.target = Some(target);
+    }
+
+    /// Intern a function name. Idempotent; the id is stable for the
+    /// lifetime of the context. Workloads call this once per function in
+    /// their setup, then use the cheap [`FpContext::call`].
+    pub fn register(&mut self, name: &str) -> FuncId {
+        if let Some(pos) = self.names.iter().position(|n| n == name) {
+            return FuncId(pos as u16);
+        }
+        assert!(self.names.len() < u16::MAX as usize, "too many functions");
+        self.names.push(name.to_string());
+        FuncId(self.names.len() as u16 - 1)
+    }
+
+    /// Name of an interned function.
+    pub fn name_of(&self, id: FuncId) -> &str {
+        &self.names[id.0 as usize]
+    }
+
+    /// All interned names, id order (index 0 is `<toplevel>`).
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Run `body` inside the scope of function `id` — the equivalent of
+    /// Pin's function entry/exit callbacks around a call.
+    #[inline]
+    pub fn call<R>(&mut self, id: FuncId, body: impl FnOnce(&mut Self) -> R) -> R {
+        self.enter(id);
+        let r = body(self);
+        self.exit();
+        r
+    }
+
+    /// Push a function frame. Prefer [`FpContext::call`]; `enter`/`exit`
+    /// exist for callers whose scopes cannot be lexical.
+    pub fn enter(&mut self, id: FuncId) {
+        let parent = self.stack.last().expect("toplevel frame always present");
+        let parent_mapped = parent.nearest_mapped;
+        let nearest_mapped = if self.is_named(id) { Some(id) } else { parent_mapped };
+        // FCS resolution happens here, once per call, not per FLOP: the
+        // frame's active FPI is the map entry of the nearest mapped
+        // function on the stack including this one (see DESIGN.md).
+        let active = self.resolve_cached(id, nearest_mapped);
+        self.stack.push(Frame { func: id, active, nearest_mapped });
+        self.current = active;
+        self.current_func = id;
+    }
+
+    /// Memoized `placement.names_function` per function id.
+    #[inline]
+    fn is_named(&mut self, id: FuncId) -> bool {
+        let idx = id.0 as usize;
+        if idx >= self.named_cache.len() {
+            self.named_cache.resize(idx + 1, None);
+        }
+        if let Some(v) = self.named_cache[idx] {
+            return v;
+        }
+        let v = self.placement.names_function(&self.names[idx]);
+        self.named_cache[idx] = Some(v);
+        v
+    }
+
+    /// Memoized placement resolution. WP/CIP depend only on the entered
+    /// function; FCS only on the nearest mapped ancestor (which is the
+    /// cache key in that case). Custom rules are never cached — they may
+    /// inspect arbitrary state.
+    #[inline]
+    fn resolve_cached(&mut self, id: FuncId, nearest_mapped: Option<FuncId>) -> CompiledFpi {
+        let key = match &self.placement {
+            Placement::WholeProgram(_) | Placement::CurrentFunction(_) => id,
+            Placement::CallStack(_) => match nearest_mapped {
+                Some(anc) => anc,
+                None => {
+                    return CompiledFpi::Exact; // no mapped ancestor: default
+                }
+            },
+            Placement::Custom(_) => {
+                let name = &self.names[id.0 as usize];
+                let anc = nearest_mapped.map(|f| self.names[f.0 as usize].as_str());
+                return self.placement.resolve(&self.lib, name, id, anc);
+            }
+        };
+        let idx = key.0 as usize;
+        if idx >= self.resolve_cache.len() {
+            self.resolve_cache.resize(idx + 1, None);
+        }
+        if let Some(v) = self.resolve_cache[idx] {
+            return v;
+        }
+        let name = &self.names[key.0 as usize];
+        // for FCS the resolver keys on the ancestor name; passing the
+        // ancestor as both current and key is correct for both variants
+        let v = self.placement.resolve(&self.lib, name, key, Some(name));
+        self.resolve_cache[idx] = Some(v);
+        v
+    }
+
+    /// Pop the current function frame.
+    pub fn exit(&mut self) {
+        assert!(self.stack.len() > 1, "cannot exit the toplevel frame");
+        self.stack.pop();
+        let top = self.stack.last().unwrap();
+        self.current = top.active;
+        self.current_func = top.func;
+    }
+
+    /// Current call-stack depth (excluding `<toplevel>`).
+    pub fn depth(&self) -> usize {
+        self.stack.len() - 1
+    }
+
+    /// Clear all counters and the call stack (keeps interned names and
+    /// the placement), preparing the context for another run.
+    pub fn reset(&mut self) {
+        self.counters = Counters::new();
+        self.stack.truncate(1);
+        self.current = self.stack[0].active;
+        self.current_func = TOPLEVEL;
+    }
+
+    /// Accumulated statistics.
+    pub fn counters(&self) -> &Counters {
+        &self.counters
+    }
+
+    // --- the hot path -----------------------------------------------
+
+    #[inline(always)]
+    fn op32(&mut self, op: OpKind, a: f32, b: f32) -> f32 {
+        let active = if self.target == Some(Precision::Double) {
+            CompiledFpi::Exact
+        } else {
+            self.current
+        };
+        let r = match active {
+            CompiledFpi::Exact => crate::fpi::raw_f32(op, a, b),
+            CompiledFpi::Truncate(k) => {
+                // hoist the mask: one shift for all three truncations
+                let mask = u32::MAX << 24u32.saturating_sub(k.max(1)).min(23);
+                let ta = if a.is_finite() { f32::from_bits(a.to_bits() & mask) } else { a };
+                let tb = if b.is_finite() { f32::from_bits(b.to_bits() & mask) } else { b };
+                let raw = crate::fpi::raw_f32(op, ta, tb);
+                if raw.is_finite() { f32::from_bits(raw.to_bits() & mask) } else { raw }
+            }
+            CompiledFpi::Dyn(id) => self.lib.get(id).perform_f32(op, a, b),
+        };
+        let bits = used_bits_f32(a) + used_bits_f32(b) + used_bits_f32(r);
+        let st = self.counters.stats_mut(self.current_func);
+        st.flops[Precision::Single as usize][op as usize] += 1;
+        st.flop_bits[Precision::Single as usize][op as usize] += bits as u64;
+        if let Some(t) = &mut self.trace {
+            t.record32(op, a, b, r);
+        }
+        r
+    }
+
+    #[inline(always)]
+    fn op64(&mut self, op: OpKind, a: f64, b: f64) -> f64 {
+        let active = if self.target == Some(Precision::Single) {
+            CompiledFpi::Exact
+        } else {
+            self.current
+        };
+        let r = match active {
+            CompiledFpi::Exact => crate::fpi::raw_f64(op, a, b),
+            CompiledFpi::Truncate(k) => {
+                let mask = u64::MAX << 53u32.saturating_sub(k.max(1)).min(52);
+                let ta = if a.is_finite() { f64::from_bits(a.to_bits() & mask) } else { a };
+                let tb = if b.is_finite() { f64::from_bits(b.to_bits() & mask) } else { b };
+                let raw = crate::fpi::raw_f64(op, ta, tb);
+                if raw.is_finite() { f64::from_bits(raw.to_bits() & mask) } else { raw }
+            }
+            CompiledFpi::Dyn(id) => self.lib.get(id).perform_f64(op, a, b),
+        };
+        let bits = used_bits_f64(a) + used_bits_f64(b) + used_bits_f64(r);
+        let st = self.counters.stats_mut(self.current_func);
+        st.flops[Precision::Double as usize][op as usize] += 1;
+        st.flop_bits[Precision::Double as usize][op as usize] += bits as u64;
+        if let Some(t) = &mut self.trace {
+            t.record64(op, a, b, r);
+        }
+        r
+    }
+
+    /// Instrumented single-precision add (`ADDSS`).
+    #[inline(always)]
+    pub fn add32(&mut self, a: f32, b: f32) -> f32 {
+        self.op32(OpKind::Add, a, b)
+    }
+
+    /// Instrumented single-precision subtract (`SUBSS`).
+    #[inline(always)]
+    pub fn sub32(&mut self, a: f32, b: f32) -> f32 {
+        self.op32(OpKind::Sub, a, b)
+    }
+
+    /// Instrumented single-precision multiply (`MULSS`).
+    #[inline(always)]
+    pub fn mul32(&mut self, a: f32, b: f32) -> f32 {
+        self.op32(OpKind::Mul, a, b)
+    }
+
+    /// Instrumented single-precision divide (`DIVSS`).
+    #[inline(always)]
+    pub fn div32(&mut self, a: f32, b: f32) -> f32 {
+        self.op32(OpKind::Div, a, b)
+    }
+
+    /// Instrumented double-precision add (`ADDSD`).
+    #[inline(always)]
+    pub fn add64(&mut self, a: f64, b: f64) -> f64 {
+        self.op64(OpKind::Add, a, b)
+    }
+
+    /// Instrumented double-precision subtract (`SUBSD`).
+    #[inline(always)]
+    pub fn sub64(&mut self, a: f64, b: f64) -> f64 {
+        self.op64(OpKind::Sub, a, b)
+    }
+
+    /// Instrumented double-precision multiply (`MULSD`).
+    #[inline(always)]
+    pub fn mul64(&mut self, a: f64, b: f64) -> f64 {
+        self.op64(OpKind::Mul, a, b)
+    }
+
+    /// Instrumented double-precision divide (`DIVSD`).
+    #[inline(always)]
+    pub fn div64(&mut self, a: f64, b: f64) -> f64 {
+        self.op64(OpKind::Div, a, b)
+    }
+
+    // --- memory traffic (MOVSS / MOVSD to off-chip memory) ------------
+
+    /// Account a single-precision load from memory (`MOVSS` read). The
+    /// value itself is returned unchanged; only traffic is counted —
+    /// transmitted bits shrink with the value's used mantissa width,
+    /// which is how truncation buys memory energy (paper §V-D).
+    #[inline(always)]
+    pub fn load32(&mut self, v: f32) -> f32 {
+        let st = self.counters.stats_mut(self.current_func);
+        st.mem_ops[Precision::Single as usize] += 1;
+        st.mem_bits[Precision::Single as usize] += mem_bits_f32(v) as u64;
+        v
+    }
+
+    /// Account a single-precision store (`MOVSS` write).
+    #[inline(always)]
+    pub fn store32(&mut self, v: f32) -> f32 {
+        self.load32(v) // same traffic accounting both directions
+    }
+
+    /// Account a double-precision load (`MOVSD` read).
+    #[inline(always)]
+    pub fn load64(&mut self, v: f64) -> f64 {
+        let st = self.counters.stats_mut(self.current_func);
+        st.mem_ops[Precision::Double as usize] += 1;
+        st.mem_bits[Precision::Double as usize] += mem_bits_f64(v) as u64;
+        v
+    }
+
+    /// Account a double-precision store (`MOVSD` write).
+    #[inline(always)]
+    pub fn store64(&mut self, v: f64) -> f64 {
+        self.load64(v)
+    }
+
+    /// Per-function stats snapshot (for reports).
+    pub fn function_stats(&self) -> Vec<(String, FuncStats)> {
+        self.counters
+            .iter()
+            .map(|(id, st)| (self.names[id.0 as usize].clone(), st.clone()))
+            .collect()
+    }
+}
+
+/// Bits transmitted for one f32 memory access: sign + exponent + the
+/// explicit mantissa bits up to the last set one (trailing zero bits need
+/// not move on a width-adaptive bus). Full width = 32.
+#[inline(always)]
+pub fn mem_bits_f32(v: f32) -> u32 {
+    let mantissa = v.to_bits() & 0x007f_ffff;
+    let tz = if mantissa == 0 { 23 } else { mantissa.trailing_zeros() };
+    32 - tz
+}
+
+/// Bits transmitted for one f64 memory access. Full width = 64.
+#[inline(always)]
+pub fn mem_bits_f64(v: f64) -> u32 {
+    let mantissa = v.to_bits() & 0x000f_ffff_ffff_ffff;
+    let tz = if mantissa == 0 { 52 } else { mantissa.trailing_zeros() };
+    64 - tz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::Placement;
+
+    fn trunc_ctx(bits: u32) -> FpContext {
+        let lib = FpiLibrary::truncation_family(Precision::Single);
+        FpContext::new(lib, Placement::whole_program(FpiLibrary::truncation_id(bits)))
+    }
+
+    #[test]
+    fn profiler_is_exact_and_counts() {
+        let mut ctx = FpContext::profiler();
+        let r = ctx.add32(0.1, 0.2);
+        assert_eq!(r, 0.1f32 + 0.2f32);
+        let total: u64 = ctx.counters().total_flops();
+        assert_eq!(total, 1);
+    }
+
+    #[test]
+    fn whole_program_truncation_applies_everywhere() {
+        let mut ctx = trunc_ctx(1);
+        assert_eq!(ctx.mul32(1.75, 1.75), 1.0);
+        let f = ctx.register("leaf");
+        let r = ctx.call(f, |c| c.mul32(1.75, 1.75));
+        assert_eq!(r, 1.0);
+    }
+
+    #[test]
+    fn scopes_attribute_counts_to_functions() {
+        let mut ctx = FpContext::profiler();
+        let f = ctx.register("hot");
+        let g = ctx.register("cold");
+        ctx.call(f, |c| {
+            for _ in 0..10 {
+                c.add32(1.0, 2.0);
+            }
+        });
+        ctx.call(g, |c| {
+            c.mul64(2.0, 3.0);
+        });
+        let stats = ctx.function_stats();
+        let hot = stats.iter().find(|(n, _)| n == "hot").unwrap();
+        let cold = stats.iter().find(|(n, _)| n == "cold").unwrap();
+        assert_eq!(hot.1.flops[0][OpKind::Add as usize], 10);
+        assert_eq!(cold.1.flops[1][OpKind::Mul as usize], 1);
+    }
+
+    #[test]
+    fn register_is_idempotent() {
+        let mut ctx = FpContext::profiler();
+        let a = ctx.register("f");
+        let b = ctx.register("f");
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn nested_calls_restore_parent_fpi() {
+        use std::collections::HashMap;
+        let lib = FpiLibrary::truncation_family(Precision::Single);
+        let mut map = HashMap::new();
+        map.insert("inner".to_string(), FpiLibrary::truncation_id(1));
+        let mut ctx = FpContext::new(lib, Placement::current_function(map));
+        let outer = ctx.register("outer");
+        let inner = ctx.register("inner");
+        ctx.call(outer, |c| {
+            assert_eq!(c.mul32(1.75, 1.75), 1.75 * 1.75); // unmapped: exact
+            c.call(inner, |c| {
+                assert_eq!(c.mul32(1.75, 1.75), 1.0); // mapped: 1 bit
+            });
+            assert_eq!(c.mul32(1.75, 1.75), 1.75 * 1.75); // restored
+        });
+    }
+
+    #[test]
+    fn reset_clears_counters_keeps_names() {
+        let mut ctx = FpContext::profiler();
+        let f = ctx.register("f");
+        ctx.call(f, |c| {
+            c.add32(1.0, 1.0);
+        });
+        ctx.reset();
+        assert_eq!(ctx.counters().total_flops(), 0);
+        assert_eq!(ctx.register("f"), f);
+    }
+
+    #[test]
+    fn mem_bits_scale_with_used_mantissa() {
+        assert_eq!(mem_bits_f32(1.0), 9); // sign+exp only
+        assert_eq!(mem_bits_f32(0.1), 32); // dense
+        assert_eq!(mem_bits_f64(1.0), 12);
+        assert_eq!(mem_bits_f64(0.3), 64);
+        // truncated values transmit fewer bits
+        let t = crate::fpi::truncate_f32(0.1, 8);
+        assert!(mem_bits_f32(t) <= 9 + 7);
+    }
+
+    #[test]
+    fn memory_counts_attributed() {
+        let mut ctx = FpContext::profiler();
+        let f = ctx.register("io");
+        ctx.call(f, |c| {
+            c.load32(0.5);
+            c.store64(0.25);
+        });
+        let stats = ctx.function_stats();
+        let io = stats.iter().find(|(n, _)| n == "io").unwrap();
+        assert_eq!(io.1.mem_ops[0], 1);
+        assert_eq!(io.1.mem_ops[1], 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot exit the toplevel frame")]
+    fn exit_without_enter_panics() {
+        let mut ctx = FpContext::profiler();
+        ctx.exit();
+    }
+}

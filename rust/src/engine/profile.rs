@@ -1,0 +1,156 @@
+//! Profiling reports — the paper's step 1 ("Profile the Program") and
+//! the data behind Fig. 4 (precision breakdown) and Table II
+//! (configuration-space size).
+
+use super::FpContext;
+use crate::fpi::Precision;
+
+/// One function's row in the FLOP census.
+#[derive(Debug, Clone)]
+pub struct ProfileRow {
+    /// Function name.
+    pub name: String,
+    /// Single-precision FLOPs.
+    pub f32_flops: u64,
+    /// Double-precision FLOPs.
+    pub f64_flops: u64,
+    /// Memory accesses (both precisions).
+    pub mem_ops: u64,
+}
+
+impl ProfileRow {
+    /// Total FLOPs for ranking.
+    pub fn total(&self) -> u64 {
+        self.f32_flops + self.f64_flops
+    }
+}
+
+/// Whole-program profile: the paper's step-1 csv, in memory.
+#[derive(Debug, Clone)]
+pub struct Profile {
+    /// Per-function census, sorted by total FLOPs descending.
+    pub rows: Vec<ProfileRow>,
+}
+
+impl Profile {
+    /// Extract a profile from a finished run's context.
+    pub fn from_context(ctx: &FpContext) -> Self {
+        let mut rows: Vec<ProfileRow> = ctx
+            .function_stats()
+            .into_iter()
+            .map(|(name, st)| ProfileRow {
+                name,
+                f32_flops: st.flops_at(Precision::Single),
+                f64_flops: st.flops_at(Precision::Double),
+                mem_ops: st.mem_ops.iter().sum(),
+            })
+            .collect();
+        rows.sort_by(|a, b| b.total().cmp(&a.total()).then(a.name.cmp(&b.name)));
+        Self { rows }
+    }
+
+    /// Total FLOPs in the program.
+    pub fn total_flops(&self) -> u64 {
+        self.rows.iter().map(|r| r.total()).sum()
+    }
+
+    /// Fraction of single-precision FLOPs (paper Fig. 4's bar).
+    pub fn single_fraction(&self) -> f64 {
+        let total = self.total_flops();
+        if total == 0 {
+            return 0.0;
+        }
+        let single: u64 = self.rows.iter().map(|r| r.f32_flops).sum();
+        single as f64 / total as f64
+    }
+
+    /// The dominant precision — the paper's default optimization target
+    /// rule ("the same precision level is held across the code base").
+    pub fn dominant_precision(&self) -> Precision {
+        if self.single_fraction() >= 0.5 {
+            Precision::Single
+        } else {
+            Precision::Double
+        }
+    }
+
+    /// Top-k FLOP-intensive functions (the paper's per-function
+    /// candidates; k = 10 by default, §IV-4).
+    pub fn top_functions(&self, k: usize) -> Vec<&ProfileRow> {
+        self.rows.iter().filter(|r| r.total() > 0).take(k).collect()
+    }
+
+    /// FLOP coverage of the top-k functions — the paper reports ≥98%
+    /// for every benchmark (§V-C).
+    pub fn coverage(&self, k: usize) -> f64 {
+        let total = self.total_flops();
+        if total == 0 {
+            return 1.0;
+        }
+        let covered: u64 = self.top_functions(k).iter().map(|r| r.total()).sum();
+        covered as f64 / total as f64
+    }
+
+    /// Configuration-space size `|FPIs|^|functions|` as its log10 (the
+    /// literal count overflows u128 for big benchmarks — Table II prints
+    /// it in power notation).
+    pub fn config_space_log10(&self, k: usize, target: Precision) -> f64 {
+        let funcs = self.top_functions(k).len() as f64;
+        funcs * (target.mantissa_bits() as f64).log10()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_ctx() -> FpContext {
+        let mut ctx = FpContext::profiler();
+        let hot = ctx.register("hot");
+        let warm = ctx.register("warm");
+        let cold = ctx.register("cold");
+        ctx.call(hot, |c| {
+            for _ in 0..96 {
+                c.add32(1.0, 2.0);
+            }
+        });
+        ctx.call(warm, |c| {
+            for _ in 0..3 {
+                c.mul64(1.0, 2.0);
+            }
+        });
+        ctx.call(cold, |c| {
+            c.div32(1.0, 2.0);
+        });
+        ctx
+    }
+
+    #[test]
+    fn rows_sorted_by_flops() {
+        let p = Profile::from_context(&sample_ctx());
+        assert_eq!(p.rows[0].name, "hot");
+        assert_eq!(p.total_flops(), 100);
+    }
+
+    #[test]
+    fn single_fraction_counts_by_precision() {
+        let p = Profile::from_context(&sample_ctx());
+        assert!((p.single_fraction() - 0.97).abs() < 1e-9);
+        assert_eq!(p.dominant_precision(), Precision::Single);
+    }
+
+    #[test]
+    fn coverage_of_topk() {
+        let p = Profile::from_context(&sample_ctx());
+        assert!((p.coverage(1) - 0.96).abs() < 1e-9);
+        assert_eq!(p.coverage(3), 1.0);
+    }
+
+    #[test]
+    fn config_space_log10_matches_table2_form() {
+        let p = Profile::from_context(&sample_ctx());
+        // 3 functions, single target: 24^3 -> 3*log10(24)
+        let log = p.config_space_log10(10, Precision::Single);
+        assert!((log - 3.0 * 24f64.log10()).abs() < 1e-12);
+    }
+}

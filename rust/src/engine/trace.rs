@@ -1,0 +1,117 @@
+//! FLOP operand/result tracing (paper output #2).
+//!
+//! "The operands and result of each operation are printed as hexadecimal
+//! numbers so that there is no confusion in rounding the floating-point
+//! values." — the trace sink reproduces that format. Tracing is opt-in:
+//! it is for debugging a configuration, not for the search hot path.
+
+use std::io::Write;
+
+use crate::fpi::OpKind;
+
+/// Destination for a FLOP trace.
+pub struct TraceSink {
+    out: Box<dyn Write + Send>,
+    /// Lines written so far (also used by tests against in-memory sinks).
+    pub lines: u64,
+    /// Stop recording after this many lines (guards against accidental
+    /// multi-gigabyte traces; 0 = unlimited).
+    pub limit: u64,
+}
+
+impl TraceSink {
+    /// Trace to any writer (file, stderr, Vec<u8> in tests).
+    pub fn new(out: Box<dyn Write + Send>) -> Self {
+        Self { out, lines: 0, limit: 0 }
+    }
+
+    /// Trace to a file path.
+    pub fn to_file(path: &std::path::Path) -> std::io::Result<Self> {
+        let f = std::fs::File::create(path)?;
+        Ok(Self::new(Box::new(std::io::BufWriter::new(f))))
+    }
+
+    /// Cap the number of recorded lines.
+    pub fn with_limit(mut self, limit: u64) -> Self {
+        self.limit = limit;
+        self
+    }
+
+    #[inline]
+    fn open(&mut self) -> bool {
+        self.limit == 0 || self.lines < self.limit
+    }
+
+    /// Record one single-precision FLOP.
+    #[inline]
+    pub fn record32(&mut self, op: OpKind, a: f32, b: f32, r: f32) {
+        if !self.open() {
+            return;
+        }
+        let _ = writeln!(
+            self.out,
+            "ss {} {:08x} {:08x} {:08x}",
+            op.name(),
+            a.to_bits(),
+            b.to_bits(),
+            r.to_bits()
+        );
+        self.lines += 1;
+    }
+
+    /// Record one double-precision FLOP.
+    #[inline]
+    pub fn record64(&mut self, op: OpKind, a: f64, b: f64, r: f64) {
+        if !self.open() {
+            return;
+        }
+        let _ = writeln!(
+            self.out,
+            "sd {} {:016x} {:016x} {:016x}",
+            op.name(),
+            a.to_bits(),
+            b.to_bits(),
+            r.to_bits()
+        );
+        self.lines += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    /// Writer that appends into a shared buffer (test helper).
+    struct Shared(Arc<Mutex<Vec<u8>>>);
+    impl Write for Shared {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn records_hex_lines() {
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        let mut sink = TraceSink::new(Box::new(Shared(buf.clone())));
+        sink.record32(OpKind::Add, 1.0, 2.0, 3.0);
+        sink.record64(OpKind::Div, 1.0, 4.0, 0.25);
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        assert!(text.contains("ss add 3f800000 40000000 40400000"));
+        assert!(text.contains("sd div"));
+        assert_eq!(sink.lines, 2);
+    }
+
+    #[test]
+    fn limit_caps_recording() {
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        let mut sink = TraceSink::new(Box::new(Shared(buf.clone()))).with_limit(1);
+        sink.record32(OpKind::Add, 1.0, 2.0, 3.0);
+        sink.record32(OpKind::Add, 1.0, 2.0, 3.0);
+        assert_eq!(sink.lines, 1);
+    }
+}

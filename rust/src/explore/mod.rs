@@ -1,0 +1,92 @@
+//! Tradeoff-space exploration (paper step 5).
+//!
+//! Configurations are integer genomes — one gene per placement target
+//! (function, layer, or the single whole-program slot), each gene a
+//! mantissa width in `[1, 24]` or `[1, 53]`. The space is explored with
+//! NSGA-II ([`nsga2`], the paper's choice, ref [18]) under a fixed
+//! evaluation budget (≤400 configurations, §V-A), with a random-search
+//! baseline ([`random_search`]) for the DESIGN.md ablation.
+
+pub mod nsga2;
+pub mod random_search;
+
+pub use nsga2::{Nsga2, Nsga2Params};
+pub use random_search::random_search;
+
+/// An integer genome: mantissa widths per placement target.
+pub type Genome = Vec<u32>;
+
+/// Objectives are minimized: `(error, energy)` both normalized to the
+/// exact baseline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Objectives {
+    /// Output error rate vs. baseline (0.01 = 1%).
+    pub error: f64,
+    /// Normalized energy consumption (NEC; 1.0 = baseline).
+    pub energy: f64,
+}
+
+impl Objectives {
+    /// Pareto dominance: at least as good in both, strictly better in one.
+    pub fn dominates(&self, other: &Objectives) -> bool {
+        (self.error <= other.error && self.energy <= other.energy)
+            && (self.error < other.error || self.energy < other.energy)
+    }
+}
+
+/// An evaluated configuration.
+#[derive(Debug, Clone)]
+pub struct Evaluated {
+    /// The genome.
+    pub genome: Genome,
+    /// Its objective values.
+    pub objectives: Objectives,
+}
+
+/// The search problem handed to an explorer.
+pub trait Problem {
+    /// Genome length (number of placement targets).
+    fn genome_len(&self) -> usize;
+    /// Upper bound per gene (24 single / 53 double).
+    fn max_bits(&self) -> u32;
+    /// Evaluate one configuration.
+    fn evaluate(&self, genome: &Genome) -> Objectives;
+}
+
+/// A closure-backed [`Problem`] for tests and simple sweeps.
+pub struct FnProblem<F: Fn(&Genome) -> Objectives> {
+    /// Genome length.
+    pub len: usize,
+    /// Gene upper bound.
+    pub max_bits: u32,
+    /// Objective function.
+    pub f: F,
+}
+
+impl<F: Fn(&Genome) -> Objectives> Problem for FnProblem<F> {
+    fn genome_len(&self) -> usize {
+        self.len
+    }
+    fn max_bits(&self) -> u32 {
+        self.max_bits
+    }
+    fn evaluate(&self, genome: &Genome) -> Objectives {
+        (self.f)(genome)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_is_strict_somewhere() {
+        let a = Objectives { error: 0.1, energy: 0.5 };
+        let b = Objectives { error: 0.1, energy: 0.6 };
+        let c = Objectives { error: 0.2, energy: 0.4 };
+        assert!(a.dominates(&b));
+        assert!(!b.dominates(&a));
+        assert!(!a.dominates(&c) && !c.dominates(&a)); // incomparable
+        assert!(!a.dominates(&a)); // not reflexive
+    }
+}

@@ -1,0 +1,356 @@
+//! NSGA-II (Deb et al. 2002, the paper's ref [18]) over integer genomes.
+//!
+//! Fast non-dominated sorting + crowding distance + binary tournament,
+//! uniform crossover and reset/creep mutation suited to mantissa-width
+//! genes. The implementation is deterministic for a given seed — the
+//! robustness protocol (paper §V-G) depends on reproducible searches.
+
+use crate::util::Pcg64;
+
+use super::{Evaluated, Genome, Problem};
+
+/// NSGA-II tuning knobs (exposed on the CLI like the paper's step 5).
+#[derive(Debug, Clone)]
+pub struct Nsga2Params {
+    /// Population size per generation.
+    pub population: usize,
+    /// Number of generations (evaluation budget ≈ population × (gens+1)).
+    pub generations: usize,
+    /// Per-genome crossover probability.
+    pub crossover_p: f64,
+    /// Per-gene mutation probability (defaults to ~2/len at runtime if 0).
+    pub mutation_p: f64,
+    /// RNG seed.
+    pub seed: u64,
+    /// Warm-start genomes injected into the initial population (after
+    /// the two anchors). Genes are clamped to bounds. Used e.g. to seed
+    /// a fine-granularity search with coarse-granularity solutions
+    /// (PLC ⊂ PLI in the CNN study).
+    pub initial: Vec<Genome>,
+}
+
+impl Default for Nsga2Params {
+    fn default() -> Self {
+        // ≈400 evaluations, the paper's §V-A budget.
+        Self {
+            population: 40,
+            generations: 9,
+            crossover_p: 0.9,
+            mutation_p: 0.0,
+            seed: 42,
+            initial: Vec::new(),
+        }
+    }
+}
+
+/// NSGA-II explorer.
+pub struct Nsga2 {
+    params: Nsga2Params,
+}
+
+impl Nsga2 {
+    /// Create an explorer with the given parameters.
+    pub fn new(params: Nsga2Params) -> Self {
+        Self { params }
+    }
+
+    /// Run the search; returns every configuration ever evaluated (the
+    /// tradeoff-space sample the figures are drawn from).
+    pub fn run(&self, problem: &dyn Problem) -> Vec<Evaluated> {
+        let p = &self.params;
+        let len = problem.genome_len();
+        let hi = problem.max_bits();
+        let mut rng = Pcg64::new(p.seed);
+        let mutation_p = if p.mutation_p > 0.0 { p.mutation_p } else { (2.0 / len as f64).min(0.5) };
+
+        let mut archive: Vec<Evaluated> = Vec::new();
+        let evaluate = |genome: Genome, archive: &mut Vec<Evaluated>| -> Evaluated {
+            let objectives = problem.evaluate(&genome);
+            let ev = Evaluated { genome, objectives };
+            archive.push(ev.clone());
+            ev
+        };
+
+        // Seeded initial population: uniform random genomes plus the two
+        // anchors (all-min and all-max widths) so the frontier endpoints
+        // are always sampled.
+        let mut pop: Vec<Evaluated> = Vec::with_capacity(p.population);
+        pop.push(evaluate(vec![hi; len], &mut archive));
+        pop.push(evaluate(vec![1; len], &mut archive));
+        for g in p.initial.iter().take(p.population.saturating_sub(pop.len())) {
+            let mut g = g.clone();
+            g.resize(len, hi);
+            for gene in g.iter_mut() {
+                *gene = (*gene).clamp(1, hi);
+            }
+            pop.push(evaluate(g, &mut archive));
+        }
+        while pop.len() < p.population {
+            let g: Genome = (0..len).map(|_| rng.range_inclusive(1, hi as u64) as u32).collect();
+            pop.push(evaluate(g, &mut archive));
+        }
+
+        for _gen in 0..p.generations {
+            // --- variation: binary tournament + crossover + mutation
+            let ranks = non_dominated_sort(&pop);
+            let crowd = crowding_all(&pop, &ranks);
+            let mut offspring: Vec<Evaluated> = Vec::with_capacity(p.population);
+            while offspring.len() < p.population {
+                let a = tournament(&mut rng, &ranks, &crowd);
+                let b = tournament(&mut rng, &ranks, &crowd);
+                let (mut ga, mut gb) = (pop[a].genome.clone(), pop[b].genome.clone());
+                if rng.chance(p.crossover_p) {
+                    uniform_crossover(&mut rng, &mut ga, &mut gb);
+                }
+                mutate(&mut rng, &mut ga, hi, mutation_p);
+                mutate(&mut rng, &mut gb, hi, mutation_p);
+                offspring.push(evaluate(ga, &mut archive));
+                if offspring.len() < p.population {
+                    offspring.push(evaluate(gb, &mut archive));
+                }
+            }
+
+            // --- environmental selection over parents ∪ offspring
+            pop.extend(offspring);
+            pop = select(pop, p.population);
+        }
+
+        archive
+    }
+}
+
+/// Fast non-dominated sort; returns the front index of each individual.
+pub fn non_dominated_sort(pop: &[Evaluated]) -> Vec<usize> {
+    let n = pop.len();
+    let mut dominated_by: Vec<usize> = vec![0; n]; // count dominating i
+    let mut dominates: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if pop[i].objectives.dominates(&pop[j].objectives) {
+                dominates[i].push(j);
+                dominated_by[j] += 1;
+            } else if pop[j].objectives.dominates(&pop[i].objectives) {
+                dominates[j].push(i);
+                dominated_by[i] += 1;
+            }
+        }
+    }
+    let mut rank = vec![usize::MAX; n];
+    let mut front: Vec<usize> = (0..n).filter(|&i| dominated_by[i] == 0).collect();
+    let mut level = 0;
+    while !front.is_empty() {
+        let mut next = Vec::new();
+        for &i in &front {
+            rank[i] = level;
+            for &j in &dominates[i] {
+                dominated_by[j] -= 1;
+                if dominated_by[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        front = next;
+        level += 1;
+    }
+    rank
+}
+
+/// Crowding distance within each front (∞ at the extremes).
+fn crowding_all(pop: &[Evaluated], ranks: &[usize]) -> Vec<f64> {
+    let n = pop.len();
+    let mut crowd = vec![0.0f64; n];
+    let max_rank = ranks.iter().copied().filter(|&r| r != usize::MAX).max().unwrap_or(0);
+    for level in 0..=max_rank {
+        let members: Vec<usize> = (0..n).filter(|&i| ranks[i] == level).collect();
+        if members.is_empty() {
+            continue;
+        }
+        for obj in 0..2 {
+            let key = |i: usize| {
+                let o = &pop[i].objectives;
+                if obj == 0 {
+                    o.error
+                } else {
+                    o.energy
+                }
+            };
+            let mut order = members.clone();
+            order.sort_by(|&a, &b| key(a).partial_cmp(&key(b)).unwrap());
+            let lo = key(order[0]);
+            let hi = key(*order.last().unwrap());
+            let span = (hi - lo).max(1e-12);
+            crowd[order[0]] = f64::INFINITY;
+            crowd[*order.last().unwrap()] = f64::INFINITY;
+            for w in order.windows(3) {
+                let (prev, mid, next) = (w[0], w[1], w[2]);
+                crowd[mid] += (key(next) - key(prev)) / span;
+            }
+        }
+    }
+    crowd
+}
+
+fn tournament(rng: &mut Pcg64, ranks: &[usize], crowd: &[f64]) -> usize {
+    let n = ranks.len();
+    let a = rng.below(n as u64) as usize;
+    let b = rng.below(n as u64) as usize;
+    if ranks[a] < ranks[b] || (ranks[a] == ranks[b] && crowd[a] > crowd[b]) {
+        a
+    } else {
+        b
+    }
+}
+
+fn uniform_crossover(rng: &mut Pcg64, a: &mut Genome, b: &mut Genome) {
+    for i in 0..a.len() {
+        if rng.chance(0.5) {
+            std::mem::swap(&mut a[i], &mut b[i]);
+        }
+    }
+}
+
+/// Gene mutation: half the time a uniform reset (global exploration),
+/// half a ±1..3 creep (local refinement around good widths).
+fn mutate(rng: &mut Pcg64, g: &mut Genome, hi: u32, p: f64) {
+    for gene in g.iter_mut() {
+        if !rng.chance(p) {
+            continue;
+        }
+        if rng.chance(0.5) {
+            *gene = rng.range_inclusive(1, hi as u64) as u32;
+        } else {
+            let step = rng.range_inclusive(1, 3) as i64;
+            let dir = if rng.chance(0.5) { 1 } else { -1 };
+            let v = (*gene as i64 + dir * step).clamp(1, hi as i64);
+            *gene = v as u32;
+        }
+    }
+}
+
+/// Environmental selection: best fronts first, crowding distance within
+/// the cut front.
+fn select(mut pool: Vec<Evaluated>, keep: usize) -> Vec<Evaluated> {
+    let ranks = non_dominated_sort(&pool);
+    let crowd = crowding_all(&pool, &ranks);
+    let mut idx: Vec<usize> = (0..pool.len()).collect();
+    idx.sort_by(|&a, &b| {
+        ranks[a]
+            .cmp(&ranks[b])
+            .then(crowd[b].partial_cmp(&crowd[a]).unwrap_or(std::cmp::Ordering::Equal))
+    });
+    idx.truncate(keep);
+    let mut keep_flags = vec![false; pool.len()];
+    for &i in &idx {
+        keep_flags[i] = true;
+    }
+    let mut out = Vec::with_capacity(keep);
+    let mut i = 0;
+    pool.retain(|_| {
+        let k = keep_flags[i];
+        i += 1;
+        k
+    });
+    out.append(&mut pool);
+    out
+}
+
+/// Pareto front (non-dominated subset) of an evaluated archive.
+pub fn pareto_front(archive: &[Evaluated]) -> Vec<Evaluated> {
+    archive
+        .iter()
+        .filter(|a| !archive.iter().any(|b| b.objectives.dominates(&a.objectives)))
+        .cloned()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::{FnProblem, Objectives};
+
+    /// Toy problem: error falls as genes shrink... inverted tradeoff so
+    /// the front is a known curve: energy = mean(g)/24, error = 1 - mean.
+    fn toy() -> FnProblem<impl Fn(&Genome) -> Objectives> {
+        FnProblem {
+            len: 6,
+            max_bits: 24,
+            f: |g: &Genome| {
+                let mean = g.iter().map(|&x| x as f64).sum::<f64>() / g.len() as f64 / 24.0;
+                Objectives { error: (1.0 - mean), energy: mean }
+            },
+        }
+    }
+
+    #[test]
+    fn respects_evaluation_budget() {
+        let params = Nsga2Params { population: 20, generations: 4, ..Default::default() };
+        let archive = Nsga2::new(params).run(&toy());
+        assert_eq!(archive.len(), 20 * 5);
+    }
+
+    #[test]
+    fn genes_stay_in_bounds() {
+        let archive = Nsga2::new(Nsga2Params::default()).run(&toy());
+        for ev in &archive {
+            assert_eq!(ev.genome.len(), 6);
+            assert!(ev.genome.iter().all(|&g| (1..=24).contains(&g)));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let run = |seed| {
+            let params = Nsga2Params { population: 12, generations: 3, seed, ..Default::default() };
+            Nsga2::new(params)
+                .run(&toy())
+                .iter()
+                .map(|e| e.genome.clone())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn anchors_always_evaluated() {
+        let archive = Nsga2::new(Nsga2Params::default()).run(&toy());
+        assert!(archive.iter().any(|e| e.genome.iter().all(|&g| g == 24)));
+        assert!(archive.iter().any(|e| e.genome.iter().all(|&g| g == 1)));
+    }
+
+    #[test]
+    fn front_approaches_true_tradeoff() {
+        // On the toy problem every point has error + energy = 1, so the
+        // front should span a wide range of energies.
+        let archive = Nsga2::new(Nsga2Params::default()).run(&toy());
+        let front = pareto_front(&archive);
+        let min = front.iter().map(|e| e.objectives.energy).fold(1.0f64, f64::min);
+        let max = front.iter().map(|e| e.objectives.energy).fold(0.0f64, f64::max);
+        assert!(min < 0.1 && max > 0.9, "front [{min}, {max}] too narrow");
+    }
+
+    #[test]
+    fn non_dominated_sort_layers_correctly() {
+        let mk = |e, g| Evaluated {
+            genome: vec![],
+            objectives: Objectives { error: e, energy: g },
+        };
+        let pop = vec![mk(0.1, 0.1), mk(0.2, 0.2), mk(0.05, 0.3), mk(0.3, 0.05)];
+        let ranks = non_dominated_sort(&pop);
+        assert_eq!(ranks[0], 0); // dominates (0.2,0.2)
+        assert_eq!(ranks[1], 1);
+        assert_eq!(ranks[2], 0); // incomparable with (0.1,0.1)
+        assert_eq!(ranks[3], 0);
+    }
+
+    #[test]
+    fn pareto_front_has_no_dominated_member() {
+        let archive = Nsga2::new(Nsga2Params::default()).run(&toy());
+        let front = pareto_front(&archive);
+        for a in &front {
+            for b in &front {
+                assert!(!b.objectives.dominates(&a.objectives));
+            }
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! The identity FPI: IEEE-exact arithmetic, full datapath width.
+//!
+//! Every baseline (the paper's "highest quality configuration... where no
+//! approximation happens") runs under this implementation, and placement
+//! rules fall back to it when no mapping matches.
+
+use super::{raw_f32, raw_f64, FpImplementation, OpKind};
+
+/// IEEE-exact floating point implementation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExactFpi;
+
+impl FpImplementation for ExactFpi {
+    fn name(&self) -> String {
+        "exact".to_string()
+    }
+
+    #[inline]
+    fn perform_f32(&self, op: OpKind, a: f32, b: f32) -> f32 {
+        raw_f32(op, a, b)
+    }
+
+    #[inline]
+    fn perform_f64(&self, op: OpKind, a: f64, b: f64) -> f64 {
+        raw_f64(op, a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_is_ieee() {
+        let fpi = ExactFpi;
+        assert_eq!(fpi.perform_f32(OpKind::Add, 0.1, 0.2), 0.1f32 + 0.2f32);
+        assert_eq!(fpi.perform_f64(OpKind::Div, 1.0, 3.0), 1.0f64 / 3.0f64);
+    }
+
+    #[test]
+    fn keeps_full_width() {
+        use crate::fpi::Precision;
+        assert_eq!(ExactFpi.keep_bits(Precision::Single), 24);
+        assert_eq!(ExactFpi.keep_bits(Precision::Double), 53);
+    }
+}

@@ -1,0 +1,120 @@
+//! The FPI library: the registered set of implementations a run may use.
+//!
+//! Mirrors the paper's setup step 3-4 (§IV): the user develops FPIs and
+//! registers them; placement rules then map program regions to library
+//! entries. The default library is the truncation family — 24 levels for
+//! single precision, 53 for double (paper §V-A) — with `exact` always at
+//! a known handle.
+
+use std::sync::Arc;
+
+use super::{ExactFpi, FpImplementation, Precision, TruncateFpi};
+
+/// Handle into an [`FpiLibrary`]. `FpiId(0)` is always the exact FPI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FpiId(pub u32);
+
+impl FpiId {
+    /// The identity (exact, unapproximated) implementation.
+    pub const EXACT: FpiId = FpiId(0);
+}
+
+/// A registry of FPIs addressed by [`FpiId`].
+#[derive(Clone)]
+pub struct FpiLibrary {
+    entries: Vec<Arc<dyn FpImplementation>>,
+}
+
+impl FpiLibrary {
+    /// An empty library containing only the exact FPI at id 0.
+    pub fn new() -> Self {
+        Self { entries: vec![Arc::new(ExactFpi)] }
+    }
+
+    /// The paper's default library for an optimization target: truncation
+    /// FPIs at every mantissa width `1..=24` (single) or `1..=53`
+    /// (double). The id for width `k` is returned by
+    /// [`FpiLibrary::truncation_id`].
+    pub fn truncation_family(target: Precision) -> Self {
+        let mut lib = Self::new();
+        for k in 1..=target.mantissa_bits() {
+            lib.register(Arc::new(TruncateFpi::new(k)));
+        }
+        lib
+    }
+
+    /// Register an implementation; returns its handle.
+    pub fn register(&mut self, fpi: Arc<dyn FpImplementation>) -> FpiId {
+        self.entries.push(fpi);
+        FpiId(self.entries.len() as u32 - 1)
+    }
+
+    /// Handle of the truncation FPI with `keep` bits in a library built
+    /// by [`FpiLibrary::truncation_family`] (width `k` lives at id `k`).
+    pub fn truncation_id(keep: u32) -> FpiId {
+        FpiId(keep)
+    }
+
+    /// Look up an implementation.
+    #[inline]
+    pub fn get(&self, id: FpiId) -> &dyn FpImplementation {
+        self.entries[id.0 as usize].as_ref()
+    }
+
+    /// Number of registered FPIs (including exact).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when only the exact FPI is present.
+    pub fn is_empty(&self) -> bool {
+        self.entries.len() <= 1
+    }
+
+    /// Names of all registered implementations, id order.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.iter().map(|e| e.name()).collect()
+    }
+}
+
+impl Default for FpiLibrary {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpi::OpKind;
+
+    #[test]
+    fn id_zero_is_exact() {
+        let lib = FpiLibrary::new();
+        assert_eq!(lib.get(FpiId::EXACT).name(), "exact");
+    }
+
+    #[test]
+    fn truncation_family_sizes_match_paper() {
+        // paper Table I: 24 FPIs single, 53 double (+ exact at id 0)
+        assert_eq!(FpiLibrary::truncation_family(Precision::Single).len(), 25);
+        assert_eq!(FpiLibrary::truncation_family(Precision::Double).len(), 54);
+    }
+
+    #[test]
+    fn truncation_id_maps_width_to_entry() {
+        let lib = FpiLibrary::truncation_family(Precision::Single);
+        for k in 1..=24u32 {
+            let fpi = lib.get(FpiLibrary::truncation_id(k));
+            assert_eq!(fpi.name(), format!("truncate[{k}b]"));
+        }
+    }
+
+    #[test]
+    fn registered_custom_fpi_is_retrievable() {
+        let mut lib = FpiLibrary::new();
+        let id = lib.register(std::sync::Arc::new(TruncateFpi::new(7)));
+        assert_eq!(lib.get(id).perform_f32(OpKind::Add, 1.75, 0.0), 1.75);
+        assert_eq!(lib.get(id).name(), "truncate[7b]");
+    }
+}

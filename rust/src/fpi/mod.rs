@@ -1,0 +1,145 @@
+//! Floating point implementations (FPIs).
+//!
+//! An FPI is the paper's unit of approximation (§III-B3): a replacement
+//! for the scalar FP arithmetic instructions (`add`/`sub`/`mul`/`div`)
+//! of either precision. Users define one by implementing
+//! [`FpImplementation`] — the analogue of subclassing the paper's
+//! `FpImplementation` virtual class and overriding `PerformOperation`.
+//!
+//! The built-in family is mantissa bit truncation ([`truncate`]): 24
+//! single-precision and 53 double-precision levels, matching the paper's
+//! evaluation. [`perturb`] provides the "direct approximation injected on
+//! operands/results" style of FPI used for ablations, and [`exact`] is
+//! the identity FPI that anchors every baseline run.
+
+pub mod exact;
+pub mod library;
+pub mod perturb;
+pub mod truncate;
+
+pub use exact::ExactFpi;
+pub use library::FpiLibrary;
+pub use perturb::PerturbFpi;
+pub use truncate::{truncate_f32, truncate_f64, used_bits_f32, used_bits_f64, TruncateFpi};
+
+/// Which scalar arithmetic instruction a FLOP is (the paper instruments
+/// `ADDSS/SUBSS/MULSS/DIVSS` and their `SD` doubles).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum OpKind {
+    Add = 0,
+    Sub = 1,
+    Mul = 2,
+    Div = 3,
+}
+
+impl OpKind {
+    /// All four kinds, in discriminant order.
+    pub const ALL: [OpKind; 4] = [OpKind::Add, OpKind::Sub, OpKind::Mul, OpKind::Div];
+
+    /// Stable lowercase name (used in CSV headers and reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Add => "add",
+            OpKind::Sub => "sub",
+            OpKind::Mul => "mul",
+            OpKind::Div => "div",
+        }
+    }
+}
+
+/// Operand precision class (the paper's "optimization target": NEAT
+/// enhances either the 32-bit or the 64-bit FLOPs of a program per run).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Precision {
+    Single = 0,
+    Double = 1,
+}
+
+impl Precision {
+    /// Total mantissa bits (incl. the implicit leading one): 24 / 53.
+    pub fn mantissa_bits(self) -> u32 {
+        match self {
+            Precision::Single => 24,
+            Precision::Double => 53,
+        }
+    }
+
+    /// Stable name for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Single => "single",
+            Precision::Double => "double",
+        }
+    }
+}
+
+/// A floating point implementation: how to compute each scalar FLOP.
+///
+/// Implementations must be cheap and pure — they run on the engine's hot
+/// path, once per intercepted FLOP.
+pub trait FpImplementation: Send + Sync {
+    /// Human-readable identifier (reports, traces).
+    fn name(&self) -> String;
+
+    /// Compute one single-precision FLOP.
+    fn perform_f32(&self, op: OpKind, a: f32, b: f32) -> f32;
+
+    /// Compute one double-precision FLOP.
+    fn perform_f64(&self, op: OpKind, a: f64, b: f64) -> f64;
+
+    /// Mantissa bits this FPI actually produces for the given precision,
+    /// used by the energy model's datapath-width scaling. The default —
+    /// full width — is correct for FPIs that do not narrow the format.
+    fn keep_bits(&self, precision: Precision) -> u32 {
+        precision.mantissa_bits()
+    }
+}
+
+/// IEEE-exact scalar op (shared by [`ExactFpi`] and the truncating FPIs).
+#[inline(always)]
+pub(crate) fn raw_f32(op: OpKind, a: f32, b: f32) -> f32 {
+    match op {
+        OpKind::Add => a + b,
+        OpKind::Sub => a - b,
+        OpKind::Mul => a * b,
+        OpKind::Div => a / b,
+    }
+}
+
+/// IEEE-exact scalar op, double precision.
+#[inline(always)]
+pub(crate) fn raw_f64(op: OpKind, a: f64, b: f64) -> f64 {
+    match op {
+        OpKind::Add => a + b,
+        OpKind::Sub => a - b,
+        OpKind::Mul => a * b,
+        OpKind::Div => a / b,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opkind_names_are_stable() {
+        let names: Vec<_> = OpKind::ALL.iter().map(|o| o.name()).collect();
+        assert_eq!(names, ["add", "sub", "mul", "div"]);
+    }
+
+    #[test]
+    fn precision_widths_match_ieee() {
+        assert_eq!(Precision::Single.mantissa_bits(), 24);
+        assert_eq!(Precision::Double.mantissa_bits(), 53);
+    }
+
+    #[test]
+    fn raw_ops_are_ieee() {
+        assert_eq!(raw_f32(OpKind::Add, 1.5, 2.25), 3.75);
+        assert_eq!(raw_f64(OpKind::Div, 1.0, 4.0), 0.25);
+        assert_eq!(raw_f32(OpKind::Sub, 1.0, 0.5), 0.5);
+        assert_eq!(raw_f64(OpKind::Mul, 3.0, 0.5), 1.5);
+    }
+}

@@ -1,0 +1,106 @@
+//! Direct-approximation FPIs (paper §IV-3: "injecting direct
+//! approximation to the operands or results of floating point arithmetic
+//! operations").
+//!
+//! Two modes, used by the `fpi-mode` ablation (DESIGN.md §Ablations):
+//! truncate only the *operands* (modelling narrow input buses feeding an
+//! exact core) or only the *result* (modelling an exact core with a
+//! narrow writeback). The evaluated family in the paper truncates both —
+//! [`super::TruncateFpi`].
+
+use super::{raw_f32, raw_f64, truncate_f32, truncate_f64, FpImplementation, OpKind, Precision};
+
+/// Where the truncation is injected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PerturbMode {
+    /// Truncate the two operands; compute and store the result exactly.
+    Operands,
+    /// Compute exactly on full operands; truncate the result only.
+    Result,
+}
+
+/// An FPI that truncates on one side of the operation only.
+#[derive(Debug, Clone, Copy)]
+pub struct PerturbFpi {
+    /// Mantissa bits kept on the perturbed side.
+    pub keep_bits: u32,
+    /// Which side is perturbed.
+    pub mode: PerturbMode,
+}
+
+impl PerturbFpi {
+    /// Construct a perturbation FPI.
+    pub fn new(keep_bits: u32, mode: PerturbMode) -> Self {
+        Self { keep_bits, mode }
+    }
+}
+
+impl FpImplementation for PerturbFpi {
+    fn name(&self) -> String {
+        let side = match self.mode {
+            PerturbMode::Operands => "operands",
+            PerturbMode::Result => "result",
+        };
+        format!("perturb[{}b,{}]", self.keep_bits, side)
+    }
+
+    #[inline]
+    fn perform_f32(&self, op: OpKind, a: f32, b: f32) -> f32 {
+        let k = self.keep_bits;
+        match self.mode {
+            PerturbMode::Operands => raw_f32(op, truncate_f32(a, k), truncate_f32(b, k)),
+            PerturbMode::Result => truncate_f32(raw_f32(op, a, b), k),
+        }
+    }
+
+    #[inline]
+    fn perform_f64(&self, op: OpKind, a: f64, b: f64) -> f64 {
+        let k = self.keep_bits;
+        match self.mode {
+            PerturbMode::Operands => raw_f64(op, truncate_f64(a, k), truncate_f64(b, k)),
+            PerturbMode::Result => truncate_f64(raw_f64(op, a, b), k),
+        }
+    }
+
+    fn keep_bits(&self, precision: Precision) -> u32 {
+        self.keep_bits.clamp(1, precision.mantissa_bits())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn operand_mode_keeps_exact_result_width() {
+        let fpi = PerturbFpi::new(1, PerturbMode::Operands);
+        // operands floor to 1.0; the exact product is stored untouched
+        assert_eq!(fpi.perform_f32(OpKind::Mul, 1.75, 1.75), 1.0);
+        // 1.0 + 1.5 -> operands 1.0 + 1.0 = 2.0
+        assert_eq!(fpi.perform_f32(OpKind::Add, 1.0, 1.5), 2.0);
+    }
+
+    #[test]
+    fn result_mode_computes_on_full_operands() {
+        let fpi = PerturbFpi::new(1, PerturbMode::Result);
+        // 1.75 * 1.75 = 3.0625, truncated to 2.0
+        assert_eq!(fpi.perform_f32(OpKind::Mul, 1.75, 1.75), 2.0);
+        // vs operand mode which would give 1.0
+    }
+
+    #[test]
+    fn modes_differ_in_general() {
+        let op = PerturbFpi::new(4, PerturbMode::Operands);
+        let rs = PerturbFpi::new(4, PerturbMode::Result);
+        let mut differ = false;
+        let mut rng = crate::util::Pcg64::new(5);
+        for _ in 0..200 {
+            let a = rng.normal() as f32;
+            let b = rng.normal() as f32;
+            if op.perform_f32(OpKind::Add, a, b) != rs.perform_f32(OpKind::Add, a, b) {
+                differ = true;
+            }
+        }
+        assert!(differ);
+    }
+}

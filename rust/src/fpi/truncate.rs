@@ -1,0 +1,191 @@
+//! Mantissa bit truncation — the paper's evaluated FPI family.
+//!
+//! `TruncateFpi { keep_bits }` keeps the top `keep_bits` of the mantissa
+//! (counting the implicit leading one) on *operands and result* of every
+//! FLOP, zeroing the rest — the software model of a pruned FPU datapath.
+//!
+//! The bit-level semantics here are the contract shared with the L1
+//! Pallas kernel (`python/compile/kernels/ref.py`): both sides mask the
+//! low `width - keep` explicit mantissa bits, round toward zero, and pass
+//! non-finite values through untouched. `python/tests/test_ref.py` pins
+//! the Python side; `rust/tests/proptest_invariants.rs` pins this side;
+//! the integration test `integration_runtime.rs` cross-checks them
+//! through the AOT artifact.
+
+use super::{raw_f32, raw_f64, FpImplementation, OpKind, Precision};
+
+/// Truncate an `f32` to `keep` mantissa bits (of 24, incl. implicit one).
+///
+/// `keep` is clamped to `[1, 24]`; non-finite values pass through.
+#[inline(always)]
+pub fn truncate_f32(x: f32, keep: u32) -> f32 {
+    if !x.is_finite() {
+        return x;
+    }
+    let zeroed = 24u32.saturating_sub(keep.max(1)).min(23);
+    let mask = u32::MAX << zeroed;
+    f32::from_bits(x.to_bits() & mask)
+}
+
+/// Truncate an `f64` to `keep` mantissa bits (of 53, incl. implicit one).
+#[inline(always)]
+pub fn truncate_f64(x: f64, keep: u32) -> f64 {
+    if !x.is_finite() {
+        return x;
+    }
+    let zeroed = 53u32.saturating_sub(keep.max(1)).min(52);
+    let mask = u64::MAX << zeroed;
+    f64::from_bits(x.to_bits() & mask)
+}
+
+/// Manipulated mantissa bits of an `f32` per the paper's §III-C rule:
+/// count zeroes from the LSB of the mantissa field and subtract from the
+/// 24 available bits. A power of two uses 1 bit (the implicit one); a
+/// dense mantissa uses all 24.
+#[inline(always)]
+pub fn used_bits_f32(x: f32) -> u32 {
+    let mantissa = x.to_bits() & 0x007f_ffff;
+    // trailing_zeros of the 23-bit field, saturated at 23 for zero.
+    let tz = if mantissa == 0 { 23 } else { mantissa.trailing_zeros() };
+    24 - tz
+}
+
+/// Manipulated mantissa bits of an `f64` (53-bit budget; see
+/// [`used_bits_f32`]).
+#[inline(always)]
+pub fn used_bits_f64(x: f64) -> u32 {
+    let mantissa = x.to_bits() & 0x000f_ffff_ffff_ffff;
+    let tz = if mantissa == 0 { 52 } else { mantissa.trailing_zeros() };
+    53 - tz
+}
+
+/// The truncation FPI: `keep_bits` mantissa bits on operands and result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TruncateFpi {
+    /// Mantissa bits kept (1..=24 single / 1..=53 double; the same knob
+    /// drives whichever precision the op arrives in).
+    pub keep_bits: u32,
+}
+
+impl TruncateFpi {
+    /// Construct; `keep_bits` is clamped at use sites, not here, so a
+    /// genome can carry raw gene values.
+    pub fn new(keep_bits: u32) -> Self {
+        Self { keep_bits }
+    }
+}
+
+impl FpImplementation for TruncateFpi {
+    fn name(&self) -> String {
+        format!("truncate[{}b]", self.keep_bits)
+    }
+
+    #[inline]
+    fn perform_f32(&self, op: OpKind, a: f32, b: f32) -> f32 {
+        let k = self.keep_bits;
+        let r = raw_f32(op, truncate_f32(a, k), truncate_f32(b, k));
+        truncate_f32(r, k)
+    }
+
+    #[inline]
+    fn perform_f64(&self, op: OpKind, a: f64, b: f64) -> f64 {
+        let k = self.keep_bits;
+        let r = raw_f64(op, truncate_f64(a, k), truncate_f64(b, k));
+        truncate_f64(r, k)
+    }
+
+    fn keep_bits(&self, precision: Precision) -> u32 {
+        self.keep_bits.clamp(1, precision.mantissa_bits())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_precision_is_identity() {
+        for &x in &[1.0f32, -3.14159, 1e-30, 6.02e23, 0.1] {
+            assert_eq!(truncate_f32(x, 24), x);
+        }
+        for &x in &[1.0f64, -3.141592653589793, 1e-300] {
+            assert_eq!(truncate_f64(x, 53), x);
+        }
+    }
+
+    #[test]
+    fn one_bit_floors_to_power_of_two() {
+        assert_eq!(truncate_f32(1.75, 1), 1.0);
+        assert_eq!(truncate_f32(7.99, 1), 4.0);
+        assert_eq!(truncate_f32(-1.75, 1), -1.0);
+        assert_eq!(truncate_f64(1.999999, 1), 1.0);
+        assert_eq!(truncate_f64(-7.5, 1), -4.0);
+    }
+
+    #[test]
+    fn known_bit_patterns() {
+        // 1.5 = 1.1b survives keep=2, floors at keep=1
+        assert_eq!(truncate_f32(1.5, 2), 1.5);
+        assert_eq!(truncate_f32(1.5, 1), 1.0);
+        // 1.25 = 1.01b needs 3 bits
+        assert_eq!(truncate_f32(1.25, 3), 1.25);
+        assert_eq!(truncate_f32(1.25, 2), 1.0);
+    }
+
+    #[test]
+    fn clamps_out_of_range_keep() {
+        assert_eq!(truncate_f32(1.75, 0), 1.0); // as keep=1
+        assert_eq!(truncate_f32(1.75, 99), 1.75); // as keep=24
+        assert_eq!(truncate_f64(1.75, 99), 1.75);
+    }
+
+    #[test]
+    fn nonfinite_passthrough() {
+        assert!(truncate_f32(f32::NAN, 3).is_nan());
+        assert_eq!(truncate_f32(f32::INFINITY, 3), f32::INFINITY);
+        assert_eq!(truncate_f64(f64::NEG_INFINITY, 3), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn used_bits_matches_paper_rule() {
+        assert_eq!(used_bits_f32(1.0), 1); // power of two: implicit bit only
+        assert_eq!(used_bits_f32(1.5), 2); // 1.1b
+        assert_eq!(used_bits_f32(1.25), 3); // 1.01b
+        assert_eq!(used_bits_f32(0.1), 24); // dense mantissa
+        assert_eq!(used_bits_f64(1.0), 1);
+        assert_eq!(used_bits_f64(0.1), 52); // 0.1f64 mantissa ends ...1010
+        assert_eq!(used_bits_f64(0.3), 53); // dense to the last bit
+    }
+
+    #[test]
+    fn truncation_bounds_used_bits() {
+        let mut rng = crate::util::Pcg64::new(17);
+        for _ in 0..500 {
+            let x = (rng.normal() * 100.0) as f32;
+            for keep in [1u32, 5, 13, 24] {
+                let t = truncate_f32(x, keep);
+                assert!(used_bits_f32(t) <= keep, "x={x} keep={keep} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn fpi_applies_to_operands_and_result() {
+        let fpi = TruncateFpi::new(1);
+        // 1.75 -> 1.0 both sides; 1.0*1.0 = 1.0
+        assert_eq!(fpi.perform_f32(OpKind::Mul, 1.75, 1.75), 1.0);
+        // result truncation: 1.0 + 1.0 = 2.0 survives (power of two)
+        assert_eq!(fpi.perform_f32(OpKind::Add, 1.75, 1.75), 2.0);
+        // f64 path truncates operands too: 1.0 * 1.0 = 1.0
+        assert_eq!(fpi.perform_f64(OpKind::Mul, 1.75, 1.75), 1.0);
+        // result-only truncation is PerturbFpi's job:
+        use crate::fpi::perturb::{PerturbFpi, PerturbMode};
+        let result_only = PerturbFpi::new(1, PerturbMode::Result);
+        assert_eq!(result_only.perform_f64(OpKind::Mul, 1.75, 1.75), 2.0); // 3.0625 -> 2.0
+    }
+
+    #[test]
+    fn name_embeds_width() {
+        assert_eq!(TruncateFpi::new(7).name(), "truncate[7b]");
+    }
+}

@@ -1,0 +1,53 @@
+//! # NEAT — Navigating Energy/Accuracy Tradeoffs
+//!
+//! A reproduction of *"NEAT: A Framework for Automated Exploration of
+//! Floating Point Approximations"* (Barati, Ehudin, Hoffmann, 2021) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! The paper's NEAT is an Intel-Pin tool: it intercepts every scalar SSE
+//! floating point instruction in an x86 binary, substitutes a user-defined
+//! *floating point implementation* (FPI — e.g. mantissa bit truncation),
+//! chooses *which* FPI via programmable placement rules (whole-program,
+//! per-function, per-call-stack), estimates FPU and memory energy from
+//! energy-per-instruction models, and drives an NSGA-II search over the
+//! induced accuracy/energy tradeoff space.
+//!
+//! This crate is the L3 coordinator and every substrate the paper depends
+//! on (see `DESIGN.md` for the full inventory):
+//!
+//! * [`fpi`] — FPI abstraction + the truncation family (24 single /
+//!   53 double precision levels),
+//! * [`engine`] — the Pin substitute: an instrumented FP execution engine
+//!   with per-function scopes, call-stack tracking, FLOP census and
+//!   operand tracing,
+//! * [`placement`] — WP / CIP / FCS rules plus programmable custom rules,
+//! * [`energy`] — EPI tables (paper Fig. 1) and manipulated-bit counting,
+//! * [`bench_suite`] — Rust reimplementations of the ten evaluated
+//!   Parsec/Rodinia-style workloads,
+//! * [`explore`] — NSGA-II and a random-search baseline,
+//! * [`coordinator`] — parallel configuration evaluation, the train/test
+//!   protocol, Pareto frontier extraction,
+//! * [`cnn`] + [`runtime`] — the LeNet-5 case study: the AOT-compiled
+//!   JAX/Pallas inference module executed via PJRT with per-layer
+//!   precision as a runtime input,
+//! * [`stats`], [`report`], [`util`] — supporting math and I/O.
+//!
+//! Python appears only on the compile path (`python/compile/`); after
+//! `make artifacts` the binary is self-contained.
+
+pub mod bench_suite;
+pub mod cnn;
+pub mod coordinator;
+pub mod energy;
+pub mod engine;
+pub mod explore;
+pub mod fpi;
+pub mod placement;
+pub mod report;
+pub mod runtime;
+pub mod stats;
+pub mod util;
+
+pub use engine::FpContext;
+pub use fpi::{FpImplementation, OpKind, Precision};
+pub use placement::Placement;

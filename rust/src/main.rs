@@ -1,0 +1,322 @@
+//! `neat` — the command-line front end (hand-rolled: clap is not in the
+//! offline crate cache; see Cargo.toml).
+//!
+//! Subcommands mirror the paper's workflow (§IV):
+//!
+//! ```text
+//! neat profile <benchmark>             step 1: FLOP census
+//! neat explore <benchmark> [options]   steps 2-6: search one benchmark
+//! neat figure <id|all>                 regenerate a paper table/figure
+//! neat ablation <id|all>               DESIGN.md ablations
+//! neat list                            benchmarks + figure ids
+//! ```
+
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use neat::bench_suite;
+use neat::coordinator::experiments::{self, Budget};
+use neat::coordinator::{Evaluator, RuleKind};
+use neat::engine::profile::Profile;
+use neat::engine::FpContext;
+use neat::fpi::Precision;
+use neat::report::ResultsDir;
+use neat::runtime::{ArtifactPaths, LenetRuntime};
+use neat::stats::lower_convex_hull;
+
+fn usage() -> &'static str {
+    "usage: neat <command>\n\
+     \n\
+     commands:\n\
+       profile <benchmark>                     FLOP census (paper step 1)\n\
+       explore <benchmark> [--rule wp|cip|fcs] [--target single|double]\n\
+               [--population N] [--generations N] [--seed N]\n\
+       figure  <id|all>                        fig1 fig4 fig5 fig6 fig7 fig8\n\
+                                               fig9 fig10 fig11 table1 table2\n\
+                                               table3 table5\n\
+       ablation <id|all>                       topk random-vs-ga ga-budget fpi-mode\n\
+       list                                    benchmarks and figure ids\n\
+     \n\
+     options:\n\
+       --results DIR     output directory (default: results)\n\
+       --artifacts DIR   AOT artifacts (default: artifacts)\n\
+       --quick           small search budget (smoke runs)\n"
+}
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+    switches: std::collections::HashSet<String>,
+}
+
+fn parse_args(raw: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut flags = std::collections::HashMap::new();
+    let mut switches = std::collections::HashSet::new();
+    let mut i = 0;
+    while i < raw.len() {
+        let a = &raw[i];
+        if let Some(name) = a.strip_prefix("--") {
+            // value-taking flags; everything else is a switch
+            const VALUED: [&str; 7] =
+                ["rule", "target", "population", "generations", "seed", "results", "artifacts"];
+            if VALUED.contains(&name) && i + 1 < raw.len() {
+                flags.insert(name.to_string(), raw[i + 1].clone());
+                i += 2;
+            } else {
+                switches.insert(name.to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Args { positional, flags, switches }
+}
+
+impl Args {
+    fn budget(&self) -> Budget {
+        let mut b =
+            if self.switches.contains("quick") { Budget::quick() } else { Budget::default() };
+        if let Some(p) = self.flags.get("population") {
+            b.population = p.parse().unwrap_or(b.population);
+        }
+        if let Some(g) = self.flags.get("generations") {
+            b.generations = g.parse().unwrap_or(b.generations);
+        }
+        if let Some(s) = self.flags.get("seed") {
+            b.seed = s.parse().unwrap_or(b.seed);
+        }
+        b
+    }
+
+    fn results(&self) -> Result<ResultsDir> {
+        let dir = self.flags.get("results").map(String::as_str).unwrap_or("results");
+        ResultsDir::new(dir).context("creating results dir")
+    }
+
+    fn artifacts(&self) -> ArtifactPaths {
+        match self.flags.get("artifacts") {
+            Some(d) => ArtifactPaths::new(d),
+            None => ArtifactPaths::default_location(),
+        }
+    }
+}
+
+fn cmd_list() {
+    println!("benchmarks:");
+    for w in bench_suite::all() {
+        println!(
+            "  {:<16} target={:<7} functions={}",
+            w.name(),
+            w.default_target().name(),
+            w.functions().len()
+        );
+    }
+    println!("\nfigures: fig1 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11");
+    println!("tables:  table1 table2 table3 table5");
+    println!("ablations: topk random-vs-ga ga-budget fpi-mode");
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let name = args.positional.get(1).context("profile: missing benchmark name")?;
+    let w = bench_suite::by_name(name).with_context(|| format!("unknown benchmark {name}"))?;
+    let mut ctx = FpContext::profiler();
+    let seed = w.train_seeds()[0];
+    w.run(&mut ctx, seed);
+    let profile = Profile::from_context(&ctx);
+    println!(
+        "{name}: {} FLOPs total, {:.1}% single precision, dominant target {}",
+        profile.total_flops(),
+        profile.single_fraction() * 100.0,
+        profile.dominant_precision().name()
+    );
+    println!("\n{:<20} {:>12} {:>12} {:>10}", "function", "f32 flops", "f64 flops", "mem ops");
+    for row in &profile.rows {
+        println!(
+            "{:<20} {:>12} {:>12} {:>10}",
+            row.name, row.f32_flops, row.f64_flops, row.mem_ops
+        );
+    }
+    println!(
+        "\ntop-10 coverage: {:.2}%  (config space ~10^{:.1})",
+        profile.coverage(10) * 100.0,
+        profile.config_space_log10(10, w.default_target())
+    );
+    Ok(())
+}
+
+fn cmd_explore(args: &Args) -> Result<()> {
+    let name = args.positional.get(1).context("explore: missing benchmark name")?;
+    let w = bench_suite::by_name(name).with_context(|| format!("unknown benchmark {name}"))?;
+    let rule = match args.flags.get("rule").map(String::as_str) {
+        None | Some("cip") => RuleKind::Cip,
+        Some("wp") => RuleKind::Wp,
+        Some("fcs") => RuleKind::Fcs,
+        Some(other) => bail!("unknown rule {other} (wp|cip|fcs)"),
+    };
+    let target = match args.flags.get("target").map(String::as_str) {
+        None => None,
+        Some("single") => Some(Precision::Single),
+        Some("double") => Some(Precision::Double),
+        Some(other) => bail!("unknown target {other} (single|double)"),
+    };
+    let budget = args.budget();
+    eprintln!("profiling {name} and preparing baselines...");
+    let eval = Evaluator::new(w, target);
+    eprintln!(
+        "searching {} with {} over {} functions (genome length {})",
+        name,
+        rule.name(),
+        eval.top_functions.len(),
+        eval.genome_len(rule)
+    );
+    let res = experiments::explore_rule(&eval, rule, budget);
+    let points = res.fpu_points();
+    let hull = lower_convex_hull(&points);
+    println!(
+        "{}",
+        neat::report::ascii_tradeoff_plot(
+            &format!("{name} / {} — {} configurations", rule.name(), points.len()),
+            &points,
+            &hull,
+            56,
+            14
+        )
+    );
+    println!("{:>10} {:>10} {:>10}  genome", "error", "fpu NEC", "mem NEC");
+    for (g, d) in res.front().iter().take(12) {
+        println!(
+            "{:>9.3}% {:>10.4} {:>10.4}  [{}]",
+            d.error * 100.0,
+            d.fpu_nec,
+            d.mem_nec,
+            g.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+        );
+    }
+    let rd = args.results()?;
+    let rows: Vec<String> = res
+        .details
+        .iter()
+        .map(|(g, d)| {
+            format!(
+                "{:.6},{:.6},{:.6},{}",
+                d.error,
+                d.fpu_nec,
+                d.mem_nec,
+                g.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("|")
+            )
+        })
+        .collect();
+    let path = rd.write_csv(
+        &format!("explore_{}_{}.csv", name, rule.name().to_lowercase()),
+        "error,fpu_nec,mem_nec,genome",
+        rows,
+    )?;
+    eprintln!("wrote {}", path.display());
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let id = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    let rd = args.results()?;
+    let budget = args.budget();
+    let mut log = |m: &str| eprintln!("[neat] {m}");
+    let text = match id {
+        "all" => {
+            let artifacts = args.artifacts();
+            experiments::run_all(&rd, budget, Some(&artifacts), &mut log)?
+        }
+        "fig1" => experiments::fig1(&rd)?,
+        "table1" => experiments::table1(),
+        "table2" => experiments::table2(&rd)?,
+        "fig4" => experiments::fig4(&rd)?,
+        "fig5" | "fig6" | "fig7" | "table3" => {
+            let suite = experiments::explore_suite(budget, &mut log);
+            match id {
+                "fig5" => experiments::fig5(&rd, &suite)?,
+                "fig6" => experiments::fig6(&rd, &suite)?,
+                "fig7" => experiments::fig7(&rd, &suite)?,
+                _ => experiments::table3(&rd, &suite, &mut log)?,
+            }
+        }
+        "fig8" => experiments::fig8(&rd, budget, &mut log)?,
+        "fig9" => experiments::fig9(&rd, budget, &mut log)?,
+        "fig10" | "fig11" | "table5" => {
+            let paths = args.artifacts();
+            if !paths.all_present() {
+                bail!("artifacts missing under {:?}; run `make artifacts` first", paths.dir);
+            }
+            let runtime = LenetRuntime::load(&paths)?;
+            match id {
+                "fig10" => experiments::fig10(&rd, &runtime)?,
+                _ => experiments::fig11(&rd, &runtime, budget, 1, &mut log)?,
+            }
+        }
+        other => bail!("unknown figure id {other}"),
+    };
+    println!("{text}");
+    eprintln!("[neat] CSV outputs under {}", rd.root().display());
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> Result<()> {
+    let id = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    let rd = args.results()?;
+    let budget = args.budget();
+    let mut out = String::new();
+    if matches!(id, "all" | "topk") {
+        out.push_str(&experiments::ablation_topk(&rd)?);
+        out.push('\n');
+    }
+    if matches!(id, "all" | "random-vs-ga") {
+        out.push_str(&experiments::ablation_random_vs_ga(&rd, budget)?);
+        out.push('\n');
+    }
+    if matches!(id, "all" | "ga-budget") {
+        out.push_str(&experiments::ablation_ga_budget(&rd)?);
+        out.push('\n');
+    }
+    if matches!(id, "all" | "fpi-mode") {
+        out.push_str(&experiments::ablation_fpi_mode(&rd)?);
+        out.push('\n');
+    }
+    if out.is_empty() {
+        bail!("unknown ablation {id}");
+    }
+    println!("{out}");
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = parse_args(&raw);
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("");
+    let result = match cmd {
+        "list" => {
+            cmd_list();
+            Ok(())
+        }
+        "profile" => cmd_profile(&args),
+        "explore" => cmd_explore(&args),
+        "figure" => cmd_figure(&args),
+        "ablation" => cmd_ablation(&args),
+        "" | "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command: {other}\n{}", usage());
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! Programmable placement rules — the paper's central mechanism
+//! (§III-B4, Table I).
+//!
+//! A placement rule decides, for every FLOP, which FPI computes it. The
+//! three built-in rule sets mirror the paper:
+//!
+//! * **WP** ([`Placement::whole_program`]) — one FPI for every FLOP.
+//! * **CIP** ([`Placement::current_function`]) — a map from function
+//!   names to FPIs; a FLOP uses the entry of the function it executes
+//!   in. Unmapped functions fall back to the exact implementation.
+//! * **FCS** ([`Placement::call_stack`]) — a FLOP uses the entry of the
+//!   *nearest function on the call stack* (including the current one)
+//!   that appears in the map. Leaving a shared kernel (e.g. radar's FFT)
+//!   out of the map makes its precision follow the *caller* — one FPI
+//!   for `fft@lpf`, another for `fft@pc` — which is exactly the paper's
+//!   Fig. 3/Fig. 9 experiment. With every hot function mapped, FCS
+//!   degenerates to CIP, matching the paper's observation that the two
+//!   coincide on most benchmarks.
+//! * **Custom** ([`Placement::custom`]) — arbitrary user logic over the
+//!   call state (the paper's "instantiation of the selector class").
+//!
+//! Rules resolve *at function entry*, not per FLOP: the engine caches the
+//! resolved FPI in the stack frame, so the per-FLOP cost is one enum
+//! load regardless of rule complexity.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::engine::FuncId;
+use crate::fpi::{FpiLibrary, TruncateFpi};
+use crate::fpi::library::FpiId;
+use crate::fpi::FpImplementation;
+
+/// Resolved per-frame FPI, specialized so the engine's hot path can
+/// avoid dynamic dispatch for the built-in families.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompiledFpi {
+    /// IEEE-exact (the default / baseline).
+    Exact,
+    /// Mantissa truncation to `k` bits — the paper's evaluated family,
+    /// inlined into the engine (no virtual call).
+    Truncate(u32),
+    /// Any other registered implementation, dispatched via the library.
+    Dyn(FpiId),
+}
+
+/// Program state visible to custom rules at resolution time.
+pub struct CallState<'a> {
+    /// Name of the function being entered.
+    pub function: &'a str,
+    /// Its interned id.
+    pub func_id: FuncId,
+    /// Name of the nearest *mapped* ancestor (None outside any mapped
+    /// scope). Custom rules may use it for caller-sensitive decisions.
+    pub nearest_mapped: Option<&'a str>,
+}
+
+/// A user-programmable placement rule (paper §IV-4's selector class).
+pub trait PlacementRule: Send + Sync {
+    /// Choose the FPI for FLOPs executed in `state`'s scope.
+    fn select(&self, state: &CallState) -> FpiId;
+    /// Whether this rule keys on `name` (drives FCS ancestor tracking).
+    fn names_function(&self, _name: &str) -> bool {
+        false
+    }
+}
+
+/// A placement policy: which FPI computes each FLOP.
+#[derive(Clone)]
+pub enum Placement {
+    /// One FPI for the whole program.
+    WholeProgram(FpiId),
+    /// FPI per currently-in-progress function (name-keyed).
+    CurrentFunction(Arc<HashMap<String, FpiId>>),
+    /// FPI per nearest mapped function on the call stack.
+    CallStack(Arc<HashMap<String, FpiId>>),
+    /// Arbitrary rule.
+    Custom(Arc<dyn PlacementRule>),
+}
+
+impl Placement {
+    /// WP with the exact FPI — the baseline configuration.
+    pub fn whole_program_exact() -> Self {
+        Placement::WholeProgram(FpiId::EXACT)
+    }
+
+    /// WP rule (paper Table I row 1).
+    pub fn whole_program(fpi: FpiId) -> Self {
+        Placement::WholeProgram(fpi)
+    }
+
+    /// CIP rule (Table I row 2).
+    pub fn current_function(map: HashMap<String, FpiId>) -> Self {
+        Placement::CurrentFunction(Arc::new(map))
+    }
+
+    /// FCS rule (Table I row 3).
+    pub fn call_stack(map: HashMap<String, FpiId>) -> Self {
+        Placement::CallStack(Arc::new(map))
+    }
+
+    /// Custom programmable rule.
+    pub fn custom(rule: Arc<dyn PlacementRule>) -> Self {
+        Placement::Custom(rule)
+    }
+
+    /// Does the rule name this function? (FCS ancestor bookkeeping.)
+    pub fn names_function(&self, name: &str) -> bool {
+        match self {
+            Placement::WholeProgram(_) => false,
+            Placement::CurrentFunction(map) | Placement::CallStack(map) => {
+                map.contains_key(name)
+            }
+            Placement::Custom(rule) => rule.names_function(name),
+        }
+    }
+
+    /// Resolve the FPI for a frame being entered. Called once per
+    /// function call by the engine; the result is cached in the frame.
+    pub fn resolve(
+        &self,
+        lib: &FpiLibrary,
+        name: &str,
+        func_id: FuncId,
+        nearest_mapped: Option<&str>,
+    ) -> CompiledFpi {
+        let id = match self {
+            Placement::WholeProgram(fpi) => *fpi,
+            Placement::CurrentFunction(map) => {
+                map.get(name).copied().unwrap_or(FpiId::EXACT)
+            }
+            Placement::CallStack(map) => match nearest_mapped {
+                Some(anc) => map.get(anc).copied().unwrap_or(FpiId::EXACT),
+                None => FpiId::EXACT,
+            },
+            Placement::Custom(rule) => rule.select(&CallState {
+                function: name,
+                func_id,
+                nearest_mapped,
+            }),
+        };
+        compile(lib, id)
+    }
+}
+
+/// Specialize an FPI handle for the engine hot path.
+pub fn compile(lib: &FpiLibrary, id: FpiId) -> CompiledFpi {
+    if id == FpiId::EXACT {
+        return CompiledFpi::Exact;
+    }
+    let fpi = lib.get(id);
+    // Recognize the truncation family by its stable name to unlock the
+    // no-virtual-call fast path. Custom FPIs stay dynamic.
+    let name = fpi.name();
+    if let Some(width) = name
+        .strip_prefix("truncate[")
+        .and_then(|s| s.strip_suffix("b]"))
+        .and_then(|s| s.parse::<u32>().ok())
+    {
+        debug_assert_eq!(TruncateFpi::new(width).name(), name);
+        return CompiledFpi::Truncate(width);
+    }
+    CompiledFpi::Dyn(id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpi::Precision;
+
+    fn lib() -> FpiLibrary {
+        FpiLibrary::truncation_family(Precision::Single)
+    }
+
+    #[test]
+    fn wp_resolves_everywhere() {
+        let lib = lib();
+        let p = Placement::whole_program(FpiLibrary::truncation_id(5));
+        let r = p.resolve(&lib, "anything", FuncId(3), None);
+        assert_eq!(r, CompiledFpi::Truncate(5));
+    }
+
+    #[test]
+    fn cip_falls_back_to_exact() {
+        let lib = lib();
+        let mut map = HashMap::new();
+        map.insert("hot".into(), FpiLibrary::truncation_id(3));
+        let p = Placement::current_function(map);
+        assert_eq!(p.resolve(&lib, "hot", FuncId(1), None), CompiledFpi::Truncate(3));
+        assert_eq!(p.resolve(&lib, "cold", FuncId(2), None), CompiledFpi::Exact);
+    }
+
+    #[test]
+    fn fcs_uses_nearest_mapped_ancestor() {
+        let lib = lib();
+        let mut map = HashMap::new();
+        map.insert("lpf".into(), FpiLibrary::truncation_id(7));
+        map.insert("pc".into(), FpiLibrary::truncation_id(2));
+        let p = Placement::call_stack(map);
+        // fft not in the map: inherits whoever called it
+        assert_eq!(
+            p.resolve(&lib, "fft", FuncId(5), Some("lpf")),
+            CompiledFpi::Truncate(7)
+        );
+        assert_eq!(
+            p.resolve(&lib, "fft", FuncId(5), Some("pc")),
+            CompiledFpi::Truncate(2)
+        );
+        // no mapped ancestor: exact (the paper's default implementation)
+        assert_eq!(p.resolve(&lib, "fft", FuncId(5), None), CompiledFpi::Exact);
+    }
+
+    #[test]
+    fn custom_rule_sees_call_state() {
+        struct EveryOther;
+        impl PlacementRule for EveryOther {
+            fn select(&self, state: &CallState) -> FpiId {
+                if state.func_id.0 % 2 == 0 {
+                    FpiLibrary::truncation_id(4)
+                } else {
+                    FpiId::EXACT
+                }
+            }
+        }
+        let lib = lib();
+        let p = Placement::custom(Arc::new(EveryOther));
+        assert_eq!(p.resolve(&lib, "a", FuncId(2), None), CompiledFpi::Truncate(4));
+        assert_eq!(p.resolve(&lib, "b", FuncId(3), None), CompiledFpi::Exact);
+    }
+
+    #[test]
+    fn compile_specializes_truncation() {
+        let lib = lib();
+        assert_eq!(compile(&lib, FpiId::EXACT), CompiledFpi::Exact);
+        assert_eq!(
+            compile(&lib, FpiLibrary::truncation_id(9)),
+            CompiledFpi::Truncate(9)
+        );
+    }
+
+    #[test]
+    fn compile_keeps_custom_dynamic() {
+        let mut lib = lib();
+        let id = lib.register(Arc::new(crate::fpi::PerturbFpi::new(
+            6,
+            crate::fpi::perturb::PerturbMode::Result,
+        )));
+        assert_eq!(compile(&lib, id), CompiledFpi::Dyn(id));
+    }
+}

@@ -1,0 +1,159 @@
+//! Report generation: CSV emitters and ASCII scatter/hull plots (the
+//! paper's step 6 — its python plotting script — done natively).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::stats::TradeoffPoint;
+
+/// Results directory manager: all figure harnesses write below `root`.
+pub struct ResultsDir {
+    root: PathBuf,
+}
+
+impl ResultsDir {
+    /// Create (if needed) and wrap the results directory.
+    pub fn new(root: impl Into<PathBuf>) -> std::io::Result<Self> {
+        let root = root.into();
+        fs::create_dir_all(&root)?;
+        Ok(Self { root })
+    }
+
+    /// Path below the results root.
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.root.join(name)
+    }
+
+    /// Write a CSV file from a header and rows.
+    pub fn write_csv(
+        &self,
+        name: &str,
+        header: &str,
+        rows: impl IntoIterator<Item = String>,
+    ) -> std::io::Result<PathBuf> {
+        let path = self.path(name);
+        let mut text = String::new();
+        let _ = writeln!(text, "{header}");
+        for row in rows {
+            let _ = writeln!(text, "{row}");
+        }
+        fs::write(&path, text)?;
+        Ok(path)
+    }
+
+    /// Append free text (used for the run log).
+    pub fn write_text(&self, name: &str, text: &str) -> std::io::Result<PathBuf> {
+        let path = self.path(name);
+        fs::write(&path, text)?;
+        Ok(path)
+    }
+
+    /// Root path.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+}
+
+/// Render an ASCII scatter of tradeoff points with the hull overlaid —
+/// the terminal rendition of the paper's Fig. 5 subplots.
+pub fn ascii_tradeoff_plot(
+    title: &str,
+    points: &[TradeoffPoint],
+    hull: &[TradeoffPoint],
+    width: usize,
+    height: usize,
+) -> String {
+    let max_err: f64 = 0.20; // paper: "only error rates less than 20%"
+    let mut grid = vec![vec![' '; width]; height];
+    let place = |e: f64, g: f64| -> Option<(usize, usize)> {
+        if !(e.is_finite() && g.is_finite()) || e > max_err {
+            return None;
+        }
+        let x = ((e / max_err) * (width - 1) as f64).round() as usize;
+        let y = ((1.0 - g.clamp(0.0, 1.0)) * (height - 1) as f64).round() as usize;
+        Some((x.min(width - 1), y.min(height - 1)))
+    };
+    for p in points {
+        if let Some((x, y)) = place(p.error, p.energy) {
+            grid[height - 1 - y][x] = '·';
+        }
+    }
+    for p in hull {
+        if let Some((x, y)) = place(p.error, p.energy) {
+            grid[height - 1 - y][x] = '#';
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}");
+    let _ = writeln!(out, "NEC 1.0 ┌{}┐", "─".repeat(width));
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == height - 1 { "    0.0 " } else { "        " };
+        let _ = writeln!(out, "{label}│{}│", row.iter().collect::<String>());
+    }
+    let _ = writeln!(out, "        └{}┘", "─".repeat(width));
+    let _ = writeln!(out, "         0%  error rate → 20%   (· explored, # lower hull)");
+    out
+}
+
+/// Format a savings-at-threshold bar table (Figs. 6/7/11b in text form).
+pub fn savings_table(
+    title: &str,
+    thresholds: &[f64],
+    rows: &[(String, Vec<f64>)], // (label, NEC at each threshold)
+) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}");
+    let mut header = format!("{:<16}", "benchmark");
+    for t in thresholds {
+        let _ = write!(header, "  @{:>4.0}% err", t * 100.0);
+    }
+    let _ = writeln!(out, "{header}");
+    for (label, necs) in rows {
+        let mut line = format!("{label:<16}");
+        for nec in necs {
+            let _ = write!(line, "  {:>8.1}%", (1.0 - nec) * 100.0);
+        }
+        let _ = writeln!(out, "{line}");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_dir_round_trips_csv() {
+        let dir = std::env::temp_dir().join("neat_report_test");
+        let rd = ResultsDir::new(&dir).unwrap();
+        let p = rd
+            .write_csv("t.csv", "a,b", vec!["1,2".to_string(), "3,4".to_string()])
+            .unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3,4\n");
+    }
+
+    #[test]
+    fn ascii_plot_marks_hull() {
+        let pts = vec![
+            TradeoffPoint::new(0.01, 0.9),
+            TradeoffPoint::new(0.05, 0.6),
+            TradeoffPoint::new(0.10, 0.4),
+        ];
+        let plot = ascii_tradeoff_plot("demo", &pts, &pts, 40, 10);
+        assert!(plot.contains('#'));
+        assert!(plot.contains("demo"));
+    }
+
+    #[test]
+    fn savings_table_formats_percentages() {
+        let t = savings_table(
+            "T",
+            &[0.01, 0.05],
+            &[("bs".to_string(), vec![0.8, 0.5])],
+        );
+        assert!(t.contains("20.0%"));
+        assert!(t.contains("50.0%"));
+    }
+}

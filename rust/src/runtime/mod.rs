@@ -1,0 +1,280 @@
+//! PJRT runtime: load the AOT-compiled LeNet-5 inference module
+//! (`artifacts/lenet.hlo.txt`, produced by `python/compile/aot.py` from
+//! the JAX/Pallas L2+L1 stack) and execute it from the Rust search loop.
+//!
+//! The module's signature (see `aot.py`):
+//!   `(images f32[B,32,32,1], <10 weight tensors>, bits i32[8])
+//!    -> (logits f32[B,10],)`
+//!
+//! The executable is compiled once; every precision configuration the
+//! explorer visits reuses it with a different `bits` literal — Python is
+//! never on this path. Weight and eval-set literals are uploaded once
+//! per process.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::kv::{parse, FlatMeta};
+
+/// Number of precision slots in the CNN genome (paper Table V columns).
+pub const NUM_SLOTS: usize = 8;
+
+/// Slot names, Table V order. Must match `model.SLOT_NAMES`.
+pub const SLOT_NAMES: [&str; NUM_SLOTS] =
+    ["conv1", "pool1", "conv2", "pool2", "conv3", "fc", "tanh", "internal"];
+
+/// Parameter tensor shapes in serialization order. Must match
+/// `model.PARAM_SPECS` on the Python side (validated in tests against
+/// `lenet_meta.json`).
+pub const PARAM_SHAPES: [(&str, &[i64]); 10] = [
+    ("conv1_w", &[5, 5, 1, 6]),
+    ("conv1_b", &[6]),
+    ("conv2_w", &[5, 5, 6, 16]),
+    ("conv2_b", &[16]),
+    ("conv3_w", &[5, 5, 16, 120]),
+    ("conv3_b", &[120]),
+    ("fc1_w", &[120, 84]),
+    ("fc1_b", &[84]),
+    ("fc2_w", &[84, 10]),
+    ("fc2_b", &[10]),
+];
+
+/// Artifact paths under one directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactPaths {
+    /// Directory containing the artifacts.
+    pub dir: PathBuf,
+}
+
+impl ArtifactPaths {
+    /// Wrap an artifacts directory.
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self { dir: dir.into() }
+    }
+
+    /// Default location relative to the repo root.
+    pub fn default_location() -> Self {
+        Self::new("artifacts")
+    }
+
+    /// The HLO text module.
+    pub fn hlo(&self) -> PathBuf {
+        self.dir.join("lenet.hlo.txt")
+    }
+
+    /// Flat little-endian f32 weights.
+    pub fn weights(&self) -> PathBuf {
+        self.dir.join("lenet_weights.bin")
+    }
+
+    /// Eval images (f32) and labels (i32).
+    pub fn eval_images(&self) -> PathBuf {
+        self.dir.join("eval_images.bin")
+    }
+
+    /// Eval labels.
+    pub fn eval_labels(&self) -> PathBuf {
+        self.dir.join("eval_labels.bin")
+    }
+
+    /// Metadata JSON.
+    pub fn meta(&self) -> PathBuf {
+        self.dir.join("lenet_meta.json")
+    }
+
+    /// True when every artifact exists (used to skip runtime tests in
+    /// trees where `make artifacts` has not run).
+    pub fn all_present(&self) -> bool {
+        [self.hlo(), self.weights(), self.eval_images(), self.eval_labels(), self.meta()]
+            .iter()
+            .all(|p| p.exists())
+    }
+}
+
+fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{} is not a multiple of 4 bytes", path.display());
+    }
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+fn read_i32_file(path: &Path) -> Result<Vec<i32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    Ok(bytes.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// The loaded LeNet inference runtime.
+///
+/// The executable is compiled once and weight/eval literals are built
+/// once; every configuration evaluation re-executes with a different
+/// `bits` literal. (Pre-uploading PjRtBuffers and using `execute_b`
+/// was tried and reverted: xla 0.1.6's `buffer_from_host_literal`
+/// intermittently segfaults when interleaved with executable state —
+/// see EXPERIMENTS.md §Perf; the literal upload is <2% of execute time.)
+pub struct LenetRuntime {
+    exe: xla::PjRtLoadedExecutable,
+    weights: Vec<xla::Literal>,
+    /// Eval batches (images literal, labels), each of `batch` rows.
+    batches: Vec<(xla::Literal, Vec<i32>)>,
+    /// Model batch size (fixed at AOT time).
+    pub batch: usize,
+    /// Baseline (full-precision) accuracy recorded at training time.
+    pub baseline_accuracy: f64,
+    /// Analytical FLOP counts per slot (from the artifact metadata).
+    pub flop_counts: Vec<(String, f64)>,
+}
+
+impl LenetRuntime {
+    /// Load artifacts, compile the HLO module on the CPU PJRT client,
+    /// and upload weights + eval set.
+    pub fn load(paths: &ArtifactPaths) -> Result<Self> {
+        let meta_text = std::fs::read_to_string(paths.meta())
+            .with_context(|| format!("reading {}", paths.meta().display()))?;
+        let meta: FlatMeta = parse(&meta_text);
+        let batch = *meta.numbers.get("batch").context("meta: batch")? as usize;
+        let eval_n = *meta.numbers.get("eval_n").context("meta: eval_n")? as usize;
+        let baseline_accuracy =
+            *meta.numbers.get("baseline_accuracy").context("meta: baseline_accuracy")?;
+        let flop_map = meta.number_maps.get("flop_counts").context("meta: flop_counts")?;
+        let flop_counts: Vec<(String, f64)> = SLOT_NAMES
+            .iter()
+            .map(|&s| (s.to_string(), *flop_map.get(s).unwrap_or(&0.0)))
+            .collect();
+
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            paths.hlo().to_str().context("hlo path utf-8")?,
+        )
+        .context("parsing HLO text")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling HLO")?;
+
+        // weights: one flat file, split per PARAM_SHAPES
+        let flat = read_f32_file(&paths.weights())?;
+        let mut weights = Vec::with_capacity(PARAM_SHAPES.len());
+        let mut offset = 0usize;
+        for (name, shape) in PARAM_SHAPES {
+            let n: i64 = shape.iter().product();
+            let n = n as usize;
+            if offset + n > flat.len() {
+                bail!("weights file too short at {name}");
+            }
+            let lit = xla::Literal::vec1(&flat[offset..offset + n])
+                .reshape(shape)
+                .with_context(|| format!("reshaping {name}"))?;
+            weights.push(lit);
+            offset += n;
+        }
+        if offset != flat.len() {
+            bail!("weights file has {} trailing floats", flat.len() - offset);
+        }
+
+        // eval set, split into model-batch-sized chunks
+        let images = read_f32_file(&paths.eval_images())?;
+        let labels = read_i32_file(&paths.eval_labels())?;
+        let img_elems = batch * 32 * 32;
+        if images.len() != eval_n * 32 * 32 || labels.len() != eval_n {
+            bail!(
+                "eval set shape mismatch: {} floats / {} labels for eval_n={eval_n}",
+                images.len(),
+                labels.len()
+            );
+        }
+        let mut batches = Vec::new();
+        for chunk in 0..eval_n / batch {
+            let img_slice = &images[chunk * img_elems..(chunk + 1) * img_elems];
+            let lit = xla::Literal::vec1(img_slice)
+                .reshape(&[batch as i64, 32, 32, 1])
+                .context("reshaping eval images")?;
+            let lab = labels[chunk * batch..(chunk + 1) * batch].to_vec();
+            batches.push((lit, lab));
+        }
+
+        Ok(Self { exe, weights, batches, batch, baseline_accuracy, flop_counts })
+    }
+
+    /// Number of eval batches available.
+    pub fn num_batches(&self) -> usize {
+        self.batches.len()
+    }
+
+    /// Run inference under a per-slot precision configuration over the
+    /// first `n_batches` eval batches; returns classification accuracy.
+    pub fn accuracy(&self, bits: &[u32; NUM_SLOTS], n_batches: usize) -> Result<f64> {
+        let bits_lit = xla::Literal::vec1(
+            &bits.iter().map(|&b| b as i32).collect::<Vec<i32>>(),
+        )
+        .reshape(&[NUM_SLOTS as i64])?;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for (images, labels) in self.batches.iter().take(n_batches.max(1)) {
+            // argument order: images, weights..., bits
+            let mut args: Vec<&xla::Literal> = Vec::with_capacity(2 + self.weights.len());
+            args.push(images);
+            for w in &self.weights {
+                args.push(w);
+            }
+            args.push(&bits_lit);
+            let result = self.exe.execute(&args)?[0][0].to_literal_sync()?;
+            let logits = result.to_tuple1()?;
+            let values = logits.to_vec::<f32>()?;
+            for (row, &label) in values.chunks_exact(10).zip(labels.iter()) {
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap();
+                if pred == label {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_paths_compose() {
+        let p = ArtifactPaths::new("/tmp/x");
+        assert!(p.hlo().ends_with("lenet.hlo.txt"));
+        assert!(p.weights().ends_with("lenet_weights.bin"));
+        assert!(p.meta().ends_with("lenet_meta.json"));
+    }
+
+    #[test]
+    fn param_shapes_total_matches_lenet() {
+        let total: i64 = PARAM_SHAPES
+            .iter()
+            .map(|(_, s)| s.iter().product::<i64>())
+            .sum();
+        assert_eq!(total, 61706); // LeNet-5 parameter count
+    }
+
+    #[test]
+    fn f32_reader_rejects_ragged_files() {
+        let dir = std::env::temp_dir().join("neat_runtime_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("ragged.bin");
+        std::fs::write(&p, [0u8; 7]).unwrap();
+        assert!(read_f32_file(&p).is_err());
+    }
+
+    #[test]
+    fn f32_reader_round_trips() {
+        let dir = std::env::temp_dir().join("neat_runtime_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("ok.bin");
+        let vals = [1.5f32, -2.25, 0.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&p, bytes).unwrap();
+        assert_eq!(read_f32_file(&p).unwrap(), vals);
+    }
+}

@@ -1,0 +1,149 @@
+//! Lower convex hull of a (error, energy) tradeoff space and the
+//! quantized savings-at-threshold view.
+//!
+//! Paper Figs. 5/11a plot "the lower convex hull of normalized FPU
+//! energy and the error rate"; Figs. 6/7/11b quantize that into energy
+//! savings at 1/5/10% error budgets.
+
+/// One evaluated configuration in the tradeoff space.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TradeoffPoint {
+    /// Output error rate relative to the exact baseline (0.01 = 1%).
+    pub error: f64,
+    /// Energy normalized to the exact baseline (1.0 = no saving).
+    pub energy: f64,
+}
+
+impl TradeoffPoint {
+    /// Construct a point.
+    pub fn new(error: f64, energy: f64) -> Self {
+        Self { error, energy }
+    }
+}
+
+/// Lower convex hull: the subset of points forming the convex boundary
+/// from the minimum-error side to the minimum-energy side, i.e. the
+/// frontier of configurations no convex combination can dominate.
+/// Returned sorted by error ascending.
+pub fn lower_convex_hull(points: &[TradeoffPoint]) -> Vec<TradeoffPoint> {
+    let mut pts: Vec<TradeoffPoint> = points
+        .iter()
+        .copied()
+        .filter(|p| p.error.is_finite() && p.energy.is_finite())
+        .collect();
+    if pts.len() <= 1 {
+        return pts;
+    }
+    pts.sort_by(|a, b| {
+        a.error
+            .partial_cmp(&b.error)
+            .unwrap()
+            .then(a.energy.partial_cmp(&b.energy).unwrap())
+    });
+    // Andrew's monotone chain, lower hull only (turning left = drop).
+    let mut hull: Vec<TradeoffPoint> = Vec::with_capacity(pts.len());
+    for p in pts {
+        while hull.len() >= 2 {
+            let a = hull[hull.len() - 2];
+            let b = hull[hull.len() - 1];
+            let cross = (b.error - a.error) * (p.energy - a.energy)
+                - (b.energy - a.energy) * (p.error - a.error);
+            if cross <= 0.0 {
+                hull.pop();
+            } else {
+                break;
+            }
+        }
+        hull.push(p);
+    }
+    // Trim the hull's right tail: past the global energy minimum the
+    // lower hull climbs back up along high-error points, which is not
+    // part of the paper's frontier ("lower is better, only error<20%
+    // shown"). Keep up to the minimum-energy vertex.
+    if let Some(min_idx) = hull
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.energy.partial_cmp(&b.1.energy).unwrap())
+        .map(|(i, _)| i)
+    {
+        hull.truncate(min_idx + 1);
+    }
+    hull
+}
+
+/// Best (lowest) normalized energy achievable within each error budget —
+/// the quantized view of Figs. 6/7. Returns one energy value per
+/// threshold; `1.0` (no savings) when no point fits the budget.
+pub fn savings_at_thresholds(points: &[TradeoffPoint], thresholds: &[f64]) -> Vec<f64> {
+    thresholds
+        .iter()
+        .map(|&t| {
+            points
+                .iter()
+                .filter(|p| p.error <= t)
+                .map(|p| p.energy)
+                .fold(1.0f64, f64::min)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(e: f64, g: f64) -> TradeoffPoint {
+        TradeoffPoint::new(e, g)
+    }
+
+    #[test]
+    fn hull_of_staircase() {
+        let pts = vec![p(0.0, 1.0), p(0.01, 0.8), p(0.05, 0.5), p(0.02, 0.9), p(0.1, 0.4)];
+        let hull = lower_convex_hull(&pts);
+        // p(0.02, 0.9) is above the chord from (0.01,0.8) to (0.05,0.5)
+        assert!(!hull.contains(&p(0.02, 0.9)));
+        assert_eq!(hull.first().unwrap().error, 0.0);
+        assert_eq!(hull.last().unwrap().energy, 0.4);
+    }
+
+    #[test]
+    fn hull_is_sorted_and_convex() {
+        let pts: Vec<TradeoffPoint> = (0..50)
+            .map(|i| {
+                let e = i as f64 / 50.0;
+                p(e, 1.0 - e * e * 0.5 + ((i * 7919) % 13) as f64 * 0.01)
+            })
+            .collect();
+        let hull = lower_convex_hull(&pts);
+        for w in hull.windows(2) {
+            assert!(w[0].error <= w[1].error);
+            assert!(w[0].energy >= w[1].energy, "hull energy must not rise");
+        }
+    }
+
+    #[test]
+    fn singleton_and_empty() {
+        assert!(lower_convex_hull(&[]).is_empty());
+        assert_eq!(lower_convex_hull(&[p(0.1, 0.5)]), vec![p(0.1, 0.5)]);
+    }
+
+    #[test]
+    fn savings_pick_best_within_budget() {
+        let pts = vec![p(0.0, 1.0), p(0.009, 0.7), p(0.04, 0.6), p(0.09, 0.3)];
+        let s = savings_at_thresholds(&pts, &[0.01, 0.05, 0.10]);
+        assert_eq!(s, vec![0.7, 0.6, 0.3]);
+    }
+
+    #[test]
+    fn savings_default_to_one_without_candidates() {
+        let pts = vec![p(0.5, 0.2)];
+        let s = savings_at_thresholds(&pts, &[0.01]);
+        assert_eq!(s, vec![1.0]);
+    }
+
+    #[test]
+    fn nonfinite_points_are_dropped() {
+        let pts = vec![p(f64::NAN, 0.1), p(0.01, 0.9)];
+        let hull = lower_convex_hull(&pts);
+        assert_eq!(hull, vec![p(0.01, 0.9)]);
+    }
+}

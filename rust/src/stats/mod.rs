@@ -1,0 +1,136 @@
+//! Statistics used by the evaluation: correlation (paper §V-G / Table
+//! III), least-squares fits, harmonic means (Figs. 6/7), medians, and
+//! the lower convex hull of the tradeoff space (Figs. 5/11).
+
+pub mod hull;
+
+pub use hull::{lower_convex_hull, savings_at_thresholds, TradeoffPoint};
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Median (interpolated for even lengths); 0 for empty input.
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Harmonic mean of positive values — the aggregation the paper uses for
+/// cross-benchmark savings ("by harmonic mean, applying the CIP versus
+/// WP approach results in ...", §V-C). Non-positive entries are clamped
+/// to a small epsilon so a single zero does not annihilate the mean.
+pub fn harmonic_mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let sum_inv: f64 = xs.iter().map(|&x| 1.0 / x.max(1e-12)).sum();
+    xs.len() as f64 / sum_inv
+}
+
+/// Pearson correlation coefficient (the paper's Table III R-values).
+/// Returns 1.0 for degenerate (zero-variance) inputs of equal shape —
+/// a perfectly reproduced constant is perfectly correlated for the
+/// robustness question being asked.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for i in 0..n {
+        let dx = xs[i] - mx;
+        let dy = ys[i] - my;
+        cov += dx * dy;
+        vx += dx * dx;
+        vy += dy * dy;
+    }
+    if vx <= 0.0 || vy <= 0.0 {
+        return 1.0;
+    }
+    cov / (vx.sqrt() * vy.sqrt())
+}
+
+/// Ordinary least squares fit `y ≈ a + b x`; returns `(a, b)`.
+pub fn least_squares(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n == 0 {
+        return (0.0, 0.0);
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..n {
+        num += (xs[i] - mx) * (ys[i] - my);
+        den += (xs[i] - mx) * (xs[i] - mx);
+    }
+    if den <= 0.0 {
+        return (my, 0.0);
+    }
+    let b = num / den;
+    (my - b * mx, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_basics() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn harmonic_mean_penalizes_small_values() {
+        let h = harmonic_mean(&[1.0, 0.25]);
+        assert!((h - 0.4).abs() < 1e-12);
+        assert!(harmonic_mean(&[2.0, 2.0, 2.0]) - 2.0 < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let zs = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&xs, &zs) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_degenerate_is_one() {
+        assert_eq!(pearson(&[1.0, 1.0], &[3.0, 4.0]), 1.0);
+    }
+
+    #[test]
+    fn least_squares_recovers_line() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [1.0, 3.0, 5.0, 7.0];
+        let (a, b) = least_squares(&xs, &ys);
+        assert!((a - 1.0).abs() < 1e-12);
+        assert!((b - 2.0).abs() < 1e-12);
+    }
+}

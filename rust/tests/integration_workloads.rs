@@ -1,0 +1,180 @@
+//! Integration tests over the full benchmark suite: every workload must
+//! satisfy the contract the coordinator depends on.
+
+use neat::bench_suite::{self, Workload};
+use neat::coordinator::{Evaluator, RuleKind};
+use neat::engine::profile::Profile;
+use neat::engine::FpContext;
+use neat::fpi::{FpiLibrary, Precision};
+use neat::placement::Placement;
+
+/// Exact runs are deterministic for the same seed and differ across
+/// seeds (otherwise "multiple inputs" would be a fiction).
+#[test]
+fn all_workloads_deterministic_and_seed_sensitive() {
+    for w in bench_suite::all() {
+        let s = w.train_seeds()[0];
+        let a = w.run(&mut FpContext::profiler(), s);
+        let b = w.run(&mut FpContext::profiler(), s);
+        assert_eq!(a, b, "{} not deterministic", w.name());
+        let c = w.run(&mut FpContext::profiler(), w.test_seeds()[0]);
+        assert_ne!(a, c, "{} ignores its input seed", w.name());
+    }
+}
+
+/// Outputs are finite at full precision.
+#[test]
+fn all_workloads_finite_baseline() {
+    for w in bench_suite::all() {
+        let out = w.run(&mut FpContext::profiler(), w.train_seeds()[0]);
+        assert!(!out.is_empty(), "{} returned nothing", w.name());
+        assert!(
+            out.iter().all(|v| v.is_finite()),
+            "{} produced non-finite output",
+            w.name()
+        );
+    }
+}
+
+/// Every function a workload advertises actually executes FLOPs on at
+/// least one training input (placement targets must be real).
+#[test]
+fn advertised_functions_execute() {
+    for w in bench_suite::all() {
+        let mut ctx = FpContext::profiler();
+        for seed in w.train_seeds().iter().take(2) {
+            w.run(&mut ctx, *seed);
+        }
+        let profile = Profile::from_context(&ctx);
+        for f in w.functions() {
+            let row = profile.rows.iter().find(|r| r.name == f);
+            assert!(
+                row.is_some_and(|r| r.total() > 0 || r.mem_ops > 0),
+                "{}::{f} never executed work",
+                w.name()
+            );
+        }
+    }
+}
+
+/// The top-10 functions must cover ≥95% of FLOPs (the paper reports
+/// ≥98% on its suite; our reimplementations stay close).
+#[test]
+fn top10_coverage_is_high() {
+    for w in bench_suite::table2() {
+        let mut ctx = FpContext::profiler();
+        w.run(&mut ctx, w.train_seeds()[0]);
+        let profile = Profile::from_context(&ctx);
+        let cov = profile.coverage(10);
+        assert!(cov > 0.95, "{} top-10 coverage only {:.1}%", w.name(), cov * 100.0);
+    }
+}
+
+/// Whole-program truncation at 1 bit must visibly damage every
+/// workload's output (no workload is insensitive to precision), while
+/// full width must reproduce the baseline bit-for-bit.
+#[test]
+fn precision_sensitivity_bounds() {
+    for w in bench_suite::all() {
+        let seed = w.train_seeds()[0];
+        let base = w.run(&mut FpContext::profiler(), seed);
+
+        let target = w.default_target();
+        let lib = FpiLibrary::truncation_family(target);
+        let full_bits = target.mantissa_bits();
+        let mut full_ctx = FpContext::new(
+            lib.clone(),
+            Placement::whole_program(FpiLibrary::truncation_id(full_bits)),
+        );
+        full_ctx.set_target(target); // paper step 2: gate by precision
+        let full = w.run(&mut full_ctx, seed);
+        assert_eq!(w.error(&base, &full), 0.0, "{} full-width run differs", w.name());
+
+        let mut one_ctx =
+            FpContext::new(lib, Placement::whole_program(FpiLibrary::truncation_id(1)));
+        one_ctx.set_target(target);
+        let one = w.run(&mut one_ctx, seed);
+        let err = w.error(&base, &one);
+        assert!(err > 1e-3, "{} unaffected by 1-bit truncation (err {err})", w.name());
+    }
+}
+
+/// The mixed-precision benchmarks really carry both FLOP types, and the
+/// single/double-dominant ones match their declared targets (Fig. 4).
+#[test]
+fn precision_profiles_match_declarations() {
+    for w in bench_suite::all() {
+        let mut ctx = FpContext::profiler();
+        w.run(&mut ctx, w.train_seeds()[0]);
+        let p = Profile::from_context(&ctx);
+        let frac = p.single_fraction();
+        match w.name() {
+            "particlefilter" | "canneal" => {
+                assert!(frac < 0.2, "{} should be double-dominant ({frac})", w.name())
+            }
+            "ferret" => assert!(
+                (0.2..0.8).contains(&frac),
+                "ferret should be mixed ({frac})"
+            ),
+            "srad" => assert!(
+                (0.5..0.995).contains(&frac),
+                "srad should carry some double ({frac})"
+            ),
+            _ => assert!(frac > 0.9, "{} should be single-dominant ({frac})", w.name()),
+        }
+    }
+}
+
+/// Radar: the FCS rule must reach configurations CIP cannot express —
+/// different effective precision for fft-under-lpf vs fft-under-pc.
+#[test]
+fn radar_fcs_distinguishes_callers() {
+    use std::collections::HashMap;
+    let w = bench_suite::by_name("radar").unwrap();
+    let seed = w.train_seeds()[0];
+    let base = w.run(&mut FpContext::profiler(), seed);
+
+    // lpf gets 24 bits, pc gets 24 bits -> near-baseline
+    let lib = FpiLibrary::truncation_family(Precision::Single);
+    let mut map = HashMap::new();
+    for f in ["lpf", "pc", "gen_pulse", "window", "magnitude", "doppler",
+              "accumulate", "decimate", "detect", "ref_chirp"] {
+        map.insert(f.to_string(), FpiLibrary::truncation_id(24));
+    }
+    let mut ctx = FpContext::new(lib.clone(), Placement::call_stack(map.clone()));
+    let out = w.run(&mut ctx, seed);
+    assert_eq!(w.error(&base, &out), 0.0);
+
+    // now degrade ONLY the lpf subtree (fft inherits via call stack)
+    map.insert("lpf".to_string(), FpiLibrary::truncation_id(2));
+    let mut ctx = FpContext::new(lib.clone(), Placement::call_stack(map.clone()));
+    let lpf_out = w.run(&mut ctx, seed);
+    let lpf_err = w.error(&base, &lpf_out);
+
+    // vs degrading ONLY the pc subtree
+    map.insert("lpf".to_string(), FpiLibrary::truncation_id(24));
+    map.insert("pc".to_string(), FpiLibrary::truncation_id(2));
+    let mut ctx = FpContext::new(lib, Placement::call_stack(map));
+    let pc_out = w.run(&mut ctx, seed);
+    let pc_err = w.error(&base, &pc_out);
+
+    assert!(lpf_err > 0.0 && pc_err > 0.0);
+    assert_ne!(lpf_out, pc_out, "caller-split truncation must differ");
+}
+
+/// Evaluator construction works for every workload and both targets
+/// where meaningful.
+#[test]
+fn evaluators_construct_for_all_benchmarks() {
+    for w in bench_suite::table2() {
+        let name = w.name().to_string();
+        let eval = Evaluator::new(w, None);
+        assert!(!eval.top_functions.is_empty(), "{name}: no top functions");
+        assert!(eval.genome_len(RuleKind::Cip) >= 4, "{name}: genome too small");
+        let d = eval.evaluate_train(
+            RuleKind::Cip,
+            &vec![eval.target.mantissa_bits(); eval.genome_len(RuleKind::Cip)],
+        );
+        assert_eq!(d.error, 0.0, "{name}: full-width config not lossless");
+    }
+}

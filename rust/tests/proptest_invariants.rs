@@ -1,0 +1,282 @@
+//! Property-based tests over the system's core invariants, using the
+//! vendored `proptest_lite` harness (the `proptest` crate is not in the
+//! offline cache — see Cargo.toml).
+
+use std::collections::HashMap;
+
+use neat::engine::FpContext;
+use neat::explore::nsga2::{non_dominated_sort, pareto_front, Nsga2, Nsga2Params};
+use neat::explore::{Evaluated, FnProblem, Genome, Objectives};
+use neat::fpi::{
+    truncate_f32, truncate_f64, used_bits_f32, used_bits_f64, FpiLibrary, Precision,
+};
+use neat::placement::Placement;
+use neat::stats::{lower_convex_hull, TradeoffPoint};
+use neat::util::proptest_lite::{check, Config};
+use neat::util::Pcg64;
+
+fn cfg(cases: u64) -> Config {
+    Config { cases, ..Default::default() }
+}
+
+// --- truncation semantics -------------------------------------------
+
+#[test]
+fn prop_truncation_never_increases_magnitude() {
+    check(
+        "truncate |.| non-increasing",
+        cfg(2000),
+        |rng| ((rng.normal() * 10f64.powi(rng.below(60) as i32 - 30)) as f32, rng.below(24) as u32 + 1),
+        |&(x, k)| {
+            let t = truncate_f32(x, k);
+            t.abs() <= x.abs() && t.signum() == x.signum() || x == 0.0 || t == 0.0
+        },
+    );
+}
+
+#[test]
+fn prop_truncation_idempotent_and_bounded() {
+    check(
+        "truncate idempotent, used_bits ≤ k",
+        cfg(2000),
+        |rng| (rng.normal() as f32 * 100.0, rng.below(24) as u32 + 1),
+        |&(x, k)| {
+            let t = truncate_f32(x, k);
+            truncate_f32(t, k) == t && (t == 0.0 || used_bits_f32(t) <= k)
+        },
+    );
+}
+
+#[test]
+fn prop_truncation_relative_error_bound() {
+    check(
+        "rel err < 2^(1-k)",
+        cfg(2000),
+        |rng| (rng.normal() * 1e3, rng.below(52) as u32 + 1),
+        |&(x, k)| {
+            if x == 0.0 {
+                return true;
+            }
+            let t = truncate_f64(x, k);
+            ((t - x) / x).abs() < 2f64.powi(1 - k as i32)
+        },
+    );
+}
+
+#[test]
+fn prop_coarser_truncation_composes() {
+    check(
+        "trunc_b ∘ trunc_a = trunc_min(a,b)",
+        cfg(2000),
+        |rng| (rng.normal() as f32, rng.below(24) as u32 + 1, rng.below(24) as u32 + 1),
+        |&(x, a, b)| {
+            truncate_f32(truncate_f32(x, a), b) == truncate_f32(x, a.min(b))
+        },
+    );
+}
+
+#[test]
+fn prop_used_bits_reconstructs_exactly() {
+    // keeping used_bits(x) bits must be lossless
+    check(
+        "truncate(x, used_bits(x)) == x",
+        cfg(2000),
+        |rng| rng.normal() * 10f64.powi(rng.below(40) as i32 - 20),
+        |&x| truncate_f64(x, used_bits_f64(x)) == x,
+    );
+}
+
+// --- NSGA-II invariants ----------------------------------------------
+
+#[test]
+fn prop_non_dominated_sort_rank_zero_is_pareto() {
+    check(
+        "rank-0 = non-dominated",
+        cfg(60),
+        |rng| {
+            let n = 3 + rng.below(40) as usize;
+            (0..n)
+                .map(|_| Evaluated {
+                    genome: vec![],
+                    objectives: Objectives { error: rng.f64(), energy: rng.f64() },
+                })
+                .collect::<Vec<_>>()
+        },
+        |pop| {
+            let ranks = non_dominated_sort(pop);
+            pop.iter().enumerate().all(|(i, a)| {
+                let dominated =
+                    pop.iter().any(|b| b.objectives.dominates(&a.objectives));
+                (ranks[i] == 0) == !dominated
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_nsga2_respects_bounds_and_budget() {
+    check(
+        "nsga2 genes in bounds, budget exact",
+        cfg(12),
+        |rng| Nsga2Params {
+            population: 8 + rng.below(12) as usize,
+            generations: 1 + rng.below(4) as usize,
+            seed: rng.next_u64(),
+            ..Default::default()
+        },
+        |params| {
+            let problem = FnProblem {
+                len: 5,
+                max_bits: 24,
+                f: |g: &Genome| {
+                    let m = g.iter().map(|&x| x as f64).sum::<f64>() / (5.0 * 24.0);
+                    Objectives { error: 1.0 - m, energy: m }
+                },
+            };
+            let archive = Nsga2::new(params.clone()).run(&problem);
+            archive.len() == params.population * (params.generations + 1)
+                && archive
+                    .iter()
+                    .all(|e| e.genome.iter().all(|&g| (1..=24).contains(&g)))
+        },
+    );
+}
+
+#[test]
+fn prop_pareto_front_mutually_non_dominating() {
+    check(
+        "front members incomparable",
+        cfg(40),
+        |rng| {
+            (0..30)
+                .map(|_| Evaluated {
+                    genome: vec![rng.below(24) as u32 + 1],
+                    objectives: Objectives { error: rng.f64(), energy: rng.f64() },
+                })
+                .collect::<Vec<_>>()
+        },
+        |archive| {
+            let front = pareto_front(archive);
+            front.iter().all(|a| {
+                !front.iter().any(|b| b.objectives.dominates(&a.objectives))
+            })
+        },
+    );
+}
+
+// --- hull invariants ---------------------------------------------------
+
+#[test]
+fn prop_hull_below_all_points() {
+    check(
+        "hull under point cloud",
+        cfg(80),
+        |rng| {
+            (0..50)
+                .map(|_| TradeoffPoint::new(rng.f64() * 0.2, rng.f64()))
+                .collect::<Vec<_>>()
+        },
+        |pts| {
+            let hull = lower_convex_hull(pts);
+            if hull.len() < 2 {
+                return true;
+            }
+            // every input point lies on or above every hull segment
+            // (within its error span)
+            pts.iter().all(|p| {
+                hull.windows(2).all(|seg| {
+                    let (a, b) = (seg[0], seg[1]);
+                    if p.error < a.error || p.error > b.error || a.error == b.error {
+                        return true;
+                    }
+                    let t = (p.error - a.error) / (b.error - a.error);
+                    let line = a.energy + t * (b.energy - a.energy);
+                    p.energy >= line - 1e-9
+                })
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_hull_subset_of_points() {
+    check(
+        "hull ⊆ points",
+        cfg(80),
+        |rng| {
+            (0..30)
+                .map(|_| TradeoffPoint::new(rng.f64(), rng.f64()))
+                .collect::<Vec<_>>()
+        },
+        |pts| {
+            lower_convex_hull(pts)
+                .iter()
+                .all(|h| pts.iter().any(|p| p == h))
+        },
+    );
+}
+
+// --- placement routing invariants --------------------------------------
+
+#[test]
+fn prop_cip_routes_exactly_by_current_function() {
+    // random call trees: a FLOP's FPI is decided solely by its innermost
+    // function, never by depth or history
+    check(
+        "CIP routing",
+        cfg(60),
+        |rng| {
+            let widths: Vec<u32> = (0..4).map(|_| rng.below(24) as u32 + 1).collect();
+            let script: Vec<(usize, usize)> = (0..12)
+                .map(|_| (rng.below(4) as usize, rng.below(4) as usize))
+                .collect();
+            (widths, script)
+        },
+        |(widths, script)| {
+            let lib = FpiLibrary::truncation_family(Precision::Single);
+            let mut map = HashMap::new();
+            let names = ["f0", "f1", "f2", "f3"];
+            for (i, &w) in widths.iter().enumerate() {
+                map.insert(names[i].to_string(), FpiLibrary::truncation_id(w));
+            }
+            let mut ctx = FpContext::new(lib, Placement::current_function(map));
+            let ids: Vec<_> = names.iter().map(|n| ctx.register(n)).collect();
+            script.iter().all(|&(outer, inner)| {
+                let expected = truncate_f32(
+                    truncate_f32(1.767_123_4, widths[inner])
+                        * truncate_f32(1.767_123_4, widths[inner]),
+                    widths[inner],
+                );
+                let got = ctx.call(ids[outer], |c| {
+                    c.call(ids[inner], |c| c.mul32(1.767_123_4, 1.767_123_4))
+                });
+                got == expected
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_engine_flop_count_is_exact() {
+    // the engine's census equals the program's literal op count
+    check(
+        "census == executed ops",
+        cfg(60),
+        |rng| (1 + rng.below(200) as usize, 1 + rng.below(100) as usize),
+        |&(adds, muls)| {
+            let mut ctx = FpContext::profiler();
+            let f = ctx.register("work");
+            ctx.call(f, |c| {
+                let mut acc = 1.0f32;
+                for _ in 0..adds {
+                    acc = c.add32(acc, 0.5);
+                }
+                for _ in 0..muls {
+                    acc = c.mul64(acc as f64, 1.01) as f32;
+                }
+                acc
+            });
+            ctx.counters().total_flops() == (adds + muls) as u64
+        },
+    );
+}
