@@ -1,0 +1,53 @@
+//! Bench: the batch executor in isolation — one generation-sized batch
+//! of unique genomes (the explorer's unit of work) through worker pools
+//! of increasing size, plus the dedup fast path on an all-duplicate
+//! batch.
+//!
+//!     cargo bench --bench executor
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::bench;
+use neat::bench_suite::blackscholes::Blackscholes;
+use neat::coordinator::{Evaluator, Executor, RuleKind};
+use neat::explore::Genome;
+use neat::util::Pcg64;
+
+fn main() {
+    println!("== batch executor ==");
+    let eval = Evaluator::new(Box::new(Blackscholes::default()), None);
+    let len = eval.genome_len(RuleKind::Cip);
+
+    // one generation of 24 unique genomes × 5 train seeds = 120 tasks
+    let mut rng = Pcg64::new(0xBA7C);
+    let genomes: Vec<Genome> = (0..24)
+        .map(|_| (0..len).map(|_| rng.range_inclusive(1, 24) as u32).collect())
+        .collect();
+
+    let mut min_ns = Vec::new();
+    for (label, exec) in [
+        ("24-genome batch, serial", Executor::serial()),
+        ("24-genome batch, 2 threads", Executor::new(2)),
+        ("24-genome batch, 4 threads", Executor::new(4)),
+        ("24-genome batch, 8 threads", Executor::new(8)),
+    ] {
+        let m = bench(label, 24, "configs", || {
+            std::hint::black_box(eval.evaluate_train_batch(RuleKind::Cip, &genomes, &exec));
+        });
+        println!("{}", m.report());
+        min_ns.push(
+            m.samples.iter().map(|d| d.as_nanos() as f64).fold(f64::INFINITY, f64::min),
+        );
+    }
+    for (i, threads) in [2usize, 4, 8].iter().enumerate() {
+        println!("speedup @{} threads: {:.2}x", threads, min_ns[0] / min_ns[i + 1]);
+    }
+
+    // dedup: 24 copies of one genome collapse to a single evaluation
+    let dup: Vec<Genome> = vec![genomes[0].clone(); 24];
+    let m = bench("24-duplicate batch (dedup)", 24, "configs", || {
+        std::hint::black_box(eval.evaluate_train_batch(RuleKind::Cip, &dup, &Executor::new(4)));
+    });
+    println!("{}", m.report());
+}

@@ -1,5 +1,7 @@
 //! Bench: end-to-end exploration cost — one full NSGA-II configuration
-//! evaluation (the figure-harness unit) and a complete quick search.
+//! evaluation (the figure-harness unit), a complete quick search, and
+//! the serial-vs-parallel executor comparison (the acceptance bar for
+//! the batched pipeline: ≥2× wall clock at 4 workers).
 //!
 //!     cargo bench --bench explorer
 
@@ -8,32 +10,53 @@ mod harness;
 
 use harness::bench;
 use neat::bench_suite::blackscholes::Blackscholes;
-use neat::coordinator::experiments::{explore_rule, Budget};
-use neat::coordinator::{EvalProblem, Evaluator, RuleKind};
-use neat::explore::Problem;
+use neat::coordinator::experiments::{explore_rule_with, Budget};
+use neat::coordinator::{Evaluator, Executor, RuleKind};
 
 fn main() {
     println!("== explorer ==");
     let eval = Evaluator::new(Box::new(Blackscholes::default()), None);
 
-    // one configuration evaluation (5 training inputs)
-    let problem = EvalProblem::new(&eval, RuleKind::Cip);
-    let genome = vec![12u32; problem.genome_len()];
+    // one configuration evaluation (5 training inputs), uncached — the
+    // memoizing EvalProblem would answer repeat iterations from its
+    // cache and measure a HashMap lookup instead
+    let genome = vec![12u32; eval.genome_len(RuleKind::Cip)];
     let m = bench("one CIP config evaluation", 1, "configs", || {
-        std::hint::black_box(problem.evaluate(&genome));
-    });
-    println!("{}", m.report());
-    let _ = problem.take_details();
-
-    // a full quick search (~60 evaluations)
-    let m = bench("quick NSGA-II search (60 evals)", 60, "configs", || {
-        std::hint::black_box(explore_rule(&eval, RuleKind::Cip, Budget::quick()));
+        std::hint::black_box(eval.evaluate_train(RuleKind::Cip, &genome));
     });
     println!("{}", m.report());
 
-    // WP exhaustive sweep (24 evaluations)
+    // a full quick search (~60 evaluations), serial vs worker pools
+    let mut min_ns = Vec::new();
+    for (label, exec) in [
+        ("quick NSGA-II search, serial", Executor::serial()),
+        ("quick NSGA-II search, 2 threads", Executor::new(2)),
+        ("quick NSGA-II search, 4 threads", Executor::new(4)),
+    ] {
+        let m = bench(label, 60, "configs", || {
+            std::hint::black_box(explore_rule_with(&eval, RuleKind::Cip, Budget::quick(), exec));
+        });
+        println!("{}", m.report());
+        min_ns.push(
+            m.samples.iter().map(|d| d.as_nanos() as f64).fold(f64::INFINITY, f64::min),
+        );
+    }
+    if let [serial, two, four] = min_ns[..] {
+        println!(
+            "speedup over serial: {:.2}x @2 threads, {:.2}x @4 threads",
+            serial / two,
+            serial / four
+        );
+    }
+
+    // WP exhaustive sweep (24 evaluations, one batch)
     let m = bench("WP exhaustive sweep (24 evals)", 24, "configs", || {
-        std::hint::black_box(explore_rule(&eval, RuleKind::Wp, Budget::quick()));
+        std::hint::black_box(explore_rule_with(
+            &eval,
+            RuleKind::Wp,
+            Budget::quick(),
+            Executor::default_parallel(),
+        ));
     });
     println!("{}", m.report());
 }

@@ -17,6 +17,7 @@
 //! configuration (error = accuracy loss vs. the full-precision
 //! baseline, like Fig. 11).
 
+use std::collections::HashMap;
 use std::sync::Mutex;
 
 use anyhow::Result;
@@ -98,6 +99,13 @@ pub struct CnnDetail {
 }
 
 /// [`Problem`] over the LeNet runtime for one placement policy.
+///
+/// Evaluations are memoized on the *expanded* per-slot widths, so
+/// genomes the search revisits (anchors, PLC-tied warm starts that
+/// collide, creep-mutation repeats) never re-execute the module. The
+/// batch path stays serial: one PJRT executable services every
+/// configuration, and `xla`'s executable state is not safely shareable
+/// across threads (see `runtime`) — dedup is where the CNN wins.
 pub struct CnnProblem<'a> {
     runtime: &'a LenetRuntime,
     /// The placement policy.
@@ -109,6 +117,7 @@ pub struct CnnProblem<'a> {
     baseline_accuracy: f64,
     /// `(expanded bits, detail)` per evaluation.
     pub details: Mutex<Vec<([u32; NUM_SLOTS], CnnDetail)>>,
+    cache: Mutex<HashMap<[u32; NUM_SLOTS], CnnDetail>>,
 }
 
 impl<'a> CnnProblem<'a> {
@@ -125,16 +134,27 @@ impl<'a> CnnProblem<'a> {
             baseline_energy,
             baseline_accuracy,
             details: Mutex::new(Vec::new()),
+            cache: Mutex::new(HashMap::new()),
         })
     }
 
-    /// Evaluate a configuration, returning full detail.
+    /// Evaluate a configuration, returning full detail. Memoized on the
+    /// expanded widths; every call (hit or miss) is recorded in
+    /// `details`, matching what a cache-less run would log.
     pub fn evaluate_detail(&self, genome: &Genome) -> Result<CnnDetail> {
         let bits = self.rule.expand(genome);
-        let accuracy = self.runtime.accuracy(&bits, self.search_batches)?;
-        let error = (self.baseline_accuracy - accuracy).max(0.0);
-        let nec = cnn_energy_pj(&self.runtime.flop_counts, &bits) / self.baseline_energy;
-        let detail = CnnDetail { error, nec, accuracy };
+        let cached = self.cache.lock().unwrap().get(&bits).copied();
+        let detail = match cached {
+            Some(d) => d,
+            None => {
+                let accuracy = self.runtime.accuracy(&bits, self.search_batches)?;
+                let error = (self.baseline_accuracy - accuracy).max(0.0);
+                let nec = cnn_energy_pj(&self.runtime.flop_counts, &bits) / self.baseline_energy;
+                let d = CnnDetail { error, nec, accuracy };
+                self.cache.lock().unwrap().insert(bits, d);
+                d
+            }
+        };
         self.details.lock().unwrap().push((bits, detail));
         Ok(detail)
     }
@@ -166,6 +186,13 @@ impl Problem for CnnProblem<'_> {
             // panic inside the GA loop.
             Err(_) => Objectives { error: 1.0, energy: 1.0 },
         }
+    }
+
+    fn evaluate_batch(&self, genomes: &[Genome]) -> Vec<Objectives> {
+        // Serial over the shared PJRT executable (not thread-safe to
+        // fan out); the memo cache in `evaluate_detail` collapses
+        // duplicate configurations within and across generations.
+        genomes.iter().map(|g| self.evaluate(g)).collect()
     }
 }
 

@@ -1,0 +1,285 @@
+//! The batched parallel evaluation executor (paper §IV: "the
+//! coordinator evaluates configurations in parallel").
+//!
+//! One configuration evaluation = `|train seeds|` instrumented workload
+//! runs. A generational explorer hands the coordinator a whole
+//! population of genomes at once ([`crate::explore::Problem::evaluate_batch`]),
+//! and this module turns that batch into `(unique genome × seed)` tasks
+//! fanned over a [`std::thread::scope`] worker pool:
+//!
+//! * **dedup** — identical genomes (the two NSGA-II anchors, WP sweep
+//!   repeats, creep-mutation collisions) are evaluated once and their
+//!   results shared;
+//! * **context pooling** — each worker keeps one long-lived
+//!   [`FpContext`] and swaps configurations with
+//!   [`FpContext::set_placement`] instead of rebuilding the FPI library
+//!   and resolution caches per task;
+//! * **deterministic reassembly** — workers write into a slot indexed
+//!   by task id, so results are reduced in `(genome, seed)` order no
+//!   matter which worker ran what. Every per-seed computation is a pure
+//!   function of `(placement, seed)`, which makes a parallel batch
+//!   bit-identical to the serial path.
+//!
+//! Everything that crosses threads (`Workload`, `FpiLibrary`,
+//! `Placement`, `EpiTable`) is already `Send + Sync`; workers share the
+//! evaluator immutably and own their pooled context.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::energy::estimate;
+use crate::engine::FpContext;
+use crate::explore::Genome;
+use crate::placement::Placement;
+use crate::stats;
+
+use super::{target_class_fpu_pj, EvalDetail, Evaluator, RuleKind, SeedBaseline};
+
+/// A worker pool configuration for batch evaluation. Cheap to copy;
+/// holds no threads — workers are scoped to each [`Executor::eval_batch`]
+/// call.
+#[derive(Debug, Clone, Copy)]
+pub struct Executor {
+    threads: usize,
+}
+
+impl Executor {
+    /// Single-threaded executor (the serial reference path — identical
+    /// results, still pools one context across the batch).
+    pub fn serial() -> Self {
+        Self { threads: 1 }
+    }
+
+    /// Executor with a fixed worker count (≥ 1).
+    pub fn new(threads: usize) -> Self {
+        Self { threads: threads.max(1) }
+    }
+
+    /// One worker per available core.
+    pub fn default_parallel() -> Self {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self { threads }
+    }
+
+    /// Configured worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Evaluate a batch of genomes against one baseline set, returning
+    /// one [`EvalDetail`] per input genome, in input order. Duplicate
+    /// genomes are evaluated once and share the result.
+    ///
+    /// `pub(super)` because `SeedBaseline` is coordinator-private; the
+    /// public entry points are [`Evaluator::evaluate_train_batch`] /
+    /// [`Evaluator::evaluate_test_batch`].
+    pub(super) fn eval_batch(
+        &self,
+        eval: &Evaluator,
+        rule: RuleKind,
+        genomes: &[Genome],
+        set: &[SeedBaseline],
+    ) -> Vec<EvalDetail> {
+        if genomes.is_empty() {
+            return Vec::new();
+        }
+
+        // Dedup while remembering each input's unique-genome slot.
+        let mut index_of: HashMap<&Genome, usize> = HashMap::new();
+        let mut unique: Vec<&Genome> = Vec::new();
+        let slots: Vec<usize> = genomes
+            .iter()
+            .map(|g| {
+                *index_of.entry(g).or_insert_with(|| {
+                    unique.push(g);
+                    unique.len() - 1
+                })
+            })
+            .collect();
+
+        let placements: Vec<Placement> =
+            unique.iter().map(|g| eval.placement(rule, g)).collect();
+        let n_seeds = set.len();
+        let n_tasks = placements.len() * n_seeds;
+
+        let metrics: Vec<Option<SeedMetrics>> = if self.threads.min(n_tasks) <= 1 {
+            // Serial path: same task order, one pooled context.
+            let mut worker = Worker::new();
+            (0..n_tasks)
+                .map(|t| {
+                    let u = t / n_seeds;
+                    Some(worker.run(eval, u, &placements[u], &set[t % n_seeds]))
+                })
+                .collect()
+        } else {
+            let workers = self.threads.min(n_tasks);
+            let results = Mutex::new(vec![None; n_tasks]);
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    scope.spawn(|| {
+                        let mut worker = Worker::new();
+                        loop {
+                            let t = next.fetch_add(1, Ordering::Relaxed);
+                            if t >= n_tasks {
+                                break;
+                            }
+                            let u = t / n_seeds;
+                            let m = worker.run(eval, u, &placements[u], &set[t % n_seeds]);
+                            results.lock().unwrap()[t] = Some(m);
+                        }
+                    });
+                }
+            });
+            results.into_inner().unwrap()
+        };
+
+        // Reduce per unique genome, seeds in set order (the same order
+        // and arithmetic as the serial loop).
+        let details: Vec<EvalDetail> = (0..placements.len())
+            .map(|u| {
+                let mut errors = Vec::with_capacity(n_seeds);
+                let mut fpu = Vec::with_capacity(n_seeds);
+                let mut mem = Vec::with_capacity(n_seeds);
+                let mut fpu_target = Vec::with_capacity(n_seeds);
+                for s in 0..n_seeds {
+                    let m = metrics[u * n_seeds + s].expect("every task ran");
+                    errors.push(m.error);
+                    fpu.push(m.fpu);
+                    mem.push(m.mem);
+                    fpu_target.push(m.fpu_target);
+                }
+                EvalDetail {
+                    error: stats::median(&errors),
+                    fpu_nec: stats::median(&fpu),
+                    mem_nec: stats::median(&mem),
+                    fpu_target_nec: stats::median(&fpu_target),
+                }
+            })
+            .collect();
+
+        slots.iter().map(|&u| details[u]).collect()
+    }
+}
+
+impl Default for Executor {
+    fn default() -> Self {
+        Self::default_parallel()
+    }
+}
+
+/// Raw per-(genome × seed) measurements, reduced to medians per genome.
+#[derive(Clone, Copy)]
+struct SeedMetrics {
+    error: f64,
+    fpu: f64,
+    mem: f64,
+    fpu_target: f64,
+}
+
+/// One worker's pooled state: a long-lived context plus the unique
+/// genome it is currently configured for.
+struct Worker {
+    ctx: Option<FpContext>,
+    /// Unique-genome index the pooled context's placement belongs to.
+    configured_for: Option<usize>,
+}
+
+impl Worker {
+    fn new() -> Self {
+        Self { ctx: None, configured_for: None }
+    }
+
+    /// Run one (placement × seed) task. Tasks arrive genome-major, so
+    /// consecutive seeds of the same genome reuse the warm placement —
+    /// a counters-only [`FpContext::reset`] keeps the resolution caches
+    /// — and only a genome switch pays [`FpContext::set_placement`].
+    fn run(
+        &mut self,
+        eval: &Evaluator,
+        unique_idx: usize,
+        placement: &Placement,
+        base: &SeedBaseline,
+    ) -> SeedMetrics {
+        if self.ctx.is_none() {
+            let mut c = FpContext::new(eval.lib.clone(), placement.clone());
+            c.set_target(eval.target);
+            self.ctx = Some(c);
+        } else {
+            let c = self.ctx.as_mut().expect("checked above");
+            if self.configured_for == Some(unique_idx) {
+                c.reset();
+            } else {
+                c.set_placement(placement.clone());
+            }
+        }
+        let ctx = self.ctx.as_mut().expect("pooled context present");
+        self.configured_for = Some(unique_idx);
+        let out = eval.workload.run(ctx, base.seed);
+        let energy = estimate(&eval.epi, ctx.counters());
+        let error = eval.workload.error(&base.output, &out);
+        let fpu = energy.fpu_pj / base.energy.fpu_pj.max(1e-12);
+        let mem = if base.energy.mem_pj > 0.0 { energy.mem_pj / base.energy.mem_pj } else { 1.0 };
+        let tgt = target_class_fpu_pj(&eval.epi, ctx, eval.target);
+        let fpu_target = tgt / base.target_fpu_pj.max(1e-12);
+        SeedMetrics { error, fpu, mem, fpu_target }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn executor_clamps_thread_count() {
+        assert_eq!(Executor::new(0).threads(), 1);
+        assert_eq!(Executor::new(3).threads(), 3);
+        assert_eq!(Executor::serial().threads(), 1);
+        assert!(Executor::default_parallel().threads() >= 1);
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let eval = Evaluator::new(
+            Box::new(crate::bench_suite::blackscholes::Blackscholes { options: 20 }),
+            None,
+        );
+        let out = Executor::serial().eval_batch(&eval, RuleKind::Wp, &[], &eval.train);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn duplicates_share_one_evaluation() {
+        let eval = Evaluator::new(
+            Box::new(crate::bench_suite::blackscholes::Blackscholes { options: 20 }),
+            None,
+        );
+        let g = vec![6u32];
+        let batch = vec![g.clone(), g.clone(), g.clone()];
+        let out = Executor::new(2).eval_batch(&eval, RuleKind::Wp, &batch, &eval.train);
+        assert_eq!(out.len(), 3);
+        for d in &out[1..] {
+            assert_eq!(d.error.to_bits(), out[0].error.to_bits());
+            assert_eq!(d.fpu_nec.to_bits(), out[0].fpu_nec.to_bits());
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        let eval = Evaluator::new(
+            Box::new(crate::bench_suite::blackscholes::Blackscholes { options: 30 }),
+            None,
+        );
+        let genomes: Vec<Genome> = (1..=8).map(|k| vec![k as u32 * 3]).collect();
+        let serial = Executor::serial().eval_batch(&eval, RuleKind::Wp, &genomes, &eval.train);
+        let parallel = Executor::new(4).eval_batch(&eval, RuleKind::Wp, &genomes, &eval.train);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.error.to_bits(), b.error.to_bits());
+            assert_eq!(a.fpu_nec.to_bits(), b.fpu_nec.to_bits());
+            assert_eq!(a.mem_nec.to_bits(), b.mem_nec.to_bits());
+            assert_eq!(a.fpu_target_nec.to_bits(), b.fpu_target_nec.to_bits());
+        }
+    }
+}

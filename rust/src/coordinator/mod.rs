@@ -5,10 +5,16 @@
 //! This is the paper's runtime loop (steps 1–6 of §IV): profile once,
 //! fix the top-10 FLOP functions, then repeatedly re-run the program
 //! under candidate configurations while NSGA-II steers the search.
+//! Configuration evaluation is *batched*: the generational explorers
+//! hand whole populations to [`EvalProblem::evaluate_batch`], which
+//! memoizes duplicate genomes and fans `(genome × seed)` tasks over the
+//! [`executor`] worker pool — the paper's "evaluated in parallel" step.
 
+pub mod executor;
 pub mod experiments;
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::bench_suite::Workload;
@@ -18,7 +24,8 @@ use crate::engine::FpContext;
 use crate::explore::{Genome, Objectives, Problem};
 use crate::fpi::{FpiLibrary, Precision};
 use crate::placement::Placement;
-use crate::stats;
+
+pub use executor::Executor;
 
 /// Which placement rule a genome parameterizes (paper Table I).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -192,50 +199,52 @@ impl Evaluator {
         }
     }
 
-    fn eval_on(&self, rule: RuleKind, genome: &Genome, set: &[SeedBaseline]) -> EvalDetail {
-        let placement = self.placement(rule, genome);
-        let mut errors = Vec::with_capacity(set.len());
-        let mut fpu = Vec::with_capacity(set.len());
-        let mut mem = Vec::with_capacity(set.len());
-        let mut fpu_target = Vec::with_capacity(set.len());
-        for base in set {
-            let mut ctx = FpContext::new(self.lib.clone(), placement.clone());
-            ctx.set_target(self.target);
-            let out = self.workload.run(&mut ctx, base.seed);
-            let energy = estimate(&self.epi, ctx.counters());
-            errors.push(self.workload.error(&base.output, &out));
-            fpu.push(energy.fpu_pj / base.energy.fpu_pj.max(1e-12));
-            mem.push(if base.energy.mem_pj > 0.0 {
-                energy.mem_pj / base.energy.mem_pj
-            } else {
-                1.0
-            });
-            let tgt = target_class_fpu_pj(&self.epi, &ctx, self.target);
-            fpu_target.push(tgt / base.target_fpu_pj.max(1e-12));
-        }
-        EvalDetail {
-            error: stats::median(&errors),
-            fpu_nec: stats::median(&fpu),
-            mem_nec: stats::median(&mem),
-            fpu_target_nec: stats::median(&fpu_target),
-        }
-    }
-
     /// Evaluate a configuration on the training inputs (the search
-    /// objective, paper §V-A).
+    /// objective, paper §V-A). Single-genome wrapper over the batch
+    /// path — same arithmetic, serial executor.
     pub fn evaluate_train(&self, rule: RuleKind, genome: &Genome) -> EvalDetail {
-        self.eval_on(rule, genome, &self.train)
+        self.evaluate_train_batch(rule, std::slice::from_ref(genome), &Executor::serial())[0]
     }
 
     /// Evaluate a configuration on the held-out test inputs (the
     /// robustness protocol, paper §V-G).
     pub fn evaluate_test(&self, rule: RuleKind, genome: &Genome) -> EvalDetail {
-        self.eval_on(rule, genome, &self.test)
+        self.evaluate_test_batch(rule, std::slice::from_ref(genome), &Executor::serial())[0]
+    }
+
+    /// Batch-evaluate configurations on the training inputs via `exec`.
+    /// Returns one detail per genome, input order; duplicates are run
+    /// once and share results.
+    pub fn evaluate_train_batch(
+        &self,
+        rule: RuleKind,
+        genomes: &[Genome],
+        exec: &Executor,
+    ) -> Vec<EvalDetail> {
+        exec.eval_batch(self, rule, genomes, &self.train)
+    }
+
+    /// Batch-evaluate configurations on the held-out test inputs.
+    pub fn evaluate_test_batch(
+        &self,
+        rule: RuleKind,
+        genomes: &[Genome],
+        exec: &Executor,
+    ) -> Vec<EvalDetail> {
+        exec.eval_batch(self, rule, genomes, &self.test)
     }
 }
 
 /// [`Problem`] adapter: exposes (evaluator, rule) to the explorers and
 /// records every evaluation's full detail for the figure harnesses.
+///
+/// Evaluations run on the training set through the configured
+/// [`Executor`], with a genome → [`EvalDetail`] memo cache in front: a
+/// genome the search revisits (anchors, WP sweep repeats, mutation
+/// collisions) is never re-run. Cache hits are still *recorded* in
+/// `details`, so the evaluation log keeps one entry per explorer call —
+/// identical to what a cache-less serial run would record, because
+/// every evaluation is a pure function of the genome.
 pub struct EvalProblem<'a> {
     /// The evaluator.
     pub eval: &'a Evaluator,
@@ -243,17 +252,66 @@ pub struct EvalProblem<'a> {
     pub rule: RuleKind,
     /// `(genome, detail)` for every evaluation, in evaluation order.
     pub details: Mutex<Vec<(Genome, EvalDetail)>>,
+    executor: Executor,
+    cache: Mutex<HashMap<Genome, EvalDetail>>,
+    cache_hits: AtomicUsize,
+    cache_misses: AtomicUsize,
 }
 
 impl<'a> EvalProblem<'a> {
-    /// Wrap an evaluator for one rule.
+    /// Wrap an evaluator for one rule, evaluating on all cores.
     pub fn new(eval: &'a Evaluator, rule: RuleKind) -> Self {
-        Self { eval, rule, details: Mutex::new(Vec::new()) }
+        Self::with_executor(eval, rule, Executor::default_parallel())
+    }
+
+    /// Wrap an evaluator for one rule with an explicit executor.
+    pub fn with_executor(eval: &'a Evaluator, rule: RuleKind, executor: Executor) -> Self {
+        Self {
+            eval,
+            rule,
+            details: Mutex::new(Vec::new()),
+            executor,
+            cache: Mutex::new(HashMap::new()),
+            cache_hits: AtomicUsize::new(0),
+            cache_misses: AtomicUsize::new(0),
+        }
     }
 
     /// Drain the recorded evaluation details.
     pub fn take_details(&self) -> Vec<(Genome, EvalDetail)> {
         std::mem::take(&mut self.details.lock().unwrap())
+    }
+
+    /// `(hits, misses)` of the genome memo cache so far. `misses` counts
+    /// unique genomes actually executed; `hits` counts evaluations
+    /// answered from the cache.
+    pub fn cache_stats(&self) -> (usize, usize) {
+        (self.cache_hits.load(Ordering::Relaxed), self.cache_misses.load(Ordering::Relaxed))
+    }
+
+    /// Evaluate a batch with memoization, recording every call.
+    fn evaluate_details(&self, genomes: &[Genome]) -> Vec<EvalDetail> {
+        // Collect genomes not yet in the cache (duplicates within the
+        // batch are fine — the executor dedups them again).
+        let misses: Vec<Genome> = {
+            let cache = self.cache.lock().unwrap();
+            genomes.iter().filter(|g| !cache.contains_key(*g)).cloned().collect()
+        };
+        let mut inserted = 0usize;
+        if !misses.is_empty() {
+            let computed =
+                self.eval.evaluate_train_batch(self.rule, &misses, &self.executor);
+            let mut cache = self.cache.lock().unwrap();
+            for (g, d) in misses.into_iter().zip(computed) {
+                if cache.insert(g, d).is_none() {
+                    inserted += 1;
+                }
+            }
+        }
+        self.cache_misses.fetch_add(inserted, Ordering::Relaxed);
+        self.cache_hits.fetch_add(genomes.len() - inserted, Ordering::Relaxed);
+        let cache = self.cache.lock().unwrap();
+        genomes.iter().map(|g| cache[g]).collect()
     }
 }
 
@@ -267,9 +325,19 @@ impl Problem for EvalProblem<'_> {
     }
 
     fn evaluate(&self, genome: &Genome) -> Objectives {
-        let detail = self.eval.evaluate_train(self.rule, genome);
-        self.details.lock().unwrap().push((genome.clone(), detail));
-        Objectives { error: detail.error, energy: detail.fpu_nec }
+        self.evaluate_batch(std::slice::from_ref(genome)).pop().expect("one objective")
+    }
+
+    fn evaluate_batch(&self, genomes: &[Genome]) -> Vec<Objectives> {
+        let details = self.evaluate_details(genomes);
+        let mut log = self.details.lock().unwrap();
+        for (g, d) in genomes.iter().zip(&details) {
+            log.push((g.clone(), *d));
+        }
+        details
+            .into_iter()
+            .map(|d| Objectives { error: d.error, energy: d.fpu_nec })
+            .collect()
     }
 }
 

@@ -20,6 +20,8 @@ pub mod counters;
 pub mod profile;
 pub mod trace;
 
+use std::collections::HashMap;
+
 use crate::fpi::{
     truncate_f32, truncate_f64, used_bits_f32, used_bits_f64, FpiLibrary, OpKind, Precision,
 };
@@ -48,11 +50,18 @@ struct Frame {
 ///
 /// One `FpContext` corresponds to one instrumented program run under one
 /// configuration (placement + FPI library). Reuse across runs is allowed
-/// after [`FpContext::reset`].
+/// after [`FpContext::reset`] (same placement) or
+/// [`FpContext::set_placement`] (new configuration) — the executor's
+/// worker pool keeps one long-lived context per thread and swaps
+/// placements between evaluations instead of rebuilding lib + caches.
 pub struct FpContext {
     lib: FpiLibrary,
     placement: Placement,
     names: Vec<String>,
+    /// name → interned id, so [`FpContext::register`] is O(1) instead of
+    /// a linear scan over `names` (CIP/FCS workloads re-register their
+    /// whole function set on every run of a pooled context).
+    name_index: HashMap<String, u16>,
     stack: Vec<Frame>,
     counters: Counters,
     trace: Option<TraceSink>,
@@ -89,6 +98,7 @@ impl FpContext {
             lib,
             placement,
             names: vec!["<toplevel>".to_string()],
+            name_index: HashMap::from([("<toplevel>".to_string(), 0u16)]),
             stack: Vec::with_capacity(64),
             counters: Counters::new(),
             trace: None,
@@ -120,12 +130,14 @@ impl FpContext {
     /// lifetime of the context. Workloads call this once per function in
     /// their setup, then use the cheap [`FpContext::call`].
     pub fn register(&mut self, name: &str) -> FuncId {
-        if let Some(pos) = self.names.iter().position(|n| n == name) {
-            return FuncId(pos as u16);
+        if let Some(&id) = self.name_index.get(name) {
+            return FuncId(id);
         }
         assert!(self.names.len() < u16::MAX as usize, "too many functions");
+        let id = self.names.len() as u16;
         self.names.push(name.to_string());
-        FuncId(self.names.len() as u16 - 1)
+        self.name_index.insert(name.to_string(), id);
+        FuncId(id)
     }
 
     /// Name of an interned function.
@@ -233,6 +245,26 @@ impl FpContext {
         self.counters = Counters::new();
         self.stack.truncate(1);
         self.current = self.stack[0].active;
+        self.current_func = TOPLEVEL;
+    }
+
+    /// Swap in a new placement, preparing the context for a run under a
+    /// different configuration: invalidates the per-function resolution
+    /// caches (`named_cache`/`resolve_cache` are placement-derived, so a
+    /// stale entry must never leak across placements), clears counters
+    /// and the call stack, and recomputes the toplevel frame's active
+    /// FPI. Interned names, the FPI library, and the optimization target
+    /// are kept — this is what makes one context reusable across every
+    /// configuration a worker thread evaluates.
+    pub fn set_placement(&mut self, placement: Placement) {
+        self.placement = placement;
+        self.named_cache.clear();
+        self.resolve_cache.clear();
+        self.counters = Counters::new();
+        self.stack.truncate(1);
+        let active = self.placement.resolve(&self.lib, "<toplevel>", TOPLEVEL, None);
+        self.stack[0] = Frame { func: TOPLEVEL, active, nearest_mapped: None };
+        self.current = active;
         self.current_func = TOPLEVEL;
     }
 
@@ -494,6 +526,77 @@ mod tests {
         ctx.reset();
         assert_eq!(ctx.counters().total_flops(), 0);
         assert_eq!(ctx.register("f"), f);
+    }
+
+    #[test]
+    fn set_placement_invalidates_resolve_cache() {
+        use std::collections::HashMap;
+        let lib = FpiLibrary::truncation_family(Precision::Single);
+        let mut map = HashMap::new();
+        map.insert("hot".to_string(), FpiLibrary::truncation_id(1));
+        let mut ctx = FpContext::new(lib, Placement::current_function(map));
+        let hot = ctx.register("hot");
+        // populate the caches under the first placement
+        assert_eq!(ctx.call(hot, |c| c.mul32(1.75, 1.75)), 1.0);
+        // swap to a placement where `hot` is unmapped: a stale
+        // resolve_cache entry would keep truncating
+        ctx.set_placement(Placement::current_function(HashMap::new()));
+        assert_eq!(ctx.call(hot, |c| c.mul32(1.75, 1.75)), 1.75 * 1.75);
+        // and back to an aggressive one: stale exact entry must not leak
+        let mut map = HashMap::new();
+        map.insert("hot".to_string(), FpiLibrary::truncation_id(1));
+        ctx.set_placement(Placement::current_function(map));
+        assert_eq!(ctx.call(hot, |c| c.mul32(1.75, 1.75)), 1.0);
+    }
+
+    #[test]
+    fn set_placement_invalidates_named_cache_for_fcs() {
+        use std::collections::HashMap;
+        let lib = FpiLibrary::truncation_family(Precision::Single);
+        let mut map = HashMap::new();
+        map.insert("caller".to_string(), FpiLibrary::truncation_id(1));
+        let mut ctx = FpContext::new(lib, Placement::call_stack(map));
+        let caller = ctx.register("caller");
+        let kernel = ctx.register("kernel");
+        // kernel inherits the mapped caller's 1-bit FPI
+        let r = ctx.call(caller, |c| c.call(kernel, |c| c.mul32(1.75, 1.75)));
+        assert_eq!(r, 1.0);
+        // new FCS map where only `kernel` is named: named_cache entries
+        // for both functions are stale and must be recomputed
+        let mut map = HashMap::new();
+        map.insert("kernel".to_string(), FpiLibrary::truncation_id(24));
+        ctx.set_placement(Placement::call_stack(map));
+        let r = ctx.call(caller, |c| c.call(kernel, |c| c.mul32(1.75, 1.75)));
+        assert_eq!(r, 1.75 * 1.75);
+        // caller alone is now unmapped: exact
+        let r = ctx.call(caller, |c| c.mul32(1.75, 1.75));
+        assert_eq!(r, 1.75 * 1.75);
+    }
+
+    #[test]
+    fn set_placement_resets_counters_and_keeps_names_and_target() {
+        let mut ctx = trunc_ctx(4);
+        ctx.set_target(Precision::Single);
+        let f = ctx.register("f");
+        ctx.call(f, |c| {
+            c.add32(1.0, 1.0);
+        });
+        assert_eq!(ctx.counters().total_flops(), 1);
+        ctx.set_placement(Placement::whole_program_exact());
+        assert_eq!(ctx.counters().total_flops(), 0);
+        assert_eq!(ctx.register("f"), f); // interned names survive
+        // target survives too: a double op under Single target is exact
+        assert_eq!(ctx.mul64(0.1, 3.0), 0.1f64 * 3.0);
+    }
+
+    #[test]
+    fn register_index_is_consistent_after_many_names() {
+        let mut ctx = FpContext::profiler();
+        let ids: Vec<FuncId> = (0..200).map(|i| ctx.register(&format!("fn_{i}"))).collect();
+        for (i, id) in ids.iter().enumerate() {
+            assert_eq!(ctx.register(&format!("fn_{i}")), *id);
+            assert_eq!(ctx.name_of(*id), format!("fn_{i}"));
+        }
     }
 
     #[test]

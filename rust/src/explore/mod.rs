@@ -44,6 +44,17 @@ pub struct Evaluated {
 }
 
 /// The search problem handed to an explorer.
+///
+/// Explorers are *generational*: they assemble a full genome list (an
+/// initial population, one generation's offspring) and hand it to
+/// [`Problem::evaluate_batch`] in a single call, so implementations can
+/// fan the batch over worker threads, deduplicate repeated genomes, or
+/// amortize per-configuration setup. The contract for `evaluate_batch`:
+///
+/// * exactly one `Objectives` per input genome, in input order;
+/// * `evaluate_batch(&[g])[0] == evaluate(&g)` — batching must not
+///   change values, only scheduling (archives stay byte-identical to a
+///   serial run for a fixed seed).
 pub trait Problem {
     /// Genome length (number of placement targets).
     fn genome_len(&self) -> usize;
@@ -51,6 +62,10 @@ pub trait Problem {
     fn max_bits(&self) -> u32;
     /// Evaluate one configuration.
     fn evaluate(&self, genome: &Genome) -> Objectives;
+    /// Evaluate a batch of configurations; default is a serial map.
+    fn evaluate_batch(&self, genomes: &[Genome]) -> Vec<Objectives> {
+        genomes.iter().map(|g| self.evaluate(g)).collect()
+    }
 }
 
 /// A closure-backed [`Problem`] for tests and simple sweeps.
@@ -78,6 +93,25 @@ impl<F: Fn(&Genome) -> Objectives> Problem for FnProblem<F> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn default_batch_matches_serial_map() {
+        let p = FnProblem {
+            len: 3,
+            max_bits: 24,
+            f: |g: &Genome| Objectives {
+                error: g[0] as f64,
+                energy: g.iter().sum::<u32>() as f64,
+            },
+        };
+        let genomes = vec![vec![1, 2, 3], vec![4, 5, 6], vec![1, 2, 3]];
+        let batch = p.evaluate_batch(&genomes);
+        assert_eq!(batch.len(), 3);
+        for (g, o) in genomes.iter().zip(&batch) {
+            assert_eq!(*o, p.evaluate(g));
+        }
+        assert_eq!(batch[0], batch[2]); // duplicates agree
+    }
 
     #[test]
     fn dominance_is_strict_somewhere() {

@@ -7,7 +7,7 @@
 
 use crate::util::Pcg64;
 
-use super::{Evaluated, Genome, Problem};
+use super::{Evaluated, Genome, Objectives, Problem};
 
 /// NSGA-II tuning knobs (exposed on the CLI like the paper's step 5).
 #[derive(Debug, Clone)]
@@ -56,6 +56,14 @@ impl Nsga2 {
 
     /// Run the search; returns every configuration ever evaluated (the
     /// tradeoff-space sample the figures are drawn from).
+    ///
+    /// The loop is *generational*: each generation's full offspring
+    /// genome list is assembled first (all RNG consumption happens
+    /// here), then evaluated with one [`Problem::evaluate_batch`] call.
+    /// Because evaluation never touches the RNG, the genome stream — and
+    /// therefore the archive — is byte-identical to a serial
+    /// evaluate-as-you-go loop for a fixed seed, whatever the batch
+    /// executor does internally.
     pub fn run(&self, problem: &dyn Problem) -> Vec<Evaluated> {
         let p = &self.params;
         let len = problem.genome_len();
@@ -64,38 +72,48 @@ impl Nsga2 {
         let mutation_p = if p.mutation_p > 0.0 { p.mutation_p } else { (2.0 / len as f64).min(0.5) };
 
         let mut archive: Vec<Evaluated> = Vec::new();
-        let evaluate = |genome: Genome, archive: &mut Vec<Evaluated>| -> Evaluated {
-            let objectives = problem.evaluate(&genome);
-            let ev = Evaluated { genome, objectives };
-            archive.push(ev.clone());
-            ev
+        let evaluate_all = |genomes: Vec<Genome>, archive: &mut Vec<Evaluated>| -> Vec<Evaluated> {
+            let objectives = problem.evaluate_batch(&genomes);
+            assert_eq!(
+                objectives.len(),
+                genomes.len(),
+                "evaluate_batch must return one Objectives per genome"
+            );
+            let evs: Vec<Evaluated> = genomes
+                .into_iter()
+                .zip(objectives)
+                .map(|(genome, objectives)| Evaluated { genome, objectives })
+                .collect();
+            archive.extend(evs.iter().cloned());
+            evs
         };
 
         // Seeded initial population: uniform random genomes plus the two
         // anchors (all-min and all-max widths) so the frontier endpoints
         // are always sampled.
-        let mut pop: Vec<Evaluated> = Vec::with_capacity(p.population);
-        pop.push(evaluate(vec![hi; len], &mut archive));
-        pop.push(evaluate(vec![1; len], &mut archive));
-        for g in p.initial.iter().take(p.population.saturating_sub(pop.len())) {
+        let mut init: Vec<Genome> = Vec::with_capacity(p.population);
+        init.push(vec![hi; len]);
+        init.push(vec![1; len]);
+        for g in p.initial.iter().take(p.population.saturating_sub(init.len())) {
             let mut g = g.clone();
             g.resize(len, hi);
             for gene in g.iter_mut() {
                 *gene = (*gene).clamp(1, hi);
             }
-            pop.push(evaluate(g, &mut archive));
+            init.push(g);
         }
-        while pop.len() < p.population {
+        while init.len() < p.population {
             let g: Genome = (0..len).map(|_| rng.range_inclusive(1, hi as u64) as u32).collect();
-            pop.push(evaluate(g, &mut archive));
+            init.push(g);
         }
+        let mut pop = evaluate_all(init, &mut archive);
 
         for _gen in 0..p.generations {
             // --- variation: binary tournament + crossover + mutation
             let ranks = non_dominated_sort(&pop);
             let crowd = crowding_all(&pop, &ranks);
-            let mut offspring: Vec<Evaluated> = Vec::with_capacity(p.population);
-            while offspring.len() < p.population {
+            let mut offspring_genomes: Vec<Genome> = Vec::with_capacity(p.population);
+            while offspring_genomes.len() < p.population {
                 let a = tournament(&mut rng, &ranks, &crowd);
                 let b = tournament(&mut rng, &ranks, &crowd);
                 let (mut ga, mut gb) = (pop[a].genome.clone(), pop[b].genome.clone());
@@ -104,11 +122,12 @@ impl Nsga2 {
                 }
                 mutate(&mut rng, &mut ga, hi, mutation_p);
                 mutate(&mut rng, &mut gb, hi, mutation_p);
-                offspring.push(evaluate(ga, &mut archive));
-                if offspring.len() < p.population {
-                    offspring.push(evaluate(gb, &mut archive));
+                offspring_genomes.push(ga);
+                if offspring_genomes.len() < p.population {
+                    offspring_genomes.push(gb);
                 }
             }
+            let offspring = evaluate_all(offspring_genomes, &mut archive);
 
             // --- environmental selection over parents ∪ offspring
             pop.extend(offspring);
@@ -254,13 +273,19 @@ fn select(mut pool: Vec<Evaluated>, keep: usize) -> Vec<Evaluated> {
     out
 }
 
+/// Indices of the non-dominated members of a point set, input order —
+/// the single definition of "Pareto front" shared by the search and the
+/// figure harnesses ([`crate::coordinator::experiments`]).
+pub fn pareto_front_indices(points: &[Objectives]) -> Vec<usize> {
+    (0..points.len())
+        .filter(|&i| !points.iter().any(|o| o.dominates(&points[i])))
+        .collect()
+}
+
 /// Pareto front (non-dominated subset) of an evaluated archive.
 pub fn pareto_front(archive: &[Evaluated]) -> Vec<Evaluated> {
-    archive
-        .iter()
-        .filter(|a| !archive.iter().any(|b| b.objectives.dominates(&a.objectives)))
-        .cloned()
-        .collect()
+    let points: Vec<Objectives> = archive.iter().map(|e| e.objectives).collect();
+    pareto_front_indices(&points).into_iter().map(|i| archive[i].clone()).collect()
 }
 
 #[cfg(test)]

@@ -9,24 +9,30 @@ use super::{Evaluated, Genome, Problem};
 
 /// Evaluate `budget` uniformly random genomes (plus the two anchor
 /// configurations, matching the NSGA-II initialisation for fairness).
+///
+/// Generational like [`crate::explore::Nsga2`]: the whole genome list is
+/// drawn up front and evaluated with one [`Problem::evaluate_batch`]
+/// call, so a parallel executor sees the entire budget at once.
 pub fn random_search(problem: &dyn Problem, budget: usize, seed: u64) -> Vec<Evaluated> {
     let len = problem.genome_len();
     let hi = problem.max_bits();
     let mut rng = Pcg64::new(seed);
-    let mut archive = Vec::with_capacity(budget);
-    let eval = |genome: Genome, archive: &mut Vec<Evaluated>| {
-        let objectives = problem.evaluate(&genome);
-        archive.push(Evaluated { genome, objectives });
-    };
-    eval(vec![hi; len], &mut archive);
+    let mut genomes: Vec<Genome> = Vec::with_capacity(budget.max(1));
+    genomes.push(vec![hi; len]);
     if budget > 1 {
-        eval(vec![1; len], &mut archive);
+        genomes.push(vec![1; len]);
     }
-    while archive.len() < budget {
+    while genomes.len() < budget {
         let g: Genome = (0..len).map(|_| rng.range_inclusive(1, hi as u64) as u32).collect();
-        eval(g, &mut archive);
+        genomes.push(g);
     }
-    archive
+    let objectives = problem.evaluate_batch(&genomes);
+    assert_eq!(objectives.len(), genomes.len(), "evaluate_batch must be 1:1");
+    genomes
+        .into_iter()
+        .zip(objectives)
+        .map(|(genome, objectives)| Evaluated { genome, objectives })
+        .collect()
 }
 
 #[cfg(test)]

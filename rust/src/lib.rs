@@ -24,9 +24,18 @@
 //! * [`energy`] — EPI tables (paper Fig. 1) and manipulated-bit counting,
 //! * [`bench_suite`] — Rust reimplementations of the ten evaluated
 //!   Parsec/Rodinia-style workloads,
-//! * [`explore`] — NSGA-II and a random-search baseline,
+//! * [`explore`] — NSGA-II and a random-search baseline. Explorers are
+//!   *generational*: each generation's genomes are assembled first and
+//!   evaluated with one `Problem::evaluate_batch` call, whose contract
+//!   (one result per genome, input order, value-identical to serial)
+//!   keeps archives byte-identical for a fixed seed,
 //! * [`coordinator`] — parallel configuration evaluation, the train/test
-//!   protocol, Pareto frontier extraction,
+//!   protocol, Pareto frontier extraction. Its `executor` module is the
+//!   batch engine: deduplicate the genome batch, fan `(genome × seed)`
+//!   tasks over a `std::thread::scope` worker pool where each worker
+//!   reuses one pooled `FpContext` via `set_placement`, reassemble
+//!   deterministically, and memoize per-genome results so revisited
+//!   configurations are never re-run,
 //! * [`cnn`] + [`runtime`] — the LeNet-5 case study: the AOT-compiled
 //!   JAX/Pallas inference module executed via PJRT with per-layer
 //!   precision as a runtime input,

@@ -17,7 +17,7 @@ use anyhow::{bail, Context, Result};
 
 use neat::bench_suite;
 use neat::coordinator::experiments::{self, Budget};
-use neat::coordinator::{Evaluator, RuleKind};
+use neat::coordinator::{Evaluator, Executor, RuleKind};
 use neat::engine::profile::Profile;
 use neat::engine::FpContext;
 use neat::fpi::Precision;
@@ -31,7 +31,7 @@ fn usage() -> &'static str {
      commands:\n\
        profile <benchmark>                     FLOP census (paper step 1)\n\
        explore <benchmark> [--rule wp|cip|fcs] [--target single|double]\n\
-               [--population N] [--generations N] [--seed N]\n\
+               [--population N] [--generations N] [--seed N] [--threads N]\n\
        figure  <id|all>                        fig1 fig4 fig5 fig6 fig7 fig8\n\
                                                fig9 fig10 fig11 table1 table2\n\
                                                table3 table5\n\
@@ -41,7 +41,8 @@ fn usage() -> &'static str {
      options:\n\
        --results DIR     output directory (default: results)\n\
        --artifacts DIR   AOT artifacts (default: artifacts)\n\
-       --quick           small search budget (smoke runs)\n"
+       --quick           small search budget (smoke runs)\n\
+       --threads N       evaluation worker threads (default: all cores)\n"
 }
 
 struct Args {
@@ -59,8 +60,16 @@ fn parse_args(raw: &[String]) -> Args {
         let a = &raw[i];
         if let Some(name) = a.strip_prefix("--") {
             // value-taking flags; everything else is a switch
-            const VALUED: [&str; 7] =
-                ["rule", "target", "population", "generations", "seed", "results", "artifacts"];
+            const VALUED: [&str; 8] = [
+                "rule",
+                "target",
+                "population",
+                "generations",
+                "seed",
+                "results",
+                "artifacts",
+                "threads",
+            ];
             if VALUED.contains(&name) && i + 1 < raw.len() {
                 flags.insert(name.to_string(), raw[i + 1].clone());
                 i += 2;
@@ -101,6 +110,13 @@ impl Args {
         match self.flags.get("artifacts") {
             Some(d) => ArtifactPaths::new(d),
             None => ArtifactPaths::default_location(),
+        }
+    }
+
+    fn executor(&self) -> Executor {
+        match self.flags.get("threads").and_then(|t| t.parse::<usize>().ok()) {
+            Some(n) => Executor::new(n),
+            None => Executor::default_parallel(),
         }
     }
 }
@@ -164,16 +180,18 @@ fn cmd_explore(args: &Args) -> Result<()> {
         Some(other) => bail!("unknown target {other} (single|double)"),
     };
     let budget = args.budget();
+    let exec = args.executor();
     eprintln!("profiling {name} and preparing baselines...");
     let eval = Evaluator::new(w, target);
     eprintln!(
-        "searching {} with {} over {} functions (genome length {})",
+        "searching {} with {} over {} functions (genome length {}, {} worker threads)",
         name,
         rule.name(),
         eval.top_functions.len(),
-        eval.genome_len(rule)
+        eval.genome_len(rule),
+        exec.threads()
     );
-    let res = experiments::explore_rule(&eval, rule, budget);
+    let res = experiments::explore_rule_with(&eval, rule, budget, exec);
     let points = res.fpu_points();
     let hull = lower_convex_hull(&points);
     println!(
@@ -223,27 +241,28 @@ fn cmd_figure(args: &Args) -> Result<()> {
     let id = args.positional.get(1).map(String::as_str).unwrap_or("all");
     let rd = args.results()?;
     let budget = args.budget();
+    let exec = args.executor();
     let mut log = |m: &str| eprintln!("[neat] {m}");
     let text = match id {
         "all" => {
             let artifacts = args.artifacts();
-            experiments::run_all(&rd, budget, Some(&artifacts), &mut log)?
+            experiments::run_all(&rd, budget, exec, Some(&artifacts), &mut log)?
         }
         "fig1" => experiments::fig1(&rd)?,
         "table1" => experiments::table1(),
         "table2" => experiments::table2(&rd)?,
         "fig4" => experiments::fig4(&rd)?,
         "fig5" | "fig6" | "fig7" | "table3" => {
-            let suite = experiments::explore_suite(budget, &mut log);
+            let suite = experiments::explore_suite(budget, exec, &mut log);
             match id {
                 "fig5" => experiments::fig5(&rd, &suite)?,
                 "fig6" => experiments::fig6(&rd, &suite)?,
                 "fig7" => experiments::fig7(&rd, &suite)?,
-                _ => experiments::table3(&rd, &suite, &mut log)?,
+                _ => experiments::table3(&rd, &suite, exec, &mut log)?,
             }
         }
-        "fig8" => experiments::fig8(&rd, budget, &mut log)?,
-        "fig9" => experiments::fig9(&rd, budget, &mut log)?,
+        "fig8" => experiments::fig8(&rd, budget, exec, &mut log)?,
+        "fig9" => experiments::fig9(&rd, budget, exec, &mut log)?,
         "fig10" | "fig11" | "table5" => {
             let paths = args.artifacts();
             if !paths.all_present() {
@@ -266,17 +285,18 @@ fn cmd_ablation(args: &Args) -> Result<()> {
     let id = args.positional.get(1).map(String::as_str).unwrap_or("all");
     let rd = args.results()?;
     let budget = args.budget();
+    let exec = args.executor();
     let mut out = String::new();
     if matches!(id, "all" | "topk") {
         out.push_str(&experiments::ablation_topk(&rd)?);
         out.push('\n');
     }
     if matches!(id, "all" | "random-vs-ga") {
-        out.push_str(&experiments::ablation_random_vs_ga(&rd, budget)?);
+        out.push_str(&experiments::ablation_random_vs_ga(&rd, budget, exec)?);
         out.push('\n');
     }
     if matches!(id, "all" | "ga-budget") {
-        out.push_str(&experiments::ablation_ga_budget(&rd)?);
+        out.push_str(&experiments::ablation_ga_budget(&rd, exec)?);
         out.push('\n');
     }
     if matches!(id, "all" | "fpi-mode") {

@@ -10,6 +10,13 @@
 //! explorer visits reuses it with a different `bits` literal — Python is
 //! never on this path. Weight and eval-set literals are uploaded once
 //! per process.
+//!
+//! **Feature gate**: the `xla` PJRT bindings are not in the offline
+//! crate cache, so the executing runtime is behind the `xla-runtime`
+//! feature (see `Cargo.toml`). The default build ships a metadata-only
+//! [`LenetRuntime`] with the same API: `load` still parses
+//! `lenet_meta.json` (enough for the Fig. 10 FLOP breakdown), while
+//! `accuracy` returns an error explaining the missing feature.
 
 use std::path::{Path, PathBuf};
 
@@ -92,6 +99,8 @@ impl ArtifactPaths {
     }
 }
 
+// used by the gated runtime and the reader round-trip tests
+#[cfg_attr(not(feature = "xla-runtime"), allow(dead_code))]
 fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
     let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
     if bytes.len() % 4 != 0 {
@@ -100,9 +109,35 @@ fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
     Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
 }
 
+#[cfg(feature = "xla-runtime")]
 fn read_i32_file(path: &Path) -> Result<Vec<i32>> {
     let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
     Ok(bytes.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// Metadata shared by the real and stub runtimes.
+struct MetaInfo {
+    batch: usize,
+    #[cfg_attr(not(feature = "xla-runtime"), allow(dead_code))]
+    eval_n: usize,
+    baseline_accuracy: f64,
+    flop_counts: Vec<(String, f64)>,
+}
+
+fn load_meta(paths: &ArtifactPaths) -> Result<MetaInfo> {
+    let meta_text = std::fs::read_to_string(paths.meta())
+        .with_context(|| format!("reading {}", paths.meta().display()))?;
+    let meta: FlatMeta = parse(&meta_text);
+    let batch = *meta.numbers.get("batch").context("meta: batch")? as usize;
+    let eval_n = *meta.numbers.get("eval_n").context("meta: eval_n")? as usize;
+    let baseline_accuracy =
+        *meta.numbers.get("baseline_accuracy").context("meta: baseline_accuracy")?;
+    let flop_map = meta.number_maps.get("flop_counts").context("meta: flop_counts")?;
+    let flop_counts: Vec<(String, f64)> = SLOT_NAMES
+        .iter()
+        .map(|&s| (s.to_string(), *flop_map.get(s).unwrap_or(&0.0)))
+        .collect();
+    Ok(MetaInfo { batch, eval_n, baseline_accuracy, flop_counts })
 }
 
 /// The loaded LeNet inference runtime.
@@ -112,7 +147,10 @@ fn read_i32_file(path: &Path) -> Result<Vec<i32>> {
 /// `bits` literal. (Pre-uploading PjRtBuffers and using `execute_b`
 /// was tried and reverted: xla 0.1.6's `buffer_from_host_literal`
 /// intermittently segfaults when interleaved with executable state —
-/// see EXPERIMENTS.md §Perf; the literal upload is <2% of execute time.)
+/// see EXPERIMENTS.md §Perf; the literal upload is <2% of execute time.
+/// The same state-sensitivity is why `CnnProblem` never fans executions
+/// over threads: one executable, serial execution, dedup via memo.)
+#[cfg(feature = "xla-runtime")]
 pub struct LenetRuntime {
     exe: xla::PjRtLoadedExecutable,
     weights: Vec<xla::Literal>,
@@ -126,22 +164,12 @@ pub struct LenetRuntime {
     pub flop_counts: Vec<(String, f64)>,
 }
 
+#[cfg(feature = "xla-runtime")]
 impl LenetRuntime {
     /// Load artifacts, compile the HLO module on the CPU PJRT client,
     /// and upload weights + eval set.
     pub fn load(paths: &ArtifactPaths) -> Result<Self> {
-        let meta_text = std::fs::read_to_string(paths.meta())
-            .with_context(|| format!("reading {}", paths.meta().display()))?;
-        let meta: FlatMeta = parse(&meta_text);
-        let batch = *meta.numbers.get("batch").context("meta: batch")? as usize;
-        let eval_n = *meta.numbers.get("eval_n").context("meta: eval_n")? as usize;
-        let baseline_accuracy =
-            *meta.numbers.get("baseline_accuracy").context("meta: baseline_accuracy")?;
-        let flop_map = meta.number_maps.get("flop_counts").context("meta: flop_counts")?;
-        let flop_counts: Vec<(String, f64)> = SLOT_NAMES
-            .iter()
-            .map(|&s| (s.to_string(), *flop_map.get(s).unwrap_or(&0.0)))
-            .collect();
+        let MetaInfo { batch, eval_n, baseline_accuracy, flop_counts } = load_meta(paths)?;
 
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         let proto = xla::HloModuleProto::from_text_file(
@@ -234,6 +262,43 @@ impl LenetRuntime {
             }
         }
         Ok(correct as f64 / total as f64)
+    }
+}
+
+/// Metadata-only stand-in compiled when the `xla-runtime` feature is
+/// off (the default — the `xla` crate is not in the offline cache).
+/// Same API as the real runtime; `load` parses `lenet_meta.json` so the
+/// analytical experiments (FLOP breakdown, energy model) still work,
+/// and `accuracy` returns an error naming the missing feature.
+#[cfg(not(feature = "xla-runtime"))]
+pub struct LenetRuntime {
+    /// Model batch size (fixed at AOT time).
+    pub batch: usize,
+    /// Baseline (full-precision) accuracy recorded at training time.
+    pub baseline_accuracy: f64,
+    /// Analytical FLOP counts per slot (from the artifact metadata).
+    pub flop_counts: Vec<(String, f64)>,
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+impl LenetRuntime {
+    /// Parse artifact metadata; no PJRT compilation happens.
+    pub fn load(paths: &ArtifactPaths) -> Result<Self> {
+        let MetaInfo { batch, baseline_accuracy, flop_counts, .. } = load_meta(paths)?;
+        Ok(Self { batch, baseline_accuracy, flop_counts })
+    }
+
+    /// No eval batches without an executable.
+    pub fn num_batches(&self) -> usize {
+        0
+    }
+
+    /// Inference is unavailable in this build.
+    pub fn accuracy(&self, _bits: &[u32; NUM_SLOTS], _n_batches: usize) -> Result<f64> {
+        bail!(
+            "LenetRuntime::accuracy requires the `xla-runtime` feature \
+             (PJRT/xla bindings are not in the offline crate cache; see rust/Cargo.toml)"
+        )
     }
 }
 

@@ -1,0 +1,100 @@
+//! Integration tests for the batched parallel evaluation pipeline:
+//! archive determinism (serial executor vs worker pool), genome memo
+//! cache behavior, and pooled-context reuse across placements.
+
+use neat::bench_suite::blackscholes::Blackscholes;
+use neat::coordinator::experiments::{explore_rule_with, Budget};
+use neat::coordinator::{EvalProblem, Evaluator, Executor, RuleKind};
+use neat::explore::{random_search, Problem};
+
+fn evaluator() -> Evaluator {
+    Evaluator::new(Box::new(Blackscholes { options: 60 }), None)
+}
+
+/// The acceptance bar: for a fixed seed the parallel batched search
+/// produces an archive identical to the serial path — same genomes,
+/// bit-identical objective values, same order.
+#[test]
+fn parallel_search_archive_identical_to_serial() {
+    let eval = evaluator();
+    let serial = explore_rule_with(&eval, RuleKind::Cip, Budget::quick(), Executor::serial());
+    let parallel = explore_rule_with(&eval, RuleKind::Cip, Budget::quick(), Executor::new(4));
+    assert_eq!(serial.details.len(), parallel.details.len());
+    for ((ga, da), (gb, db)) in serial.details.iter().zip(&parallel.details) {
+        assert_eq!(ga, gb, "genome order must match");
+        assert_eq!(da.error.to_bits(), db.error.to_bits());
+        assert_eq!(da.fpu_nec.to_bits(), db.fpu_nec.to_bits());
+        assert_eq!(da.mem_nec.to_bits(), db.mem_nec.to_bits());
+        assert_eq!(da.fpu_target_nec.to_bits(), db.fpu_target_nec.to_bits());
+    }
+}
+
+#[test]
+fn wp_sweep_identical_serial_vs_parallel() {
+    let eval = evaluator();
+    let serial = explore_rule_with(&eval, RuleKind::Wp, Budget::quick(), Executor::serial());
+    let parallel = explore_rule_with(&eval, RuleKind::Wp, Budget::quick(), Executor::new(3));
+    assert_eq!(serial.details.len(), 24);
+    for ((ga, da), (gb, db)) in serial.details.iter().zip(&parallel.details) {
+        assert_eq!(ga, gb);
+        assert_eq!(da.fpu_nec.to_bits(), db.fpu_nec.to_bits());
+    }
+}
+
+#[test]
+fn random_search_batches_identically() {
+    let eval = evaluator();
+    let ps = EvalProblem::with_executor(&eval, RuleKind::Cip, Executor::serial());
+    let pp = EvalProblem::with_executor(&eval, RuleKind::Cip, Executor::new(3));
+    let a = random_search(&ps, 20, 7);
+    let b = random_search(&pp, 20, 7);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.genome, y.genome);
+        assert_eq!(x.objectives, y.objectives);
+    }
+}
+
+/// Duplicate genomes are answered from the memo cache, and every call —
+/// hit or miss — still lands in the evaluation log.
+#[test]
+fn duplicate_genomes_hit_the_cache() {
+    let eval = evaluator();
+    let p = EvalProblem::with_executor(&eval, RuleKind::Cip, Executor::serial());
+    let g = vec![12u32; p.genome_len()];
+    let o1 = p.evaluate(&g);
+    let o2 = p.evaluate(&g);
+    assert_eq!(o1, o2);
+    assert_eq!(p.cache_stats(), (1, 1), "second call must be a hit");
+
+    // a batch with an internal duplicate and a cached genome: one new
+    // unique execution, two answered from cache/dedup
+    let h = vec![8u32; p.genome_len()];
+    let batch = vec![h.clone(), h.clone(), g.clone()];
+    let objs = p.evaluate_batch(&batch);
+    assert_eq!(objs[0], objs[1]);
+    let (hits, misses) = p.cache_stats();
+    assert_eq!(misses, 2, "only two unique genomes ever executed");
+    assert_eq!(hits, 3);
+    assert_eq!(p.take_details().len(), 5, "all five calls recorded");
+}
+
+/// The serial executor reuses one pooled context via `set_placement`
+/// across every task in a batch; results must match isolated
+/// evaluations with fresh contexts (no stale resolution-cache leaks
+/// across placements).
+#[test]
+fn pooled_context_reuse_matches_fresh_contexts() {
+    let eval = evaluator();
+    let genomes = vec![vec![24u32], vec![2u32], vec![24u32], vec![9u32]];
+    let batch = eval.evaluate_train_batch(RuleKind::Wp, &genomes, &Executor::serial());
+    for (g, d) in genomes.iter().zip(&batch) {
+        let solo = eval.evaluate_train(RuleKind::Wp, g);
+        assert_eq!(d.error.to_bits(), solo.error.to_bits());
+        assert_eq!(d.fpu_nec.to_bits(), solo.fpu_nec.to_bits());
+        assert_eq!(d.mem_nec.to_bits(), solo.mem_nec.to_bits());
+    }
+    // sanity: a stale 24-bit cache entry leaking into the 2-bit run
+    // would erase the energy gap
+    assert!(batch[1].fpu_nec < batch[0].fpu_nec);
+}
