@@ -1,0 +1,62 @@
+//! Heuristic tuning quickstart: instead of sweeping the whole Pareto
+//! front (see `quickstart.rs`), ask the deployment question directly —
+//! "how little energy can this program use while losing at most 1%
+//! accuracy?" — with the constraint-driven bit-descent tuner.
+//!
+//!     cargo run --release --example heuristic_tuning
+
+use neat::coordinator::{EvalProblem, Evaluator, Executor, RuleKind};
+use neat::tuner::Tuner;
+
+fn main() {
+    // Steps 1-2: profile the workload; the CIP rule gives every hot
+    // function its own mantissa width (one gene per function).
+    let workload = neat::bench_suite::by_name("blackscholes").unwrap();
+    let eval = Evaluator::new(workload, None);
+    println!(
+        "profiled: top functions = {:?} (target: {})",
+        eval.top_functions,
+        eval.target.name()
+    );
+
+    // The tuner talks to the same batched Problem the NSGA-II explorer
+    // uses, so every probe wave fans over the executor's worker pool.
+    let exec = Executor::default_parallel();
+    let problem = EvalProblem::with_executor(&eval, RuleKind::Cip, exec);
+
+    // One call: sensitivity-profile each function, start from the best
+    // feasible uniform width, then binary-search each gene downward —
+    // most error-insensitive function first — under a 1% error budget.
+    let result = Tuner::error_budget(0.01).run(&problem);
+
+    println!("\nsensitivity (most insensitive first):");
+    for r in &result.sensitivity {
+        println!(
+            "  {:<16} {:.3e} error/bit",
+            eval.top_functions[r.target], r.error_per_bit
+        );
+    }
+
+    println!("\naccepted bit descents:");
+    for s in &result.steps {
+        println!(
+            "  {:<16} {:>2} → {:>2} bits   err {:>6.3}%  NEC {:.4}",
+            eval.top_functions[s.target],
+            s.from,
+            s.to,
+            s.objectives.error * 100.0,
+            s.objectives.energy
+        );
+    }
+
+    println!(
+        "\ntuned widths {:?} for {:?}",
+        result.genome, eval.top_functions
+    );
+    println!(
+        "error {:.3}%  →  {:.1}% FPU energy savings ({} probes of ≤400)",
+        result.objectives.error * 100.0,
+        (1.0 - result.objectives.energy) * 100.0,
+        result.probes_used
+    );
+}

@@ -34,7 +34,7 @@ fn main() {
         ("quick NSGA-II search, 4 threads", Executor::new(4)),
     ] {
         let m = bench(label, 60, "configs", || {
-            std::hint::black_box(explore_rule_with(&eval, RuleKind::Cip, Budget::quick(), exec));
+            std::hint::black_box(explore_rule_with(&eval, RuleKind::Cip, Budget::quick(), &exec));
         });
         println!("{}", m.report());
         min_ns.push(
@@ -49,14 +49,11 @@ fn main() {
         );
     }
 
-    // WP exhaustive sweep (24 evaluations, one batch)
+    // WP exhaustive sweep (24 evaluations, one batch); the executor is
+    // hoisted so every iteration reuses the persistent pool
+    let exec = Executor::default_parallel();
     let m = bench("WP exhaustive sweep (24 evals)", 24, "configs", || {
-        std::hint::black_box(explore_rule_with(
-            &eval,
-            RuleKind::Wp,
-            Budget::quick(),
-            Executor::default_parallel(),
-        ));
+        std::hint::black_box(explore_rule_with(&eval, RuleKind::Wp, Budget::quick(), &exec));
     });
     println!("{}", m.report());
 }

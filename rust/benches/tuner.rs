@@ -1,0 +1,69 @@
+//! Bench: the heuristic tuner's probe pipeline — sensitivity-wave
+//! throughput through the batch executor (the tuner's hot path: one
+//! `evaluate_batch` call carrying the uniform ladder plus every
+//! per-target probe), and a full constraint-driven tune end to end.
+//!
+//!     cargo bench --bench tuner
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::bench;
+use neat::bench_suite::blackscholes::Blackscholes;
+use neat::coordinator::{EvalProblem, Evaluator, Executor, RuleKind};
+use neat::explore::Genome;
+use neat::tuner::{sensitivity, Tuner};
+
+fn main() {
+    println!("== heuristic tuner ==");
+    let eval = Evaluator::new(Box::new(Blackscholes::default()), None);
+    let len = eval.genome_len(RuleKind::Cip);
+
+    // the seed wave the tuner issues first: uniform ladder + per-target
+    // probe ladder, one batch (here ~24 + 3·len unique genomes)
+    let mut wave: Vec<Genome> = (1..=24u32).rev().map(|w| vec![w; len]).collect();
+    for t in 0..len {
+        for w in sensitivity::probe_widths(24) {
+            let mut g = vec![24u32; len];
+            g[t] = w;
+            wave.push(g);
+        }
+    }
+    let n_wave = wave.len() as u64;
+
+    let mut min_ns = Vec::new();
+    for (label, exec) in [
+        ("probe wave, serial", Executor::serial()),
+        ("probe wave, 2 threads", Executor::new(2)),
+        ("probe wave, 4 threads", Executor::new(4)),
+        ("probe wave, 8 threads", Executor::new(8)),
+    ] {
+        let m = bench(label, n_wave, "probes", || {
+            std::hint::black_box(eval.evaluate_train_batch(RuleKind::Cip, &wave, &exec));
+        });
+        println!("{}", m.report());
+        min_ns.push(
+            m.samples.iter().map(|d| d.as_nanos() as f64).fold(f64::INFINITY, f64::min),
+        );
+    }
+    for (i, threads) in [2usize, 4, 8].iter().enumerate() {
+        println!("wave speedup @{} threads: {:.2}x", threads, min_ns[0] / min_ns[i + 1]);
+    }
+
+    // the small-batch regime the persistent pool amortizes: repeated
+    // single-genome probes (a binary-search step per iteration)
+    let exec = Executor::new(4);
+    let single: Vec<Genome> = vec![vec![11u32; len]];
+    let m = bench("single-probe batch, 4-thread pool", 1, "probes", || {
+        std::hint::black_box(eval.evaluate_train_batch(RuleKind::Cip, &single, &exec));
+    });
+    println!("{}", m.report());
+
+    // full end-to-end tune at the paper's 1% budget (memoized inside
+    // one run, fresh problem per iteration)
+    let m = bench("full tune @1% (≤400 probes)", 1, "tunes", || {
+        let problem = EvalProblem::with_executor(&eval, RuleKind::Cip, exec.clone());
+        std::hint::black_box(Tuner::error_budget(0.01).run(&problem));
+    });
+    println!("{}", m.report());
+}

@@ -5,7 +5,9 @@
 //! runs. A generational explorer hands the coordinator a whole
 //! population of genomes at once ([`crate::explore::Problem::evaluate_batch`]),
 //! and this module turns that batch into `(unique genome × seed)` tasks
-//! fanned over a [`std::thread::scope`] worker pool:
+//! fanned over a persistent [`super::pool::WorkerPool`] (threads are
+//! spawned once per [`Executor`] and fed batches over a channel, so the
+//! tuner's many small probe batches don't pay spawn cost):
 //!
 //! * **dedup** — identical genomes (the two NSGA-II anchors, WP sweep
 //!   repeats, creep-mutation collisions) are evaluated once and their
@@ -26,7 +28,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::energy::estimate;
 use crate::engine::FpContext;
@@ -34,37 +36,56 @@ use crate::explore::Genome;
 use crate::placement::Placement;
 use crate::stats;
 
+use super::pool::WorkerPool;
 use super::{target_class_fpu_pj, EvalDetail, Evaluator, RuleKind, SeedBaseline};
 
-/// A worker pool configuration for batch evaluation. Cheap to copy;
-/// holds no threads — workers are scoped to each [`Executor::eval_batch`]
-/// call.
-#[derive(Debug, Clone, Copy)]
+/// A worker-pool handle for batch evaluation. Cheap to clone (clones
+/// share the pool). The OS threads are spawned lazily on the first
+/// parallel batch and then persist for the executor's lifetime, so a
+/// long sequence of small batches (the tuner's probe loop) pays thread
+/// spawn once, not per batch.
+#[derive(Clone)]
 pub struct Executor {
     threads: usize,
+    pool: Arc<OnceLock<WorkerPool>>,
+}
+
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executor")
+            .field("threads", &self.threads)
+            .field("pool_started", &self.pool.get().is_some())
+            .finish()
+    }
 }
 
 impl Executor {
     /// Single-threaded executor (the serial reference path — identical
-    /// results, still pools one context across the batch).
+    /// results, still pools one context across the batch). Never spawns
+    /// worker threads.
     pub fn serial() -> Self {
-        Self { threads: 1 }
+        Self::new(1)
     }
 
     /// Executor with a fixed worker count (≥ 1).
     pub fn new(threads: usize) -> Self {
-        Self { threads: threads.max(1) }
+        Self { threads: threads.max(1), pool: Arc::new(OnceLock::new()) }
     }
 
     /// One worker per available core.
     pub fn default_parallel() -> Self {
         let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        Self { threads }
+        Self::new(threads)
     }
 
     /// Configured worker count.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The shared persistent pool, spawned on first use.
+    fn pool(&self) -> &WorkerPool {
+        self.pool.get_or_init(|| WorkerPool::new(self.threads))
     }
 
     /// Evaluate a batch of genomes against one baseline set, returning
@@ -116,20 +137,19 @@ impl Executor {
             let workers = self.threads.min(n_tasks);
             let results = Mutex::new(vec![None; n_tasks]);
             let next = AtomicUsize::new(0);
-            std::thread::scope(|scope| {
-                for _ in 0..workers {
-                    scope.spawn(|| {
-                        let mut worker = Worker::new();
-                        loop {
-                            let t = next.fetch_add(1, Ordering::Relaxed);
-                            if t >= n_tasks {
-                                break;
-                            }
-                            let u = t / n_seeds;
-                            let m = worker.run(eval, u, &placements[u], &set[t % n_seeds]);
-                            results.lock().unwrap()[t] = Some(m);
-                        }
-                    });
+            // Each pooled thread claims tasks off the shared counter and
+            // writes into the task's slot; the per-batch `Worker` keeps
+            // the warm-context reuse exactly as the scoped version did.
+            self.pool().run_scoped(workers, &|| {
+                let mut worker = Worker::new();
+                loop {
+                    let t = next.fetch_add(1, Ordering::Relaxed);
+                    if t >= n_tasks {
+                        break;
+                    }
+                    let u = t / n_seeds;
+                    let m = worker.run(eval, u, &placements[u], &set[t % n_seeds]);
+                    results.lock().unwrap()[t] = Some(m);
                 }
             });
             results.into_inner().unwrap()
@@ -263,6 +283,27 @@ mod tests {
             assert_eq!(d.error.to_bits(), out[0].error.to_bits());
             assert_eq!(d.fpu_nec.to_bits(), out[0].fpu_nec.to_bits());
         }
+    }
+
+    #[test]
+    fn pool_persists_across_batches() {
+        let eval = Evaluator::new(
+            Box::new(crate::bench_suite::blackscholes::Blackscholes { options: 20 }),
+            None,
+        );
+        let exec = Executor::new(2);
+        let first = exec.eval_batch(&eval, RuleKind::Wp, &[vec![6u32], vec![9u32]], &eval.train);
+        assert!(exec.pool.get().is_some(), "first parallel batch must start the pool");
+        let pool_ptr = exec.pool.get().unwrap() as *const _;
+        let second = exec.eval_batch(&eval, RuleKind::Wp, &[vec![6u32], vec![9u32]], &eval.train);
+        assert_eq!(pool_ptr, exec.pool.get().unwrap() as *const _, "pool must be reused");
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(a.error.to_bits(), b.error.to_bits());
+        }
+        // clones share the same pool
+        let clone = exec.clone();
+        let _ = clone.eval_batch(&eval, RuleKind::Wp, &[vec![4u32]], &eval.train);
+        assert_eq!(pool_ptr, clone.pool.get().unwrap() as *const _);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 
 pub mod executor;
 pub mod experiments;
+pub mod pool;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -1,0 +1,236 @@
+//! A persistent, channel-fed worker pool for the batch executor.
+//!
+//! The first executor iteration spawned a fresh [`std::thread::scope`]
+//! per batch, which is fine for generation-sized batches (~40 genomes ×
+//! 5 seeds) but charges thread-spawn latency to every call — and the
+//! heuristic tuner ([`crate::tuner`]) issues *many small* probe batches
+//! (single-genome binary-search steps, per-target re-probe rounds), so
+//! the spawn cost would dominate. This pool spawns its OS threads once
+//! and feeds them per-batch jobs over a mutex+condvar queue.
+//!
+//! Scheduling only: the pool runs closures and reports completion. All
+//! value-determinism (slot-indexed reassembly, per-worker context
+//! pooling) stays in [`super::executor`], so the byte-identical-archive
+//! contract is untouched — a batch produces the same bits whether it
+//! runs on scoped threads, pooled threads, or serially.
+//!
+//! [`WorkerPool::run_scoped`] lets jobs borrow from the caller's stack
+//! the way scoped threads do: it blocks until every submitted job has
+//! finished before returning, which is what makes the (internal,
+//! documented) lifetime erasure sound.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A job handed to the pool. Lifetimes are erased by `run_scoped`; the
+/// blocking completion wait is what keeps the erased borrows alive.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    work_cv: Condvar,
+}
+
+/// Completion tracker for one `run_scoped` call.
+struct Batch {
+    done: Mutex<usize>,
+    done_cv: Condvar,
+    panicked: AtomicBool,
+}
+
+/// A fixed-size pool of long-lived worker threads.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` (≥ 1) workers, parked until jobs arrive.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue { jobs: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+        });
+        let handles = (0..threads)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        Self { shared, handles, threads }
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `n` copies of `body` concurrently across the pool and block
+    /// until all of them have returned. `body` may borrow caller-stack
+    /// data (like a scoped thread): the borrow cannot escape because
+    /// this function does not return until every copy has finished.
+    ///
+    /// Panics in `body` are caught per job so the pool survives; the
+    /// panic is re-raised here in the caller once the batch completes.
+    pub fn run_scoped<'env, F>(&self, n: usize, body: &'env F)
+    where
+        F: Fn() + Sync + 'env,
+    {
+        if n == 0 {
+            return;
+        }
+        let batch = Arc::new(Batch {
+            done: Mutex::new(0),
+            done_cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let mut q = self.shared.queue.lock().expect("pool queue poisoned");
+            for _ in 0..n {
+                let batch = Arc::clone(&batch);
+                let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                    // Signal completion from Drop so a panic still counts.
+                    struct Guard(Arc<Batch>, bool);
+                    impl Drop for Guard {
+                        fn drop(&mut self) {
+                            if self.1 {
+                                self.0.panicked.store(true, Ordering::SeqCst);
+                            }
+                            let mut done =
+                                self.0.done.lock().expect("batch lock poisoned");
+                            *done += 1;
+                            self.0.done_cv.notify_all();
+                        }
+                    }
+                    let mut guard = Guard(batch, true);
+                    if catch_unwind(AssertUnwindSafe(body)).is_ok() {
+                        guard.1 = false;
+                    }
+                });
+                // SAFETY: the job's captured `'env` borrows are only
+                // reachable until it runs, and this function blocks
+                // below until all `n` jobs have completed (the count is
+                // signalled from the Drop guard, so even a panicking job
+                // counts). `'env` therefore strictly outlives every job
+                // — the classic scoped-threadpool lifetime erasure.
+                let job: Job = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job)
+                };
+                q.jobs.push_back(job);
+            }
+            self.shared.work_cv.notify_all();
+        }
+        let mut done = batch.done.lock().expect("batch lock poisoned");
+        while *done < n {
+            done = batch.done_cv.wait(done).expect("batch lock poisoned");
+        }
+        drop(done);
+        if batch.panicked.load(Ordering::SeqCst) {
+            panic!("a worker-pool job panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().expect("pool queue poisoned");
+            q.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().expect("pool queue poisoned");
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    break Some(job);
+                }
+                if q.shutdown {
+                    break None;
+                }
+                q = shared.work_cv.wait(q).expect("pool queue poisoned");
+            }
+        };
+        match job {
+            Some(job) => job(),
+            None => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_all_jobs_and_blocks_until_done() {
+        let pool = WorkerPool::new(4);
+        let counter = AtomicUsize::new(0);
+        pool.run_scoped(8, &|| {
+            counter.fetch_add(1, Ordering::SeqCst);
+        });
+        // run_scoped returned, so every job must have finished
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn pool_survives_across_many_small_batches() {
+        let pool = WorkerPool::new(2);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run_scoped(2, &|| {
+                counter.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn jobs_can_borrow_caller_stack() {
+        let pool = WorkerPool::new(3);
+        let data: Vec<usize> = (0..100).collect();
+        let next = AtomicUsize::new(0);
+        let sum = AtomicUsize::new(0);
+        pool.run_scoped(3, &|| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= data.len() {
+                break;
+            }
+            sum.fetch_add(data[i], Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn panicking_job_does_not_wedge_the_pool() {
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_scoped(2, &|| panic!("boom"));
+        }));
+        assert!(r.is_err(), "panic must propagate to the caller");
+        // the pool still works afterwards
+        let counter = AtomicUsize::new(0);
+        pool.run_scoped(2, &|| {
+            counter.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 2);
+    }
+}

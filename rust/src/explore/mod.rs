@@ -27,8 +27,26 @@ pub struct Objectives {
 }
 
 impl Objectives {
+    /// Both objectives are finite (a workload that diverges under an
+    /// aggressive configuration can report NaN/∞ error).
+    pub fn is_finite(&self) -> bool {
+        self.error.is_finite() && self.energy.is_finite()
+    }
+
     /// Pareto dominance: at least as good in both, strictly better in one.
+    ///
+    /// Non-finite objectives are dominated by every finite point and
+    /// dominate nothing (two non-finite points are incomparable): with
+    /// plain `<=`/`<` a NaN objective would be incomparable with
+    /// *everything*, silently surviving into Pareto fronts and wedging
+    /// any accept test built on dominance.
     pub fn dominates(&self, other: &Objectives) -> bool {
+        if !self.is_finite() {
+            return false;
+        }
+        if !other.is_finite() {
+            return true;
+        }
         (self.error <= other.error && self.energy <= other.energy)
             && (self.error < other.error || self.energy < other.energy)
     }
@@ -122,5 +140,24 @@ mod tests {
         assert!(!b.dominates(&a));
         assert!(!a.dominates(&c) && !c.dominates(&a)); // incomparable
         assert!(!a.dominates(&a)); // not reflexive
+    }
+
+    #[test]
+    fn non_finite_objectives_are_dominated_by_everything() {
+        let ok = Objectives { error: 0.5, energy: 0.9 };
+        for bad in [
+            Objectives { error: f64::NAN, energy: 0.1 },
+            Objectives { error: 0.1, energy: f64::NAN },
+            Objectives { error: f64::INFINITY, energy: 0.1 },
+            Objectives { error: f64::NAN, energy: f64::NAN },
+        ] {
+            assert!(ok.dominates(&bad), "finite must dominate {bad:?}");
+            assert!(!bad.dominates(&ok), "{bad:?} must dominate nothing");
+            assert!(!bad.dominates(&bad));
+        }
+        // two non-finite points are incomparable, not mutually dominating
+        let n1 = Objectives { error: f64::NAN, energy: 0.2 };
+        let n2 = Objectives { error: 0.2, energy: f64::NAN };
+        assert!(!n1.dominates(&n2) && !n2.dominates(&n1));
     }
 }

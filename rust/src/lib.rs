@@ -32,10 +32,18 @@
 //! * [`coordinator`] — parallel configuration evaluation, the train/test
 //!   protocol, Pareto frontier extraction. Its `executor` module is the
 //!   batch engine: deduplicate the genome batch, fan `(genome × seed)`
-//!   tasks over a `std::thread::scope` worker pool where each worker
-//!   reuses one pooled `FpContext` via `set_placement`, reassemble
+//!   tasks over a persistent channel-fed worker pool (`coordinator::pool`,
+//!   threads spawned once per executor) where each worker reuses one
+//!   pooled `FpContext` via `set_placement`, reassemble
 //!   deterministically, and memoize per-genome results so revisited
 //!   configurations are never re-run,
+//! * [`tuner`] — the constraint-driven heuristic precision tuner (the
+//!   paper's "22% / 48% savings at 1% / 10% loss" mode): a one-batch
+//!   sensitivity-profiling pass ranks placement targets by error-per-bit,
+//!   then a greedy most-insensitive-first binary bit descent minimizes
+//!   energy under an error budget (or error under an energy budget),
+//!   re-probing after every accepted lowering, all within a ≤400-config
+//!   evaluation budget and entirely through `Problem::evaluate_batch`,
 //! * [`cnn`] + [`runtime`] — the LeNet-5 case study: the AOT-compiled
 //!   JAX/Pallas inference module executed via PJRT with per-layer
 //!   precision as a runtime input,
@@ -55,6 +63,7 @@ pub mod placement;
 pub mod report;
 pub mod runtime;
 pub mod stats;
+pub mod tuner;
 pub mod util;
 
 pub use engine::FpContext;

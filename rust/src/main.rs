@@ -17,13 +17,14 @@ use anyhow::{bail, Context, Result};
 
 use neat::bench_suite;
 use neat::coordinator::experiments::{self, Budget};
-use neat::coordinator::{Evaluator, Executor, RuleKind};
+use neat::coordinator::{EvalProblem, Evaluator, Executor, RuleKind};
 use neat::engine::profile::Profile;
 use neat::engine::FpContext;
 use neat::fpi::Precision;
 use neat::report::ResultsDir;
 use neat::runtime::{ArtifactPaths, LenetRuntime};
 use neat::stats::lower_convex_hull;
+use neat::tuner::{TuneGoal, Tuner, TunerConfig};
 
 fn usage() -> &'static str {
     "usage: neat <command>\n\
@@ -32,9 +33,14 @@ fn usage() -> &'static str {
        profile <benchmark>                     FLOP census (paper step 1)\n\
        explore <benchmark> [--rule wp|cip|fcs] [--target single|double]\n\
                [--population N] [--generations N] [--seed N] [--threads N]\n\
+       tune    <benchmark> [--rule wp|cip|fcs] [--target single|double]\n\
+               [--error-budget E | --energy-budget P] [--max-evals N]\n\
+               [--threads N]                   heuristic constraint-driven tuning\n\
+               (budgets are fractions: --error-budget 0.01 = 1% accuracy loss,\n\
+                --energy-budget 0.5 = half the baseline energy; default 0.01)\n\
        figure  <id|all>                        fig1 fig4 fig5 fig6 fig7 fig8\n\
                                                fig9 fig10 fig11 table1 table2\n\
-                                               table3 table5\n\
+                                               table3 table5 table6\n\
        ablation <id|all>                       topk random-vs-ga ga-budget fpi-mode\n\
        list                                    benchmarks and figure ids\n\
      \n\
@@ -60,7 +66,7 @@ fn parse_args(raw: &[String]) -> Args {
         let a = &raw[i];
         if let Some(name) = a.strip_prefix("--") {
             // value-taking flags; everything else is a switch
-            const VALUED: [&str; 8] = [
+            const VALUED: [&str; 11] = [
                 "rule",
                 "target",
                 "population",
@@ -69,6 +75,9 @@ fn parse_args(raw: &[String]) -> Args {
                 "results",
                 "artifacts",
                 "threads",
+                "error-budget",
+                "energy-budget",
+                "max-evals",
             ];
             if VALUED.contains(&name) && i + 1 < raw.len() {
                 flags.insert(name.to_string(), raw[i + 1].clone());
@@ -132,7 +141,7 @@ fn cmd_list() {
         );
     }
     println!("\nfigures: fig1 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11");
-    println!("tables:  table1 table2 table3 table5");
+    println!("tables:  table1 table2 table3 table5 table6");
     println!("ablations: topk random-vs-ga ga-budget fpi-mode");
 }
 
@@ -164,21 +173,29 @@ fn cmd_profile(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn parse_rule(args: &Args) -> Result<RuleKind> {
+    match args.flags.get("rule").map(String::as_str) {
+        None | Some("cip") => Ok(RuleKind::Cip),
+        Some("wp") => Ok(RuleKind::Wp),
+        Some("fcs") => Ok(RuleKind::Fcs),
+        Some(other) => bail!("unknown rule {other} (wp|cip|fcs)"),
+    }
+}
+
+fn parse_target(args: &Args) -> Result<Option<Precision>> {
+    match args.flags.get("target").map(String::as_str) {
+        None => Ok(None),
+        Some("single") => Ok(Some(Precision::Single)),
+        Some("double") => Ok(Some(Precision::Double)),
+        Some(other) => bail!("unknown target {other} (single|double)"),
+    }
+}
+
 fn cmd_explore(args: &Args) -> Result<()> {
     let name = args.positional.get(1).context("explore: missing benchmark name")?;
     let w = bench_suite::by_name(name).with_context(|| format!("unknown benchmark {name}"))?;
-    let rule = match args.flags.get("rule").map(String::as_str) {
-        None | Some("cip") => RuleKind::Cip,
-        Some("wp") => RuleKind::Wp,
-        Some("fcs") => RuleKind::Fcs,
-        Some(other) => bail!("unknown rule {other} (wp|cip|fcs)"),
-    };
-    let target = match args.flags.get("target").map(String::as_str) {
-        None => None,
-        Some("single") => Some(Precision::Single),
-        Some("double") => Some(Precision::Double),
-        Some(other) => bail!("unknown target {other} (single|double)"),
-    };
+    let rule = parse_rule(args)?;
+    let target = parse_target(args)?;
     let budget = args.budget();
     let exec = args.executor();
     eprintln!("profiling {name} and preparing baselines...");
@@ -191,7 +208,7 @@ fn cmd_explore(args: &Args) -> Result<()> {
         eval.genome_len(rule),
         exec.threads()
     );
-    let res = experiments::explore_rule_with(&eval, rule, budget, exec);
+    let res = experiments::explore_rule_with(&eval, rule, budget, &exec);
     let points = res.fpu_points();
     let hull = lower_convex_hull(&points);
     println!(
@@ -237,6 +254,118 @@ fn cmd_explore(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_tune(args: &Args) -> Result<()> {
+    let name = args.positional.get(1).context("tune: missing benchmark name")?;
+    let w = bench_suite::by_name(name).with_context(|| format!("unknown benchmark {name}"))?;
+    let rule = parse_rule(args)?;
+    let target = parse_target(args)?;
+    let goal = match (args.flags.get("error-budget"), args.flags.get("energy-budget")) {
+        (Some(_), Some(_)) => {
+            bail!("pass either --error-budget or --energy-budget, not both")
+        }
+        (None, None) => TuneGoal::ErrorBudget(0.01),
+        (Some(e), None) => TuneGoal::ErrorBudget(
+            e.parse().context("--error-budget must be a fraction, e.g. 0.01")?,
+        ),
+        (None, Some(p)) => TuneGoal::EnergyBudget(
+            p.parse().context("--energy-budget must be a fraction, e.g. 0.5")?,
+        ),
+    };
+    let max_evals: usize = match args.flags.get("max-evals") {
+        Some(v) => v.parse().context("--max-evals must be a positive integer")?,
+        None => 400,
+    };
+    let exec = args.executor();
+    eprintln!("profiling {name} and preparing baselines...");
+    let eval = Evaluator::new(w, target);
+    eprintln!(
+        "tuning {} / {} under {:?}: {} targets, ≤{} probes, {} worker threads",
+        name,
+        rule.name(),
+        goal,
+        eval.genome_len(rule),
+        max_evals,
+        exec.threads()
+    );
+    let problem = EvalProblem::with_executor(&eval, rule, exec.clone());
+    let result = Tuner::new(TunerConfig { goal, max_evals }).run(&problem);
+
+    let target_names: Vec<String> = match rule {
+        RuleKind::Wp => vec!["whole-program".to_string()],
+        RuleKind::Cip => eval.top_functions.clone(),
+        RuleKind::Fcs => eval.fcs_functions.clone(),
+    };
+    println!("sensitivity (most insensitive first):");
+    for r in &result.sensitivity {
+        println!(
+            "  {:<20} {:.3e} error/bit",
+            target_names[r.target], r.error_per_bit
+        );
+    }
+    println!("\naccepted bit descents:");
+    if result.steps.is_empty() {
+        println!("  (none — the starting configuration was already optimal)");
+    }
+    for s in &result.steps {
+        println!(
+            "  {:<20} {:>2} → {:>2} bits   err {:>7.3}%  NEC {:>7.4}",
+            target_names[s.target],
+            s.from,
+            s.to,
+            s.objectives.error * 100.0,
+            s.objectives.energy
+        );
+    }
+    println!(
+        "\ntuned configuration: [{}]",
+        result
+            .genome
+            .iter()
+            .map(|b| b.to_string())
+            .collect::<Vec<_>>()
+            .join(",")
+    );
+    println!(
+        "error {:.3}%  FPU NEC {:.4} ({:.1}% energy savings vs exact baseline)",
+        result.objectives.error * 100.0,
+        result.objectives.energy,
+        (1.0 - result.objectives.energy) * 100.0
+    );
+    let (hits, misses) = problem.cache_stats();
+    println!(
+        "probes: {} unique configurations (budget {max_evals}); executor cache {hits} hits / {misses} misses",
+        result.probes_used
+    );
+    if !result.feasible {
+        eprintln!(
+            "warning: no probed configuration satisfied the {} constraint; \
+             reporting the best-effort configuration",
+            goal.name()
+        );
+    }
+
+    let rd = args.results()?;
+    let rows: Vec<String> = result
+        .log
+        .iter()
+        .map(|(g, o)| {
+            format!(
+                "{:.6},{:.6},{}",
+                o.error,
+                o.energy,
+                g.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("|")
+            )
+        })
+        .collect();
+    let path = rd.write_csv(
+        &format!("tune_{}_{}.csv", name, rule.name().to_lowercase()),
+        "error,fpu_nec,genome",
+        rows,
+    )?;
+    eprintln!("wrote {}", path.display());
+    Ok(())
+}
+
 fn cmd_figure(args: &Args) -> Result<()> {
     let id = args.positional.get(1).map(String::as_str).unwrap_or("all");
     let rd = args.results()?;
@@ -246,23 +375,24 @@ fn cmd_figure(args: &Args) -> Result<()> {
     let text = match id {
         "all" => {
             let artifacts = args.artifacts();
-            experiments::run_all(&rd, budget, exec, Some(&artifacts), &mut log)?
+            experiments::run_all(&rd, budget, &exec, Some(&artifacts), &mut log)?
         }
         "fig1" => experiments::fig1(&rd)?,
         "table1" => experiments::table1(),
         "table2" => experiments::table2(&rd)?,
         "fig4" => experiments::fig4(&rd)?,
-        "fig5" | "fig6" | "fig7" | "table3" => {
-            let suite = experiments::explore_suite(budget, exec, &mut log);
+        "fig5" | "fig6" | "fig7" | "table3" | "table6" => {
+            let suite = experiments::explore_suite(budget, &exec, &mut log);
             match id {
                 "fig5" => experiments::fig5(&rd, &suite)?,
                 "fig6" => experiments::fig6(&rd, &suite)?,
                 "fig7" => experiments::fig7(&rd, &suite)?,
-                _ => experiments::table3(&rd, &suite, exec, &mut log)?,
+                "table6" => experiments::table6(&rd, &suite, &exec, &mut log)?,
+                _ => experiments::table3(&rd, &suite, &exec, &mut log)?,
             }
         }
-        "fig8" => experiments::fig8(&rd, budget, exec, &mut log)?,
-        "fig9" => experiments::fig9(&rd, budget, exec, &mut log)?,
+        "fig8" => experiments::fig8(&rd, budget, &exec, &mut log)?,
+        "fig9" => experiments::fig9(&rd, budget, &exec, &mut log)?,
         "fig10" | "fig11" | "table5" => {
             let paths = args.artifacts();
             if !paths.all_present() {
@@ -292,11 +422,11 @@ fn cmd_ablation(args: &Args) -> Result<()> {
         out.push('\n');
     }
     if matches!(id, "all" | "random-vs-ga") {
-        out.push_str(&experiments::ablation_random_vs_ga(&rd, budget, exec)?);
+        out.push_str(&experiments::ablation_random_vs_ga(&rd, budget, &exec)?);
         out.push('\n');
     }
     if matches!(id, "all" | "ga-budget") {
-        out.push_str(&experiments::ablation_ga_budget(&rd, exec)?);
+        out.push_str(&experiments::ablation_ga_budget(&rd, &exec)?);
         out.push('\n');
     }
     if matches!(id, "all" | "fpi-mode") {
@@ -321,6 +451,7 @@ fn main() -> ExitCode {
         }
         "profile" => cmd_profile(&args),
         "explore" => cmd_explore(&args),
+        "tune" => cmd_tune(&args),
         "figure" => cmd_figure(&args),
         "ablation" => cmd_ablation(&args),
         "" | "help" | "--help" | "-h" => {

@@ -1,0 +1,48 @@
+//! Per-layer heuristic tuning of the CNN case study (paper §V-H): the
+//! same constraint-driven descent, but over the LeNet-5 per-slot genome
+//! instead of per-function placements.
+//!
+//! [`CnnProblem`] already implements [`crate::explore::Problem`], so the
+//! tuner runs on it unchanged; probe batches stay serial inside
+//! `CnnProblem::evaluate_batch` (one PJRT executable — see
+//! [`crate::cnn`]) but every repeated configuration is answered by the
+//! problem's memo cache, which the tuner's small re-probe waves lean on
+//! heavily.
+
+use crate::cnn::CnnProblem;
+use crate::runtime::{NUM_SLOTS, SLOT_NAMES};
+
+use super::{TuneResult, Tuner, TunerConfig};
+
+/// Tune the CNN under a goal; returns the result plus the tuned genome
+/// expanded to the 8 per-slot widths the model consumes (a PLC genome
+/// ties categories, PLI is the identity).
+pub fn tune_cnn(problem: &CnnProblem<'_>, config: TunerConfig) -> (TuneResult, [u32; NUM_SLOTS]) {
+    let result = Tuner::new(config).run(problem);
+    let bits = problem.rule.expand(&result.genome);
+    (result, bits)
+}
+
+/// Render per-slot widths as a Table-V-style row ("conv1=12 pool1=8 …").
+pub fn slot_table(bits: &[u32; NUM_SLOTS]) -> String {
+    SLOT_NAMES
+        .iter()
+        .zip(bits)
+        .map(|(name, b)| format!("{name}={b}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_table_names_every_slot() {
+        let t = slot_table(&[12, 8, 12, 8, 12, 10, 20, 24]);
+        for name in SLOT_NAMES {
+            assert!(t.contains(name), "{t} missing {name}");
+        }
+        assert!(t.contains("conv1=12") && t.contains("internal=24"));
+    }
+}

@@ -1,0 +1,280 @@
+//! Greedy per-target bit descent under an explicit constraint — the
+//! paper's heuristic tuning mode ("up to 22% and 48% energy savings at
+//! 1% and 10% accuracy loss"), as opposed to the Pareto sweep the
+//! NSGA-II explorer produces.
+//!
+//! * **Error-budget mode** (minimize energy s.t. error ≤ ε): walk the
+//!   targets most-insensitive-first and binary-search each gene's
+//!   mantissa width down to the lowest width that keeps the whole
+//!   configuration inside the budget. After every accepted lowering the
+//!   remaining targets are re-probed (their sensitivities shift once a
+//!   neighbour loses bits), and full passes repeat until a pass changes
+//!   nothing or the evaluation budget is gone.
+//! * **Energy-budget mode** (minimize error s.t. energy ≤ ψ): the
+//!   inverse — start from the minimum-error (widest) uniform
+//!   configuration that fits the energy budget and greedily *raise* the
+//!   gene that buys the most error back while staying inside ψ; every
+//!   round's candidate raises are one `evaluate_batch` wave.
+//!
+//! Acceptance tests treat non-finite objectives as infeasible (see
+//! [`crate::explore::Objectives::dominates`] for the matching Pareto
+//! rule), so a diverging probe can never be accepted.
+
+use crate::explore::{Genome, Objectives};
+
+use super::probes::ProbeSet;
+use super::sensitivity::rank_targets;
+use super::TuneStep;
+
+/// Feasibility under the active goal.
+pub(super) fn feasible_error(o: &Objectives, eps: f64) -> bool {
+    o.is_finite() && o.error <= eps
+}
+
+pub(super) fn feasible_energy(o: &Objectives, psi: f64) -> bool {
+    o.is_finite() && o.energy <= psi
+}
+
+/// Binary-search the lowest feasible width for gene `target`, holding
+/// every other gene fixed. Accepts only moves that keep the error
+/// budget *and* do not increase energy, so the incumbent's energy is
+/// monotonically non-increasing across the whole descent. Returns the
+/// accepted step, if any.
+fn lower_target(
+    probes: &mut ProbeSet<'_>,
+    genome: &mut Genome,
+    incumbent: &mut Objectives,
+    target: usize,
+    eps: f64,
+) -> Option<TuneStep> {
+    let start = genome[target];
+    if start <= 1 {
+        return None;
+    }
+    let mut lo = 1u32;
+    let mut best_w = start;
+    let mut best_obj = *incumbent;
+    let mut hi = start; // `hi` is always a known-feasible width
+    while lo < hi {
+        let mid = (lo + hi) / 2; // mid < hi, so this always probes downward
+        let mut candidate = genome.clone();
+        candidate[target] = mid;
+        let Some(o) = probes.one(&candidate) else {
+            break; // evaluation budget exhausted mid-search
+        };
+        if feasible_error(&o, eps) && o.energy <= best_obj.energy {
+            best_w = mid;
+            best_obj = o;
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    if best_w < start {
+        genome[target] = best_w;
+        let step =
+            TuneStep { target, from: start, to: best_w, objectives: best_obj };
+        *incumbent = best_obj;
+        Some(step)
+    } else {
+        None
+    }
+}
+
+/// Error-budget descent from a feasible `genome`/`incumbent` pair.
+/// Mutates both to the tuned configuration and returns the accepted
+/// steps in order.
+pub(super) fn descend_error_budget(
+    probes: &mut ProbeSet<'_>,
+    genome: &mut Genome,
+    incumbent: &mut Objectives,
+    eps: f64,
+) -> Vec<TuneStep> {
+    let len = genome.len();
+    let mut steps = Vec::new();
+    loop {
+        let mut changed = false;
+        // One pass: targets leave `remaining` one at a time, most
+        // insensitive first, re-ranked after every accepted lowering.
+        let mut remaining: Vec<usize> = (0..len).filter(|&t| genome[t] > 1).collect();
+        while !remaining.is_empty() && probes.remaining() > 0 {
+            // ordering a single leftover target needs no re-probe —
+            // spend those evaluations on the binary search instead
+            let next = if remaining.len() == 1 {
+                remaining[0]
+            } else {
+                rank_targets(probes, genome, incumbent, &remaining)[0].target
+            };
+            remaining.retain(|&t| t != next);
+            if let Some(step) = lower_target(probes, genome, incumbent, next, eps) {
+                steps.push(step);
+                changed = true;
+            }
+        }
+        if !changed || probes.remaining() == 0 {
+            break;
+        }
+    }
+    steps
+}
+
+/// Energy-budget refinement from a feasible (energy ≤ ψ) incumbent:
+/// rounds of one-batch candidate waves, each raising a single gene part
+/// of the way back toward `max_bits`, accepting the feasible candidate
+/// with the largest error reduction. Stops when no candidate improves
+/// or the evaluation budget runs out.
+pub(super) fn ascend_energy_budget(
+    probes: &mut ProbeSet<'_>,
+    genome: &mut Genome,
+    incumbent: &mut Objectives,
+    psi: f64,
+    max_bits: u32,
+) -> Vec<TuneStep> {
+    let len = genome.len();
+    let mut steps = Vec::new();
+    loop {
+        // Candidate wave: for each raisable gene, a half-step up and a
+        // single-bit step up (the half-step converges fast, the 1-bit
+        // step can still squeeze under a tight ψ).
+        let mut plan: Vec<(usize, u32)> = Vec::new();
+        let mut wave: Vec<Genome> = Vec::new();
+        for t in 0..len {
+            let c = genome[t];
+            if c >= max_bits {
+                continue;
+            }
+            let half = c + (max_bits - c).div_ceil(2);
+            for w in [half, c + 1] {
+                if w > c && w <= max_bits && !plan.contains(&(t, w)) {
+                    let mut g = genome.clone();
+                    g[t] = w;
+                    plan.push((t, w));
+                    wave.push(g);
+                }
+            }
+        }
+        if wave.is_empty() || probes.remaining() == 0 {
+            break;
+        }
+        let results = probes.batch(&wave);
+        // Deterministic pick: biggest error drop, then lower energy,
+        // then lower target index.
+        let mut best: Option<(usize, u32, Objectives)> = None;
+        for ((t, w), res) in plan.iter().zip(&results) {
+            let Some(o) = res else { continue };
+            if !feasible_energy(o, psi) || o.error >= incumbent.error {
+                continue;
+            }
+            let better = match &best {
+                None => true,
+                Some((_, _, b)) => {
+                    o.error < b.error || (o.error == b.error && o.energy < b.energy)
+                }
+            };
+            if better {
+                best = Some((*t, *w, *o));
+            }
+        }
+        match best {
+            Some((t, w, o)) => {
+                steps.push(TuneStep { target: t, from: genome[t], to: w, objectives: o });
+                genome[t] = w;
+                *incumbent = o;
+            }
+            None => break,
+        }
+    }
+    steps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::FnProblem;
+
+    /// Additively separable toy: error grows as bits are removed, gene 0
+    /// twice as fast; energy is the mean width.
+    fn toy() -> FnProblem<impl Fn(&Genome) -> Objectives> {
+        FnProblem {
+            len: 3,
+            max_bits: 24,
+            f: |g: &Genome| {
+                let e = (24 - g[0]) as f64 * 0.002
+                    + (24 - g[1]) as f64 * 0.001
+                    + (24 - g[2]) as f64 * 0.001;
+                Objectives {
+                    error: e,
+                    energy: g.iter().sum::<u32>() as f64 / 72.0,
+                }
+            },
+        }
+    }
+
+    #[test]
+    fn error_descent_respects_budget_and_lowers_energy() {
+        let p = toy();
+        let mut probes = ProbeSet::new(&p, 400);
+        let mut genome = vec![24u32; 3];
+        let mut obj = Objectives { error: 0.0, energy: 1.0 };
+        let eps = 0.02;
+        let steps = descend_error_budget(&mut probes, &mut genome, &mut obj, eps);
+        assert!(!steps.is_empty());
+        assert!(obj.error <= eps + 1e-12, "final error {} > {eps}", obj.error);
+        assert!(obj.energy < 1.0, "descent must save energy");
+        // per-step invariants: error stays within budget, energy never rises
+        let mut last_energy = 1.0f64;
+        for s in &steps {
+            assert!(s.to < s.from);
+            assert!(s.objectives.error <= eps + 1e-12);
+            assert!(s.objectives.energy <= last_energy + 1e-12);
+            last_energy = s.objectives.energy;
+        }
+    }
+
+    #[test]
+    fn tighter_budget_keeps_more_bits() {
+        let p = toy();
+        let run = |eps: f64| {
+            let mut probes = ProbeSet::new(&p, 400);
+            let mut genome = vec![24u32; 3];
+            let mut obj = Objectives { error: 0.0, energy: 1.0 };
+            descend_error_budget(&mut probes, &mut genome, &mut obj, eps);
+            (genome, obj)
+        };
+        let (g_tight, o_tight) = run(0.005);
+        let (g_loose, o_loose) = run(0.05);
+        let sum = |g: &Genome| g.iter().sum::<u32>();
+        assert!(sum(&g_tight) >= sum(&g_loose));
+        assert!(o_tight.error <= o_loose.error + 1e-12);
+        assert!(o_loose.energy <= o_tight.energy + 1e-12);
+    }
+
+    #[test]
+    fn energy_ascent_buys_error_back_within_psi() {
+        let p = toy();
+        let psi = 0.5;
+        let mut probes = ProbeSet::new(&p, 400);
+        // start from the cheapest config (all-ones): max error, min energy
+        let mut genome = vec![1u32; 3];
+        let mut obj = Objectives { error: 23.0 * 0.004, energy: 3.0 / 72.0 };
+        let start_error = obj.error;
+        let steps = ascend_energy_budget(&mut probes, &mut genome, &mut obj, psi, 24);
+        assert!(!steps.is_empty());
+        assert!(obj.energy <= psi + 1e-12);
+        assert!(obj.error < start_error, "raising bits must reduce error");
+        for s in &steps {
+            assert!(s.to > s.from);
+            assert!(s.objectives.energy <= psi + 1e-12);
+        }
+    }
+
+    #[test]
+    fn descent_halts_on_probe_budget() {
+        let p = toy();
+        let mut probes = ProbeSet::new(&p, 8);
+        let mut genome = vec![24u32; 3];
+        let mut obj = Objectives { error: 0.0, energy: 1.0 };
+        descend_error_budget(&mut probes, &mut genome, &mut obj, 0.05);
+        assert!(probes.used() <= 8);
+    }
+}

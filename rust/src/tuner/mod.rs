@@ -1,0 +1,399 @@
+//! Constraint-driven heuristic precision tuning (the paper's headline
+//! mode: "heuristic precision tuning at the function level provides up
+//! to 22% and 48% energy savings at 1% and 10% accuracy loss").
+//!
+//! Where the NSGA-II explorer ([`crate::explore`]) sweeps the whole
+//! error/energy Pareto front, the tuner answers the deployment question
+//! directly: *given this accuracy budget, which per-target mantissa
+//! widths minimize energy?* (or, inverted: *given this energy budget,
+//! how accurate can the program stay?*). It works against the same
+//! [`Problem`] abstraction as the explorers and is therefore rule- and
+//! workload-agnostic — per-function CIP/FCS genomes, the single WP
+//! slot, and the CNN's per-layer slots all tune through the same code.
+//!
+//! The algorithm (cf. Chen et al., "Floating-point autotuning with
+//! customized precisions", and Yesil et al., "On Dynamic Precision
+//! Scaling" — both tune per-region precision against an explicit
+//! constraint rather than sweeping a front):
+//!
+//! 1. **Seed wave** ([`sensitivity`]) — one `evaluate_batch` call
+//!    carrying the exact baseline, the full uniform-width ladder, and a
+//!    per-target probe ladder. From it: the starting configuration (the
+//!    best feasible uniform one, so the tuner starts no worse than the
+//!    best single width *in this genome space* — exactly the WP sweep
+//!    whenever the rule's targets cover the program's FLOPs, e.g. the
+//!    WP rule itself or full-coverage benchmarks; the paper's top-10
+//!    cutoff keeps that coverage ≥98%) and an error-per-bit ranking of
+//!    every target.
+//! 2. **Greedy bit descent** ([`descent`]) — most-insensitive target
+//!    first, binary-search each gene's width down to the lowest
+//!    feasible value; re-probe the remaining targets after every
+//!    accepted lowering; repeat passes to a fixed point.
+//! 3. **Budget** ([`probes`]) — everything above flows through one
+//!    budgeted probe front-end (≤ 400 unique configurations by default,
+//!    §V-A) that only ever calls [`Problem::evaluate_batch`], so the
+//!    batch executor parallelizes every wave.
+
+pub mod cnn;
+mod descent;
+pub mod probes;
+pub mod sensitivity;
+
+use crate::explore::{Genome, Objectives, Problem};
+
+use descent::{ascend_energy_budget, descend_error_budget, feasible_energy, feasible_error};
+use probes::ProbeSet;
+use sensitivity::rank_targets;
+pub use sensitivity::SensitivityRank;
+
+/// What the tuner is asked to hold constant (paper abstract: both
+/// directions of the accuracy/energy exchange).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TuneGoal {
+    /// Minimize energy subject to `error ≤ ε` (0.01 = 1% accuracy loss).
+    ErrorBudget(f64),
+    /// Minimize error subject to `normalized energy ≤ ψ` (0.5 = half the
+    /// exact baseline's energy).
+    EnergyBudget(f64),
+}
+
+impl TuneGoal {
+    /// Stable name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TuneGoal::ErrorBudget(_) => "error-budget",
+            TuneGoal::EnergyBudget(_) => "energy-budget",
+        }
+    }
+
+    fn feasible(&self, o: &Objectives) -> bool {
+        match *self {
+            TuneGoal::ErrorBudget(eps) => feasible_error(o, eps),
+            TuneGoal::EnergyBudget(psi) => feasible_energy(o, psi),
+        }
+    }
+
+    /// The objective minimized under this goal.
+    fn score(&self, o: &Objectives) -> f64 {
+        match self {
+            TuneGoal::ErrorBudget(_) => o.energy,
+            TuneGoal::EnergyBudget(_) => o.error,
+        }
+    }
+}
+
+/// Tuner knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct TunerConfig {
+    /// The constraint to tune against.
+    pub goal: TuneGoal,
+    /// Evaluation budget: unique configurations probed (§V-A: ≤ 400).
+    pub max_evals: usize,
+}
+
+impl TunerConfig {
+    /// Default budget for a goal.
+    pub fn new(goal: TuneGoal) -> Self {
+        Self { goal, max_evals: 400 }
+    }
+}
+
+/// One accepted width change.
+#[derive(Debug, Clone, Copy)]
+pub struct TuneStep {
+    /// Gene index (placement target).
+    pub target: usize,
+    /// Width before.
+    pub from: u32,
+    /// Width after.
+    pub to: u32,
+    /// Whole-configuration objectives after the change.
+    pub objectives: Objectives,
+}
+
+/// The tuner's output.
+#[derive(Debug, Clone)]
+pub struct TuneResult {
+    /// The tuned configuration.
+    pub genome: Genome,
+    /// Its objectives.
+    pub objectives: Objectives,
+    /// Objectives of the exact (all-max-width) configuration.
+    pub baseline: Objectives,
+    /// Whether `genome` satisfies the goal's constraint. `false` only
+    /// when *no* probed configuration was feasible (e.g. an error
+    /// budget below the noise floor); `genome` is then the
+    /// lowest-score configuration seen.
+    pub feasible: bool,
+    /// Unique configurations probed (≤ `TunerConfig::max_evals`).
+    pub probes_used: usize,
+    /// Initial sensitivity ranking, most insensitive first.
+    pub sensitivity: Vec<SensitivityRank>,
+    /// Accepted width changes, in order.
+    pub steps: Vec<TuneStep>,
+    /// Every probed `(genome, objectives)`, submission order — the
+    /// tuner's analogue of the explorer archives the figures plot.
+    pub log: Vec<(Genome, Objectives)>,
+}
+
+/// The heuristic tuner. Deterministic: no RNG anywhere, ties broken by
+/// target index, so a serial and a parallel executor produce identical
+/// results for identical problems.
+pub struct Tuner {
+    config: TunerConfig,
+}
+
+impl Tuner {
+    /// Create a tuner.
+    pub fn new(config: TunerConfig) -> Self {
+        Self { config }
+    }
+
+    /// Convenience: error-budget tuner at the default evaluation budget.
+    pub fn error_budget(eps: f64) -> Self {
+        Self::new(TunerConfig::new(TuneGoal::ErrorBudget(eps)))
+    }
+
+    /// Convenience: energy-budget tuner at the default evaluation budget.
+    pub fn energy_budget(psi: f64) -> Self {
+        Self::new(TunerConfig::new(TuneGoal::EnergyBudget(psi)))
+    }
+
+    /// Tune `problem` under the configured constraint.
+    pub fn run(&self, problem: &dyn Problem) -> TuneResult {
+        let len = problem.genome_len();
+        let hi = problem.max_bits();
+        let goal = self.config.goal;
+        let mut probes = ProbeSet::new(problem, self.config.max_evals);
+
+        // ---- seed wave: baseline + uniform ladder + sensitivity probes,
+        // all in one evaluate_batch call. Starting from the ladder's best
+        // feasible rung, plus the descent's never-raise-energy accept
+        // rule, guarantees the result is never worse than the best
+        // uniform configuration of this genome space (which coincides
+        // with the WP sweep when the rule's targets cover all FLOPs).
+        let baseline_genome: Genome = vec![hi; len];
+        let mut wave: Vec<Genome> = (1..=hi).rev().map(|w| vec![w; len]).collect();
+        let sens_targets: Vec<usize> = (0..len).collect();
+        for &t in &sens_targets {
+            for w in sensitivity::probe_widths(hi) {
+                let mut g = baseline_genome.clone();
+                g[t] = w;
+                wave.push(g);
+            }
+        }
+        let wave_results = probes.batch(&wave);
+        let baseline = wave_results[0].unwrap_or(Objectives {
+            error: f64::NAN,
+            energy: f64::NAN,
+        });
+
+        // Starting point: best-scoring feasible ladder rung (descending
+        // width order, strict improvement — deterministic).
+        let mut start: Option<(Genome, Objectives)> = None;
+        for (g, res) in wave.iter().zip(&wave_results).take(hi as usize) {
+            let Some(o) = res else { continue };
+            if !goal.feasible(o) {
+                continue;
+            }
+            let better = match &start {
+                None => true,
+                Some((_, s)) => goal.score(o) < goal.score(s),
+            };
+            if better {
+                start = Some((g.clone(), *o));
+            }
+        }
+
+        // Initial sensitivity ranking (answered from the seed wave's
+        // memoized probes — no extra evaluations).
+        let sens_ref = if baseline.is_finite() {
+            baseline
+        } else {
+            Objectives { error: 0.0, energy: 1.0 }
+        };
+        let sensitivity = rank_targets(&mut probes, &baseline_genome, &sens_ref, &sens_targets);
+
+        let (mut genome, mut incumbent, feasible) = match start {
+            Some((g, o)) => (g, o, true),
+            None => {
+                // Nothing feasible anywhere on the ladder: return the
+                // least-bad configuration probed so far.
+                let fallback = self.least_bad(&probes, &baseline_genome, &baseline);
+                return TuneResult {
+                    genome: fallback.0,
+                    objectives: fallback.1,
+                    baseline,
+                    feasible: false,
+                    probes_used: probes.used(),
+                    sensitivity,
+                    steps: Vec::new(),
+                    log: probes.into_log(),
+                };
+            }
+        };
+
+        // ---- greedy refinement under the goal.
+        let steps = match goal {
+            TuneGoal::ErrorBudget(eps) => {
+                descend_error_budget(&mut probes, &mut genome, &mut incumbent, eps)
+            }
+            TuneGoal::EnergyBudget(psi) => {
+                ascend_energy_budget(&mut probes, &mut genome, &mut incumbent, psi, hi)
+            }
+        };
+
+        TuneResult {
+            genome,
+            objectives: incumbent,
+            baseline,
+            feasible,
+            probes_used: probes.used(),
+            sensitivity,
+            steps,
+            log: probes.into_log(),
+        }
+    }
+
+    /// Lowest-score probed configuration (infeasible fallback).
+    fn least_bad(
+        &self,
+        probes: &ProbeSet<'_>,
+        baseline_genome: &Genome,
+        baseline: &Objectives,
+    ) -> (Genome, Objectives) {
+        let goal = self.config.goal;
+        let mut best: Option<(Genome, Objectives)> = None;
+        for (g, o) in probes.log() {
+            if !o.is_finite() {
+                continue;
+            }
+            let better = match &best {
+                None => true,
+                Some((_, b)) => goal.score(o) < goal.score(b),
+            };
+            if better {
+                best = Some((g.clone(), *o));
+            }
+        }
+        best.unwrap_or_else(|| (baseline_genome.clone(), *baseline))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::FnProblem;
+
+    /// Separable toy with per-gene sensitivities 2:1:1 (same shape as
+    /// the descent tests).
+    fn toy() -> FnProblem<impl Fn(&Genome) -> Objectives> {
+        FnProblem {
+            len: 3,
+            max_bits: 24,
+            f: |g: &Genome| Objectives {
+                error: (24 - g[0]) as f64 * 0.002
+                    + (24 - g[1]) as f64 * 0.001
+                    + (24 - g[2]) as f64 * 0.001,
+                energy: g.iter().sum::<u32>() as f64 / 72.0,
+            },
+        }
+    }
+
+    #[test]
+    fn error_budget_tune_beats_best_uniform() {
+        let p = toy();
+        let eps = 0.02;
+        let result = Tuner::error_budget(eps).run(&p);
+        assert!(result.feasible);
+        assert!(result.objectives.error <= eps + 1e-12);
+        // best uniform width w satisfies 4*(24-w)*0.001 <= 0.02 → w = 19,
+        // energy 19/24; per-gene descent must do at least as well
+        let best_uniform_energy = 19.0 / 24.0;
+        assert!(
+            result.objectives.energy <= best_uniform_energy + 1e-12,
+            "tuned energy {} worse than best uniform {}",
+            result.objectives.energy,
+            best_uniform_energy
+        );
+        assert!(result.probes_used <= 400);
+        assert_eq!(result.baseline.error, 0.0);
+    }
+
+    #[test]
+    fn insensitive_genes_end_lower() {
+        let p = toy();
+        let result = Tuner::error_budget(0.02).run(&p);
+        // gene 0 is twice as sensitive: it must keep at least as many
+        // bits as the cheap genes
+        assert!(result.genome[0] >= result.genome[1]);
+        assert!(result.genome[0] >= result.genome[2]);
+        // and the ranking must have noticed
+        assert_eq!(result.sensitivity.last().unwrap().target, 0);
+    }
+
+    #[test]
+    fn energy_budget_tune_is_inverse() {
+        let p = toy();
+        let psi = 0.5;
+        let result = Tuner::energy_budget(psi).run(&p);
+        assert!(result.feasible);
+        assert!(result.objectives.energy <= psi + 1e-12);
+        // with 36 total bits available at energy 0.5, the sensitive gene
+        // should be prioritized back up
+        assert!(result.objectives.error < 0.092, "error must improve on all-ones");
+    }
+
+    #[test]
+    fn infeasible_budget_reports_not_feasible() {
+        let p = FnProblem {
+            len: 2,
+            max_bits: 24,
+            f: |g: &Genome| Objectives {
+                error: 0.5, // nothing ever fits a 1% budget
+                energy: g.iter().sum::<u32>() as f64 / 48.0,
+            },
+        };
+        let result = Tuner::error_budget(0.01).run(&p);
+        assert!(!result.feasible);
+        assert!(result.steps.is_empty());
+        assert!(result.probes_used <= 400);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let p = toy();
+        let a = Tuner::error_budget(0.013).run(&p);
+        let b = Tuner::error_budget(0.013).run(&p);
+        assert_eq!(a.genome, b.genome);
+        assert_eq!(a.objectives.error.to_bits(), b.objectives.error.to_bits());
+        assert_eq!(a.objectives.energy.to_bits(), b.objectives.energy.to_bits());
+        assert_eq!(a.probes_used, b.probes_used);
+    }
+
+    #[test]
+    fn budget_ceiling_holds_even_when_tiny() {
+        let p = toy();
+        let config =
+            TunerConfig { goal: TuneGoal::ErrorBudget(0.02), max_evals: 12 };
+        let result = Tuner::new(config).run(&p);
+        assert!(result.probes_used <= 12);
+        assert_eq!(result.log.len(), result.probes_used);
+    }
+
+    #[test]
+    fn wp_single_gene_space_degenerates_to_ladder_pick() {
+        let p = FnProblem {
+            len: 1,
+            max_bits: 24,
+            f: |g: &Genome| Objectives {
+                error: (24 - g[0]) as f64 * 0.01,
+                energy: g[0] as f64 / 24.0,
+            },
+        };
+        let result = Tuner::error_budget(0.05).run(&p);
+        // best feasible: 24 - w <= 5 → w = 19
+        assert_eq!(result.genome, vec![19]);
+        assert!(result.feasible);
+    }
+}

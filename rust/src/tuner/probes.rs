@@ -1,0 +1,153 @@
+//! Budgeted probe submission for the tuner.
+//!
+//! Every configuration the tuner looks at goes through [`ProbeSet`],
+//! which enforces the §V-A evaluation budget (≤400 configurations) and
+//! funnels *all* evaluations through [`Problem::evaluate_batch`] — the
+//! tuner never calls `Problem::evaluate` directly, so probes fan across
+//! whatever worker pool the batch executor provides.
+//!
+//! A tuner-side memo keeps re-probed configurations (the current
+//! incumbent, ladder/sensitivity collisions, binary-search revisits)
+//! from burning budget: only *novel* genomes are submitted, so
+//! `used()` counts unique configurations, matching how the paper counts
+//! its budget. The coordinator's own genome cache then guarantees the
+//! executed count can only be lower still.
+
+use std::collections::HashMap;
+
+use crate::explore::{Genome, Objectives, Problem};
+
+/// Budget-enforcing, memoizing front-end over [`Problem::evaluate_batch`].
+pub struct ProbeSet<'a> {
+    problem: &'a dyn Problem,
+    max_evals: usize,
+    used: usize,
+    seen: HashMap<Genome, Objectives>,
+    log: Vec<(Genome, Objectives)>,
+}
+
+impl<'a> ProbeSet<'a> {
+    /// Wrap a problem under an evaluation budget (clamped ≥ 1).
+    pub fn new(problem: &'a dyn Problem, max_evals: usize) -> Self {
+        Self {
+            problem,
+            max_evals: max_evals.max(1),
+            used: 0,
+            seen: HashMap::new(),
+            log: Vec::new(),
+        }
+    }
+
+    /// Unique configurations submitted so far.
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    /// Budget still available.
+    pub fn remaining(&self) -> usize {
+        self.max_evals - self.used
+    }
+
+    /// Evaluate a set of genomes in **one** `evaluate_batch` call.
+    /// Returns one entry per input genome, input order: `Some` if the
+    /// genome was already known or fit inside the remaining budget,
+    /// `None` if the budget ran out before reaching it.
+    pub fn batch(&mut self, genomes: &[Genome]) -> Vec<Option<Objectives>> {
+        let mut novel: Vec<Genome> = Vec::new();
+        for g in genomes {
+            if self.seen.contains_key(g) || novel.contains(g) {
+                continue;
+            }
+            if novel.len() >= self.remaining() {
+                continue; // over budget: dropped, reported as None below
+            }
+            novel.push(g.clone());
+        }
+        if !novel.is_empty() {
+            let objectives = self.problem.evaluate_batch(&novel);
+            assert_eq!(objectives.len(), novel.len(), "evaluate_batch must be 1:1");
+            self.used += novel.len();
+            for (g, o) in novel.into_iter().zip(objectives) {
+                self.log.push((g.clone(), o));
+                self.seen.insert(g, o);
+            }
+        }
+        genomes.iter().map(|g| self.seen.get(g).copied()).collect()
+    }
+
+    /// Evaluate one genome (still via `evaluate_batch`); `None` when the
+    /// budget is exhausted and the genome is not already known.
+    pub fn one(&mut self, genome: &Genome) -> Option<Objectives> {
+        self.batch(std::slice::from_ref(genome)).pop().flatten()
+    }
+
+    /// Every novel `(genome, objectives)` pair so far, submission order.
+    pub fn log(&self) -> &[(Genome, Objectives)] {
+        &self.log
+    }
+
+    /// Consume the probe set, yielding the full log.
+    pub fn into_log(self) -> Vec<(Genome, Objectives)> {
+        self.log
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::FnProblem;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn counted_problem(
+        counter: &AtomicUsize,
+    ) -> FnProblem<impl Fn(&Genome) -> Objectives + '_> {
+        FnProblem {
+            len: 2,
+            max_bits: 24,
+            f: move |g: &Genome| {
+                counter.fetch_add(1, Ordering::SeqCst);
+                Objectives { error: g[0] as f64, energy: g[1] as f64 }
+            },
+        }
+    }
+
+    #[test]
+    fn memo_avoids_resubmitting_known_genomes() {
+        let calls = AtomicUsize::new(0);
+        let p = counted_problem(&calls);
+        let mut probes = ProbeSet::new(&p, 10);
+        let g = vec![3u32, 4];
+        assert!(probes.one(&g).is_some());
+        assert!(probes.one(&g).is_some());
+        assert_eq!(calls.load(Ordering::SeqCst), 1, "repeat probe must be memoized");
+        assert_eq!(probes.used(), 1);
+    }
+
+    #[test]
+    fn budget_is_a_hard_ceiling() {
+        let calls = AtomicUsize::new(0);
+        let p = counted_problem(&calls);
+        let mut probes = ProbeSet::new(&p, 3);
+        let genomes: Vec<Genome> = (0..5).map(|k| vec![k, k]).collect();
+        let out = probes.batch(&genomes);
+        assert_eq!(out.iter().filter(|o| o.is_some()).count(), 3);
+        assert!(out[3].is_none() && out[4].is_none());
+        assert_eq!(probes.used(), 3);
+        assert_eq!(probes.remaining(), 0);
+        assert!(probes.one(&vec![9, 9]).is_none());
+        // ...but known genomes still answer from the memo at zero cost
+        assert!(probes.one(&vec![0, 0]).is_some());
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn duplicates_within_a_batch_count_once() {
+        let calls = AtomicUsize::new(0);
+        let p = counted_problem(&calls);
+        let mut probes = ProbeSet::new(&p, 10);
+        let g = vec![1u32, 2];
+        let out = probes.batch(&[g.clone(), g.clone(), g.clone()]);
+        assert!(out.iter().all(|o| o.is_some()));
+        assert_eq!(probes.used(), 1);
+    }
+}

@@ -1,0 +1,184 @@
+//! Sensitivity profiling (the tuner's analogue of the paper's step-1
+//! profile): measure how much output error each placement target
+//! (function / layer / WP slot) induces per mantissa bit removed.
+//!
+//! All probes for one profiling pass are assembled up front and issued
+//! as **one** [`crate::explore::Problem::evaluate_batch`] call, so they
+//! fan across the batch executor's worker pool in a single wave.
+
+use crate::explore::{Genome, Objectives};
+
+use super::probes::ProbeSet;
+
+/// One target's measured sensitivity.
+#[derive(Debug, Clone, Copy)]
+pub struct SensitivityRank {
+    /// Gene index (placement target).
+    pub target: usize,
+    /// Mean error increase per mantissa bit removed, measured against
+    /// the reference genome over the probes that came back finite.
+    /// `f64::INFINITY` when no usable probe exists (every probe
+    /// diverged, fell outside the evaluation budget, or the target is
+    /// already at 1 bit) — conservatively maximally sensitive.
+    pub error_per_bit: f64,
+}
+
+/// Probe widths for one target currently at `width`: a short descending
+/// ladder (¾, ½, ¼ of the way down to 1 bit), deduplicated and strictly
+/// below `width`.
+pub fn probe_widths(width: u32) -> Vec<u32> {
+    let mut widths: Vec<u32> = [3, 2, 1]
+        .iter()
+        .map(|&q| 1 + (width.saturating_sub(1)) * q / 4)
+        .filter(|&w| w < width)
+        .collect();
+    widths.dedup();
+    widths
+}
+
+/// Profile the sensitivity of `targets` around `reference` (whose
+/// objectives are `ref_obj`), ranking them **most insensitive first** —
+/// the order the greedy descent should attack them in. One
+/// `evaluate_batch` call for the whole pass; targets whose probes fall
+/// outside the remaining evaluation budget keep a conservative
+/// `INFINITY` sensitivity (never lowered early).
+pub fn rank_targets(
+    probes: &mut ProbeSet<'_>,
+    reference: &Genome,
+    ref_obj: &Objectives,
+    targets: &[usize],
+) -> Vec<SensitivityRank> {
+    // Assemble the whole probe wave first: (target, probed width) plan.
+    let mut plan: Vec<(usize, u32)> = Vec::new();
+    let mut wave: Vec<Genome> = Vec::new();
+    for &t in targets {
+        for w in probe_widths(reference[t]) {
+            let mut g = reference.clone();
+            g[t] = w;
+            plan.push((t, w));
+            wave.push(g);
+        }
+    }
+    let results = probes.batch(&wave);
+
+    let mut ranks: Vec<SensitivityRank> = targets
+        .iter()
+        .map(|&t| {
+            let mut per_bit_sum = 0.0f64;
+            let mut n = 0usize;
+            for ((pt, w), res) in plan.iter().zip(&results) {
+                if *pt != t {
+                    continue;
+                }
+                let Some(o) = res else { continue }; // budget-dropped probe
+                if !o.is_finite() {
+                    continue; // diverged probe: skip, keep the valid ones
+                }
+                let bits_removed = (reference[t] - w) as f64;
+                per_bit_sum += (o.error - ref_obj.error).max(0.0) / bits_removed.max(1.0);
+                n += 1;
+            }
+            let error_per_bit = if n == 0 {
+                // no usable probe (budget out / already at 1 bit / every
+                // probe diverged): conservatively maximally sensitive
+                f64::INFINITY
+            } else {
+                per_bit_sum / n as f64
+            };
+            SensitivityRank { target: t, error_per_bit }
+        })
+        .collect();
+
+    // Most insensitive first; ties broken by target index so the order —
+    // and therefore the whole tune — is deterministic.
+    ranks.sort_by(|a, b| {
+        a.error_per_bit
+            .partial_cmp(&b.error_per_bit)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.target.cmp(&b.target))
+    });
+    ranks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::{FnProblem, Problem};
+
+    #[test]
+    fn probe_widths_descend_and_stay_below() {
+        for width in [24u32, 53, 8, 3, 2] {
+            let ws = probe_widths(width);
+            assert!(ws.iter().all(|&w| (1..width).contains(&w)), "{width}: {ws:?}");
+            assert!(ws.windows(2).all(|p| p[0] > p[1]), "{width}: {ws:?} not descending");
+        }
+        assert!(probe_widths(1).is_empty(), "nothing below 1 bit");
+    }
+
+    #[test]
+    fn ranking_orders_insensitive_targets_first() {
+        // gene 0 is 10× more error-sensitive than gene 2; gene 1 inert
+        let p = FnProblem {
+            len: 3,
+            max_bits: 24,
+            f: |g: &Genome| Objectives {
+                error: (24 - g[0]) as f64 * 10.0 + (24 - g[2]) as f64,
+                energy: g.iter().sum::<u32>() as f64 / 72.0,
+            },
+        };
+        let reference = vec![24u32; 3];
+        let ref_obj = p.evaluate(&reference);
+        let mut probes = ProbeSet::new(&p, 400);
+        let ranks = rank_targets(&mut probes, &reference, &ref_obj, &[0, 1, 2]);
+        let order: Vec<usize> = ranks.iter().map(|r| r.target).collect();
+        assert_eq!(order, vec![1, 2, 0], "insensitive first, got {ranks:?}");
+        assert!(ranks[0].error_per_bit < 1e-12);
+    }
+
+    #[test]
+    fn one_wave_per_ranking_call() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let batches = AtomicUsize::new(0);
+        struct CountingProblem<'a>(&'a AtomicUsize);
+        impl Problem for CountingProblem<'_> {
+            fn genome_len(&self) -> usize {
+                4
+            }
+            fn max_bits(&self) -> u32 {
+                24
+            }
+            fn evaluate(&self, g: &Genome) -> Objectives {
+                Objectives { error: 0.0, energy: g[0] as f64 }
+            }
+            fn evaluate_batch(&self, genomes: &[Genome]) -> Vec<Objectives> {
+                self.0.fetch_add(1, Ordering::SeqCst);
+                genomes.iter().map(|g| self.evaluate(g)).collect()
+            }
+        }
+        let p = CountingProblem(&batches);
+        let reference = vec![24u32; 4];
+        let ref_obj = Objectives { error: 0.0, energy: 24.0 };
+        let mut probes = ProbeSet::new(&p, 400);
+        rank_targets(&mut probes, &reference, &ref_obj, &[0, 1, 2, 3]);
+        assert_eq!(batches.load(Ordering::SeqCst), 1, "sensitivity pass must be one batch");
+    }
+
+    #[test]
+    fn diverging_target_ranks_last() {
+        let p = FnProblem {
+            len: 2,
+            max_bits: 24,
+            f: |g: &Genome| Objectives {
+                error: if g[1] < 24 { f64::NAN } else { 0.0 },
+                energy: 0.5,
+            },
+        };
+        let reference = vec![24u32; 2];
+        let ref_obj = Objectives { error: 0.0, energy: 0.5 };
+        let mut probes = ProbeSet::new(&p, 400);
+        let ranks = rank_targets(&mut probes, &reference, &ref_obj, &[0, 1]);
+        assert_eq!(ranks[0].target, 0);
+        assert_eq!(ranks[1].target, 1);
+        assert!(ranks[1].error_per_bit.is_infinite());
+    }
+}

@@ -17,8 +17,8 @@ fn evaluator() -> Evaluator {
 #[test]
 fn parallel_search_archive_identical_to_serial() {
     let eval = evaluator();
-    let serial = explore_rule_with(&eval, RuleKind::Cip, Budget::quick(), Executor::serial());
-    let parallel = explore_rule_with(&eval, RuleKind::Cip, Budget::quick(), Executor::new(4));
+    let serial = explore_rule_with(&eval, RuleKind::Cip, Budget::quick(), &Executor::serial());
+    let parallel = explore_rule_with(&eval, RuleKind::Cip, Budget::quick(), &Executor::new(4));
     assert_eq!(serial.details.len(), parallel.details.len());
     for ((ga, da), (gb, db)) in serial.details.iter().zip(&parallel.details) {
         assert_eq!(ga, gb, "genome order must match");
@@ -32,8 +32,8 @@ fn parallel_search_archive_identical_to_serial() {
 #[test]
 fn wp_sweep_identical_serial_vs_parallel() {
     let eval = evaluator();
-    let serial = explore_rule_with(&eval, RuleKind::Wp, Budget::quick(), Executor::serial());
-    let parallel = explore_rule_with(&eval, RuleKind::Wp, Budget::quick(), Executor::new(3));
+    let serial = explore_rule_with(&eval, RuleKind::Wp, Budget::quick(), &Executor::serial());
+    let parallel = explore_rule_with(&eval, RuleKind::Wp, Budget::quick(), &Executor::new(3));
     assert_eq!(serial.details.len(), 24);
     for ((ga, da), (gb, db)) in serial.details.iter().zip(&parallel.details) {
         assert_eq!(ga, gb);
