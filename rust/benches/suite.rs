@@ -1,0 +1,57 @@
+//! Bench: the suite orchestrator — the serial benchmark walk vs
+//! cross-benchmark sharding under the same global thread budget, plus
+//! the artifact round-trip overhead of a resumed run.
+//!
+//!     cargo bench --bench suite
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::bench;
+use neat::coordinator::experiments::Budget;
+use neat::coordinator::suite::{SuiteConfig, SuiteRunner};
+
+fn config(threads: usize) -> SuiteConfig {
+    let mut cfg = SuiteConfig::new(Budget::quick());
+    cfg.threads = threads;
+    cfg.benchmarks = Some(vec!["blackscholes".to_string(), "kmeans".to_string()]);
+    cfg
+}
+
+fn main() {
+    println!("== suite orchestrator (2 benchmarks, quick budget) ==");
+    let mut min_ns = Vec::new();
+    for (label, threads) in [
+        ("serial walk (1 thread)", 1usize),
+        ("sharded, 2 threads", 2),
+        ("sharded, 4 threads", 4),
+    ] {
+        let runner = SuiteRunner::new(config(threads));
+        let m = bench(label, 2, "benchmarks", || {
+            let out = runner.run(&mut |_m: &str| {}).expect("suite run");
+            std::hint::black_box(out.results.len());
+        });
+        println!("{}", m.report());
+        min_ns.push(
+            m.samples.iter().map(|d| d.as_nanos() as f64).fold(f64::INFINITY, f64::min),
+        );
+    }
+    for (i, threads) in [2usize, 4].iter().enumerate() {
+        println!("speedup @{} threads: {:.2}x", threads, min_ns[0] / min_ns[i + 1]);
+    }
+
+    // resume: artifacts answer every shard, measuring load + evaluator
+    // rebuild cost rather than search cost
+    let dir = std::env::temp_dir().join("neat_suite_bench_resume");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = config(4);
+    cfg.run_dir = Some(dir.clone());
+    SuiteRunner::new(cfg.clone()).run(&mut |_m: &str| {}).expect("seed artifacts");
+    cfg.resume = true;
+    let runner = SuiteRunner::new(cfg);
+    let m = bench("resume from artifacts, 4 threads", 2, "benchmarks", || {
+        let out = runner.run(&mut |_m: &str| {}).expect("resumed run");
+        assert_eq!(out.resumed.len(), 2);
+    });
+    println!("{}", m.report());
+}

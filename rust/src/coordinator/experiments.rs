@@ -3,12 +3,14 @@
 //! its artifact into `results/` as CSV plus a human-readable summary.
 
 use std::fmt::Write as _;
+use std::sync::Mutex;
 
 use anyhow::Result;
 
 use crate::bench_suite;
 use crate::cnn::{self, CnnProblem, CnnRule};
-use crate::coordinator::{EvalDetail, EvalProblem, Evaluator, Executor, RuleKind};
+use crate::coordinator::{suite, EvalDetail, EvalProblem, Evaluator, Executor, RuleKind};
+use crate::coordinator::suite::SuiteRunner;
 use crate::energy::EpiTable;
 use crate::explore::nsga2::pareto_front_indices;
 use crate::explore::{Genome, Nsga2, Nsga2Params, Objectives, Problem};
@@ -503,6 +505,41 @@ pub fn table3(
 /// 48% energy savings at 1% and 10% accuracy loss" claim).
 pub const TUNE_BUDGETS: [f64; 2] = [0.01, 0.10];
 
+/// One benchmark's Table VI measurements: NEC per column in
+/// `[wp@1, nsga@1, tuner@1, wp@10, nsga@10, tuner@10]` order, plus the
+/// pre-rendered CSV row.
+struct Table6Row {
+    name: String,
+    necs: [f64; 6],
+    csv: String,
+}
+
+/// Compute one benchmark's Table VI row: quantize WP / NSGA-II savings
+/// from the suite archives and run a fresh constraint-driven tuner
+/// search per budget. Pure in `(bench, budget)` — the tuner has no RNG
+/// and the executor only changes scheduling — so rows computed on
+/// different shards reassemble into the same table.
+fn table6_row(b: &BenchResult, exec: &Executor) -> Table6Row {
+    let wp = savings_at_thresholds(&b.wp.fpu_points(), &TUNE_BUDGETS);
+    let ga = savings_at_thresholds(&b.cip.fpu_points(), &TUNE_BUDGETS);
+    let mut necs = [0.0f64; 6];
+    let mut csv = b.name.clone();
+    // one problem for both budgets: the tuner's goal-independent
+    // seed wave (baseline + ladder + sensitivity probes) is answered
+    // from the genome cache on the second run
+    let problem = EvalProblem::with_executor(&b.eval, RuleKind::Cip, exec.clone());
+    for (i, &eps) in TUNE_BUDGETS.iter().enumerate() {
+        let tuned = Tuner::error_budget(eps).run(&problem);
+        let tuner_nec = if tuned.feasible { tuned.objectives.energy } else { 1.0 };
+        necs[i * 3] = wp[i];
+        necs[i * 3 + 1] = ga[i];
+        necs[i * 3 + 2] = tuner_nec;
+        let _ =
+            write!(csv, ",{:.4},{:.4},{:.4},{}", wp[i], ga[i], tuner_nec, tuned.probes_used);
+    }
+    Table6Row { name: b.name.clone(), necs, csv }
+}
+
 /// Table VI: heuristic tuner vs NSGA-II vs best single-WP configuration
 /// — FPU energy savings at the 1% and 10% error budgets, per benchmark
 /// (the paper's headline comparison). The tuner runs a fresh
@@ -514,6 +551,40 @@ pub fn table6(
     exec: &Executor,
     log: &mut impl FnMut(&str),
 ) -> Result<String> {
+    let rows = suite
+        .iter()
+        .map(|b| {
+            log(&format!("table6: tuning {} (CIP, 1% and 10% error budgets)", b.name));
+            table6_row(b, exec)
+        })
+        .collect();
+    render_table6(rd, rows)
+}
+
+/// Table VI with the per-benchmark tuner searches sharded across the
+/// worker pool ([`suite::shard_map`]) under a global thread budget.
+/// Values are identical to [`table6`] — sharding changes scheduling,
+/// never values.
+pub fn table6_sharded(
+    rd: &ResultsDir,
+    suite_results: &[BenchResult],
+    plan: suite::ShardPlan,
+    log: &mut (impl FnMut(&str) + Send),
+) -> Result<String> {
+    let log: Mutex<&mut (dyn FnMut(&str) + Send)> = Mutex::new(log);
+    let rows = suite::shard_map(plan, suite_results.len(), |i, exec| {
+        let b = &suite_results[i];
+        {
+            let mut g = log.lock().expect("log poisoned");
+            (*g)(&format!("table6: tuning {} (CIP, 1% and 10% error budgets)", b.name));
+        }
+        table6_row(b, exec)
+    });
+    render_table6(rd, rows)
+}
+
+/// Assemble the Table VI report text + CSV from per-benchmark rows.
+fn render_table6(rd: &ResultsDir, rows: Vec<Table6Row>) -> Result<String> {
     let mut rows_csv = Vec::new();
     let mut text =
         String::from("Table VI — heuristic tuner vs NSGA-II vs best-WP (FPU energy savings)\n");
@@ -527,32 +598,14 @@ pub fn table6(
 
     // per-column NEC collections for the harmonic-mean row
     let mut columns: Vec<Vec<f64>> = vec![Vec::new(); 6];
-    for b in suite {
-        log(&format!("table6: tuning {} (CIP, 1% and 10% error budgets)", b.name));
-        let wp = savings_at_thresholds(&b.wp.fpu_points(), &TUNE_BUDGETS);
-        let ga = savings_at_thresholds(&b.cip.fpu_points(), &TUNE_BUDGETS);
-        let mut row = format!("{:<16}", b.name);
-        let mut csv = b.name.clone();
-        // one problem for both budgets: the tuner's goal-independent
-        // seed wave (baseline + ladder + sensitivity probes) is answered
-        // from the genome cache on the second run
-        let problem = EvalProblem::with_executor(&b.eval, RuleKind::Cip, exec.clone());
-        for (i, &eps) in TUNE_BUDGETS.iter().enumerate() {
-            let tuned = Tuner::error_budget(eps).run(&problem);
-            let tuner_nec =
-                if tuned.feasible { tuned.objectives.energy } else { 1.0 };
-            for (c, nec) in [(i * 3, wp[i]), (i * 3 + 1, ga[i]), (i * 3 + 2, tuner_nec)] {
-                columns[c].push(nec);
-                let _ = write!(row, " {:>8.1}%", (1.0 - nec) * 100.0);
-            }
-            let _ = write!(
-                csv,
-                ",{:.4},{:.4},{:.4},{}",
-                wp[i], ga[i], tuner_nec, tuned.probes_used
-            );
+    for r in rows {
+        let mut row = format!("{:<16}", r.name);
+        for (c, nec) in r.necs.iter().enumerate() {
+            columns[c].push(*nec);
+            let _ = write!(row, " {:>8.1}%", (1.0 - nec) * 100.0);
         }
         let _ = writeln!(text, "{row}");
-        rows_csv.push(csv);
+        rows_csv.push(r.csv);
     }
     // aggregate like Fig. 6: harmonic mean of the savings percentages
     let hmeans: Vec<f64> = columns
@@ -841,8 +894,25 @@ pub fn run_all(
     budget: Budget,
     exec: &Executor,
     artifacts: Option<&ArtifactPaths>,
-    log: &mut impl FnMut(&str),
+    log: &mut (impl FnMut(&str) + Send),
 ) -> Result<String> {
+    run_all_with_suite(rd, budget, exec, artifacts, None, log)
+}
+
+/// [`run_all`] with an optional suite orchestrator: when `runner` is
+/// set, the benchmark walk and the Table VI tuner searches are sharded
+/// across the worker pool with resumable run artifacts (`neat suite`),
+/// and the runner's budget governs the suite portion. Reports are
+/// byte-identical either way for a fixed seed.
+pub fn run_all_with_suite(
+    rd: &ResultsDir,
+    budget: Budget,
+    exec: &Executor,
+    artifacts: Option<&ArtifactPaths>,
+    runner: Option<&SuiteRunner>,
+    log: &mut (impl FnMut(&str) + Send),
+) -> Result<String> {
+    let budget = runner.map(|r| r.config().budget).unwrap_or(budget);
     let mut report = String::new();
     report.push_str(&fig1(rd)?);
     report.push('\n');
@@ -853,7 +923,10 @@ pub fn run_all(
     report.push_str(&fig4(rd)?);
     report.push('\n');
 
-    let suite = explore_suite(budget, exec, log);
+    let suite = match runner {
+        Some(r) => r.run(log)?.results,
+        None => explore_suite(budget, exec, log),
+    };
     report.push_str(&fig5(rd, &suite)?);
     report.push_str(&fig6(rd, &suite)?);
     report.push('\n');
@@ -865,7 +938,14 @@ pub fn run_all(
     report.push('\n');
     report.push_str(&table3(rd, &suite, exec, log)?);
     report.push('\n');
-    report.push_str(&table6(rd, &suite, exec, log)?);
+    match runner {
+        Some(r) => {
+            let plan =
+                suite::plan_shards(r.config().threads, r.config().shard_threads, suite.len());
+            report.push_str(&table6_sharded(rd, &suite, plan, log)?);
+        }
+        None => report.push_str(&table6(rd, &suite, exec, log)?),
+    }
     report.push('\n');
 
     if let Some(paths) = artifacts {

@@ -13,6 +13,7 @@
 pub mod executor;
 pub mod experiments;
 pub mod pool;
+pub mod suite;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -27,6 +28,7 @@ use crate::fpi::{FpiLibrary, Precision};
 use crate::placement::Placement;
 
 pub use executor::Executor;
+pub use suite::{SuiteConfig, SuiteOutcome, SuiteRunner};
 
 /// Which placement rule a genome parameterizes (paper Table I).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -77,6 +79,27 @@ struct SeedBaseline {
 }
 
 /// Evaluator for one workload under one optimization target.
+///
+/// ```
+/// use neat::bench_suite::blackscholes::Blackscholes;
+/// use neat::coordinator::{Evaluator, Executor, RuleKind};
+///
+/// let eval = Evaluator::new(Box::new(Blackscholes { options: 20 }), None);
+/// // full-width CIP genome: lossless, baseline energy
+/// let wide = vec![24; eval.genome_len(RuleKind::Cip)];
+/// let d = eval.evaluate_train(RuleKind::Cip, &wide);
+/// assert_eq!(d.error, 0.0);
+/// assert!((d.fpu_nec - 1.0).abs() < 1e-12);
+/// // the batch path returns one detail per genome, in input order
+/// let narrow = vec![4; eval.genome_len(RuleKind::Cip)];
+/// let batch = eval.evaluate_train_batch(
+///     RuleKind::Cip,
+///     &[wide, narrow],
+///     &Executor::serial(),
+/// );
+/// assert_eq!(batch.len(), 2);
+/// assert!(batch[1].fpu_nec < batch[0].fpu_nec);
+/// ```
 pub struct Evaluator {
     workload: Box<dyn Workload>,
     /// Optimization target precision (paper step 2).

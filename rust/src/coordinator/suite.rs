@@ -1,0 +1,612 @@
+//! Suite-level orchestration: shard the benchmark suite across the
+//! worker pool, with resumable per-benchmark run artifacts.
+//!
+//! The figure-regeneration runs behind the paper's Tables and Figs.
+//! 5–7 sweep every Table-II benchmark under two placement rules. The
+//! per-benchmark evaluators are completely independent, so
+//! [`SuiteRunner`] turns the old serial walk into one sharded,
+//! restartable job:
+//!
+//! * **Sharding** — each benchmark is one job. Jobs are pulled off a
+//!   shared counter by long-lived [`super::pool::WorkerPool`] threads
+//!   (work stealing: a fast shard's worker immediately claims the next
+//!   benchmark), and every shard runs its own [`Executor`] for the
+//!   nested batch parallelism of the PR 1 pipeline.
+//! * **Global thread budget** — `--threads` is honored *suite-wide*:
+//!   [`plan_shards`] splits the budget into `concurrent_shards ×
+//!   shard_threads ≤ threads`, so an 8-thread run explores 8 benchmarks
+//!   with serial executors rather than 8 benchmarks × 8 threads each.
+//! * **Run artifacts** — with a run directory configured, every shard
+//!   writes `<run_dir>/<benchmark>.json`: seed and search budget, the
+//!   full WP/CIP genome archives with objective values stored as exact
+//!   f64 bit patterns, wall clock, and a completion marker (written via
+//!   temp-file + rename, so a killed run never leaves a half-truthful
+//!   artifact). Reports are then assembled from the artifact, not the
+//!   in-memory archive: a fresh shard round-trips its results through
+//!   the file it just wrote.
+//! * **Resume** — with [`SuiteConfig::resume`] set, shards whose
+//!   artifact is complete and matches the configured budget are skipped
+//!   and reloaded; a killed figure-regeneration run continues where it
+//!   stopped instead of recomputing.
+//!
+//! The determinism contract is unchanged from the executor layer:
+//! sharding changes scheduling, never values. Every shard is a pure
+//! function of `(workload, budget)` — fresh [`Evaluator`], fixed search
+//! seed — and results are reassembled in suite order, so the final
+//! reports and artifacts are byte-identical to the serial walk
+//! (artifacts up to the `wall_clock_ms` field; compare with
+//! [`artifact_canonical`]).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::bench_suite::{self, Workload};
+use crate::explore::Genome;
+use crate::util::kv;
+
+use super::experiments::{explore_rule_with, BenchResult, Budget, RuleResult};
+use super::pool::WorkerPool;
+use super::{EvalDetail, Evaluator, Executor, RuleKind};
+
+/// Run-artifact schema version; bumped on any layout change so stale
+/// artifacts are re-run rather than misparsed.
+const SCHEMA: u32 = 1;
+
+/// One rule's evaluation archive: every `(genome, detail)` recorded, in
+/// evaluation order — the payload of a run artifact.
+pub type RuleArchive = Vec<(Genome, EvalDetail)>;
+
+/// Configuration for a sharded suite run.
+#[derive(Debug, Clone)]
+pub struct SuiteConfig {
+    /// Search budget per benchmark (population, generations, seed).
+    pub budget: Budget,
+    /// Global thread budget for the whole suite (`--threads`).
+    pub threads: usize,
+    /// Worker threads per benchmark shard (`--shard-threads`). `None`
+    /// lets [`plan_shards`] favor cross-benchmark parallelism.
+    pub shard_threads: Option<usize>,
+    /// Directory for resumable per-benchmark run artifacts
+    /// (`--run-dir`). `None` disables artifacts (and resume).
+    pub run_dir: Option<PathBuf>,
+    /// Skip shards whose artifact in [`SuiteConfig::run_dir`] is
+    /// complete and matches [`SuiteConfig::budget`] (`--resume`).
+    pub resume: bool,
+    /// Restrict the run to these benchmarks, in order. `None` runs the
+    /// full Table II suite ([`bench_suite::table2`]).
+    pub benchmarks: Option<Vec<String>>,
+}
+
+impl SuiteConfig {
+    /// A full-suite configuration using every available core, no run
+    /// directory.
+    pub fn new(budget: Budget) -> Self {
+        let threads = Executor::default_parallel().threads();
+        Self {
+            budget,
+            threads,
+            shard_threads: None,
+            run_dir: None,
+            resume: false,
+            benchmarks: None,
+        }
+    }
+}
+
+/// How a global `--threads` budget is split between cross-benchmark and
+/// within-benchmark parallelism.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Benchmark shards running at once.
+    pub concurrent_shards: usize,
+    /// Executor worker threads inside each shard.
+    pub shard_threads: usize,
+}
+
+/// Split `threads` across `shards` jobs so that `concurrent_shards ×
+/// shard_threads ≤ max(threads, 1)` always holds.
+///
+/// With `shard_threads` unset the plan favors cross-benchmark
+/// parallelism (shards dominate a figure run's wall clock; the nested
+/// batch parallelism only helps once shards are scarcer than threads):
+///
+/// ```
+/// use neat::coordinator::suite::plan_shards;
+///
+/// let p = plan_shards(8, None, 10); // 8 threads, 10 benchmarks
+/// assert_eq!((p.concurrent_shards, p.shard_threads), (8, 1));
+///
+/// let p = plan_shards(8, Some(4), 10); // operator pins 4 per shard
+/// assert_eq!((p.concurrent_shards, p.shard_threads), (2, 4));
+/// ```
+pub fn plan_shards(threads: usize, shard_threads: Option<usize>, shards: usize) -> ShardPlan {
+    let threads = threads.max(1);
+    let shards = shards.max(1);
+    match shard_threads {
+        Some(k) => {
+            let k = k.clamp(1, threads);
+            ShardPlan {
+                concurrent_shards: (threads / k).max(1).min(shards),
+                shard_threads: k,
+            }
+        }
+        None => {
+            let c = threads.min(shards);
+            ShardPlan { concurrent_shards: c, shard_threads: (threads / c).max(1) }
+        }
+    }
+}
+
+/// Run `f(0..n)` sharded over a worker pool and return the results in
+/// index order.
+///
+/// The scheduling is work stealing — `plan.concurrent_shards` pool
+/// threads claim indices off a shared counter — and each pool thread
+/// owns one persistent [`Executor`] with `plan.shard_threads` workers
+/// for the nested batch parallelism, so the global thread budget holds
+/// no matter how jobs land. With one concurrent shard the pool is
+/// bypassed entirely (the serial reference path). `f` must be a pure
+/// function of its index for the suite determinism contract to hold.
+pub fn shard_map<T, F>(plan: ShardPlan, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, &Executor) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    // clamp like plan_shards does, in case the plan was hand-built
+    let workers = plan.concurrent_shards.clamp(1, n);
+    let executors: Vec<Executor> =
+        (0..workers).map(|_| Executor::new(plan.shard_threads)).collect();
+    if workers <= 1 {
+        return (0..n).map(|i| f(i, &executors[0])).collect();
+    }
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let worker_id = AtomicUsize::new(0);
+    let pool = WorkerPool::new(workers);
+    pool.run_scoped(workers, &|| {
+        let exec = &executors[worker_id.fetch_add(1, Ordering::Relaxed) % workers];
+        loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            let out = f(i, exec);
+            *slots[i].lock().expect("shard slot poisoned") = Some(out);
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().expect("shard slot poisoned").expect("every shard ran"))
+        .collect()
+}
+
+/// Outcome of a sharded suite run.
+pub struct SuiteOutcome {
+    /// Per-benchmark results, in suite order (identical to the serial
+    /// walk for a fixed seed).
+    pub results: Vec<BenchResult>,
+    /// Benchmarks explored in this run, in suite order.
+    pub executed: Vec<String>,
+    /// Benchmarks skipped and reloaded from a run artifact.
+    pub resumed: Vec<String>,
+    /// The thread split the run used.
+    pub plan: ShardPlan,
+}
+
+/// The suite orchestrator. See the module docs for the contract.
+pub struct SuiteRunner {
+    cfg: SuiteConfig,
+}
+
+impl SuiteRunner {
+    /// Wrap a configuration.
+    pub fn new(cfg: SuiteConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// The configuration.
+    pub fn config(&self) -> &SuiteConfig {
+        &self.cfg
+    }
+
+    fn workloads(&self) -> Result<Vec<Box<dyn Workload>>> {
+        match &self.cfg.benchmarks {
+            None => Ok(bench_suite::table2()),
+            Some(names) => {
+                // one artifact file per benchmark name: duplicates would
+                // race on the same temp path across shards
+                let mut seen = std::collections::HashSet::new();
+                for n in names {
+                    if !seen.insert(n.as_str()) {
+                        anyhow::bail!("duplicate benchmark {n} in suite selection");
+                    }
+                }
+                names
+                    .iter()
+                    .map(|n| {
+                        bench_suite::by_name(n)
+                            .with_context(|| format!("unknown benchmark {n}"))
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    fn artifact_path(&self, name: &str) -> Option<PathBuf> {
+        self.cfg.run_dir.as_ref().map(|d| d.join(format!("{name}.json")))
+    }
+
+    /// Explore every configured benchmark (WP + CIP), sharded. Skips
+    /// and reloads completed shards when resuming; otherwise each shard
+    /// explores, writes its artifact, and reloads from it so the report
+    /// path always consumes artifact-backed data.
+    pub fn run(&self, log: &mut (impl FnMut(&str) + Send)) -> Result<SuiteOutcome> {
+        let workloads = self.workloads()?;
+        let n = workloads.len();
+        if let Some(dir) = &self.cfg.run_dir {
+            fs::create_dir_all(dir)
+                .with_context(|| format!("creating run dir {}", dir.display()))?;
+        }
+        let plan = plan_shards(self.cfg.threads, self.cfg.shard_threads, n);
+        log(&format!(
+            "suite: {n} benchmark shard(s), {} concurrent × {} executor thread(s)",
+            plan.concurrent_shards, plan.shard_threads
+        ));
+        let log: Mutex<&mut (dyn FnMut(&str) + Send)> = Mutex::new(log);
+        let jobs: Vec<Mutex<Option<Box<dyn Workload>>>> =
+            workloads.into_iter().map(|w| Mutex::new(Some(w))).collect();
+        let shard_results = shard_map(plan, n, |i, exec| {
+            let w = jobs[i]
+                .lock()
+                .expect("job slot poisoned")
+                .take()
+                .expect("each shard claimed once");
+            self.run_shard(w, exec, &log)
+        });
+        let mut results = Vec::with_capacity(n);
+        let mut executed = Vec::new();
+        let mut resumed = Vec::new();
+        for r in shard_results {
+            let (bench, was_resumed) = r?;
+            if was_resumed {
+                resumed.push(bench.name.clone());
+            } else {
+                executed.push(bench.name.clone());
+            }
+            results.push(bench);
+        }
+        Ok(SuiteOutcome { results, executed, resumed, plan })
+    }
+
+    /// One shard: resume from the artifact if allowed, else explore and
+    /// write (then reload) the artifact.
+    fn run_shard(
+        &self,
+        w: Box<dyn Workload>,
+        exec: &Executor,
+        log: &Mutex<&mut (dyn FnMut(&str) + Send)>,
+    ) -> Result<(BenchResult, bool)> {
+        let name = w.name().to_string();
+        let say = |m: String| {
+            let mut g = log.lock().expect("log poisoned");
+            (*g)(&m);
+        };
+        let path = self.artifact_path(&name);
+        // The evaluator build (profile + baselines) is a pure function
+        // of the workload, so a resumed shard is indistinguishable from
+        // an uninterrupted one.
+        let eval = Evaluator::new(w, None);
+        if self.cfg.resume {
+            if let Some(p) = &path {
+                if let Some((wp, cip)) = load_artifact(p, &name, self.cfg.budget) {
+                    // reject archives whose genomes no longer fit this
+                    // benchmark's placement targets (e.g. the profiled
+                    // top-function count changed since the artifact was
+                    // written) — resuming them would silently misplace
+                    let shapes_match = wp
+                        .iter()
+                        .all(|(g, _)| g.len() == eval.genome_len(RuleKind::Wp))
+                        && cip
+                            .iter()
+                            .all(|(g, _)| g.len() == eval.genome_len(RuleKind::Cip));
+                    if shapes_match {
+                        say(format!("{name}: resuming from {}", p.display()));
+                        return Ok((
+                            BenchResult {
+                                name,
+                                eval,
+                                wp: RuleResult { rule: RuleKind::Wp, details: wp },
+                                cip: RuleResult { rule: RuleKind::Cip, details: cip },
+                            },
+                            true,
+                        ));
+                    }
+                    say(format!("{name}: artifact genome shape is stale; re-running"));
+                }
+            }
+        }
+        say(format!("{name}: exploring WP + CIP ({} executor thread(s))", exec.threads()));
+        let t0 = Instant::now();
+        let wp = explore_rule_with(&eval, RuleKind::Wp, self.cfg.budget, exec);
+        let cip = explore_rule_with(&eval, RuleKind::Cip, self.cfg.budget, exec);
+        let wall = t0.elapsed();
+        let mut bench = BenchResult { name: name.clone(), eval, wp, cip };
+        if let Some(p) = &path {
+            write_artifact(p, &bench, self.cfg.budget, wall)?;
+            // Reports are assembled from artifacts, not in-memory
+            // state: round-trip through the file just written so fresh
+            // and resumed runs feed the figures identical data.
+            let (wp, cip) = load_artifact(p, &name, self.cfg.budget)
+                .with_context(|| format!("artifact round-trip failed: {}", p.display()))?;
+            bench.wp = RuleResult { rule: RuleKind::Wp, details: wp };
+            bench.cip = RuleResult { rule: RuleKind::Cip, details: cip };
+        }
+        Ok((bench, false))
+    }
+}
+
+/// One archive entry: `genome;error;fpu;mem;fpu_target`, the genome as
+/// `|`-joined widths and each objective as its exact f64 bit pattern in
+/// hex, so a load reproduces the run bit-for-bit.
+fn encode_entry(g: &Genome, d: &EvalDetail) -> String {
+    format!(
+        "{};{:016x};{:016x};{:016x};{:016x}",
+        g.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("|"),
+        d.error.to_bits(),
+        d.fpu_nec.to_bits(),
+        d.mem_nec.to_bits(),
+        d.fpu_target_nec.to_bits()
+    )
+}
+
+fn decode_entry(s: &str) -> Option<(Genome, EvalDetail)> {
+    let mut parts = s.split(';');
+    let genome: Genome =
+        parts.next()?.split('|').map(|x| x.parse().ok()).collect::<Option<_>>()?;
+    let mut field = || -> Option<f64> {
+        Some(f64::from_bits(u64::from_str_radix(parts.next()?, 16).ok()?))
+    };
+    let error = field()?;
+    let fpu_nec = field()?;
+    let mem_nec = field()?;
+    let fpu_target_nec = field()?;
+    if parts.next().is_some() {
+        return None;
+    }
+    Some((genome, EvalDetail { error, fpu_nec, mem_nec, fpu_target_nec }))
+}
+
+fn write_archive(out: &mut String, key: &str, details: &[(Genome, EvalDetail)]) {
+    if details.is_empty() {
+        let _ = writeln!(out, "  \"{key}\": [],");
+        return;
+    }
+    let _ = writeln!(out, "  \"{key}\": [");
+    for (i, (g, d)) in details.iter().enumerate() {
+        let comma = if i + 1 == details.len() { "" } else { "," };
+        let _ = writeln!(out, "    \"{}\"{comma}", encode_entry(g, d));
+    }
+    let _ = writeln!(out, "  ],");
+}
+
+/// Write one benchmark's run artifact. The write is atomic (temp file +
+/// rename) and ends with a `complete` marker, so a killed run leaves
+/// either no artifact or a fully valid one — never a torn file that
+/// resume would trust.
+pub fn write_artifact(
+    path: &Path,
+    bench: &BenchResult,
+    budget: Budget,
+    wall: Duration,
+) -> Result<()> {
+    let mut text = String::from("{\n");
+    let _ = writeln!(text, "  \"schema\": {SCHEMA},");
+    let _ = writeln!(text, "  \"benchmark\": \"{}\",", bench.name);
+    // the seed is stored as a string: the flat-JSON reader parses
+    // numbers as f64, which cannot hold every u64 exactly
+    let _ = writeln!(text, "  \"seed\": \"{}\",", budget.seed);
+    let _ = writeln!(text, "  \"population\": {},", budget.population);
+    let _ = writeln!(text, "  \"generations\": {},", budget.generations);
+    write_archive(&mut text, "wp", &bench.wp.details);
+    write_archive(&mut text, "cip", &bench.cip.details);
+    let _ = writeln!(text, "  \"wall_clock_ms\": {:.3},", wall.as_secs_f64() * 1e3);
+    text.push_str("  \"complete\": 1\n}\n");
+    let tmp = path.with_extension("json.tmp");
+    fs::write(&tmp, text)
+        .with_context(|| format!("writing artifact {}", tmp.display()))?;
+    fs::rename(&tmp, path)
+        .with_context(|| format!("committing artifact {}", path.display()))?;
+    Ok(())
+}
+
+/// Load one benchmark's `(wp, cip)` archives from a run artifact.
+///
+/// Returns `None` — the shard re-runs — when the file is missing,
+/// torn, from a different schema, for a different benchmark, or from a
+/// run with a different search budget; resume never mixes archives
+/// produced under different settings.
+pub fn load_artifact(
+    path: &Path,
+    name: &str,
+    budget: Budget,
+) -> Option<(RuleArchive, RuleArchive)> {
+    let text = fs::read_to_string(path).ok()?;
+    let meta = kv::parse(&text);
+    if meta.numbers.get("schema").copied()? != SCHEMA as f64 {
+        return None;
+    }
+    if meta.numbers.get("complete").copied()? != 1.0 {
+        return None;
+    }
+    if meta.strings.get("benchmark")? != name {
+        return None;
+    }
+    if meta.strings.get("seed")? != &budget.seed.to_string() {
+        return None;
+    }
+    if meta.numbers.get("population").copied()? != budget.population as f64 {
+        return None;
+    }
+    if meta.numbers.get("generations").copied()? != budget.generations as f64 {
+        return None;
+    }
+    let decode = |key: &str| -> Option<RuleArchive> {
+        meta.string_lists.get(key)?.iter().map(|s| decode_entry(s)).collect()
+    };
+    Some((decode("wp")?, decode("cip")?))
+}
+
+/// An artifact with its timing field blanked: the byte-identity
+/// contract covers everything *but* wall clock, which legitimately
+/// differs between runs of identical work.
+pub fn artifact_canonical(text: &str) -> String {
+    text.lines()
+        .filter(|l| !l.trim_start().starts_with("\"wall_clock_ms\""))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan_pair(threads: usize, shard_threads: Option<usize>, shards: usize) -> (usize, usize) {
+        let p = plan_shards(threads, shard_threads, shards);
+        (p.concurrent_shards, p.shard_threads)
+    }
+
+    #[test]
+    fn plan_fills_shards_first_by_default() {
+        assert_eq!(plan_pair(8, None, 10), (8, 1));
+        assert_eq!(plan_pair(16, None, 8), (8, 2));
+        assert_eq!(plan_pair(1, None, 8), (1, 1));
+        assert_eq!(plan_pair(0, None, 0), (1, 1));
+    }
+
+    #[test]
+    fn plan_honors_explicit_shard_threads() {
+        assert_eq!(plan_pair(8, Some(4), 10), (2, 4));
+        assert_eq!(plan_pair(8, Some(3), 10), (2, 3));
+        // a per-shard ask beyond the global budget is clamped to it
+        assert_eq!(plan_pair(4, Some(9), 10), (1, 4));
+    }
+
+    #[test]
+    fn plan_never_exceeds_global_budget() {
+        for threads in 1..=17 {
+            for shards in 1..=12 {
+                for k in [None, Some(1), Some(2), Some(5), Some(32)] {
+                    let p = plan_shards(threads, k, shards);
+                    assert!(
+                        p.concurrent_shards * p.shard_threads <= threads.max(1),
+                        "budget exceeded: {threads} threads, {shards} shards, {k:?} -> {p:?}"
+                    );
+                    assert!(p.concurrent_shards >= 1 && p.shard_threads >= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_map_returns_index_order() {
+        let plan = ShardPlan { concurrent_shards: 4, shard_threads: 1 };
+        let out = shard_map(plan, 23, |i, exec| {
+            assert_eq!(exec.threads(), 1);
+            i * 10
+        });
+        assert_eq!(out, (0..23).map(|i| i * 10).collect::<Vec<_>>());
+        assert!(shard_map(plan, 0, |i, _| i).is_empty());
+        // a hand-built zero-worker plan is clamped, not a panic
+        let zero = ShardPlan { concurrent_shards: 0, shard_threads: 1 };
+        assert_eq!(shard_map(zero, 3, |i, _| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn duplicate_benchmarks_are_rejected() {
+        let mut cfg = SuiteConfig::new(Budget::quick());
+        cfg.benchmarks = Some(vec!["blackscholes".into(), "blackscholes".into()]);
+        let err = match SuiteRunner::new(cfg).run(&mut |_m: &str| {}) {
+            Ok(_) => panic!("duplicate benchmarks must be rejected"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("duplicate benchmark"));
+    }
+
+    #[test]
+    fn entry_round_trips_exact_bits() {
+        let g: Genome = vec![1, 12, 24];
+        let d = EvalDetail {
+            error: 0.1 + 0.2, // not exactly representable in decimal
+            fpu_nec: f64::from_bits(0x3FE1C28F5C28F5C3),
+            mem_nec: f64::NAN,
+            fpu_target_nec: 1.0 / 3.0,
+        };
+        let (g2, d2) = decode_entry(&encode_entry(&g, &d)).expect("round trip");
+        assert_eq!(g, g2);
+        assert_eq!(d.error.to_bits(), d2.error.to_bits());
+        assert_eq!(d.fpu_nec.to_bits(), d2.fpu_nec.to_bits());
+        assert_eq!(d.mem_nec.to_bits(), d2.mem_nec.to_bits());
+        assert_eq!(d.fpu_target_nec.to_bits(), d2.fpu_target_nec.to_bits());
+    }
+
+    #[test]
+    fn decode_rejects_malformed_entries() {
+        assert!(decode_entry("").is_none());
+        assert!(decode_entry("1|2").is_none()); // missing objective fields
+        assert!(decode_entry("1;zzzz;0;0;0").is_none()); // bad hex
+        assert!(decode_entry("1;0;0;0;0;0").is_none()); // trailing field
+    }
+
+    #[test]
+    fn artifact_round_trips_and_rejects_mismatches() {
+        let eval = Evaluator::new(
+            Box::new(crate::bench_suite::blackscholes::Blackscholes { options: 20 }),
+            None,
+        );
+        let budget = Budget::quick();
+        let exec = Executor::serial();
+        let wp = explore_rule_with(&eval, RuleKind::Wp, budget, &exec);
+        let cip = RuleResult { rule: RuleKind::Cip, details: Vec::new() };
+        let bench = BenchResult { name: "blackscholes".to_string(), eval, wp, cip };
+        let dir = std::env::temp_dir().join("neat_suite_artifact_test");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blackscholes.json");
+        write_artifact(&path, &bench, budget, Duration::from_millis(12)).unwrap();
+
+        let (wp2, cip2) = load_artifact(&path, "blackscholes", budget).expect("load");
+        assert_eq!(wp2.len(), bench.wp.details.len());
+        assert!(cip2.is_empty());
+        for ((g, d), (g2, d2)) in bench.wp.details.iter().zip(&wp2) {
+            assert_eq!(g, g2);
+            assert_eq!(d.error.to_bits(), d2.error.to_bits());
+            assert_eq!(d.fpu_nec.to_bits(), d2.fpu_nec.to_bits());
+        }
+
+        // wrong benchmark, wrong budget, torn file: all refuse to load
+        assert!(load_artifact(&path, "kmeans", budget).is_none());
+        let other = Budget { seed: budget.seed + 1, ..budget };
+        assert!(load_artifact(&path, "blackscholes", other).is_none());
+        let text = fs::read_to_string(&path).unwrap();
+        let torn = &text[..text.len() / 2];
+        fs::write(&path, torn).unwrap();
+        assert!(load_artifact(&path, "blackscholes", budget).is_none());
+    }
+
+    #[test]
+    fn canonical_form_ignores_wall_clock_only() {
+        let a = "{\n  \"x\": 1,\n  \"wall_clock_ms\": 10.000,\n  \"complete\": 1\n}";
+        let b = "{\n  \"x\": 1,\n  \"wall_clock_ms\": 99.125,\n  \"complete\": 1\n}";
+        assert_eq!(artifact_canonical(a), artifact_canonical(b));
+        let c = "{\n  \"x\": 2,\n  \"wall_clock_ms\": 10.000,\n  \"complete\": 1\n}";
+        assert_ne!(artifact_canonical(a), artifact_canonical(c));
+    }
+}

@@ -73,6 +73,26 @@ pub struct Evaluated {
 /// * `evaluate_batch(&[g])[0] == evaluate(&g)` — batching must not
 ///   change values, only scheduling (archives stay byte-identical to a
 ///   serial run for a fixed seed).
+///
+/// ```
+/// use neat::explore::{FnProblem, Genome, Objectives, Problem};
+///
+/// // wider genes: less error, more energy
+/// let p = FnProblem {
+///     len: 2,
+///     max_bits: 24,
+///     f: |g: &Genome| Objectives {
+///         error: g.iter().map(|&w| (24 - w) as f64 * 0.001).sum(),
+///         energy: g.iter().sum::<u32>() as f64 / 48.0,
+///     },
+/// };
+/// let genomes = vec![vec![24, 24], vec![12, 12]];
+/// let batch = p.evaluate_batch(&genomes);
+/// assert_eq!(batch.len(), 2);
+/// // the contract: batching never changes values
+/// assert_eq!(batch[0], p.evaluate(&genomes[0]));
+/// assert_eq!(batch[0], Objectives { error: 0.0, energy: 1.0 });
+/// ```
 pub trait Problem {
     /// Genome length (number of placement targets).
     fn genome_len(&self) -> usize;

@@ -27,9 +27,13 @@ pub use truncate::{truncate_f32, truncate_f64, used_bits_f32, used_bits_f64, Tru
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 #[repr(u8)]
 pub enum OpKind {
+    /// Scalar addition (`ADDSS`/`ADDSD`).
     Add = 0,
+    /// Scalar subtraction (`SUBSS`/`SUBSD`).
     Sub = 1,
+    /// Scalar multiplication (`MULSS`/`MULSD`).
     Mul = 2,
+    /// Scalar division (`DIVSS`/`DIVSD`).
     Div = 3,
 }
 
@@ -53,7 +57,9 @@ impl OpKind {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 #[repr(u8)]
 pub enum Precision {
+    /// IEEE binary32 (24 mantissa bits incl. the implicit one).
     Single = 0,
+    /// IEEE binary64 (53 mantissa bits incl. the implicit one).
     Double = 1,
 }
 
@@ -79,6 +85,52 @@ impl Precision {
 ///
 /// Implementations must be cheap and pure — they run on the engine's hot
 /// path, once per intercepted FLOP.
+///
+/// The built-in [`TruncateFpi`] keeps `k` mantissa bits on operands and
+/// result (truncation toward zero):
+///
+/// ```
+/// use neat::fpi::{FpImplementation, OpKind, Precision, TruncateFpi};
+///
+/// let coarse = TruncateFpi::new(2); // 2 mantissa bits, incl. the implicit one
+/// // operands survive (1.0 and 0.75 fit in 2 bits); the sum 1.75 does not
+/// assert_eq!(coarse.perform_f32(OpKind::Add, 1.0, 0.75), 1.5);
+/// assert_eq!(coarse.keep_bits(Precision::Single), 2);
+///
+/// let full = TruncateFpi::new(24); // full single precision: identity
+/// assert_eq!(full.perform_f32(OpKind::Add, 1.0, 0.75), 1.75);
+/// ```
+///
+/// A custom FPI is one `impl` away — the analogue of subclassing the
+/// paper's `FpImplementation` class (register it with
+/// [`FpiLibrary::register`] to use it in a placement):
+///
+/// ```
+/// use neat::fpi::{FpImplementation, OpKind};
+///
+/// /// Rounds every result to one decimal digit.
+/// struct Decimal;
+///
+/// impl FpImplementation for Decimal {
+///     fn name(&self) -> String {
+///         "decimal[1]".into()
+///     }
+///     fn perform_f32(&self, op: OpKind, a: f32, b: f32) -> f32 {
+///         self.perform_f64(op, a as f64, b as f64) as f32
+///     }
+///     fn perform_f64(&self, op: OpKind, a: f64, b: f64) -> f64 {
+///         let exact = match op {
+///             OpKind::Add => a + b,
+///             OpKind::Sub => a - b,
+///             OpKind::Mul => a * b,
+///             OpKind::Div => a / b,
+///         };
+///         (exact * 10.0).round() / 10.0
+///     }
+/// }
+///
+/// assert_eq!(Decimal.perform_f64(OpKind::Mul, 0.25, 0.5), 0.1);
+/// ```
 pub trait FpImplementation: Send + Sync {
     /// Human-readable identifier (reports, traces).
     fn name(&self) -> String;

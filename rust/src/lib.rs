@@ -36,7 +36,11 @@
 //!   threads spawned once per executor) where each worker reuses one
 //!   pooled `FpContext` via `set_placement`, reassemble
 //!   deterministically, and memoize per-genome results so revisited
-//!   configurations are never re-run,
+//!   configurations are never re-run. Its `suite` module scales the
+//!   same idea one level up: whole benchmarks become shards scheduled
+//!   onto the pool under a global thread budget, each writing a
+//!   resumable per-benchmark run artifact so figure regeneration is one
+//!   restartable job (`neat suite --resume`),
 //! * [`tuner`] — the constraint-driven heuristic precision tuner (the
 //!   paper's "22% / 48% savings at 1% / 10% loss" mode): a one-batch
 //!   sensitivity-profiling pass ranks placement targets by error-per-bit,
@@ -51,6 +55,17 @@
 //!
 //! Python appears only on the compile path (`python/compile/`); after
 //! `make artifacts` the binary is self-contained.
+//!
+//! # Architecture
+//!
+//! The full module map and data flow (CLI → coordinator → explore/tuner
+//! → engine → fpi → energy/report), the determinism contract that every
+//! layer upholds (batching and sharding change *scheduling, never
+//! values*), and where the genome cache, worker pool, and run artifacts
+//! live are written down in `ARCHITECTURE.md` at the repository root;
+//! the README holds copy-paste commands reproducing each paper figure.
+
+#![warn(missing_docs)]
 
 pub mod bench_suite;
 pub mod cnn;

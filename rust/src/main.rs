@@ -6,6 +6,8 @@
 //! ```text
 //! neat profile <benchmark>             step 1: FLOP census
 //! neat explore <benchmark> [options]   steps 2-6: search one benchmark
+//! neat tune <benchmark> [options]      constraint-driven heuristic tuning
+//! neat suite [options]                 sharded, resumable figure regeneration
 //! neat figure <id|all>                 regenerate a paper table/figure
 //! neat ablation <id|all>               DESIGN.md ablations
 //! neat list                            benchmarks + figure ids
@@ -17,7 +19,7 @@ use anyhow::{bail, Context, Result};
 
 use neat::bench_suite;
 use neat::coordinator::experiments::{self, Budget};
-use neat::coordinator::{EvalProblem, Evaluator, Executor, RuleKind};
+use neat::coordinator::{EvalProblem, Evaluator, Executor, RuleKind, SuiteConfig, SuiteRunner};
 use neat::engine::profile::Profile;
 use neat::engine::FpContext;
 use neat::fpi::Precision;
@@ -38,6 +40,12 @@ fn usage() -> &'static str {
                [--threads N]                   heuristic constraint-driven tuning\n\
                (budgets are fractions: --error-budget 0.01 = 1% accuracy loss,\n\
                 --energy-budget 0.5 = half the baseline energy; default 0.01)\n\
+       suite   [--run-dir DIR] [--resume] [--shard-threads N] [--threads N]\n\
+               [--benchmarks a,b,c]            regenerate every figure with the\n\
+                                               benchmark walk sharded across the\n\
+                                               worker pool; completed shards are\n\
+                                               written as resumable artifacts under\n\
+                                               --run-dir and skipped on --resume\n\
        figure  <id|all>                        fig1 fig4 fig5 fig6 fig7 fig8\n\
                                                fig9 fig10 fig11 table1 table2\n\
                                                table3 table5 table6\n\
@@ -66,7 +74,7 @@ fn parse_args(raw: &[String]) -> Args {
         let a = &raw[i];
         if let Some(name) = a.strip_prefix("--") {
             // value-taking flags; everything else is a switch
-            const VALUED: [&str; 11] = [
+            const VALUED: [&str; 14] = [
                 "rule",
                 "target",
                 "population",
@@ -78,6 +86,9 @@ fn parse_args(raw: &[String]) -> Args {
                 "error-budget",
                 "energy-budget",
                 "max-evals",
+                "run-dir",
+                "shard-threads",
+                "benchmarks",
             ];
             if VALUED.contains(&name) && i + 1 < raw.len() {
                 flags.insert(name.to_string(), raw[i + 1].clone());
@@ -366,6 +377,48 @@ fn cmd_tune(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `neat suite` — regenerate every figure with the benchmark walk (and
+/// the Table VI tuner searches) sharded across the worker pool, writing
+/// resumable per-benchmark artifacts under `--run-dir`.
+fn cmd_suite(args: &Args) -> Result<()> {
+    let rd = args.results()?;
+    let budget = args.budget();
+    let exec = args.executor();
+    let mut cfg = SuiteConfig::new(budget);
+    cfg.threads = exec.threads();
+    cfg.shard_threads = args.flags.get("shard-threads").and_then(|v| v.parse().ok());
+    cfg.run_dir = Some(
+        args.flags
+            .get("run-dir")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| rd.path("suite_run")),
+    );
+    cfg.resume = args.switches.contains("resume");
+    cfg.benchmarks = args.flags.get("benchmarks").map(|s| {
+        s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect()
+    });
+    let run_dir = cfg.run_dir.clone().expect("run dir set above");
+    let resume = cfg.resume;
+    let runner = SuiteRunner::new(cfg);
+    let artifacts = args.artifacts();
+    let mut log = |m: &str| eprintln!("[neat] {m}");
+    if resume {
+        eprintln!("[neat] resuming from artifacts under {}", run_dir.display());
+    }
+    let text = experiments::run_all_with_suite(
+        &rd,
+        budget,
+        &exec,
+        Some(&artifacts),
+        Some(&runner),
+        &mut log,
+    )?;
+    println!("{text}");
+    eprintln!("[neat] run artifacts under {}", run_dir.display());
+    eprintln!("[neat] CSV outputs under {}", rd.root().display());
+    Ok(())
+}
+
 fn cmd_figure(args: &Args) -> Result<()> {
     let id = args.positional.get(1).map(String::as_str).unwrap_or("all");
     let rd = args.results()?;
@@ -452,6 +505,7 @@ fn main() -> ExitCode {
         "profile" => cmd_profile(&args),
         "explore" => cmd_explore(&args),
         "tune" => cmd_tune(&args),
+        "suite" => cmd_suite(&args),
         "figure" => cmd_figure(&args),
         "ablation" => cmd_ablation(&args),
         "" | "help" | "--help" | "-h" => {

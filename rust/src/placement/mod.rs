@@ -66,6 +66,30 @@ pub trait PlacementRule: Send + Sync {
 }
 
 /// A placement policy: which FPI computes each FLOP.
+///
+/// ```
+/// use std::collections::HashMap;
+/// use neat::engine::FuncId;
+/// use neat::fpi::{FpiLibrary, Precision};
+/// use neat::placement::{CompiledFpi, Placement};
+///
+/// let lib = FpiLibrary::truncation_family(Precision::Single);
+///
+/// // CIP: FLOPs in `hot` run on 8 mantissa bits, everything else exact
+/// let mut map = HashMap::new();
+/// map.insert("hot".to_string(), FpiLibrary::truncation_id(8));
+/// let cip = Placement::current_function(map.clone());
+/// assert_eq!(cip.resolve(&lib, "hot", FuncId(0), None), CompiledFpi::Truncate(8));
+/// assert_eq!(cip.resolve(&lib, "cold", FuncId(1), None), CompiledFpi::Exact);
+///
+/// // FCS: an unmapped kernel inherits the nearest mapped *caller*
+/// let fcs = Placement::call_stack(map);
+/// assert_eq!(
+///     fcs.resolve(&lib, "kernel", FuncId(2), Some("hot")),
+///     CompiledFpi::Truncate(8)
+/// );
+/// assert_eq!(fcs.resolve(&lib, "kernel", FuncId(2), None), CompiledFpi::Exact);
+/// ```
 #[derive(Clone)]
 pub enum Placement {
     /// One FPI for the whole program.

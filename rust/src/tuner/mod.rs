@@ -139,6 +139,28 @@ pub struct TuneResult {
 /// The heuristic tuner. Deterministic: no RNG anywhere, ties broken by
 /// target index, so a serial and a parallel executor produce identical
 /// results for identical problems.
+///
+/// ```
+/// use neat::explore::{FnProblem, Genome, Objectives};
+/// use neat::tuner::Tuner;
+///
+/// // separable toy: every lost bit costs 0.1% error; energy is the
+/// // fraction of mantissa bits kept
+/// let p = FnProblem {
+///     len: 2,
+///     max_bits: 24,
+///     f: |g: &Genome| Objectives {
+///         error: g.iter().map(|&w| (24 - w) as f64 * 0.001).sum(),
+///         energy: g.iter().sum::<u32>() as f64 / 48.0,
+///     },
+/// };
+/// let tuned = Tuner::error_budget(0.0105).run(&p);
+/// assert!(tuned.feasible);
+/// assert!(tuned.objectives.error <= 0.0105);
+/// // never worse than the best uniform width (w = 19 here: 2 × 5 × 0.1%)
+/// assert!(tuned.objectives.energy <= 38.0 / 48.0 + 1e-12);
+/// assert!(tuned.probes_used <= 400);
+/// ```
 pub struct Tuner {
     config: TunerConfig,
 }

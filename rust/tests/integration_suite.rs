@@ -1,0 +1,127 @@
+//! Integration tests for the sharded suite orchestrator: byte-identical
+//! reports/artifacts between the serial walk and a sharded run, resume
+//! skipping completed shards, and kill-and-resume converging to the
+//! uninterrupted state.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use neat::coordinator::experiments::{fig6, Budget};
+use neat::coordinator::suite::{artifact_canonical, SuiteConfig, SuiteOutcome, SuiteRunner};
+use neat::report::ResultsDir;
+
+const BENCHES: [&str; 2] = ["blackscholes", "kmeans"];
+
+fn config(threads: usize, run_dir: Option<PathBuf>, resume: bool) -> SuiteConfig {
+    let mut cfg = SuiteConfig::new(Budget::quick());
+    cfg.threads = threads;
+    cfg.run_dir = run_dir;
+    cfg.resume = resume;
+    cfg.benchmarks = Some(BENCHES.iter().map(|s| s.to_string()).collect());
+    cfg
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("neat_suite_it_{name}"));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn run(cfg: SuiteConfig) -> SuiteOutcome {
+    SuiteRunner::new(cfg).run(&mut |_m: &str| {}).expect("suite run")
+}
+
+fn assert_results_bitwise_equal(a: &SuiteOutcome, b: &SuiteOutcome) {
+    assert_eq!(a.results.len(), b.results.len());
+    for (x, y) in a.results.iter().zip(&b.results) {
+        assert_eq!(x.name, y.name, "suite order must match");
+        for (rx, ry) in [(&x.wp, &y.wp), (&x.cip, &y.cip)] {
+            assert_eq!(rx.details.len(), ry.details.len(), "{}: archive size", x.name);
+            for ((ga, da), (gb, db)) in rx.details.iter().zip(&ry.details) {
+                assert_eq!(ga, gb, "{}: genome order must match", x.name);
+                assert_eq!(da.error.to_bits(), db.error.to_bits());
+                assert_eq!(da.fpu_nec.to_bits(), db.fpu_nec.to_bits());
+                assert_eq!(da.mem_nec.to_bits(), db.mem_nec.to_bits());
+                assert_eq!(da.fpu_target_nec.to_bits(), db.fpu_target_nec.to_bits());
+            }
+        }
+    }
+}
+
+fn canonical_artifacts(dir: &Path) -> Vec<(String, String)> {
+    BENCHES
+        .iter()
+        .map(|b| {
+            let text = fs::read_to_string(dir.join(format!("{b}.json")))
+                .unwrap_or_else(|e| panic!("missing artifact for {b}: {e}"));
+            (b.to_string(), artifact_canonical(&text))
+        })
+        .collect()
+}
+
+/// The acceptance bar: a 4-thread sharded run produces the same archive
+/// bits, the same report text, and (up to wall clock) the same artifact
+/// bytes as the serial benchmark walk — and a killed run, resumed,
+/// converges to the uninterrupted state.
+#[test]
+fn sharded_run_matches_serial_walk_and_resumes_after_kill() {
+    let dir_serial = tmp_dir("serial");
+    let dir_sharded = tmp_dir("sharded");
+
+    let serial = run(config(1, Some(dir_serial.clone()), false));
+    let sharded = run(config(4, Some(dir_sharded.clone()), false));
+    assert_eq!(serial.executed, BENCHES.to_vec());
+    assert!(serial.resumed.is_empty());
+    assert!(sharded.plan.concurrent_shards >= 2, "4 threads must shard");
+    assert_results_bitwise_equal(&serial, &sharded);
+
+    // artifact files byte-identical up to the wall-clock field
+    let arts_serial = canonical_artifacts(&dir_serial);
+    let arts_sharded = canonical_artifacts(&dir_sharded);
+    assert_eq!(arts_serial, arts_sharded);
+
+    // reports assembled from both runs are byte-identical
+    let rd_a = ResultsDir::new(std::env::temp_dir().join("neat_suite_it_rd_a")).unwrap();
+    let rd_b = ResultsDir::new(std::env::temp_dir().join("neat_suite_it_rd_b")).unwrap();
+    let fig6_serial = fig6(&rd_a, &serial.results).unwrap();
+    let fig6_sharded = fig6(&rd_b, &sharded.results).unwrap();
+    assert_eq!(fig6_serial, fig6_sharded);
+
+    // simulate a kill: one shard's artifact is complete, the other torn
+    let dir_killed = tmp_dir("killed");
+    fs::copy(
+        dir_serial.join(format!("{}.json", BENCHES[0])),
+        dir_killed.join(format!("{}.json", BENCHES[0])),
+    )
+    .unwrap();
+    let full = fs::read_to_string(dir_serial.join(format!("{}.json", BENCHES[1]))).unwrap();
+    fs::write(dir_killed.join(format!("{}.json", BENCHES[1])), &full[..full.len() / 3])
+        .unwrap();
+
+    let resumed = run(config(4, Some(dir_killed.clone()), true));
+    assert_eq!(resumed.resumed, vec![BENCHES[0].to_string()], "complete shard is skipped");
+    assert_eq!(resumed.executed, vec![BENCHES[1].to_string()], "torn shard is re-run");
+    assert_results_bitwise_equal(&serial, &resumed);
+    assert_eq!(arts_serial, canonical_artifacts(&dir_killed));
+}
+
+/// A second `--resume` pass over a completed run directory executes
+/// nothing, and still reproduces the run bit-for-bit from artifacts.
+#[test]
+fn resume_skips_completed_shards() {
+    let dir = tmp_dir("resume");
+    let first = run(config(2, Some(dir.clone()), false));
+    assert_eq!(first.executed.len(), BENCHES.len());
+
+    let second = run(config(2, Some(dir.clone()), true));
+    assert!(second.executed.is_empty(), "resume must skip completed shards");
+    assert_eq!(second.resumed, BENCHES.to_vec());
+    assert_results_bitwise_equal(&first, &second);
+
+    // without --resume the artifacts are ignored and recomputed
+    let third = run(config(2, Some(dir.clone()), false));
+    assert_eq!(third.executed.len(), BENCHES.len());
+    assert!(third.resumed.is_empty());
+    assert_results_bitwise_equal(&first, &third);
+}
