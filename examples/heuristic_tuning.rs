@@ -37,7 +37,7 @@ fn main() {
         );
     }
 
-    println!("\naccepted bit descents:");
+    println!("\naccepted bit descents (one lattice wave per gene):");
     for s in &result.steps {
         println!(
             "  {:<16} {:>2} → {:>2} bits   err {:>6.3}%  NEC {:.4}",
@@ -49,14 +49,34 @@ fn main() {
         );
     }
 
+    // when single-gene lowering stalls in a local minimum, bounded
+    // pairwise exchanges keep draining energy along iso-error ridges
+    if !result.exchanges.is_empty() {
+        println!("\naccepted exchange moves (lower ⇄ raise):");
+        for x in &result.exchanges {
+            println!(
+                "  {:<16} {:>2} → {:>2}  ⇄  {:<16} {:>2} → {:>2}   err {:>6.3}%  NEC {:.4}",
+                eval.top_functions[x.lowered],
+                x.lowered_from,
+                x.lowered_to,
+                eval.top_functions[x.raised],
+                x.raised_from,
+                x.raised_to,
+                x.objectives.error * 100.0,
+                x.objectives.energy
+            );
+        }
+    }
+
     println!(
         "\ntuned widths {:?} for {:?}",
         result.genome, eval.top_functions
     );
     println!(
-        "error {:.3}%  →  {:.1}% FPU energy savings ({} probes of ≤400)",
+        "error {:.3}%  →  {:.1}% FPU energy savings ({} probes of ≤400 in {} waves)",
         result.objectives.error * 100.0,
         (1.0 - result.objectives.energy) * 100.0,
-        result.probes_used
+        result.probes_used,
+        result.waves
     );
 }

@@ -12,7 +12,7 @@ use harness::bench;
 use neat::bench_suite::blackscholes::Blackscholes;
 use neat::coordinator::{EvalProblem, Evaluator, Executor, RuleKind};
 use neat::explore::Genome;
-use neat::tuner::{sensitivity, Tuner};
+use neat::tuner::{sensitivity, DescentStrategy, TuneGoal, Tuner, TunerConfig};
 
 fn main() {
     println!("== heuristic tuner ==");
@@ -66,4 +66,33 @@ fn main() {
         std::hint::black_box(Tuner::error_budget(0.01).run(&problem));
     });
     println!("{}", m.report());
+
+    // speculative lattice vs PR 2's rung-by-rung binary search: same
+    // constraint, exchange phase off, so the delta is pure descent
+    // round-trips (the wave counts print below the timings)
+    let strategies = [
+        ("full tune @1%, lattice descent", DescentStrategy::Lattice),
+        ("full tune @1%, binary-rung descent", DescentStrategy::BinaryRung),
+    ];
+    for (label, strategy) in strategies {
+        let m = bench(label, 1, "tunes", || {
+            let problem = EvalProblem::with_executor(&eval, RuleKind::Cip, exec.clone());
+            let mut config = TunerConfig::new(TuneGoal::ErrorBudget(0.01));
+            config.strategy = strategy;
+            config.exchange_rounds = 0;
+            std::hint::black_box(Tuner::new(config).run(&problem));
+        });
+        println!("{}", m.report());
+    }
+    for (label, strategy) in strategies {
+        let problem = EvalProblem::with_executor(&eval, RuleKind::Cip, exec.clone());
+        let mut config = TunerConfig::new(TuneGoal::ErrorBudget(0.01));
+        config.strategy = strategy;
+        config.exchange_rounds = 0;
+        let r = Tuner::new(config).run(&problem);
+        println!(
+            "{label}: {} evaluate_batch waves, {} unique probes, NEC {:.4}",
+            r.waves, r.probes_used, r.objectives.energy
+        );
+    }
 }

@@ -42,12 +42,21 @@
 //!   resumable per-benchmark run artifact so figure regeneration is one
 //!   restartable job (`neat suite --resume`),
 //! * [`tuner`] — the constraint-driven heuristic precision tuner (the
-//!   paper's "22% / 48% savings at 1% / 10% loss" mode): a one-batch
-//!   sensitivity-profiling pass ranks placement targets by error-per-bit,
-//!   then a greedy most-insensitive-first binary bit descent minimizes
-//!   energy under an error budget (or error under an energy budget),
-//!   re-probing after every accepted lowering, all within a ≤400-config
-//!   evaluation budget and entirely through `Problem::evaluate_batch`,
+//!   paper's "22% / 48% savings at 1% / 10% loss" mode), wave-parallel
+//!   end to end: a one-batch sensitivity-profiling pass ranks placement
+//!   targets by error-per-bit, a *speculative lattice descent* probes
+//!   each gene's entire remaining width lattice in one
+//!   `Problem::evaluate_batch` wave and takes the deepest feasible rung
+//!   (one round-trip per gene per pass; PR 2's rung-by-rung binary
+//!   search survives as `DescentStrategy::BinaryRung`), a bounded
+//!   *pairwise exchange phase* — batched (lower gene *i*, raise gene
+//!   *j*) moves — escapes the local minima the monotone descent stalls
+//!   in, the tuned genome and its one-bit neighborhood *warm-start*
+//!   NSGA-II (`Nsga2Params::warm_started`) so Table VI fronts are dense
+//!   around the constraint point, and a *held-out test protocol*
+//!   (`tuner::protocol`) re-evaluates tuned configs on the test seeds
+//!   and reports the constraint overshoot — all within a ≤400-config
+//!   evaluation budget,
 //! * [`cnn`] + [`runtime`] — the LeNet-5 case study: the AOT-compiled
 //!   JAX/Pallas inference module executed via PJRT with per-layer
 //!   precision as a runtime input,

@@ -22,11 +22,12 @@ use neat::coordinator::experiments::{self, Budget};
 use neat::coordinator::{EvalProblem, Evaluator, Executor, RuleKind, SuiteConfig, SuiteRunner};
 use neat::engine::profile::Profile;
 use neat::engine::FpContext;
+use neat::explore::Objectives;
 use neat::fpi::Precision;
 use neat::report::ResultsDir;
 use neat::runtime::{ArtifactPaths, LenetRuntime};
 use neat::stats::lower_convex_hull;
-use neat::tuner::{TuneGoal, Tuner, TunerConfig};
+use neat::tuner::{DescentStrategy, HeldOutReport, TuneGoal, Tuner, TunerConfig};
 
 fn usage() -> &'static str {
     "usage: neat <command>\n\
@@ -37,9 +38,14 @@ fn usage() -> &'static str {
                [--population N] [--generations N] [--seed N] [--threads N]\n\
        tune    <benchmark> [--rule wp|cip|fcs] [--target single|double]\n\
                [--error-budget E | --energy-budget P] [--max-evals N]\n\
+               [--descent lattice|binary] [--exchange-moves N] [--test-seeds]\n\
                [--threads N]                   heuristic constraint-driven tuning\n\
                (budgets are fractions: --error-budget 0.01 = 1% accuracy loss,\n\
-                --energy-budget 0.5 = half the baseline energy; default 0.01)\n\
+                --energy-budget 0.5 = half the baseline energy; default 0.01.\n\
+                --descent lattice probes each gene's whole width lattice in one\n\
+                wave (default); --exchange-moves bounds the pairwise exchange\n\
+                phase (0 disables); --test-seeds re-evaluates the tuned config\n\
+                on held-out seeds and reports the constraint overshoot)\n\
        suite   [--run-dir DIR] [--resume] [--shard-threads N] [--threads N]\n\
                [--benchmarks a,b,c]            regenerate every figure with the\n\
                                                benchmark walk sharded across the\n\
@@ -74,7 +80,7 @@ fn parse_args(raw: &[String]) -> Args {
         let a = &raw[i];
         if let Some(name) = a.strip_prefix("--") {
             // value-taking flags; everything else is a switch
-            const VALUED: [&str; 14] = [
+            const VALUED: [&str; 16] = [
                 "rule",
                 "target",
                 "population",
@@ -89,6 +95,8 @@ fn parse_args(raw: &[String]) -> Args {
                 "run-dir",
                 "shard-threads",
                 "benchmarks",
+                "descent",
+                "exchange-moves",
             ];
             if VALUED.contains(&name) && i + 1 < raw.len() {
                 flags.insert(name.to_string(), raw[i + 1].clone());
@@ -286,20 +294,33 @@ fn cmd_tune(args: &Args) -> Result<()> {
         Some(v) => v.parse().context("--max-evals must be a positive integer")?,
         None => 400,
     };
+    let strategy = match args.flags.get("descent").map(String::as_str) {
+        None | Some("lattice") => DescentStrategy::Lattice,
+        Some("binary") => DescentStrategy::BinaryRung,
+        Some(other) => bail!("unknown descent strategy {other} (lattice|binary)"),
+    };
+    let exchange_rounds: usize = match args.flags.get("exchange-moves") {
+        Some(v) => v.parse().context("--exchange-moves must be a non-negative integer")?,
+        None => neat::tuner::DEFAULT_EXCHANGE_ROUNDS,
+    };
     let exec = args.executor();
     eprintln!("profiling {name} and preparing baselines...");
     let eval = Evaluator::new(w, target);
     eprintln!(
-        "tuning {} / {} under {:?}: {} targets, ≤{} probes, {} worker threads",
+        "tuning {} / {} under {:?}: {} targets, ≤{} probes, {:?} descent, \
+         ≤{} exchange moves/phase, {} worker threads",
         name,
         rule.name(),
         goal,
         eval.genome_len(rule),
         max_evals,
+        strategy,
+        exchange_rounds,
         exec.threads()
     );
     let problem = EvalProblem::with_executor(&eval, rule, exec.clone());
-    let result = Tuner::new(TunerConfig { goal, max_evals }).run(&problem);
+    let result =
+        Tuner::new(TunerConfig { goal, max_evals, strategy, exchange_rounds }).run(&problem);
 
     let target_names: Vec<String> = match rule {
         RuleKind::Wp => vec!["whole-program".to_string()],
@@ -327,6 +348,22 @@ fn cmd_tune(args: &Args) -> Result<()> {
             s.objectives.energy
         );
     }
+    if !result.exchanges.is_empty() {
+        println!("\naccepted exchange moves (lower ⇄ raise):");
+        for x in &result.exchanges {
+            println!(
+                "  {:<20} {:>2} → {:>2}  ⇄  {:<20} {:>2} → {:>2}   err {:>7.3}%  NEC {:>7.4}",
+                target_names[x.lowered],
+                x.lowered_from,
+                x.lowered_to,
+                target_names[x.raised],
+                x.raised_from,
+                x.raised_to,
+                x.objectives.error * 100.0,
+                x.objectives.energy
+            );
+        }
+    }
     println!(
         "\ntuned configuration: [{}]",
         result
@@ -344,8 +381,9 @@ fn cmd_tune(args: &Args) -> Result<()> {
     );
     let (hits, misses) = problem.cache_stats();
     println!(
-        "probes: {} unique configurations (budget {max_evals}); executor cache {hits} hits / {misses} misses",
-        result.probes_used
+        "probes: {} unique configurations in {} evaluate_batch waves (budget {max_evals}); \
+         executor cache {hits} hits / {misses} misses",
+        result.probes_used, result.waves
     );
     if !result.feasible {
         eprintln!(
@@ -353,6 +391,31 @@ fn cmd_tune(args: &Args) -> Result<()> {
              reporting the best-effort configuration",
             goal.name()
         );
+    }
+
+    if args.switches.contains("test-seeds") {
+        // held-out protocol: the tuned configuration on unseen seeds
+        let t = eval.evaluate_test_batch(rule, std::slice::from_ref(&result.genome), &exec)[0];
+        let report = HeldOutReport::new(
+            goal,
+            result.objectives,
+            Objectives { error: t.error, energy: t.fpu_nec },
+        );
+        println!(
+            "\nheld-out test seeds: error {:.3}%  FPU NEC {:.4}  (train→test gap {:+.3e})",
+            report.test.error * 100.0,
+            report.test.energy,
+            report.generalization_gap()
+        );
+        if report.within_budget() {
+            println!("constraint holds on unseen inputs (overshoot 0)");
+        } else {
+            println!(
+                "constraint overshoot on unseen inputs: {:.3e} beyond the {} budget",
+                report.overshoot(),
+                goal.name()
+            );
+        }
     }
 
     let rd = args.results()?;
@@ -440,7 +503,7 @@ fn cmd_figure(args: &Args) -> Result<()> {
                 "fig5" => experiments::fig5(&rd, &suite)?,
                 "fig6" => experiments::fig6(&rd, &suite)?,
                 "fig7" => experiments::fig7(&rd, &suite)?,
-                "table6" => experiments::table6(&rd, &suite, &exec, &mut log)?,
+                "table6" => experiments::table6(&rd, &suite, budget, &exec, &mut log)?,
                 _ => experiments::table3(&rd, &suite, &exec, &mut log)?,
             }
         }

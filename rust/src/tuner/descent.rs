@@ -1,20 +1,31 @@
-//! Greedy per-target bit descent under an explicit constraint — the
+//! Per-target refinement moves under an explicit constraint — the
 //! paper's heuristic tuning mode ("up to 22% and 48% energy savings at
 //! 1% and 10% accuracy loss"), as opposed to the Pareto sweep the
 //! NSGA-II explorer produces.
 //!
-//! * **Error-budget mode** (minimize energy s.t. error ≤ ε): walk the
-//!   targets most-insensitive-first and binary-search each gene's
-//!   mantissa width down to the lowest width that keeps the whole
-//!   configuration inside the budget. After every accepted lowering the
-//!   remaining targets are re-probed (their sensitivities shift once a
-//!   neighbour loses bits), and full passes repeat until a pass changes
-//!   nothing or the evaluation budget is gone.
-//! * **Energy-budget mode** (minimize error s.t. energy ≤ ψ): the
-//!   inverse — start from the minimum-error (widest) uniform
-//!   configuration that fits the energy budget and greedily *raise* the
-//!   gene that buys the most error back while staying inside ψ; every
-//!   round's candidate raises are one `evaluate_batch` wave.
+//! Three move families, all funneled through the budgeted
+//! [`ProbeSet`] so every wave is one `Problem::evaluate_batch` call:
+//!
+//! * **Speculative lattice descent** (the default,
+//!   [`super::DescentStrategy::Lattice`]): for each gene, probe its
+//!   entire remaining root-to-leaf width lattice in **one** wave and
+//!   take the deepest feasible rung — one descent round-trip per gene
+//!   per pass, versus the ~log₂(width) round-trips of the rung-by-rung
+//!   binary search it replaces (cf. the batched multi-level probing in
+//!   Yesil et al., "On Dynamic Precision Scaling").
+//! * **Rung-by-rung binary descent**
+//!   ([`super::DescentStrategy::BinaryRung`], PR 2's loop, kept for A/B
+//!   comparison and the lattice-equivalence property tests): walk the
+//!   targets most-insensitive-first, binary-search each gene's width
+//!   down, re-rank the remaining targets after every accepted lowering.
+//! * **Pairwise exchange moves** ([`exchange_phase`]): batched
+//!   (lower gene *i* by one bit, raise gene *j* by one bit) neighbors of
+//!   the incumbent, accepting the feasible candidate that *strictly*
+//!   improves the goal's objective. Exchanges escape the per-gene local
+//!   minima the monotone descent stalls in (cf. the exchange-style moves
+//!   in Chen et al., "Floating-point autotuning with customized
+//!   precisions") while keeping the total width — and with it the error
+//!   budget — in check.
 //!
 //! Acceptance tests treat non-finite objectives as infeasible (see
 //! [`crate::explore::Objectives::dominates`] for the matching Pareto
@@ -24,7 +35,7 @@ use crate::explore::{Genome, Objectives};
 
 use super::probes::ProbeSet;
 use super::sensitivity::rank_targets;
-use super::TuneStep;
+use super::{DescentStrategy, ExchangeStep, TuneGoal, TuneStep};
 
 /// Feasibility under the active goal.
 pub(super) fn feasible_error(o: &Objectives, eps: f64) -> bool {
@@ -36,11 +47,11 @@ pub(super) fn feasible_energy(o: &Objectives, psi: f64) -> bool {
 }
 
 /// Binary-search the lowest feasible width for gene `target`, holding
-/// every other gene fixed. Accepts only moves that keep the error
-/// budget *and* do not increase energy, so the incumbent's energy is
-/// monotonically non-increasing across the whole descent. Returns the
-/// accepted step, if any.
-fn lower_target(
+/// every other gene fixed (PR 2's rung-by-rung probing). Accepts only
+/// moves that keep the error budget *and* do not increase energy, so
+/// the incumbent's energy is monotonically non-increasing across the
+/// whole descent. Returns the accepted step, if any.
+fn lower_target_binary(
     probes: &mut ProbeSet<'_>,
     genome: &mut Genome,
     incumbent: &mut Objectives,
@@ -81,10 +92,132 @@ fn lower_target(
     }
 }
 
+/// The rungs one lattice wave probes for a gene at `width`: every
+/// remaining width when `quota` allows, otherwise `quota` rungs evenly
+/// spaced across the lattice (endpoints included) — a tight evaluation
+/// budget still reaches the deep end instead of only the safest
+/// prefix. Descending order, deterministic.
+fn lattice_widths(width: u32, quota: usize) -> Vec<u32> {
+    let all: Vec<u32> = (1..width).rev().collect();
+    let quota = quota.max(1);
+    if all.len() <= quota {
+        return all;
+    }
+    if quota == 1 {
+        return vec![all[0]]; // safest rung: progress stays possible
+    }
+    let n = all.len();
+    let mut picked: Vec<u32> =
+        (0..quota).map(|i| all[i * (n - 1) / (quota - 1)]).collect();
+    picked.dedup();
+    picked
+}
+
+/// Speculative lattice probe of gene `target`: up to `quota` of its
+/// remaining widths ([`lattice_widths`]) in **one** `evaluate_batch`
+/// wave, then take the deepest feasible rung — the lowest-energy width
+/// that keeps the error budget without raising energy above the
+/// incumbent's, ties broken toward fewer bits. One round-trip per
+/// gene, versus the binary search's one round-trip per probed rung.
+fn lower_target_lattice(
+    probes: &mut ProbeSet<'_>,
+    genome: &mut Genome,
+    incumbent: &mut Objectives,
+    target: usize,
+    eps: f64,
+    quota: usize,
+) -> Option<TuneStep> {
+    let start = genome[target];
+    if start <= 1 {
+        return None;
+    }
+    let widths = lattice_widths(start, quota);
+    let wave: Vec<Genome> = widths
+        .iter()
+        .map(|&w| {
+            let mut g = genome.clone();
+            g[target] = w;
+            g
+        })
+        .collect();
+    let results = probes.batch(&wave);
+    let mut best: Option<(u32, Objectives)> = None;
+    for (&w, res) in widths.iter().zip(&results) {
+        let Some(o) = res else { continue }; // budget-dropped probe
+        if !feasible_error(o, eps) || o.energy > incumbent.energy {
+            continue; // outside the budget, or would raise energy
+        }
+        let better = match &best {
+            None => true,
+            Some((bw, b)) => o.energy < b.energy || (o.energy == b.energy && w < *bw),
+        };
+        if better {
+            best = Some((w, *o));
+        }
+    }
+    let (best_w, best_obj) = best?;
+    genome[target] = best_w;
+    let step = TuneStep { target, from: start, to: best_w, objectives: best_obj };
+    *incumbent = best_obj;
+    Some(step)
+}
+
 /// Error-budget descent from a feasible `genome`/`incumbent` pair.
-/// Mutates both to the tuned configuration and returns the accepted
+/// Mutates both to the descended configuration and returns the accepted
 /// steps in order.
+///
+/// * [`DescentStrategy::Lattice`] walks `order` (the seed wave's
+///   most-insensitive-first ranking, answered at zero extra probe cost)
+///   and lowers each gene with one lattice wave; passes repeat until a
+///   pass changes nothing — ≤ one `evaluate_batch` round-trip per gene
+///   per pass, no re-ranking waves.
+/// * [`DescentStrategy::BinaryRung`] reproduces PR 2 exactly: targets
+///   leave the pass one at a time, re-ranked after every accepted
+///   lowering, each gene bisected rung by rung.
 pub(super) fn descend_error_budget(
+    probes: &mut ProbeSet<'_>,
+    genome: &mut Genome,
+    incumbent: &mut Objectives,
+    eps: f64,
+    strategy: DescentStrategy,
+    order: &[usize],
+) -> Vec<TuneStep> {
+    match strategy {
+        DescentStrategy::Lattice => {
+            let mut steps = Vec::new();
+            loop {
+                let mut changed = false;
+                let targets: Vec<usize> =
+                    order.iter().copied().filter(|&t| genome[t] > 1).collect();
+                for (k, &t) in targets.iter().enumerate() {
+                    if probes.remaining() == 0 {
+                        break;
+                    }
+                    // spread the remaining budget across the genes still
+                    // to visit this pass, so a tight --max-evals keeps
+                    // probing deep rungs for every gene instead of
+                    // spending everything on the first few lattices
+                    let quota = (probes.remaining() / (targets.len() - k)).max(1);
+                    if let Some(step) =
+                        lower_target_lattice(probes, genome, incumbent, t, eps, quota)
+                    {
+                        steps.push(step);
+                        changed = true;
+                    }
+                }
+                if !changed || probes.remaining() == 0 {
+                    break;
+                }
+            }
+            steps
+        }
+        DescentStrategy::BinaryRung => descend_binary_rung(probes, genome, incumbent, eps),
+    }
+}
+
+/// PR 2's rung-by-rung loop: full passes of re-ranked binary descents
+/// until a pass changes nothing or the evaluation budget is gone.
+fn descend_binary_rung(
     probes: &mut ProbeSet<'_>,
     genome: &mut Genome,
     incumbent: &mut Objectives,
@@ -106,7 +239,7 @@ pub(super) fn descend_error_budget(
                 rank_targets(probes, genome, incumbent, &remaining)[0].target
             };
             remaining.retain(|&t| t != next);
-            if let Some(step) = lower_target(probes, genome, incumbent, next, eps) {
+            if let Some(step) = lower_target_binary(probes, genome, incumbent, next, eps) {
                 steps.push(step);
                 changed = true;
             }
@@ -187,6 +320,85 @@ pub(super) fn ascend_energy_budget(
     steps
 }
 
+/// Bounded pairwise exchange refinement: up to `max_rounds` rounds,
+/// each assembling every (lower gene *i* by one bit, raise gene *j* by
+/// one bit) neighbor of the incumbent into **one** `evaluate_batch`
+/// wave and accepting the feasible candidate that most improves — and
+/// *strictly* improves — the goal's objective ([`TuneGoal::score`]).
+///
+/// The strict-improvement accept rule is what makes the phase safe to
+/// run under either goal: under an error budget an exchange must lower
+/// energy while [`TuneGoal::feasible`] keeps the error inside ε, under
+/// an energy budget it must lower error while staying inside ψ, and
+/// because the score strictly decreases on every accepted move the
+/// phase can never cycle. Ties break toward the earliest `(i, j)` pair,
+/// so the whole phase is deterministic.
+pub(super) fn exchange_phase(
+    probes: &mut ProbeSet<'_>,
+    genome: &mut Genome,
+    incumbent: &mut Objectives,
+    goal: TuneGoal,
+    max_bits: u32,
+    max_rounds: usize,
+) -> Vec<ExchangeStep> {
+    let len = genome.len();
+    let mut steps = Vec::new();
+    for _round in 0..max_rounds {
+        if probes.remaining() == 0 {
+            break;
+        }
+        let mut plan: Vec<(usize, usize)> = Vec::new();
+        let mut wave: Vec<Genome> = Vec::new();
+        for i in 0..len {
+            if genome[i] <= 1 {
+                continue;
+            }
+            for j in 0..len {
+                if j == i || genome[j] >= max_bits {
+                    continue;
+                }
+                let mut g = genome.clone();
+                g[i] -= 1;
+                g[j] += 1;
+                plan.push((i, j));
+                wave.push(g);
+            }
+        }
+        if wave.is_empty() {
+            break;
+        }
+        let results = probes.batch(&wave);
+        let mut best: Option<(usize, usize, Objectives)> = None;
+        for (&(i, j), res) in plan.iter().zip(&results) {
+            let Some(o) = res else { continue }; // budget-dropped probe
+            if !goal.feasible(o) || goal.score(o) >= goal.score(incumbent) {
+                continue; // must strictly improve the goal's objective
+            }
+            let better = match &best {
+                None => true,
+                Some((_, _, b)) => goal.score(o) < goal.score(b),
+            };
+            if better {
+                best = Some((i, j, *o));
+            }
+        }
+        let Some((i, j, o)) = best else { break };
+        steps.push(ExchangeStep {
+            lowered: i,
+            lowered_from: genome[i],
+            lowered_to: genome[i] - 1,
+            raised: j,
+            raised_from: genome[j],
+            raised_to: genome[j] + 1,
+            objectives: o,
+        });
+        genome[i] -= 1;
+        genome[j] += 1;
+        *incumbent = o;
+    }
+    steps
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,35 +422,102 @@ mod tests {
         }
     }
 
+    /// Most-insensitive-first order for `toy`: the cheap genes lead.
+    const TOY_ORDER: [usize; 3] = [1, 2, 0];
+
     #[test]
     fn error_descent_respects_budget_and_lowers_energy() {
-        let p = toy();
-        let mut probes = ProbeSet::new(&p, 400);
-        let mut genome = vec![24u32; 3];
-        let mut obj = Objectives { error: 0.0, energy: 1.0 };
-        let eps = 0.02;
-        let steps = descend_error_budget(&mut probes, &mut genome, &mut obj, eps);
-        assert!(!steps.is_empty());
-        assert!(obj.error <= eps + 1e-12, "final error {} > {eps}", obj.error);
-        assert!(obj.energy < 1.0, "descent must save energy");
-        // per-step invariants: error stays within budget, energy never rises
-        let mut last_energy = 1.0f64;
-        for s in &steps {
-            assert!(s.to < s.from);
-            assert!(s.objectives.error <= eps + 1e-12);
-            assert!(s.objectives.energy <= last_energy + 1e-12);
-            last_energy = s.objectives.energy;
+        for strategy in [DescentStrategy::Lattice, DescentStrategy::BinaryRung] {
+            let p = toy();
+            let mut probes = ProbeSet::new(&p, 400);
+            let mut genome = vec![24u32; 3];
+            let mut obj = Objectives { error: 0.0, energy: 1.0 };
+            let eps = 0.02;
+            let steps = descend_error_budget(
+                &mut probes, &mut genome, &mut obj, eps, strategy, &TOY_ORDER,
+            );
+            assert!(!steps.is_empty(), "{strategy:?} accepted nothing");
+            assert!(obj.error <= eps + 1e-12, "final error {} > {eps}", obj.error);
+            assert!(obj.energy < 1.0, "descent must save energy");
+            // per-step invariants: error stays within budget, energy never rises
+            let mut last_energy = 1.0f64;
+            for s in &steps {
+                assert!(s.to < s.from);
+                assert!(s.objectives.error <= eps + 1e-12);
+                assert!(s.objectives.energy <= last_energy + 1e-12);
+                last_energy = s.objectives.energy;
+            }
         }
     }
 
     #[test]
-    fn tighter_budget_keeps_more_bits() {
-        let p = toy();
-        let run = |eps: f64| {
+    fn lattice_matches_binary_rung_on_separable_toy() {
+        let run = |strategy| {
+            let p = toy();
             let mut probes = ProbeSet::new(&p, 400);
             let mut genome = vec![24u32; 3];
             let mut obj = Objectives { error: 0.0, energy: 1.0 };
-            descend_error_budget(&mut probes, &mut genome, &mut obj, eps);
+            descend_error_budget(
+                &mut probes, &mut genome, &mut obj, 0.02, strategy, &TOY_ORDER,
+            );
+            (genome, obj)
+        };
+        let (g_lat, o_lat) = run(DescentStrategy::Lattice);
+        let (g_bin, o_bin) = run(DescentStrategy::BinaryRung);
+        assert_eq!(g_lat, g_bin, "strategies diverged on a monotone separable toy");
+        assert_eq!(o_lat.energy.to_bits(), o_bin.energy.to_bits());
+    }
+
+    #[test]
+    fn lattice_lowers_a_gene_in_one_wave() {
+        let p = toy();
+        let mut genome = vec![24u32; 3];
+        let mut obj = Objectives { error: 0.0, energy: 1.0 };
+
+        let mut probes = ProbeSet::new(&p, 400);
+        let step = lower_target_lattice(&mut probes, &mut genome, &mut obj, 1, 0.02, 400);
+        assert!(step.is_some());
+        assert_eq!(probes.waves(), 1, "the lattice probe must be a single wave");
+
+        // the binary search pays one round-trip per probed rung
+        let mut genome = vec![24u32; 3];
+        let mut obj = Objectives { error: 0.0, energy: 1.0 };
+        let mut probes = ProbeSet::new(&p, 400);
+        let step = lower_target_binary(&mut probes, &mut genome, &mut obj, 1, 0.02);
+        assert!(step.is_some());
+        assert!(probes.waves() > 1, "bisection takes multiple round-trips");
+    }
+
+    #[test]
+    fn lattice_widths_cover_both_ends_under_a_tight_quota() {
+        // plenty of quota: the full descending lattice
+        assert_eq!(lattice_widths(5, 100), vec![4, 3, 2, 1]);
+        // tight quota: evenly spaced, safest and deepest rung included
+        let sampled = lattice_widths(24, 4);
+        assert_eq!(sampled.len(), 4);
+        assert_eq!(*sampled.first().unwrap(), 23, "safest rung kept");
+        assert_eq!(*sampled.last().unwrap(), 1, "deepest rung kept");
+        assert!(sampled.windows(2).all(|p| p[0] > p[1]), "descending");
+        // quota of one degrades to the safest rung
+        assert_eq!(lattice_widths(24, 1), vec![23]);
+        assert!(lattice_widths(1, 10).is_empty());
+    }
+
+    #[test]
+    fn tighter_budget_keeps_more_bits() {
+        let run = |eps: f64| {
+            let p = toy();
+            let mut probes = ProbeSet::new(&p, 400);
+            let mut genome = vec![24u32; 3];
+            let mut obj = Objectives { error: 0.0, energy: 1.0 };
+            descend_error_budget(
+                &mut probes,
+                &mut genome,
+                &mut obj,
+                eps,
+                DescentStrategy::Lattice,
+                &TOY_ORDER,
+            );
             (genome, obj)
         };
         let (g_tight, o_tight) = run(0.005);
@@ -270,11 +549,101 @@ mod tests {
 
     #[test]
     fn descent_halts_on_probe_budget() {
-        let p = toy();
-        let mut probes = ProbeSet::new(&p, 8);
-        let mut genome = vec![24u32; 3];
-        let mut obj = Objectives { error: 0.0, energy: 1.0 };
-        descend_error_budget(&mut probes, &mut genome, &mut obj, 0.05);
-        assert!(probes.used() <= 8);
+        for strategy in [DescentStrategy::Lattice, DescentStrategy::BinaryRung] {
+            let p = toy();
+            let mut probes = ProbeSet::new(&p, 8);
+            let mut genome = vec![24u32; 3];
+            let mut obj = Objectives { error: 0.0, energy: 1.0 };
+            descend_error_budget(
+                &mut probes, &mut genome, &mut obj, 0.05, strategy, &TOY_ORDER,
+            );
+            assert!(probes.used() <= 8);
+        }
+    }
+
+    /// A coupled toy where single-gene descent stalls: error depends only
+    /// on the *total* width, so lowering any one gene from the best
+    /// uniform start breaks the budget — but gene 0 burns bits three
+    /// times faster than gene 1, so (lower 0, raise 1) exchanges keep the
+    /// error pinned while draining energy.
+    fn coupled() -> FnProblem<impl Fn(&Genome) -> Objectives> {
+        FnProblem {
+            len: 2,
+            max_bits: 24,
+            f: |g: &Genome| Objectives {
+                error: (48 - g[0] - g[1]) as f64 * 0.001,
+                energy: (3 * g[0] + g[1]) as f64 / 96.0,
+            },
+        }
+    }
+
+    #[test]
+    fn exchange_escapes_the_monotone_descent_local_minimum() {
+        let p = coupled();
+        let mut probes = ProbeSet::new(&p, 400);
+        let eps = 0.01;
+        // the best feasible uniform rung (the tuner's start): 48-2w ≤ 10
+        let mut genome = vec![19u32, 19];
+        let mut obj = Objectives { error: 0.01, energy: 76.0 / 96.0 };
+
+        // the descent is stuck: lowering either gene alone breaks ε
+        let steps = descend_error_budget(
+            &mut probes,
+            &mut genome,
+            &mut obj,
+            eps,
+            DescentStrategy::Lattice,
+            &[0, 1],
+        );
+        assert!(steps.is_empty(), "descent should stall on the coupled toy");
+
+        // exchanges walk the iso-error ridge toward the cheap gene
+        let swaps = exchange_phase(
+            &mut probes,
+            &mut genome,
+            &mut obj,
+            TuneGoal::ErrorBudget(eps),
+            24,
+            16,
+        );
+        assert!(!swaps.is_empty(), "exchange must escape the local minimum");
+        let mut last = 76.0 / 96.0;
+        for x in &swaps {
+            assert_eq!(x.lowered, 0, "only lowering the expensive gene helps");
+            assert_eq!(x.raised, 1);
+            assert!(x.objectives.error <= eps + 1e-12, "exchange broke the budget");
+            assert!(x.objectives.energy < last, "exchange must strictly improve");
+            last = x.objectives.energy;
+        }
+        // the ridge ends when the cheap gene saturates at max_bits
+        assert_eq!(genome, vec![14, 24]);
+        assert!((obj.energy - 66.0 / 96.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exchange_rejects_infeasible_and_score_neutral_moves() {
+        // energy counts only the total width: every exchange is
+        // score-neutral, so none may be accepted
+        let p = FnProblem {
+            len: 2,
+            max_bits: 24,
+            f: |g: &Genome| Objectives {
+                error: (48 - g[0] - g[1]) as f64 * 0.001,
+                energy: (g[0] + g[1]) as f64 / 48.0,
+            },
+        };
+        let mut probes = ProbeSet::new(&p, 400);
+        let mut genome = vec![19u32, 19];
+        let mut obj = Objectives { error: 0.01, energy: 38.0 / 48.0 };
+        let swaps = exchange_phase(
+            &mut probes,
+            &mut genome,
+            &mut obj,
+            TuneGoal::ErrorBudget(0.01),
+            24,
+            8,
+        );
+        assert!(swaps.is_empty(), "score-neutral exchanges must be rejected");
+        assert_eq!(genome, vec![19, 19]);
     }
 }

@@ -11,39 +11,64 @@
 //! workload-agnostic — per-function CIP/FCS genomes, the single WP
 //! slot, and the CNN's per-layer slots all tune through the same code.
 //!
-//! The algorithm (cf. Chen et al., "Floating-point autotuning with
-//! customized precisions", and Yesil et al., "On Dynamic Precision
-//! Scaling" — both tune per-region precision against an explicit
-//! constraint rather than sweeping a front):
+//! # The search loop
 //!
-//! 1. **Seed wave** ([`sensitivity`]) — one `evaluate_batch` call
-//!    carrying the exact baseline, the full uniform-width ladder, and a
-//!    per-target probe ladder. From it: the starting configuration (the
-//!    best feasible uniform one, so the tuner starts no worse than the
-//!    best single width *in this genome space* — exactly the WP sweep
-//!    whenever the rule's targets cover the program's FLOPs, e.g. the
-//!    WP rule itself or full-coverage benchmarks; the paper's top-10
+//! Wave-parallel search (cf. Chen et al., "Floating-point autotuning
+//! with customized precisions", and Yesil et al., "On Dynamic Precision
+//! Scaling" — both tune per-region precision against an explicit
+//! constraint via batched multi-level probing rather than sweeping a
+//! front), every wave one [`Problem::evaluate_batch`] call:
+//!
+//! 1. **Seed wave** ([`sensitivity`]) — one batch carrying the exact
+//!    baseline, the full uniform-width ladder, and a per-target probe
+//!    ladder. From it: the starting configuration (the best feasible
+//!    uniform one, so the tuner starts no worse than the best single
+//!    width *in this genome space* — exactly the WP sweep whenever the
+//!    rule's targets cover the program's FLOPs; the paper's top-10
 //!    cutoff keeps that coverage ≥98%) and an error-per-bit ranking of
 //!    every target.
-//! 2. **Greedy bit descent** ([`descent`]) — most-insensitive target
-//!    first, binary-search each gene's width down to the lowest
-//!    feasible value; re-probe the remaining targets after every
-//!    accepted lowering; repeat passes to a fixed point.
-//! 3. **Budget** ([`probes`]) — everything above flows through one
-//!    budgeted probe front-end (≤ 400 unique configurations by default,
-//!    §V-A) that only ever calls [`Problem::evaluate_batch`], so the
-//!    batch executor parallelizes every wave.
+//! 2. **Lattice waves** ([`DescentStrategy::Lattice`]) — most-
+//!    insensitive target first, probe each gene's entire remaining
+//!    root-to-leaf width lattice in one wave and take the deepest
+//!    feasible rung: one descent round-trip per gene per pass, passes
+//!    to a fixed point. ([`DescentStrategy::BinaryRung`] keeps PR 2's
+//!    rung-by-rung binary search for A/B comparison.)
+//! 3. **Exchange waves** ([`TunerConfig::exchange_rounds`]) — a bounded
+//!    phase of batched (lower gene *i*, raise gene *j*) moves that
+//!    escape the per-gene local minima the monotone descent stalls in;
+//!    an accepted exchange reshapes the landscape, so descent and
+//!    exchange alternate until neither improves.
+//! 4. **Warm-start handoff** ([`warm_start_genomes`]) — the tuned
+//!    genome and its one-bit neighborhood seed
+//!    [`crate::explore::Nsga2Params::warm_started`], so a follow-up
+//!    NSGA-II front is dense around the constraint point (Table VI)
+//!    instead of spending early generations rediscovering it.
+//! 5. **Held-out verdict** ([`protocol`]) — the tuned configuration is
+//!    re-evaluated on the workload's test seeds (Table III style) and
+//!    the constraint overshoot on unseen inputs is reported.
+//!
+//! Everything flows through one budgeted probe front-end ([`probes`],
+//! ≤ 400 unique configurations by default, §V-A) that only ever calls
+//! [`Problem::evaluate_batch`], so the batch executor parallelizes
+//! every wave — and because the tuner is RNG-free with index-ordered
+//! tie-breaks, a serial and a parallel executor produce identical
+//! results (the PR 1–3 determinism contract).
 
 pub mod cnn;
 mod descent;
 pub mod probes;
+pub mod protocol;
 pub mod sensitivity;
 
 use crate::explore::{Genome, Objectives, Problem};
 
-use descent::{ascend_energy_budget, descend_error_budget, feasible_energy, feasible_error};
+use descent::{
+    ascend_energy_budget, descend_error_budget, exchange_phase, feasible_energy,
+    feasible_error,
+};
 use probes::ProbeSet;
 use sensitivity::rank_targets;
+pub use protocol::HeldOutReport;
 pub use sensitivity::SensitivityRank;
 
 /// What the tuner is asked to hold constant (paper abstract: both
@@ -66,21 +91,57 @@ impl TuneGoal {
         }
     }
 
-    fn feasible(&self, o: &Objectives) -> bool {
+    /// Whether a configuration satisfies this goal's constraint.
+    /// Non-finite objectives (a diverging probe) are never feasible.
+    ///
+    /// ```
+    /// use neat::explore::Objectives;
+    /// use neat::tuner::TuneGoal;
+    ///
+    /// let goal = TuneGoal::ErrorBudget(0.01);
+    /// assert!(goal.feasible(&Objectives { error: 0.009, energy: 0.8 }));
+    /// assert!(!goal.feasible(&Objectives { error: 0.02, energy: 0.8 }));
+    /// assert!(!goal.feasible(&Objectives { error: f64::NAN, energy: 0.8 }));
+    /// ```
+    pub fn feasible(&self, o: &Objectives) -> bool {
         match *self {
             TuneGoal::ErrorBudget(eps) => feasible_error(o, eps),
             TuneGoal::EnergyBudget(psi) => feasible_energy(o, psi),
         }
     }
 
-    /// The objective minimized under this goal.
-    fn score(&self, o: &Objectives) -> f64 {
+    /// The objective minimized under this goal: energy under an error
+    /// budget, error under an energy budget. Every accepted refinement
+    /// move keeps the score non-increasing (exchange moves require a
+    /// *strict* decrease), which is what makes the search loop terminate.
+    pub fn score(&self, o: &Objectives) -> f64 {
         match self {
             TuneGoal::ErrorBudget(_) => o.energy,
             TuneGoal::EnergyBudget(_) => o.error,
         }
     }
 }
+
+/// How the error-budget refinement lowers a single gene.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DescentStrategy {
+    /// Speculative lattice descent (the default): probe the gene's
+    /// entire remaining root-to-leaf width lattice in one
+    /// `evaluate_batch` wave and take the deepest feasible rung — one
+    /// descent round-trip per gene per pass, with the target order
+    /// fixed by the seed wave's sensitivity ranking.
+    #[default]
+    Lattice,
+    /// PR 2's rung-by-rung binary search, ~log₂(width) round-trips per
+    /// gene with targets re-ranked after every accepted lowering. Kept
+    /// for A/B comparison; on monotone problems it lands on the same
+    /// rung as the lattice (see `tests/proptest_invariants.rs`).
+    BinaryRung,
+}
+
+/// Default bound on accepted pairwise exchange moves per exchange
+/// phase ([`TunerConfig::exchange_rounds`]).
+pub const DEFAULT_EXCHANGE_ROUNDS: usize = 4;
 
 /// Tuner knobs.
 #[derive(Debug, Clone, Copy)]
@@ -89,12 +150,27 @@ pub struct TunerConfig {
     pub goal: TuneGoal,
     /// Evaluation budget: unique configurations probed (§V-A: ≤ 400).
     pub max_evals: usize,
+    /// Single-gene lowering strategy (error-budget mode; the
+    /// energy-budget ascent is already wave-based).
+    pub strategy: DescentStrategy,
+    /// Bound on accepted exchange moves per exchange phase — each round
+    /// is one `evaluate_batch` wave of every (lower gene *i*, raise
+    /// gene *j*) neighbor. `0` disables the phase entirely,
+    /// reproducing the PR 2 monotone descent.
+    pub exchange_rounds: usize,
 }
 
 impl TunerConfig {
-    /// Default budget for a goal.
+    /// Default configuration for a goal: the §V-A 400-probe budget,
+    /// lattice descent, and a [`DEFAULT_EXCHANGE_ROUNDS`]-move exchange
+    /// phase.
     pub fn new(goal: TuneGoal) -> Self {
-        Self { goal, max_evals: 400 }
+        Self {
+            goal,
+            max_evals: 400,
+            strategy: DescentStrategy::default(),
+            exchange_rounds: DEFAULT_EXCHANGE_ROUNDS,
+        }
     }
 }
 
@@ -108,6 +184,28 @@ pub struct TuneStep {
     /// Width after.
     pub to: u32,
     /// Whole-configuration objectives after the change.
+    pub objectives: Objectives,
+}
+
+/// One accepted pairwise exchange move: gene `lowered` gave up one
+/// mantissa bit while gene `raised` gained one, strictly improving the
+/// goal's objective ([`TuneGoal::score`]) without leaving the feasible
+/// region.
+#[derive(Debug, Clone, Copy)]
+pub struct ExchangeStep {
+    /// Gene that lost a bit.
+    pub lowered: usize,
+    /// Its width before the move.
+    pub lowered_from: u32,
+    /// Its width after the move (`lowered_from - 1`).
+    pub lowered_to: u32,
+    /// Gene that gained a bit.
+    pub raised: usize,
+    /// Its width before the move.
+    pub raised_from: u32,
+    /// Its width after the move (`raised_from + 1`).
+    pub raised_to: u32,
+    /// Whole-configuration objectives after the move.
     pub objectives: Objectives,
 }
 
@@ -127,13 +225,54 @@ pub struct TuneResult {
     pub feasible: bool,
     /// Unique configurations probed (≤ `TunerConfig::max_evals`).
     pub probes_used: usize,
+    /// `evaluate_batch` round-trips issued (seed wave + lattice /
+    /// binary-rung / exchange waves) — the latency figure the
+    /// speculative lattice descent cuts to one per gene per pass.
+    pub waves: usize,
     /// Initial sensitivity ranking, most insensitive first.
     pub sensitivity: Vec<SensitivityRank>,
     /// Accepted width changes, in order.
     pub steps: Vec<TuneStep>,
+    /// Accepted pairwise exchange moves, in order.
+    pub exchanges: Vec<ExchangeStep>,
     /// Every probed `(genome, objectives)`, submission order — the
     /// tuner's analogue of the explorer archives the figures plot.
     pub log: Vec<(Genome, Objectives)>,
+}
+
+/// The NSGA-II warm-start seed set for a tuned configuration: the tuned
+/// genome itself plus its one-bit neighborhood (each gene nudged one
+/// bit down and one bit up, clamped to `[1, max_bits]`), deduplicated.
+/// Handed to [`crate::explore::Nsga2Params::warm_started`] it makes the
+/// search front dense around the constraint point (Table VI) instead of
+/// spending early generations rediscovering it.
+///
+/// ```
+/// use neat::tuner::warm_start_genomes;
+///
+/// let seeds = warm_start_genomes(&vec![4, 24], 24);
+/// assert_eq!(seeds[0], vec![4, 24]);     // the tuned point leads
+/// assert!(seeds.contains(&vec![3, 24])); // one bit down
+/// assert!(seeds.contains(&vec![5, 24])); // one bit up
+/// assert!(seeds.contains(&vec![4, 23])); // clamped: no 25-bit gene
+/// assert_eq!(seeds.len(), 4);            // deduplicated
+/// ```
+pub fn warm_start_genomes(tuned: &Genome, max_bits: u32) -> Vec<Genome> {
+    let mut seeds = vec![tuned.clone()];
+    for (t, &width) in tuned.iter().enumerate() {
+        for delta in [-1i64, 1] {
+            let w = (width as i64 + delta).clamp(1, max_bits as i64) as u32;
+            if w == width {
+                continue;
+            }
+            let mut g = tuned.clone();
+            g[t] = w;
+            if !seeds.contains(&g) {
+                seeds.push(g);
+            }
+        }
+    }
+    seeds
 }
 
 /// The heuristic tuner. Deterministic: no RNG anywhere, ties broken by
@@ -248,22 +387,54 @@ impl Tuner {
                     baseline,
                     feasible: false,
                     probes_used: probes.used(),
+                    waves: probes.waves(),
                     sensitivity,
                     steps: Vec::new(),
+                    exchanges: Vec::new(),
                     log: probes.into_log(),
                 };
             }
         };
 
-        // ---- greedy refinement under the goal.
-        let steps = match goal {
-            TuneGoal::ErrorBudget(eps) => {
-                descend_error_budget(&mut probes, &mut genome, &mut incumbent, eps)
+        // ---- refinement: descent (or ascent) to a fixed point, then a
+        // bounded pairwise exchange phase. An accepted exchange reshapes
+        // the landscape, so the two alternate until neither moves; the
+        // goal's score strictly decreases across every exchange, so the
+        // cycle terminates even before the probe budget runs out.
+        let order: Vec<usize> = sensitivity.iter().map(|r| r.target).collect();
+        let mut steps = Vec::new();
+        let mut exchanges = Vec::new();
+        loop {
+            let accepted = match goal {
+                TuneGoal::ErrorBudget(eps) => descend_error_budget(
+                    &mut probes,
+                    &mut genome,
+                    &mut incumbent,
+                    eps,
+                    self.config.strategy,
+                    &order,
+                ),
+                TuneGoal::EnergyBudget(psi) => {
+                    ascend_energy_budget(&mut probes, &mut genome, &mut incumbent, psi, hi)
+                }
+            };
+            steps.extend(accepted);
+            if probes.remaining() == 0 || self.config.exchange_rounds == 0 {
+                break;
             }
-            TuneGoal::EnergyBudget(psi) => {
-                ascend_energy_budget(&mut probes, &mut genome, &mut incumbent, psi, hi)
+            let swaps = exchange_phase(
+                &mut probes,
+                &mut genome,
+                &mut incumbent,
+                goal,
+                hi,
+                self.config.exchange_rounds,
+            );
+            if swaps.is_empty() {
+                break;
             }
-        };
+            exchanges.extend(swaps);
+        }
 
         TuneResult {
             genome,
@@ -271,8 +442,10 @@ impl Tuner {
             baseline,
             feasible,
             probes_used: probes.used(),
+            waves: probes.waves(),
             sensitivity,
             steps,
+            exchanges,
             log: probes.into_log(),
         }
     }
@@ -364,6 +537,14 @@ mod tests {
         // with 36 total bits available at energy 0.5, the sensitive gene
         // should be prioritized back up
         assert!(result.objectives.error < 0.092, "error must improve on all-ones");
+        // any accepted exchange must have stayed feasible while strictly
+        // improving the error (the energy-budget score)
+        let mut last = f64::INFINITY;
+        for x in &result.exchanges {
+            assert!(x.objectives.energy <= psi + 1e-12);
+            assert!(x.objectives.error < last);
+            last = x.objectives.error;
+        }
     }
 
     #[test]
@@ -379,6 +560,7 @@ mod tests {
         let result = Tuner::error_budget(0.01).run(&p);
         assert!(!result.feasible);
         assert!(result.steps.is_empty());
+        assert!(result.exchanges.is_empty());
         assert!(result.probes_used <= 400);
     }
 
@@ -391,13 +573,14 @@ mod tests {
         assert_eq!(a.objectives.error.to_bits(), b.objectives.error.to_bits());
         assert_eq!(a.objectives.energy.to_bits(), b.objectives.energy.to_bits());
         assert_eq!(a.probes_used, b.probes_used);
+        assert_eq!(a.waves, b.waves);
     }
 
     #[test]
     fn budget_ceiling_holds_even_when_tiny() {
         let p = toy();
-        let config =
-            TunerConfig { goal: TuneGoal::ErrorBudget(0.02), max_evals: 12 };
+        let mut config = TunerConfig::new(TuneGoal::ErrorBudget(0.02));
+        config.max_evals = 12;
         let result = Tuner::new(config).run(&p);
         assert!(result.probes_used <= 12);
         assert_eq!(result.log.len(), result.probes_used);
@@ -417,5 +600,60 @@ mod tests {
         // best feasible: 24 - w <= 5 → w = 19
         assert_eq!(result.genome, vec![19]);
         assert!(result.feasible);
+        assert!(result.exchanges.is_empty(), "no pairs exist in a 1-gene space");
+    }
+
+    #[test]
+    fn exchange_moves_drain_iso_error_ridges() {
+        // error depends only on total width; gene 0 is 3× as expensive,
+        // so the monotone descent stalls at the uniform start and only
+        // exchanges can drain energy along the iso-error ridge
+        let p = FnProblem {
+            len: 2,
+            max_bits: 24,
+            f: |g: &Genome| Objectives {
+                error: (48 - g[0] - g[1]) as f64 * 0.001,
+                energy: (3 * g[0] + g[1]) as f64 / 96.0,
+            },
+        };
+        let result = Tuner::error_budget(0.01).run(&p);
+        assert!(result.feasible);
+        assert!(result.steps.is_empty(), "single-gene moves cannot help here");
+        assert!(!result.exchanges.is_empty(), "exchanges must fire");
+        assert_eq!(result.genome, vec![14, 24]);
+        assert!((result.objectives.energy - 66.0 / 96.0).abs() < 1e-12);
+        assert!(result.objectives.error <= 0.01 + 1e-12);
+    }
+
+    #[test]
+    fn disabling_exchanges_reproduces_the_monotone_descent() {
+        let p = FnProblem {
+            len: 2,
+            max_bits: 24,
+            f: |g: &Genome| Objectives {
+                error: (48 - g[0] - g[1]) as f64 * 0.001,
+                energy: (3 * g[0] + g[1]) as f64 / 96.0,
+            },
+        };
+        let mut config = TunerConfig::new(TuneGoal::ErrorBudget(0.01));
+        config.exchange_rounds = 0;
+        let result = Tuner::new(config).run(&p);
+        assert!(result.exchanges.is_empty());
+        assert_eq!(result.genome, vec![19, 19], "PR 2 behavior: stuck at the start");
+    }
+
+    #[test]
+    fn warm_start_seeds_cover_the_neighborhood_within_bounds() {
+        let seeds = warm_start_genomes(&vec![1, 12, 24], 24);
+        assert_eq!(seeds[0], vec![1, 12, 24]);
+        // interior gene: both neighbors; boundary genes: one each
+        assert!(seeds.contains(&vec![2, 12, 24]));
+        assert!(seeds.contains(&vec![1, 11, 24]));
+        assert!(seeds.contains(&vec![1, 13, 24]));
+        assert!(seeds.contains(&vec![1, 12, 23]));
+        assert_eq!(seeds.len(), 5);
+        for g in &seeds {
+            assert!(g.iter().all(|&w| (1..=24).contains(&w)));
+        }
     }
 }

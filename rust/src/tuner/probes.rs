@@ -22,6 +22,7 @@ pub struct ProbeSet<'a> {
     problem: &'a dyn Problem,
     max_evals: usize,
     used: usize,
+    waves: usize,
     seen: HashMap<Genome, Objectives>,
     log: Vec<(Genome, Objectives)>,
 }
@@ -33,6 +34,7 @@ impl<'a> ProbeSet<'a> {
             problem,
             max_evals: max_evals.max(1),
             used: 0,
+            waves: 0,
             seen: HashMap::new(),
             log: Vec::new(),
         }
@@ -41,6 +43,15 @@ impl<'a> ProbeSet<'a> {
     /// Unique configurations submitted so far.
     pub fn used(&self) -> usize {
         self.used
+    }
+
+    /// `evaluate_batch` round-trips issued so far — batches that carried
+    /// at least one novel configuration (fully-memoized batches answer
+    /// from the probe memo without touching the executor). This is the
+    /// latency figure the speculative lattice descent minimizes: one
+    /// wave per gene instead of one per probed rung.
+    pub fn waves(&self) -> usize {
+        self.waves
     }
 
     /// Budget still available.
@@ -67,6 +78,7 @@ impl<'a> ProbeSet<'a> {
             let objectives = self.problem.evaluate_batch(&novel);
             assert_eq!(objectives.len(), novel.len(), "evaluate_batch must be 1:1");
             self.used += novel.len();
+            self.waves += 1;
             for (g, o) in novel.into_iter().zip(objectives) {
                 self.log.push((g.clone(), o));
                 self.seen.insert(g, o);
@@ -121,6 +133,7 @@ mod tests {
         assert!(probes.one(&g).is_some());
         assert_eq!(calls.load(Ordering::SeqCst), 1, "repeat probe must be memoized");
         assert_eq!(probes.used(), 1);
+        assert_eq!(probes.waves(), 1, "a fully-memoized batch is not a wave");
     }
 
     #[test]

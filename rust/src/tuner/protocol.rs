@@ -1,0 +1,144 @@
+//! Held-out test protocol for tuned configurations (Table III style):
+//! after the tuner converges on the training seeds, the tuned genome is
+//! re-evaluated on the workload's held-out test seeds and the
+//! *constraint overshoot* — how far the constrained metric lands beyond
+//! the budget on unseen inputs — is reported next to the training-side
+//! result.
+//!
+//! The types here are pure measurement containers: the coordinator
+//! (Table VI) and the `neat tune --test-seeds` CLI run the tuned genome
+//! on the test set (`Evaluator::evaluate_test_batch`) and feed both
+//! sides in. Purity keeps the PR 1–3 determinism contract intact — a
+//! held-out report is a function of `(genome, seeds)`, so sharded and
+//! serial runs produce identical overshoot columns.
+
+use crate::explore::Objectives;
+
+use super::TuneGoal;
+
+/// Train-vs-test measurement of one tuned configuration.
+///
+/// ```
+/// use neat::explore::Objectives;
+/// use neat::tuner::{HeldOutReport, TuneGoal};
+///
+/// let r = HeldOutReport::new(
+///     TuneGoal::ErrorBudget(0.01),
+///     Objectives { error: 0.009, energy: 0.70 }, // train: inside ε
+///     Objectives { error: 0.012, energy: 0.71 }, // test: 0.2pp over
+/// );
+/// assert!((r.overshoot() - 0.002).abs() < 1e-12);
+/// assert!(!r.within_budget());
+/// assert!((r.generalization_gap() - 0.003).abs() < 1e-12);
+/// ```
+#[derive(Debug, Clone, Copy)]
+pub struct HeldOutReport {
+    /// The constraint the configuration was tuned against.
+    pub goal: TuneGoal,
+    /// Objectives on the training seeds (what the tuner optimized).
+    pub train: Objectives,
+    /// Objectives on the held-out test seeds (unseen inputs).
+    pub test: Objectives,
+}
+
+impl HeldOutReport {
+    /// Pair a tune's training-side objectives with its test-side
+    /// re-evaluation.
+    pub fn new(goal: TuneGoal, train: Objectives, test: Objectives) -> Self {
+        Self { goal, train, test }
+    }
+
+    /// Constraint overshoot on the test seeds: how far the constrained
+    /// metric (error under an error budget, energy under an energy
+    /// budget) exceeds the budget on unseen inputs. `0.0` when the
+    /// configuration generalizes within budget; `f64::INFINITY` when
+    /// the test run diverged (non-finite objectives), so a NaN test
+    /// error can never masquerade as "within budget".
+    ///
+    /// ```
+    /// use neat::explore::Objectives;
+    /// use neat::tuner::{HeldOutReport, TuneGoal};
+    ///
+    /// let ok = HeldOutReport::new(
+    ///     TuneGoal::EnergyBudget(0.5),
+    ///     Objectives { error: 0.02, energy: 0.49 },
+    ///     Objectives { error: 0.03, energy: 0.48 },
+    /// );
+    /// assert_eq!(ok.overshoot(), 0.0);
+    /// assert!(ok.within_budget());
+    ///
+    /// let diverged = HeldOutReport::new(
+    ///     TuneGoal::ErrorBudget(0.01),
+    ///     Objectives { error: 0.009, energy: 0.7 },
+    ///     Objectives { error: f64::NAN, energy: 0.7 },
+    /// );
+    /// assert!(diverged.overshoot().is_infinite());
+    /// assert!(!diverged.within_budget());
+    /// ```
+    pub fn overshoot(&self) -> f64 {
+        if !self.test.is_finite() {
+            return f64::INFINITY;
+        }
+        match self.goal {
+            TuneGoal::ErrorBudget(eps) => (self.test.error - eps).max(0.0),
+            TuneGoal::EnergyBudget(psi) => (self.test.energy - psi).max(0.0),
+        }
+    }
+
+    /// Whether the tuned configuration keeps its constraint on unseen
+    /// inputs (zero [`overshoot`](Self::overshoot)).
+    pub fn within_budget(&self) -> bool {
+        self.overshoot() == 0.0
+    }
+
+    /// Train→test shift of the constrained metric (positive = worse on
+    /// the held-out seeds) — the tuner's analogue of Table III's
+    /// correlation check.
+    pub fn generalization_gap(&self) -> f64 {
+        match self.goal {
+            TuneGoal::ErrorBudget(_) => self.test.error - self.train.error,
+            TuneGoal::EnergyBudget(_) => self.test.energy - self.train.energy,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overshoot_is_clamped_at_zero_when_within_budget() {
+        let r = HeldOutReport::new(
+            TuneGoal::ErrorBudget(0.05),
+            Objectives { error: 0.04, energy: 0.6 },
+            Objectives { error: 0.045, energy: 0.61 },
+        );
+        assert_eq!(r.overshoot(), 0.0);
+        assert!(r.within_budget());
+        assert!(r.generalization_gap() > 0.0, "test error drifted up");
+    }
+
+    #[test]
+    fn energy_goal_measures_energy_overshoot() {
+        let r = HeldOutReport::new(
+            TuneGoal::EnergyBudget(0.5),
+            Objectives { error: 0.02, energy: 0.5 },
+            Objectives { error: 0.02, energy: 0.52 },
+        );
+        assert!((r.overshoot() - 0.02).abs() < 1e-12);
+        assert!(!r.within_budget());
+    }
+
+    #[test]
+    fn non_finite_test_runs_never_pass() {
+        for bad in [f64::NAN, f64::INFINITY] {
+            let r = HeldOutReport::new(
+                TuneGoal::ErrorBudget(0.05),
+                Objectives { error: 0.01, energy: 0.6 },
+                Objectives { error: bad, energy: 0.6 },
+            );
+            assert!(r.overshoot().is_infinite());
+            assert!(!r.within_budget());
+        }
+    }
+}

@@ -1,15 +1,19 @@
 //! Integration tests for the heuristic precision tuner riding the
 //! batch executor: determinism (serial vs worker pool), constraint
 //! satisfaction, monotonicity across budgets, the evaluation-budget
-//! ceiling (counted via the coordinator's genome cache), and the
-//! paper's "no worse than the best whole-program width" bar.
+//! ceiling (counted via the coordinator's genome cache), the paper's
+//! "no worse than the best whole-program width" bar, exchange-move
+//! safety, lattice-vs-binary descent parity, and the NSGA-II warm
+//! start handoff.
 
 use neat::bench_suite::blackscholes::Blackscholes;
 use neat::coordinator::experiments::{explore_rule_with, Budget};
 use neat::coordinator::{EvalProblem, Evaluator, Executor, RuleKind};
-use neat::explore::Problem;
-use neat::stats::savings_at_thresholds;
-use neat::tuner::{TuneGoal, Tuner, TunerConfig};
+use neat::explore::{
+    Evaluated, FnProblem, Genome, Nsga2, Nsga2Params, Objectives, Problem,
+};
+use neat::stats::{savings_at_thresholds, TradeoffPoint};
+use neat::tuner::{warm_start_genomes, DescentStrategy, TuneGoal, Tuner, TunerConfig};
 
 fn evaluator() -> Evaluator {
     Evaluator::new(Box::new(Blackscholes { options: 60 }), None)
@@ -85,7 +89,8 @@ fn tune_budget_ceiling_via_genome_cache() {
     let eval = evaluator();
     for max_evals in [25usize, 60] {
         let problem = EvalProblem::with_executor(&eval, RuleKind::Cip, Executor::serial());
-        let config = TunerConfig { goal: TuneGoal::ErrorBudget(0.05), max_evals };
+        let mut config = TunerConfig::new(TuneGoal::ErrorBudget(0.05));
+        config.max_evals = max_evals;
         let result = Tuner::new(config).run(&problem);
         let (_hits, misses) = problem.cache_stats();
         assert!(
@@ -139,6 +144,157 @@ fn tune_energy_budget_mode() {
     // have bought some accuracy back relative to it
     let floor = problem.eval.evaluate_train(RuleKind::Cip, &vec![1; problem.genome_len()]);
     assert!(result.objectives.error <= floor.error + 1e-12);
+}
+
+/// Exchange moves may only ever trade bits *inside* the feasible
+/// region: every accepted exchange keeps the error within the budget,
+/// moves exactly one bit each way, and — because exchanges start from
+/// the monotone descent's fixed point and accept only strict energy
+/// improvements — enabling them can never end with more energy than the
+/// exchange-free tune.
+#[test]
+fn exchange_moves_never_violate_error_budget() {
+    let eval = evaluator();
+    let eps = 0.05;
+    let run = |rounds: usize| {
+        let problem = EvalProblem::with_executor(&eval, RuleKind::Cip, Executor::serial());
+        let mut config = TunerConfig::new(TuneGoal::ErrorBudget(eps));
+        config.exchange_rounds = rounds;
+        Tuner::new(config).run(&problem)
+    };
+    let with = run(8);
+    let without = run(0);
+    assert!(without.exchanges.is_empty());
+    assert!(with.feasible && without.feasible);
+    assert!(with.objectives.error <= eps + 1e-12);
+    let mut last_energy = f64::INFINITY;
+    for x in &with.exchanges {
+        assert!(x.objectives.error <= eps + 1e-12, "exchange broke the error budget");
+        assert_eq!(x.lowered_from, x.lowered_to + 1, "exchanges move one bit");
+        assert_eq!(x.raised_from + 1, x.raised_to, "exchanges move one bit");
+        assert!(x.objectives.energy < last_energy, "exchanges strictly improve");
+        last_energy = x.objectives.energy;
+    }
+    assert!(
+        with.objectives.energy <= without.objectives.energy + 1e-12,
+        "exchange phase made the tune worse: {} vs {}",
+        with.objectives.energy,
+        without.objectives.energy
+    );
+}
+
+/// On a single-gene space the lattice wave sees every width the binary
+/// search can visit, so its rung can only be at least as good — and
+/// both must keep the budget.
+#[test]
+fn wp_lattice_no_worse_than_binary_rung() {
+    let eval = evaluator();
+    let eps = 0.05;
+    let run = |strategy| {
+        let problem = EvalProblem::with_executor(&eval, RuleKind::Wp, Executor::serial());
+        let mut config = TunerConfig::new(TuneGoal::ErrorBudget(eps));
+        config.strategy = strategy;
+        config.exchange_rounds = 0;
+        Tuner::new(config).run(&problem)
+    };
+    let lattice = run(DescentStrategy::Lattice);
+    let binary = run(DescentStrategy::BinaryRung);
+    assert!(lattice.feasible && binary.feasible);
+    assert!(lattice.objectives.error <= eps + 1e-12);
+    assert!(lattice.objectives.energy <= binary.objectives.energy + 1e-12);
+}
+
+/// The latency claim behind the speculative lattice: the whole tune
+/// fits in one seed wave plus one lattice wave per gene per pass, far
+/// below the binary search's per-rung round-trips plus re-ranking
+/// waves.
+#[test]
+fn lattice_tune_uses_fewer_waves_than_binary_rung() {
+    let eval = evaluator();
+    let run = |strategy| {
+        let problem = EvalProblem::with_executor(&eval, RuleKind::Cip, Executor::serial());
+        let mut config = TunerConfig::new(TuneGoal::ErrorBudget(0.05));
+        config.strategy = strategy;
+        config.exchange_rounds = 0;
+        Tuner::new(config).run(&problem)
+    };
+    let lattice = run(DescentStrategy::Lattice);
+    let binary = run(DescentStrategy::BinaryRung);
+    assert!(
+        lattice.waves < binary.waves,
+        "lattice took {} waves, binary {}",
+        lattice.waves,
+        binary.waves
+    );
+}
+
+/// Warm-starting NSGA-II with the tuned genome and its one-bit
+/// neighborhood guarantees the warm front is at least as good at the
+/// constraint point as the tuned configuration itself: the archive
+/// contains the tuned point, so the quantized NEC can only improve.
+#[test]
+fn warm_started_front_at_least_as_good_as_tuner_at_budget() {
+    let eval = evaluator();
+    let eps = 0.05;
+    let exec = Executor::serial();
+    let problem = EvalProblem::with_executor(&eval, RuleKind::Cip, exec.clone());
+    let tuned = Tuner::error_budget(eps).run(&problem);
+    assert!(tuned.feasible);
+
+    let seeds = warm_start_genomes(&tuned.genome, problem.max_bits());
+    let warm_problem = EvalProblem::with_executor(&eval, RuleKind::Cip, exec.clone());
+    let params =
+        Nsga2Params { population: 12, generations: 3, ..Default::default() }.warm_started(seeds);
+    Nsga2::new(params).run(&warm_problem);
+    let warm_points: Vec<TradeoffPoint> = warm_problem
+        .take_details()
+        .iter()
+        .map(|(_, d)| TradeoffPoint::new(d.error, d.fpu_nec))
+        .collect();
+    let warm_nec = savings_at_thresholds(&warm_points, &[eps])[0];
+    assert!(
+        warm_nec <= tuned.objectives.energy + 1e-12,
+        "warm front NEC {} worse than the tuned point {}",
+        warm_nec,
+        tuned.objectives.energy
+    );
+}
+
+/// On a single-gene problem the tuner provably finds the global optimum
+/// (its seed ladder sweeps the entire space), so for any fixed seed a
+/// warm-started front dominates-or-ties the cold-started front at the
+/// constraint point — the warm archive carries the optimum.
+#[test]
+fn warm_start_dominates_or_ties_cold_front_at_budget() {
+    let p = FnProblem {
+        len: 1,
+        max_bits: 24,
+        f: |g: &Genome| Objectives {
+            error: (24 - g[0]) as f64 * 0.01,
+            energy: g[0] as f64 / 24.0,
+        },
+    };
+    let eps = 0.05;
+    let tuned = Tuner::error_budget(eps).run(&p);
+    assert!(tuned.feasible);
+    let params = Nsga2Params { population: 8, generations: 3, seed: 7, ..Default::default() };
+    let cold = Nsga2::new(params.clone()).run(&p);
+    let warm = Nsga2::new(params.warm_started(warm_start_genomes(&tuned.genome, 24))).run(&p);
+    let nec_at = |archive: &[Evaluated]| {
+        let pts: Vec<TradeoffPoint> = archive
+            .iter()
+            .map(|e| TradeoffPoint::new(e.objectives.error, e.objectives.energy))
+            .collect();
+        savings_at_thresholds(&pts, &[eps])[0]
+    };
+    assert!(
+        nec_at(&warm) <= nec_at(&cold) + 1e-12,
+        "warm front lost to cold at ε={eps}: {} vs {}",
+        nec_at(&warm),
+        nec_at(&cold)
+    );
+    // front density: the warm archive carries the tuned point itself
+    assert!(warm.iter().any(|e| e.genome == tuned.genome));
 }
 
 /// WP tuning degenerates to picking the best rung of the uniform ladder

@@ -280,3 +280,112 @@ fn prop_engine_flop_count_is_exact() {
         },
     );
 }
+
+// --- tuner refinement invariants ------------------------------------
+
+use neat::tuner::{DescentStrategy, TuneGoal, Tuner, TunerConfig};
+
+#[test]
+fn prop_lattice_descent_matches_binary_rung_on_monotone_problems() {
+    // On additively separable problems with constant per-bit error
+    // costs (error monotone in every gene, energy proportional to total
+    // width), the speculative lattice's deepest feasible rung *is* the
+    // binary search's fixed point, and with well-separated costs both
+    // strategies walk the genes in the same sensitivity order — so the
+    // two tunes must land on the identical configuration. The costs are
+    // kept ≥ 1.5× apart so floating-point noise in the per-bit ranking
+    // can never flip the order between the strategies' reference points.
+    check(
+        "lattice == binary rung (separable monotone)",
+        cfg(64),
+        |rng| {
+            let max_bits = 6 + rng.below(19) as u32; // 6..=24
+            let base = 1e-4 * (1 + rng.below(50)) as f64;
+            let (c0, c1) = if rng.below(2) == 0 {
+                (base, base * (1.5 + rng.below(100) as f64 / 50.0))
+            } else {
+                (base * (1.5 + rng.below(100) as f64 / 50.0), base)
+            };
+            // a budget somewhere inside the reachable error range
+            let span = (c0 + c1) * (max_bits - 1) as f64;
+            let eps = span * (0.05 + 0.9 * rng.below(1000) as f64 / 1000.0);
+            (max_bits, c0, c1, eps)
+        },
+        |&(max_bits, c0, c1, eps)| {
+            let run = |strategy| {
+                let p = FnProblem {
+                    len: 2,
+                    max_bits,
+                    f: move |g: &Genome| Objectives {
+                        error: (max_bits - g[0]) as f64 * c0
+                            + (max_bits - g[1]) as f64 * c1,
+                        energy: (g[0] + g[1]) as f64 / (2 * max_bits) as f64,
+                    },
+                };
+                let mut config = TunerConfig::new(TuneGoal::ErrorBudget(eps));
+                config.strategy = strategy;
+                config.exchange_rounds = 0;
+                Tuner::new(config).run(&p)
+            };
+            let lattice = run(DescentStrategy::Lattice);
+            let binary = run(DescentStrategy::BinaryRung);
+            lattice.genome == binary.genome
+                && lattice.objectives.energy.to_bits() == binary.objectives.energy.to_bits()
+                && lattice.objectives.error.to_bits() == binary.objectives.error.to_bits()
+        },
+    );
+}
+
+#[test]
+fn prop_exchange_moves_stay_feasible_and_strictly_improve() {
+    // Random coupled problems: whatever the landscape, every accepted
+    // exchange must stay inside the error budget and strictly drain
+    // energy, and a feasible tune must end inside the budget.
+    check(
+        "exchanges feasible + strictly improving",
+        cfg(48),
+        |rng| {
+            let max_bits = 8 + rng.below(17) as u32; // 8..=24
+            let c: Vec<f64> = (0..3).map(|_| 1e-4 * (1 + rng.below(40)) as f64).collect();
+            let w: Vec<f64> = (0..3).map(|_| 1.0 + rng.below(5) as f64).collect();
+            let coupling = 1e-6 * rng.below(100) as f64;
+            let eps = 1e-3 * (1 + rng.below(60)) as f64;
+            (max_bits, c, w, coupling, eps)
+        },
+        |(max_bits, c, w, coupling, eps)| {
+            let (max_bits, eps) = (*max_bits, *eps);
+            let (c, w, coupling) = (c.clone(), w.clone(), *coupling);
+            let wsum: f64 = w.iter().sum::<f64>() * max_bits as f64;
+            let p = FnProblem {
+                len: 3,
+                max_bits,
+                f: move |g: &Genome| {
+                    let lost: Vec<f64> =
+                        g.iter().map(|&x| (max_bits - x) as f64).collect();
+                    Objectives {
+                        error: lost.iter().zip(&c).map(|(l, ci)| l * ci).sum::<f64>()
+                            + coupling * lost[0] * lost[1],
+                        energy: g
+                            .iter()
+                            .zip(&w)
+                            .map(|(&x, wi)| x as f64 * wi)
+                            .sum::<f64>()
+                            / wsum,
+                    }
+                },
+            };
+            let result = Tuner::error_budget(eps).run(&p);
+            let mut last_energy = f64::INFINITY;
+            let exchanges_ok = result.exchanges.iter().all(|x| {
+                let ok = x.objectives.error <= eps + 1e-12
+                    && x.objectives.energy < last_energy
+                    && x.lowered_from == x.lowered_to + 1
+                    && x.raised_from + 1 == x.raised_to;
+                last_energy = x.objectives.energy;
+                ok
+            });
+            let final_ok = !result.feasible || result.objectives.error <= eps + 1e-12;
+            exchanges_ok && final_ok && result.probes_used <= 400
+        },
+    );
+}
