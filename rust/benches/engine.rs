@@ -1,0 +1,150 @@
+//! Bench: scalar vs block-mode FLOP throughput per `CompiledFpi`
+//! variant — the PR 5 datapoint for the perf trajectory.
+//!
+//! Measures 1k-element slices (the acceptance shape): an add+mul pass
+//! issued per scalar op versus the same pass through `add32_slice` /
+//! `mul32_slice`, for the exact, truncate[8b], and dyn (perturb) FPIs.
+//! Emits a machine-readable baseline to `BENCH_engine.json` (override
+//! the path with `NEAT_BENCH_ENGINE_OUT`).
+//!
+//!     cargo bench --bench engine
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+use harness::{bench, Measurement};
+use neat::engine::FpContext;
+use neat::fpi::perturb::{PerturbFpi, PerturbMode};
+use neat::fpi::{FpiLibrary, Precision};
+use neat::placement::Placement;
+
+const N: usize = 1024;
+
+fn min_nanos(m: &Measurement) -> f64 {
+    m.samples
+        .iter()
+        .map(|d| d.as_nanos() as f64)
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// FLOPs per second from a measurement's fastest sample.
+fn rate(m: &Measurement) -> f64 {
+    let ns = min_nanos(m);
+    if ns > 0.0 {
+        m.units_per_iter as f64 / (ns * 1e-9)
+    } else {
+        0.0
+    }
+}
+
+fn inputs() -> (Vec<f32>, Vec<f32>) {
+    let mut rng = neat::util::Pcg64::new(0xE9);
+    let a = (0..N).map(|_| (rng.normal() * 20.0) as f32).collect();
+    let b = (0..N).map(|_| (rng.normal() * 20.0 + 1.0) as f32).collect();
+    (a, b)
+}
+
+fn scalar_pass(ctx: &mut FpContext, a: &[f32], b: &[f32], out: &mut [f32]) {
+    for i in 0..a.len() {
+        out[i] = ctx.add32(a[i], b[i]);
+    }
+    for i in 0..a.len() {
+        out[i] = ctx.mul32(out[i], b[i]);
+    }
+}
+
+fn block_pass(ctx: &mut FpContext, a: &[f32], b: &[f32], tmp: &mut [f32], out: &mut [f32]) {
+    ctx.add32_slice(a, b, tmp);
+    ctx.mul32_slice(tmp, b, out);
+}
+
+struct VariantResult {
+    fpi: &'static str,
+    scalar_mflops: f64,
+    block_mflops: f64,
+}
+
+fn run_variant(fpi: &'static str, mut ctx: FpContext, reports: &mut Vec<String>) -> VariantResult {
+    let (a, b) = inputs();
+    let flops = 2 * N as u64;
+    let mut out = vec![0.0f32; N];
+    let scalar = bench(&format!("scalar {fpi}"), flops, "flops", || {
+        scalar_pass(&mut ctx, &a, &b, &mut out);
+        std::hint::black_box(&out);
+    });
+    let mut tmp = vec![0.0f32; N];
+    let block = bench(&format!("block  {fpi} (1k slices)"), flops, "flops", || {
+        block_pass(&mut ctx, &a, &b, &mut tmp, &mut out);
+        std::hint::black_box(&out);
+    });
+    let result = VariantResult {
+        fpi,
+        scalar_mflops: rate(&scalar) / 1e6,
+        block_mflops: rate(&block) / 1e6,
+    };
+    reports.push(scalar.report());
+    reports.push(block.report());
+    result
+}
+
+fn main() {
+    let mut reports = Vec::new();
+    let mut results = Vec::new();
+
+    results.push(run_variant("exact", FpContext::profiler(), &mut reports));
+
+    let lib = FpiLibrary::truncation_family(Precision::Single);
+    let trunc =
+        FpContext::new(lib, Placement::whole_program(FpiLibrary::truncation_id(8)));
+    results.push(run_variant("truncate[8b]", trunc, &mut reports));
+
+    let mut dyn_lib = FpiLibrary::new();
+    let id = dyn_lib.register(Arc::new(PerturbFpi::new(8, PerturbMode::Result)));
+    let dynamic = FpContext::new(dyn_lib, Placement::whole_program(id));
+    results.push(run_variant("dyn(perturb)", dynamic, &mut reports));
+
+    println!("== engine: scalar vs block mode ({N}-element slices) ==");
+    for r in &reports {
+        println!("{r}");
+    }
+    println!();
+    for v in &results {
+        println!(
+            "{:<14} scalar {:>9.2} Mflops/s   block {:>9.2} Mflops/s   speedup {:.2}x",
+            v.fpi,
+            v.scalar_mflops,
+            v.block_mflops,
+            v.block_mflops / v.scalar_mflops.max(1e-9)
+        );
+    }
+
+    // machine-readable baseline for the perf trajectory
+    let mut json = String::from("{\n");
+    let _ = writeln!(json, "  \"bench\": \"engine\",");
+    let _ = writeln!(json, "  \"slice_len\": {N},");
+    let _ = writeln!(json, "  \"flops_per_pass\": {},", 2 * N);
+    let _ = writeln!(json, "  \"variants\": [");
+    for (i, v) in results.iter().enumerate() {
+        let comma = if i + 1 == results.len() { "" } else { "," };
+        let _ = writeln!(
+            json,
+            "    {{\"fpi\": \"{}\", \"scalar_mflops\": {:.3}, \"block_mflops\": {:.3}, \
+             \"speedup\": {:.3}}}{comma}",
+            v.fpi,
+            v.scalar_mflops,
+            v.block_mflops,
+            v.block_mflops / v.scalar_mflops.max(1e-9)
+        );
+    }
+    let _ = writeln!(json, "  ]");
+    json.push_str("}\n");
+    let path = std::env::var("NEAT_BENCH_ENGINE_OUT")
+        .unwrap_or_else(|_| "BENCH_engine.json".to_string());
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

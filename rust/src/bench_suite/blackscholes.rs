@@ -144,13 +144,17 @@ impl Workload for Blackscholes {
             price_put: ctx.register("price_put"),
         };
         let options = self.gen_inputs(seed);
+        // Block-mode input streaming: the spot/strike arrays are loaded
+        // as slices (one traffic commit per array instead of one per
+        // option); the pricing itself stays scalar — each option's
+        // control flow (call vs put) is genuinely per-element.
+        let spots: Vec<f32> = options.iter().map(|o| o.spot).collect();
+        let strikes: Vec<f32> = options.iter().map(|o| o.strike).collect();
+        ctx.load32_slice(&spots);
+        ctx.load32_slice(&strikes);
         options
             .into_iter()
-            .map(|opt| {
-                ctx.load32(opt.spot);
-                ctx.load32(opt.strike);
-                self.price(ctx, &funcs, opt) as f64
-            })
+            .map(|opt| self.price(ctx, &funcs, opt) as f64)
             .collect()
     }
 }

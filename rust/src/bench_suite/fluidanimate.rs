@@ -10,7 +10,7 @@
 //! memory-energy savings here (Fig. 7).
 
 use crate::engine::{FpContext, FuncId};
-use crate::fpi::Precision;
+use crate::fpi::{OpKind, Precision};
 use crate::util::Pcg64;
 
 use super::math32::sqrt32;
@@ -70,6 +70,10 @@ struct State {
     pressure: Vec<f32>,
     fx: Vec<f32>,
     fy: Vec<f32>,
+    /// Block-kernel scratch (eos), reused across steps so the probe
+    /// hot path pays no per-step allocator traffic.
+    scratch_a: Vec<f32>,
+    scratch_b: Vec<f32>,
 }
 
 impl Fluidanimate {
@@ -93,6 +97,8 @@ impl Fluidanimate {
             pressure: vec![0.0; n],
             fx: vec![0.0; n],
             fy: vec![0.0; n],
+            scratch_a: vec![0.0; n],
+            scratch_b: vec![0.0; n],
         }
     }
 
@@ -101,14 +107,15 @@ impl Fluidanimate {
         let h2 = H * H;
         let mass = 0.3f32;
 
-        // --- cell grid (spatial hash; index math only, loads counted)
+        // --- cell grid (spatial hash; index math only, loads counted as
+        //     two block streams — the particle arrays are read whole)
         let mut cells: Vec<Vec<usize>> = vec![Vec::new(); GRID * GRID];
         ctx.call(f.rebuild_grid, |c| {
+            c.load32_slice(&s.px);
+            c.load32_slice(&s.py);
             for i in 0..n {
-                let x = c.load32(s.px[i]);
-                let y = c.load32(s.py[i]);
-                let cx = ((x * GRID as f32) as usize).min(GRID - 1);
-                let cy = ((y * GRID as f32) as usize).min(GRID - 1);
+                let cx = ((s.px[i] * GRID as f32) as usize).min(GRID - 1);
+                let cy = ((s.py[i] * GRID as f32) as usize).min(GRID - 1);
                 cells[cy * GRID + cx].push(i);
             }
         });
@@ -157,12 +164,16 @@ impl Fluidanimate {
             }
         });
         ctx.call(f.eos, |c| {
+            // Tait EOS (linearized): p = k (ρ - ρ₀), computed as two
+            // broadcast slice kernels over the whole particle set plus
+            // one block store — bit-identical to the scalar per-particle
+            // sub/mul/store chain
+            c.map32_slice(OpKind::Sub, &s.density[..], REST_DENSITY, &mut s.scratch_a);
+            c.map32_slice(OpKind::Mul, 3.0f32, &s.scratch_a[..], &mut s.scratch_b);
             for i in 0..n {
-                // Tait EOS (linearized): p = k (ρ - ρ₀)
-                let diff = c.sub32(s.density[i], REST_DENSITY);
-                let p = c.mul32(3.0, diff);
-                s.pressure[i] = c.store32(p.max(0.0));
+                s.pressure[i] = s.scratch_b[i].max(0.0);
             }
+            c.store32_slice(&s.pressure);
         });
 
         // --- forces

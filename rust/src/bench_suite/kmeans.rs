@@ -6,7 +6,7 @@
 //! and division, convergence delta, plus the RMSE-style quality pass.
 
 use crate::engine::{FpContext, FuncId};
-use crate::fpi::Precision;
+use crate::fpi::{OpKind, Precision};
 use crate::util::Pcg64;
 
 use super::math32::sqrt32;
@@ -105,18 +105,24 @@ impl Workload for Kmeans {
         let (n, d, k) = (self.points, self.dims, self.clusters);
         let mut pts = self.gen_points(seed);
 
-        // normalize features to zero mean (per dimension)
+        // normalize features to zero mean (per dimension) — block mode:
+        // each column is gathered once, streamed through a slice load,
+        // reduced with the fused running sum, and centered with one
+        // broadcast subtraction (bit-identical to the scalar loop)
         ctx.call(f.normalize, |c| {
+            let mut col = vec![0.0f32; n];
+            let mut centered = vec![0.0f32; n];
             for dim in 0..d {
-                let mut sum = 0.0f32;
                 for p in 0..n {
-                    let v = c.load32(pts[p * d + dim]);
-                    sum = c.add32(sum, v);
+                    col[p] = pts[p * d + dim];
                 }
+                c.load32_slice(&col);
+                let sum = c.sum32_slice(&col);
                 let mean = c.div32(sum, n as f32);
+                c.map32_slice(OpKind::Sub, &col[..], mean, &mut centered);
+                c.store32_slice(&centered);
                 for p in 0..n {
-                    let centered = c.sub32(pts[p * d + dim], mean);
-                    pts[p * d + dim] = c.store32(centered);
+                    pts[p * d + dim] = centered[p];
                 }
             }
         });
@@ -140,15 +146,14 @@ impl Workload for Kmeans {
                     let mut best = f32::MAX;
                     let mut best_c = 0;
                     for ci in 0..k {
+                        // the hot kernel: one fused block sqdist over the
+                        // point/centroid rows (same sub/mul/add order as
+                        // the scalar reduction it replaces)
                         let d2 = c.call(f.dist2, |c| {
-                            let mut acc = 0.0f32;
-                            for dim in 0..d {
-                                let diff =
-                                    c.sub32(pts[p * d + dim], centers[ci * d + dim]);
-                                let sq = c.mul32(diff, diff);
-                                acc = c.add32(acc, sq);
-                            }
-                            acc
+                            c.sqdist32_slice(
+                                &pts[p * d..(p + 1) * d],
+                                &centers[ci * d..(ci + 1) * d],
+                            )
                         });
                         c.call(f.min_select, |c| {
                             let delta = c.sub32(d2, best);
@@ -172,10 +177,12 @@ impl Workload for Kmeans {
                 for p in 0..n {
                     let ci = assignment[p];
                     counts[ci] += 1;
-                    for dim in 0..d {
-                        let v = c.load32(pts[p * d + dim]);
-                        sums[ci * d + dim] = c.add32(sums[ci * d + dim], v);
-                    }
+                    // stream the point row, accumulate it into the
+                    // cluster row in place — block form of the per-dim
+                    // load/add pair
+                    let row = &pts[p * d..(p + 1) * d];
+                    c.load32_slice(row);
+                    c.add_assign32_slice(&mut sums[ci * d..(ci + 1) * d], row);
                 }
             });
             let mut moved = 0.0f32;

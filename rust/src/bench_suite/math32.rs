@@ -9,8 +9,15 @@
 //!
 //! All routines execute in the *caller's* scope (no frame of their own),
 //! matching how inlined/libm FLOPs attribute in the paper's CIP model.
+//!
+//! Most of these kernels are genuinely scalar — Horner recurrences and
+//! data-dependent range reduction serialize the FLOPs — and stay on the
+//! scalar ops. [`sqrt32_slice`] is the exception: Newton iteration is
+//! lane-parallel, so its block form runs on the engine's slice kernels
+//! while staying bit-identical to mapping [`sqrt32`] over the elements.
 
 use crate::engine::FpContext;
+use crate::fpi::OpKind;
 
 /// exp(x) via range reduction `x = k·ln2 + r` and a degree-6 Horner
 /// polynomial on `r ∈ [-ln2/2, ln2/2]`.
@@ -84,6 +91,56 @@ pub fn sqrt32(ctx: &mut FpContext, x: f32) -> f32 {
         y = ctx.mul32(y, corr);
     }
     ctx.mul32(x, y)
+}
+
+/// Block-mode [`sqrt32`] over a slice: every element follows the exact
+/// scalar op sequence (three Newton refinements plus the finishing
+/// multiply), but each refinement step runs lane-parallel through the
+/// engine's slice kernels — values and counters are bit-identical to
+/// `for i { out[i] = sqrt32(ctx, xs[i]) }`. Special cases (`x < 0` →
+/// NaN, `x == 0` → 0) execute no FLOPs, exactly like the scalar path.
+pub fn sqrt32_slice(ctx: &mut FpContext, xs: &[f32], out: &mut [f32]) {
+    assert_eq!(xs.len(), out.len(), "sqrt32_slice length mismatch");
+    // pack the elements that take the Newton path (the scalar fast path)
+    let mut idx = Vec::with_capacity(xs.len());
+    let mut packed = Vec::with_capacity(xs.len());
+    for (i, &x) in xs.iter().enumerate() {
+        if x < 0.0 {
+            out[i] = f32::NAN;
+        } else if x == 0.0 {
+            out[i] = 0.0;
+        } else {
+            idx.push(i);
+            packed.push(x);
+        }
+    }
+    if packed.is_empty() {
+        return;
+    }
+    let n = packed.len();
+    let mut ys: Vec<f32> = packed
+        .iter()
+        .map(|&x| f32::from_bits(0x5f37_59df - (x.to_bits() >> 1)))
+        .collect();
+    let mut hx = vec![0.0f32; n];
+    let mut hxy = vec![0.0f32; n];
+    let mut hxy2 = vec![0.0f32; n];
+    let mut corr = vec![0.0f32; n];
+    let mut ny = vec![0.0f32; n];
+    for _ in 0..3 {
+        // y = y (1.5 - 0.5 x y²), one slice kernel per scalar op
+        ctx.map32_slice(OpKind::Mul, 0.5f32, &packed[..], &mut hx);
+        ctx.mul32_slice(&hx, &ys, &mut hxy);
+        ctx.mul32_slice(&hxy, &ys, &mut hxy2);
+        ctx.map32_slice(OpKind::Sub, 1.5f32, &hxy2[..], &mut corr);
+        ctx.mul32_slice(&ys, &corr, &mut ny);
+        std::mem::swap(&mut ys, &mut ny);
+    }
+    let mut res = vec![0.0f32; n];
+    ctx.mul32_slice(&packed, &ys, &mut res);
+    for (k, &i) in idx.iter().enumerate() {
+        out[i] = res[k];
+    }
 }
 
 /// sin(x): reduce to `[-π, π]`, fold into `[-π/2, π/2]` via
@@ -221,5 +278,39 @@ mod tests {
         let mut c = ctx();
         let _ = cndf32(&mut c, 0.3);
         assert!(c.counters().total_flops() > 15);
+    }
+
+    #[test]
+    fn sqrt_slice_matches_scalar_exactly() {
+        use crate::fpi::{FpiLibrary, Precision};
+        use crate::placement::Placement;
+        let xs = [
+            1e-6f32,
+            0.25,
+            1.0,
+            2.0,
+            144.0,
+            1e8,
+            0.0,
+            -4.0,
+            f32::INFINITY,
+        ];
+        for bits in [24u32, 9, 3] {
+            let lib = FpiLibrary::truncation_family(Precision::Single);
+            let p = Placement::whole_program(FpiLibrary::truncation_id(bits));
+            let mut scalar = FpContext::new(lib.clone(), p.clone());
+            let mut block = FpContext::new(lib, p);
+            let want: Vec<f32> = xs.iter().map(|&x| sqrt32(&mut scalar, x)).collect();
+            let mut got = vec![0.0f32; xs.len()];
+            sqrt32_slice(&mut block, &xs, &mut got);
+            for i in 0..xs.len() {
+                assert_eq!(got[i].to_bits(), want[i].to_bits(), "bits={bits} lane {i}");
+            }
+            assert_eq!(
+                scalar.counters().aggregate(),
+                block.counters().aggregate(),
+                "bits={bits}: counters differ"
+            );
+        }
     }
 }

@@ -1,9 +1,12 @@
 //! Instrumented double-precision math kernels (see [`super::math32`]).
 //!
 //! Used by the double-dominant workloads (particlefilter, canneal) and
-//! the f64 halves of the mixed ones (ferret, srad).
+//! the f64 halves of the mixed ones (ferret, srad). As in `math32`,
+//! the Horner recurrences are genuinely scalar; [`sqrt64_slice`] is the
+//! lane-parallel block form of [`sqrt64`].
 
 use crate::engine::FpContext;
+use crate::fpi::OpKind;
 
 /// exp(x), double precision: range reduction + degree-9 Horner.
 pub fn exp64(ctx: &mut FpContext, x: f64) -> f64 {
@@ -81,6 +84,52 @@ pub fn sqrt64(ctx: &mut FpContext, x: f64) -> f64 {
         y = ctx.mul64(y, corr);
     }
     ctx.mul64(x, y)
+}
+
+/// Block-mode [`sqrt64`] over a slice (see
+/// [`super::math32::sqrt32_slice`] for the scheme): four lane-parallel
+/// Newton refinements through the engine's slice kernels, bit-identical
+/// in values and counters to mapping [`sqrt64`] over the elements.
+pub fn sqrt64_slice(ctx: &mut FpContext, xs: &[f64], out: &mut [f64]) {
+    assert_eq!(xs.len(), out.len(), "sqrt64_slice length mismatch");
+    let mut idx = Vec::with_capacity(xs.len());
+    let mut packed = Vec::with_capacity(xs.len());
+    for (i, &x) in xs.iter().enumerate() {
+        if x < 0.0 {
+            out[i] = f64::NAN;
+        } else if x == 0.0 {
+            out[i] = 0.0;
+        } else {
+            idx.push(i);
+            packed.push(x);
+        }
+    }
+    if packed.is_empty() {
+        return;
+    }
+    let n = packed.len();
+    let mut ys: Vec<f64> = packed
+        .iter()
+        .map(|&x| f64::from_bits(0x5fe6_eb50_c7b5_37a9 - (x.to_bits() >> 1)))
+        .collect();
+    let mut hx = vec![0.0f64; n];
+    let mut hxy = vec![0.0f64; n];
+    let mut hxy2 = vec![0.0f64; n];
+    let mut corr = vec![0.0f64; n];
+    let mut ny = vec![0.0f64; n];
+    for _ in 0..4 {
+        ctx.map64_slice(OpKind::Mul, 0.5f64, &packed[..], &mut hx);
+        ctx.mul64_slice(&hx, &ys, &mut hxy);
+        ctx.mul64_slice(&hxy, &ys, &mut hxy2);
+        ctx.map64_slice(OpKind::Sub, 1.5f64, &hxy2[..], &mut corr);
+        ctx.mul64_slice(&ys, &corr, &mut ny);
+        std::mem::swap(&mut ys, &mut ny);
+    }
+    let mut res = vec![0.0f64; n];
+    ctx.mul64_slice(&packed, &ys, &mut res);
+    for (k, &i) in idx.iter().enumerate() {
+        out[i] = res[k];
+    }
 }
 
 /// sin(x), double precision: reduce to `[-π/2, π/2]` (via
@@ -161,6 +210,30 @@ mod tests {
             let x = i as f64 * 0.61;
             assert!((sin64(&mut c, x) - x.sin()).abs() < 1e-6, "sin({x})");
             assert!((cos64(&mut c, x) - x.cos()).abs() < 1e-6, "cos({x})");
+        }
+    }
+
+    #[test]
+    fn sqrt_slice_matches_scalar_exactly() {
+        use crate::fpi::{FpiLibrary, Precision};
+        use crate::placement::Placement;
+        let xs = [1e-12f64, 0.04, 1.0, 77.0, 1e12, 0.0, -9.0];
+        for bits in [53u32, 21, 4] {
+            let lib = FpiLibrary::truncation_family(Precision::Double);
+            let p = Placement::whole_program(FpiLibrary::truncation_id(bits));
+            let mut scalar = FpContext::new(lib.clone(), p.clone());
+            let mut block = FpContext::new(lib, p);
+            let want: Vec<f64> = xs.iter().map(|&x| sqrt64(&mut scalar, x)).collect();
+            let mut got = vec![0.0f64; xs.len()];
+            sqrt64_slice(&mut block, &xs, &mut got);
+            for i in 0..xs.len() {
+                assert_eq!(got[i].to_bits(), want[i].to_bits(), "bits={bits} lane {i}");
+            }
+            assert_eq!(
+                scalar.counters().aggregate(),
+                block.counters().aggregate(),
+                "bits={bits}: counters differ"
+            );
         }
     }
 }

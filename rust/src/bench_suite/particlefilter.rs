@@ -9,7 +9,7 @@
 //! estimation.
 
 use crate::engine::{FpContext, FuncId};
-use crate::fpi::Precision;
+use crate::fpi::{OpKind, Precision};
 use crate::util::Pcg64;
 
 use super::math64::{exp64, ln64, sqrt64};
@@ -100,6 +100,10 @@ impl Workload for Particlefilter {
         let mut px: Vec<f64> = (0..PARTICLES).map(|_| ox + rng.normal()).collect();
         let mut py: Vec<f64> = (0..PARTICLES).map(|_| oy + rng.normal()).collect();
         let mut weights = vec![1.0f64 / PARTICLES as f64; PARTICLES];
+        // block-kernel scratch, reused across frames (no per-frame
+        // allocator traffic on the probe hot path)
+        let mut sh = vec![0.0f64; PARTICLES];
+        let mut scaled = vec![0.0f64; PARTICLES];
         let mut out = Vec::new();
 
         for _frame in 0..self.frames {
@@ -179,20 +183,22 @@ impl Workload for Particlefilter {
                 }
             });
 
-            // --- weight update + normalisation (log-sum-exp)
+            // --- weight update + normalisation (log-sum-exp) — the
+            //     max-shift and the final rescale are block kernels;
+            //     exp64's range reduction is data-dependent, so the
+            //     exponentials stay scalar
             ctx.call(f.normalize, |c| {
                 let max_l = log_lik.iter().cloned().fold(f64::MIN, f64::max);
+                c.map64_slice(OpKind::Sub, &log_lik[..], max_l, &mut sh);
                 let mut total = 0.0f64;
                 for i in 0..PARTICLES {
-                    let sh = c.sub64(log_lik[i], max_l);
-                    let e = exp64(c, sh);
+                    let e = exp64(c, sh[i]);
                     weights[i] = c.mul64(weights[i], e);
                     total = c.add64(total, weights[i]);
                 }
                 let inv = c.div64(1.0, total.max(1e-300));
-                for w in weights.iter_mut() {
-                    *w = c.mul64(*w, inv);
-                }
+                c.map64_slice(OpKind::Mul, &weights[..], inv, &mut scaled);
+                weights.copy_from_slice(&scaled);
             });
 
             // --- effective sample size → systematic resampling
@@ -223,14 +229,10 @@ impl Workload for Particlefilter {
             });
             weights.iter_mut().for_each(|w| *w = 1.0 / PARTICLES as f64);
 
-            // --- estimate
+            // --- estimate (fused block sums over the particle arrays)
             let (ex, ey) = ctx.call(f.estimate, |c| {
-                let mut sx = 0.0f64;
-                let mut sy = 0.0f64;
-                for i in 0..PARTICLES {
-                    sx = c.add64(sx, px[i]);
-                    sy = c.add64(sy, py[i]);
-                }
+                let sx = c.sum64_slice(&px);
+                let sy = c.sum64_slice(&py);
                 let n = PARTICLES as f64;
                 let meanx = c.div64(sx, n);
                 let meany = c.div64(sy, n);

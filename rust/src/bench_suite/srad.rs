@@ -8,7 +8,7 @@
 //! avoid catastrophic cancellation. Eight FLOP-bearing functions.
 
 use crate::engine::{FpContext, FuncId};
-use crate::fpi::Precision;
+use crate::fpi::{OpKind, Precision};
 use crate::util::Pcg64;
 
 use super::math32::exp32;
@@ -99,18 +99,21 @@ impl Workload for Srad {
         });
 
         let idx = |x: usize, y: usize| y * SIZE + x;
+        // scratch for the stats reduction, reused across iterations so
+        // the per-probe hot path pays no allocator traffic
+        let mut vals = vec![0.0f64; n];
         for _ in 0..self.iters {
             // --- global statistics in f64 (Rodinia does this reduction
-            //     in double for stability)
+            //     in double for stability) — block mode: one slice load
+            //     plus the fused sum / dot-with-self reductions, whose
+            //     per-accumulator op sequences match the scalar loop
             let q0_sq = ctx.call(f.stats, |c| {
-                let mut sum = 0.0f64;
-                let mut sum2 = 0.0f64;
-                for &v in &img {
-                    let vd = c.load64(v as f64);
-                    sum = c.add64(sum, vd);
-                    let v2 = c.mul64(vd, vd);
-                    sum2 = c.add64(sum2, v2);
+                for (v, &x) in vals.iter_mut().zip(&img) {
+                    *v = x as f64;
                 }
+                c.load64_slice(&vals);
+                let sum = c.sum64_slice(&vals);
+                let sum2 = c.dot64_slice(&vals, &vals);
                 let nn = n as f64;
                 let mean = c.div64(sum, nn);
                 let ms = c.div64(sum2, nn);
@@ -174,27 +177,30 @@ impl Workload for Srad {
                 }
             }
 
-            // --- diffusion update
+            // --- diffusion update — the 4-neighbor divergence runs as
+            //     one broadcast subtraction plus a fused dot over the
+            //     gathered stencil (block form of the scalar sub/mul/add
+            //     chain; values identical)
             ctx.call(f.update, |c| {
                 let old = img.clone();
                 for y in 0..SIZE {
                     for x in 0..SIZE {
-                        let cn = coef[idx(x, y.saturating_sub(1))];
-                        let cs = coef[idx(x, (y + 1).min(SIZE - 1))];
-                        let cw = coef[idx(x.saturating_sub(1), y)];
-                        let ce = coef[idx((x + 1).min(SIZE - 1), y)];
                         let center = old[idx(x, y)];
-                        let mut div = 0.0f32;
-                        for (cc, vv) in [
-                            (cn, old[idx(x, y.saturating_sub(1))]),
-                            (cs, old[idx(x, (y + 1).min(SIZE - 1))]),
-                            (cw, old[idx(x.saturating_sub(1), y)]),
-                            (ce, old[idx((x + 1).min(SIZE - 1), y)]),
-                        ] {
-                            let d = c.sub32(vv, center);
-                            let cd = c.mul32(cc, d);
-                            div = c.add32(div, cd);
-                        }
+                        let cc = [
+                            coef[idx(x, y.saturating_sub(1))],
+                            coef[idx(x, (y + 1).min(SIZE - 1))],
+                            coef[idx(x.saturating_sub(1), y)],
+                            coef[idx((x + 1).min(SIZE - 1), y)],
+                        ];
+                        let vv = [
+                            old[idx(x, y.saturating_sub(1))],
+                            old[idx(x, (y + 1).min(SIZE - 1))],
+                            old[idx(x.saturating_sub(1), y)],
+                            old[idx((x + 1).min(SIZE - 1), y)],
+                        ];
+                        let mut dd = [0.0f32; 4];
+                        c.map32_slice(OpKind::Sub, &vv[..], center, &mut dd);
+                        let div = c.dot32_slice(&cc, &dd);
                         let scaled = c.mul32(LAMBDA, div);
                         let nv = c.add32(center, scaled);
                         img[idx(x, y)] = c.store32(nv.max(1e-4));

@@ -390,37 +390,54 @@ pub fn fig7(rd: &ResultsDir, suite: &[BenchResult]) -> Result<String> {
     Ok(savings_table("Fig 7 — memory energy savings (CIP)", &THRESHOLDS, &cip_rows))
 }
 
-/// Fig. 8: single vs double optimization targets (canneal,
-/// particlefilter, ferret).
-pub fn fig8(
-    rd: &ResultsDir,
-    budget: Budget,
-    exec: &Executor,
-    log: &mut impl FnMut(&str),
-) -> Result<String> {
-    let mut rows_csv = Vec::new();
-    let mut table_rows = Vec::new();
-    for name in ["canneal", "particlefilter", "ferret"] {
-        for target in [Precision::Single, Precision::Double] {
-            log(&format!("fig8: {name} targeting {}", target.name()));
-            let w = bench_suite::by_name(name).expect("known benchmark");
-            let eval = Evaluator::new(w, Some(target));
-            let res = explore_rule_with(&eval, RuleKind::Cip, budget, exec);
-            // Fig. 8 plots total-FPU savings per target (choosing the
-            // wrong target saves almost nothing of the total); §V-E's
-            // "92% of double-instruction energy" quote is the
-            // class-relative view, emitted to the CSV alongside.
-            let sav = savings_row(&res.fpu_points());
-            let sav_class = savings_row(&res.fpu_target_points());
-            rows_csv.push(format!(
-                "{name},{},{},{}",
-                target.name(),
-                sav.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join(","),
-                sav_class.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join(",")
-            ));
-            table_rows.push((format!("{name}/{}", target.name()), sav));
-        }
+/// The Fig. 8 shard list: (benchmark, optimization target), in the
+/// figure's row order.
+const FIG8_CASES: [(&str, Precision); 6] = [
+    ("canneal", Precision::Single),
+    ("canneal", Precision::Double),
+    ("particlefilter", Precision::Single),
+    ("particlefilter", Precision::Double),
+    ("ferret", Precision::Single),
+    ("ferret", Precision::Double),
+];
+
+/// One Fig. 8 row: `(table label, csv row, total-FPU savings)`.
+struct Fig8Row {
+    label: String,
+    csv: String,
+    savings: Vec<f64>,
+}
+
+/// One Fig. 8 shard: explore one `(benchmark, target)` CIP space. Pure
+/// in `(name, target, budget)` — the executor only changes scheduling —
+/// so rows computed on any shard layout reassemble into the same
+/// figure.
+fn fig8_job(name: &str, target: Precision, budget: Budget, exec: &Executor) -> Fig8Row {
+    let w = bench_suite::by_name(name).expect("known benchmark");
+    let eval = Evaluator::new(w, Some(target));
+    let res = explore_rule_with(&eval, RuleKind::Cip, budget, exec);
+    // Fig. 8 plots total-FPU savings per target (choosing the wrong
+    // target saves almost nothing of the total); §V-E's "92% of
+    // double-instruction energy" quote is the class-relative view,
+    // emitted to the CSV alongside.
+    let sav = savings_row(&res.fpu_points());
+    let sav_class = savings_row(&res.fpu_target_points());
+    Fig8Row {
+        label: format!("{name}/{}", target.name()),
+        csv: format!(
+            "{name},{},{},{}",
+            target.name(),
+            sav.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join(","),
+            sav_class.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join(",")
+        ),
+        savings: sav,
     }
+}
+
+fn render_fig8(rd: &ResultsDir, rows: Vec<Fig8Row>) -> Result<String> {
+    let rows_csv: Vec<String> = rows.iter().map(|r| r.csv.clone()).collect();
+    let table_rows: Vec<(String, Vec<f64>)> =
+        rows.into_iter().map(|r| (r.label, r.savings)).collect();
     rd.write_csv(
         "fig8_targets.csv",
         "benchmark,target,nec@1,nec@5,nec@10,class_nec@1,class_nec@5,class_nec@10",
@@ -433,19 +450,58 @@ pub fn fig8(
     ))
 }
 
-/// Fig. 9: CIP vs FCS on radar.
-pub fn fig9(
+/// Fig. 8: single vs double optimization targets (canneal,
+/// particlefilter, ferret), serial over one executor.
+pub fn fig8(
     rd: &ResultsDir,
     budget: Budget,
     exec: &Executor,
     log: &mut impl FnMut(&str),
 ) -> Result<String> {
-    log("fig9: radar CIP vs FCS");
+    let rows = FIG8_CASES
+        .iter()
+        .map(|&(name, target)| {
+            log(&format!("fig8: {name} targeting {}", target.name()));
+            fig8_job(name, target, budget, exec)
+        })
+        .collect();
+    render_fig8(rd, rows)
+}
+
+/// [`fig8`] with the six (benchmark, target) explorations sharded over
+/// the worker pool ([`suite::shard_map`]) under the suite's global
+/// thread budget — no figure runs outside it. Output identical to the
+/// serial [`fig8`]: sharding changes scheduling, never values.
+pub fn fig8_sharded(
+    rd: &ResultsDir,
+    budget: Budget,
+    plan: suite::ShardPlan,
+    log: &mut (impl FnMut(&str) + Send),
+) -> Result<String> {
+    let log: Mutex<&mut (dyn FnMut(&str) + Send)> = Mutex::new(log);
+    let rows = suite::shard_map(plan, FIG8_CASES.len(), |i, exec| {
+        let (name, target) = FIG8_CASES[i];
+        {
+            let mut g = log.lock().expect("log poisoned");
+            (*g)(&format!("fig8: {name} targeting {}", target.name()));
+        }
+        fig8_job(name, target, budget, exec)
+    });
+    render_fig8(rd, rows)
+}
+
+/// The Fig. 9 shard list: one search per placement rule on radar.
+const FIG9_RULES: [RuleKind; 2] = [RuleKind::Cip, RuleKind::Fcs];
+
+/// One Fig. 9 shard: one placement rule's search on radar. Pure in
+/// `(rule, budget)` — a fresh `Evaluator` per shard, fixed search seed.
+fn fig9_job(rule: RuleKind, budget: Budget, exec: &Executor) -> Vec<f64> {
     let eval = Evaluator::new(bench_suite::by_name("radar").unwrap(), None);
-    let cip = explore_rule_with(&eval, RuleKind::Cip, budget, exec);
-    let fcs = explore_rule_with(&eval, RuleKind::Fcs, budget, exec);
-    let cip_s = savings_row(&cip.fpu_points());
-    let fcs_s = savings_row(&fcs.fpu_points());
+    let res = explore_rule_with(&eval, rule, budget, exec);
+    savings_row(&res.fpu_points())
+}
+
+fn render_fig9(rd: &ResultsDir, cip_s: Vec<f64>, fcs_s: Vec<f64>) -> Result<String> {
     let rows = vec![
         format!("CIP,{}", cip_s.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join(",")),
         format!("FCS,{}", fcs_s.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join(",")),
@@ -456,6 +512,40 @@ pub fn fig9(
         &THRESHOLDS,
         &[("radar CIP".to_string(), cip_s), ("radar FCS".to_string(), fcs_s)],
     ))
+}
+
+/// Fig. 9: CIP vs FCS on radar, serial over one executor.
+pub fn fig9(
+    rd: &ResultsDir,
+    budget: Budget,
+    exec: &Executor,
+    log: &mut impl FnMut(&str),
+) -> Result<String> {
+    log("fig9: radar CIP vs FCS");
+    let cip_s = fig9_job(RuleKind::Cip, budget, exec);
+    let fcs_s = fig9_job(RuleKind::Fcs, budget, exec);
+    render_fig9(rd, cip_s, fcs_s)
+}
+
+/// [`fig9`] with the two rule searches as shards on the worker pool —
+/// see [`fig8_sharded`] for the contract.
+pub fn fig9_sharded(
+    rd: &ResultsDir,
+    budget: Budget,
+    plan: suite::ShardPlan,
+    log: &mut (impl FnMut(&str) + Send),
+) -> Result<String> {
+    let log: Mutex<&mut (dyn FnMut(&str) + Send)> = Mutex::new(log);
+    let mut rows = suite::shard_map(plan, FIG9_RULES.len(), |i, exec| {
+        {
+            let mut g = log.lock().expect("log poisoned");
+            (*g)(&format!("fig9: radar {}", FIG9_RULES[i].name()));
+        }
+        fig9_job(FIG9_RULES[i], budget, exec)
+    });
+    let fcs_s = rows.pop().expect("two shards");
+    let cip_s = rows.pop().expect("two shards");
+    render_fig9(rd, cip_s, fcs_s)
 }
 
 /// Table III: train/test correlation of the CIP Pareto front.
@@ -1017,9 +1107,25 @@ pub fn run_all_with_suite(
     report.push('\n');
     report.push_str(&fig7(rd, &suite)?);
     report.push('\n');
-    report.push_str(&fig8(rd, budget, exec, log)?);
-    report.push('\n');
-    report.push_str(&fig9(rd, budget, exec, log)?);
+    // with a suite runner, the target/rule comparisons shard over the
+    // worker pool too, so no figure escapes the global thread budget
+    match runner {
+        Some(r) => {
+            let cfg = r.config();
+            let plan8 =
+                suite::plan_shards(cfg.threads, cfg.shard_threads, FIG8_CASES.len());
+            report.push_str(&fig8_sharded(rd, budget, plan8, log)?);
+            report.push('\n');
+            let plan9 =
+                suite::plan_shards(cfg.threads, cfg.shard_threads, FIG9_RULES.len());
+            report.push_str(&fig9_sharded(rd, budget, plan9, log)?);
+        }
+        None => {
+            report.push_str(&fig8(rd, budget, exec, log)?);
+            report.push('\n');
+            report.push_str(&fig9(rd, budget, exec, log)?);
+        }
+    }
     report.push('\n');
     report.push_str(&table3(rd, &suite, exec, log)?);
     report.push('\n');

@@ -12,7 +12,11 @@ use crate::fpi::{OpKind, Precision};
 ///
 /// Index convention: `[precision as usize][op as usize]` — precision is
 /// `Single = 0, Double = 1`; ops in [`OpKind::ALL`] order.
-#[derive(Debug, Clone, Default)]
+///
+/// `PartialEq`/`Eq` exist for the block-mode identity contract: the
+/// slice-vs-scalar property tests compare whole counter tables
+/// cell-for-cell.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct FuncStats {
     /// FLOP counts.
     pub flops: [[u64; 4]; 2],
@@ -56,7 +60,7 @@ impl FuncStats {
 }
 
 /// Dense per-function counter table.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Counters {
     funcs: Vec<FuncStats>,
 }

@@ -15,19 +15,30 @@
 //! function body in [`FpContext::call`]. Frames carry a precomputed
 //! "active FPI" so the per-FLOP rule lookup is O(1) regardless of call
 //! depth (see `placement`).
+//!
+//! Array-shaped workloads should prefer the **block-mode** kernels in
+//! [`slice`] ([`FpContext::add32_slice`], [`FpContext::sum32_slice`],
+//! [`FpContext::dot32_slice`], ...): they intercept the same FLOPs with
+//! the same values, counters, and trace content as the scalar ops, but
+//! resolve the active FPI once per slice and commit counters once per
+//! call instead of once per FLOP.
 
 pub mod counters;
 pub mod profile;
+pub mod slice;
 pub mod trace;
 
 use std::collections::HashMap;
 
 use crate::fpi::{
-    truncate_f32, truncate_f64, used_bits_f32, used_bits_f64, FpiLibrary, OpKind, Precision,
+    apply_mask_f32, apply_mask_f64, trunc_mask_f32, trunc_mask_f64, used_bits_f32,
+    used_bits_f64, FpiLibrary, OpKind, Precision,
 };
 use crate::placement::{CompiledFpi, Placement};
 use counters::{Counters, FuncStats};
 use trace::TraceSink;
+
+pub use slice::{Operand32, Operand64};
 
 /// Interned function handle. `FuncId(0)` is the implicit `<toplevel>`
 /// frame that is always on the stack.
@@ -82,6 +93,12 @@ pub struct FpContext {
     // IEEE-exact ("NEAT enhances either single or double precision
     // instructions at the same time", §IV-2). None = apply to both.
     target: Option<Precision>,
+    // Target-filtered effective FPIs, one per precision class,
+    // recomputed whenever `current` or `target` changes (enter / exit /
+    // reset / set_placement / set_target) — so the per-FLOP and
+    // per-slice hot paths read one field and carry no target branch.
+    current32: CompiledFpi,
+    current64: CompiledFpi,
 }
 
 impl FpContext {
@@ -107,11 +124,32 @@ impl FpContext {
             current: CompiledFpi::Exact,
             current_func: TOPLEVEL,
             target: None,
+            current32: CompiledFpi::Exact,
+            current64: CompiledFpi::Exact,
         };
         let active = ctx.placement.resolve(&ctx.lib, "<toplevel>", TOPLEVEL, None);
         ctx.stack.push(Frame { func: TOPLEVEL, active, nearest_mapped: None });
         ctx.current = ctx.stack[0].active;
+        ctx.refresh_effective();
         ctx
+    }
+
+    /// Recompute the per-precision effective FPIs from the top frame's
+    /// active FPI and the optimization target. Called on every event
+    /// that can change either; the hot paths then read `current32` /
+    /// `current64` with zero per-FLOP target checks.
+    #[inline]
+    fn refresh_effective(&mut self) {
+        self.current32 = if self.target == Some(Precision::Double) {
+            CompiledFpi::Exact
+        } else {
+            self.current
+        };
+        self.current64 = if self.target == Some(Precision::Single) {
+            CompiledFpi::Exact
+        } else {
+            self.current
+        };
     }
 
     /// Attach a FLOP trace sink (paper output #2: hex operand trace).
@@ -124,6 +162,7 @@ impl FpContext {
     /// IEEE-exact regardless of the placement rule.
     pub fn set_target(&mut self, target: Precision) {
         self.target = Some(target);
+        self.refresh_effective();
     }
 
     /// Intern a function name. Idempotent; the id is stable for the
@@ -173,6 +212,7 @@ impl FpContext {
         self.stack.push(Frame { func: id, active, nearest_mapped });
         self.current = active;
         self.current_func = id;
+        self.refresh_effective();
     }
 
     /// Memoized `placement.names_function` per function id.
@@ -232,6 +272,7 @@ impl FpContext {
         let top = self.stack.last().unwrap();
         self.current = top.active;
         self.current_func = top.func;
+        self.refresh_effective();
     }
 
     /// Current call-stack depth (excluding `<toplevel>`).
@@ -246,6 +287,7 @@ impl FpContext {
         self.stack.truncate(1);
         self.current = self.stack[0].active;
         self.current_func = TOPLEVEL;
+        self.refresh_effective();
     }
 
     /// Swap in a new placement, preparing the context for a run under a
@@ -266,6 +308,7 @@ impl FpContext {
         self.stack[0] = Frame { func: TOPLEVEL, active, nearest_mapped: None };
         self.current = active;
         self.current_func = TOPLEVEL;
+        self.refresh_effective();
     }
 
     /// Accumulated statistics.
@@ -277,20 +320,15 @@ impl FpContext {
 
     #[inline(always)]
     fn op32(&mut self, op: OpKind, a: f32, b: f32) -> f32 {
-        let active = if self.target == Some(Precision::Double) {
-            CompiledFpi::Exact
-        } else {
-            self.current
-        };
-        let r = match active {
+        let r = match self.current32 {
             CompiledFpi::Exact => crate::fpi::raw_f32(op, a, b),
             CompiledFpi::Truncate(k) => {
                 // hoist the mask: one shift for all three truncations
-                let mask = u32::MAX << 24u32.saturating_sub(k.max(1)).min(23);
-                let ta = if a.is_finite() { f32::from_bits(a.to_bits() & mask) } else { a };
-                let tb = if b.is_finite() { f32::from_bits(b.to_bits() & mask) } else { b };
-                let raw = crate::fpi::raw_f32(op, ta, tb);
-                if raw.is_finite() { f32::from_bits(raw.to_bits() & mask) } else { raw }
+                // (the same trunc_mask/apply_mask pair the block kernels
+                // and TruncateFpi use, so the paths cannot drift)
+                let mask = trunc_mask_f32(k);
+                let raw = crate::fpi::raw_f32(op, apply_mask_f32(a, mask), apply_mask_f32(b, mask));
+                apply_mask_f32(raw, mask)
             }
             CompiledFpi::Dyn(id) => self.lib.get(id).perform_f32(op, a, b),
         };
@@ -306,19 +344,12 @@ impl FpContext {
 
     #[inline(always)]
     fn op64(&mut self, op: OpKind, a: f64, b: f64) -> f64 {
-        let active = if self.target == Some(Precision::Single) {
-            CompiledFpi::Exact
-        } else {
-            self.current
-        };
-        let r = match active {
+        let r = match self.current64 {
             CompiledFpi::Exact => crate::fpi::raw_f64(op, a, b),
             CompiledFpi::Truncate(k) => {
-                let mask = u64::MAX << 53u32.saturating_sub(k.max(1)).min(52);
-                let ta = if a.is_finite() { f64::from_bits(a.to_bits() & mask) } else { a };
-                let tb = if b.is_finite() { f64::from_bits(b.to_bits() & mask) } else { b };
-                let raw = crate::fpi::raw_f64(op, ta, tb);
-                if raw.is_finite() { f64::from_bits(raw.to_bits() & mask) } else { raw }
+                let mask = trunc_mask_f64(k);
+                let raw = crate::fpi::raw_f64(op, apply_mask_f64(a, mask), apply_mask_f64(b, mask));
+                apply_mask_f64(raw, mask)
             }
             CompiledFpi::Dyn(id) => self.lib.get(id).perform_f64(op, a, b),
         };

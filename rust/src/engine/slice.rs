@@ -1,0 +1,1028 @@
+//! Block-mode execution: slice-level instrumented kernels.
+//!
+//! The scalar hot path ([`FpContext::add32`] and friends) pays its
+//! bookkeeping — effective-FPI load, `CompiledFpi` dispatch, counter
+//! increments, trace check — once per FLOP. Transprecision hardware
+//! gets its throughput from lane-parallel, width-configurable datapaths
+//! rather than per-scalar dispatch, and the engine mirrors that here:
+//! the slice kernels resolve the active FPI **once per slice**, run a
+//! monomorphized inner loop per [`CompiledFpi`] variant (exact,
+//! truncate with a hoisted mask, dyn), accumulate FLOP/bit counters in
+//! locals, and commit them to [`crate::engine::counters::Counters`]
+//! once per call.
+//!
+//! **The contract: block mode changes scheduling, never values.** Every
+//! kernel documents the scalar op sequence it computes; its results,
+//! counter deltas, and (when tracing) trace lines are bit-identical to
+//! issuing that sequence through the scalar ops. The slice-vs-scalar
+//! property tests (`tests/proptest_slice.rs`) pin this for every
+//! placement rule, truncation width, and the dyn-dispatch path, so
+//! archives produced above the engine stay byte-identical no matter
+//! which API a workload uses.
+//!
+//! Tracing is slice-aware: kernels check for an attached sink once per
+//! call and, when tracing is on, fall back to the scalar loop so the
+//! hex trace keeps the exact per-FLOP line order (tracing is a
+//! debugging mode, not the search hot path).
+//!
+//! ```
+//! use neat::engine::FpContext;
+//! use neat::fpi::{FpiLibrary, Precision};
+//! use neat::placement::Placement;
+//!
+//! let lib = FpiLibrary::truncation_family(Precision::Single);
+//! let mut ctx = FpContext::new(lib, Placement::whole_program(FpiLibrary::truncation_id(2)));
+//!
+//! let a = [1.75f32, 2.0, 3.5];
+//! let b = [1.75f32, 1.0, 0.5];
+//! let mut out = [0.0f32; 3];
+//! ctx.mul32_slice(&a, &b, &mut out);
+//! // identical to calling ctx.mul32(a[i], b[i]) per element:
+//! // 1.75→1.5 both sides, 1.5·1.5 = 2.25 → 2.0 at 2 mantissa bits
+//! assert_eq!(out, [2.0, 2.0, 1.5]);
+//! assert_eq!(ctx.counters().total_flops(), 3);
+//! ```
+
+use crate::fpi::{
+    apply_mask_f32, apply_mask_f64, raw_f32, raw_f64, trunc_mask_f32, trunc_mask_f64,
+    used_bits_f32, used_bits_f64, FpImplementation, OpKind, Precision,
+};
+use crate::placement::CompiledFpi;
+
+use super::{mem_bits_f32, mem_bits_f64, FpContext};
+
+/// One operand of a block-mode elementwise kernel: a full slice or a
+/// scalar broadcast across every lane (how workloads express
+/// vector ⊕ constant patterns like `x[i] - mean` without materializing
+/// the constant).
+#[derive(Clone, Copy, Debug)]
+pub enum Operand32<'a> {
+    /// Per-lane values.
+    Slice(&'a [f32]),
+    /// One value broadcast to every lane.
+    Scalar(f32),
+}
+
+impl<'a> From<&'a [f32]> for Operand32<'a> {
+    fn from(s: &'a [f32]) -> Self {
+        Operand32::Slice(s)
+    }
+}
+
+impl From<f32> for Operand32<'_> {
+    fn from(v: f32) -> Self {
+        Operand32::Scalar(v)
+    }
+}
+
+impl Operand32<'_> {
+    #[inline(always)]
+    fn at(&self, i: usize) -> f32 {
+        match self {
+            Operand32::Slice(s) => s[i],
+            Operand32::Scalar(v) => *v,
+        }
+    }
+
+    fn check_len(&self, n: usize) {
+        if let Operand32::Slice(s) = self {
+            assert_eq!(s.len(), n, "slice operand length must match the output");
+        }
+    }
+}
+
+/// Double-precision block-mode operand (see [`Operand32`]).
+#[derive(Clone, Copy, Debug)]
+pub enum Operand64<'a> {
+    /// Per-lane values.
+    Slice(&'a [f64]),
+    /// One value broadcast to every lane.
+    Scalar(f64),
+}
+
+impl<'a> From<&'a [f64]> for Operand64<'a> {
+    fn from(s: &'a [f64]) -> Self {
+        Operand64::Slice(s)
+    }
+}
+
+impl From<f64> for Operand64<'_> {
+    fn from(v: f64) -> Self {
+        Operand64::Scalar(v)
+    }
+}
+
+impl Operand64<'_> {
+    #[inline(always)]
+    fn at(&self, i: usize) -> f64 {
+        match self {
+            Operand64::Slice(s) => s[i],
+            Operand64::Scalar(v) => *v,
+        }
+    }
+
+    fn check_len(&self, n: usize) {
+        if let Operand64::Slice(s) = self {
+            assert_eq!(s.len(), n, "slice operand length must match the output");
+        }
+    }
+}
+
+// --- monomorphized per-variant kernels ---------------------------------
+//
+// One zero-cost kernel type per CompiledFpi variant; the public entry
+// points match on the slice's effective FPI once and hand the whole
+// loop to a monomorphized body, so the per-element work carries no
+// dispatch beyond the data itself. `Dyn` keeps the virtual call per
+// element — exactly what the scalar path pays for custom FPIs.
+
+trait Kern32 {
+    fn op(&self, op: OpKind, a: f32, b: f32) -> f32;
+}
+
+struct Exact32;
+
+impl Kern32 for Exact32 {
+    #[inline(always)]
+    fn op(&self, op: OpKind, a: f32, b: f32) -> f32 {
+        raw_f32(op, a, b)
+    }
+}
+
+struct Trunc32 {
+    mask: u32,
+}
+
+impl Kern32 for Trunc32 {
+    #[inline(always)]
+    fn op(&self, op: OpKind, a: f32, b: f32) -> f32 {
+        let raw = raw_f32(op, apply_mask_f32(a, self.mask), apply_mask_f32(b, self.mask));
+        apply_mask_f32(raw, self.mask)
+    }
+}
+
+struct Dyn32<'a>(&'a dyn FpImplementation);
+
+impl Kern32 for Dyn32<'_> {
+    #[inline(always)]
+    fn op(&self, op: OpKind, a: f32, b: f32) -> f32 {
+        self.0.perform_f32(op, a, b)
+    }
+}
+
+trait Kern64 {
+    fn op(&self, op: OpKind, a: f64, b: f64) -> f64;
+}
+
+struct Exact64;
+
+impl Kern64 for Exact64 {
+    #[inline(always)]
+    fn op(&self, op: OpKind, a: f64, b: f64) -> f64 {
+        raw_f64(op, a, b)
+    }
+}
+
+struct Trunc64 {
+    mask: u64,
+}
+
+impl Kern64 for Trunc64 {
+    #[inline(always)]
+    fn op(&self, op: OpKind, a: f64, b: f64) -> f64 {
+        let raw = raw_f64(op, apply_mask_f64(a, self.mask), apply_mask_f64(b, self.mask));
+        apply_mask_f64(raw, self.mask)
+    }
+}
+
+struct Dyn64<'a>(&'a dyn FpImplementation);
+
+impl Kern64 for Dyn64<'_> {
+    #[inline(always)]
+    fn op(&self, op: OpKind, a: f64, b: f64) -> f64 {
+        self.0.perform_f64(op, a, b)
+    }
+}
+
+/// Manipulated bits of one FLOP — the paper's §III-C rule, identical to
+/// the scalar path's per-op accounting.
+#[inline(always)]
+fn bits32(a: f32, b: f32, r: f32) -> u64 {
+    (used_bits_f32(a) + used_bits_f32(b) + used_bits_f32(r)) as u64
+}
+
+#[inline(always)]
+fn bits64(a: f64, b: f64, r: f64) -> u64 {
+    (used_bits_f64(a) + used_bits_f64(b) + used_bits_f64(r)) as u64
+}
+
+#[inline(always)]
+fn ew32<K: Kern32>(k: &K, op: OpKind, a: Operand32, b: Operand32, out: &mut [f32]) -> u64 {
+    let mut bits = 0u64;
+    for (i, o) in out.iter_mut().enumerate() {
+        let (x, y) = (a.at(i), b.at(i));
+        let r = k.op(op, x, y);
+        bits += bits32(x, y, r);
+        *o = r;
+    }
+    bits
+}
+
+#[inline(always)]
+fn ew64<K: Kern64>(k: &K, op: OpKind, a: Operand64, b: Operand64, out: &mut [f64]) -> u64 {
+    let mut bits = 0u64;
+    for (i, o) in out.iter_mut().enumerate() {
+        let (x, y) = (a.at(i), b.at(i));
+        let r = k.op(op, x, y);
+        bits += bits64(x, y, r);
+        *o = r;
+    }
+    bits
+}
+
+#[inline(always)]
+fn sum32<K: Kern32>(k: &K, xs: &[f32], bits: &mut u64) -> f32 {
+    let mut acc = 0.0f32;
+    for &x in xs {
+        let r = k.op(OpKind::Add, acc, x);
+        *bits += bits32(acc, x, r);
+        acc = r;
+    }
+    acc
+}
+
+#[inline(always)]
+fn sum64<K: Kern64>(k: &K, xs: &[f64], bits: &mut u64) -> f64 {
+    let mut acc = 0.0f64;
+    for &x in xs {
+        let r = k.op(OpKind::Add, acc, x);
+        *bits += bits64(acc, x, r);
+        acc = r;
+    }
+    acc
+}
+
+#[inline(always)]
+fn dot32<K: Kern32>(k: &K, a: &[f32], b: &[f32], bm: &mut u64, ba: &mut u64) -> f32 {
+    let mut acc = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        let p = k.op(OpKind::Mul, x, y);
+        *bm += bits32(x, y, p);
+        let r = k.op(OpKind::Add, acc, p);
+        *ba += bits32(acc, p, r);
+        acc = r;
+    }
+    acc
+}
+
+#[inline(always)]
+fn dot64<K: Kern64>(k: &K, a: &[f64], b: &[f64], bm: &mut u64, ba: &mut u64) -> f64 {
+    let mut acc = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        let p = k.op(OpKind::Mul, x, y);
+        *bm += bits64(x, y, p);
+        let r = k.op(OpKind::Add, acc, p);
+        *ba += bits64(acc, p, r);
+        acc = r;
+    }
+    acc
+}
+
+#[inline(always)]
+fn axpy32<K: Kern32>(
+    k: &K,
+    alpha: f32,
+    x: &[f32],
+    y: &[f32],
+    out: &mut [f32],
+    bm: &mut u64,
+    ba: &mut u64,
+) {
+    for (i, o) in out.iter_mut().enumerate() {
+        let p = k.op(OpKind::Mul, alpha, x[i]);
+        *bm += bits32(alpha, x[i], p);
+        let r = k.op(OpKind::Add, p, y[i]);
+        *ba += bits32(p, y[i], r);
+        *o = r;
+    }
+}
+
+#[inline(always)]
+fn axpy64<K: Kern64>(
+    k: &K,
+    alpha: f64,
+    x: &[f64],
+    y: &[f64],
+    out: &mut [f64],
+    bm: &mut u64,
+    ba: &mut u64,
+) {
+    for (i, o) in out.iter_mut().enumerate() {
+        let p = k.op(OpKind::Mul, alpha, x[i]);
+        *bm += bits64(alpha, x[i], p);
+        let r = k.op(OpKind::Add, p, y[i]);
+        *ba += bits64(p, y[i], r);
+        *o = r;
+    }
+}
+
+#[inline(always)]
+fn sqdist32<K: Kern32>(
+    k: &K,
+    a: &[f32],
+    b: &[f32],
+    bs: &mut u64,
+    bm: &mut u64,
+    ba: &mut u64,
+) -> f32 {
+    let mut acc = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        let d = k.op(OpKind::Sub, x, y);
+        *bs += bits32(x, y, d);
+        let s = k.op(OpKind::Mul, d, d);
+        *bm += bits32(d, d, s);
+        let r = k.op(OpKind::Add, acc, s);
+        *ba += bits32(acc, s, r);
+        acc = r;
+    }
+    acc
+}
+
+#[inline(always)]
+fn add_assign32<K: Kern32>(k: &K, acc: &mut [f32], xs: &[f32]) -> u64 {
+    let mut bits = 0u64;
+    for (o, &x) in acc.iter_mut().zip(xs) {
+        let a = *o;
+        let r = k.op(OpKind::Add, a, x);
+        bits += bits32(a, x, r);
+        *o = r;
+    }
+    bits
+}
+
+impl FpContext {
+    /// Commit one slice call's single-precision counter deltas: `n`
+    /// FLOPs and `bits` manipulated bits in one `(precision, op)` cell —
+    /// the block path's single commit point per op kind.
+    #[inline]
+    fn commit32(&mut self, op: OpKind, n: u64, bits: u64) {
+        let st = self.counters.stats_mut(self.current_func);
+        st.flops[Precision::Single as usize][op as usize] += n;
+        st.flop_bits[Precision::Single as usize][op as usize] += bits;
+    }
+
+    /// Double-precision twin of [`FpContext::commit32`].
+    #[inline]
+    fn commit64(&mut self, op: OpKind, n: u64, bits: u64) {
+        let st = self.counters.stats_mut(self.current_func);
+        st.flops[Precision::Double as usize][op as usize] += n;
+        st.flop_bits[Precision::Double as usize][op as usize] += bits;
+    }
+
+    /// Elementwise single-precision block op:
+    /// `out[i] = op(a[i], b[i])` with either operand broadcastable —
+    /// bit-identical (values, counters, trace) to the scalar loop
+    /// `for i { out[i] = ctx.<op>32(a[i], b[i]) }`.
+    ///
+    /// ```
+    /// use neat::engine::FpContext;
+    /// use neat::fpi::OpKind;
+    ///
+    /// let mut ctx = FpContext::profiler();
+    /// let xs = [3.0f32, 4.5, 6.0];
+    /// let mut out = [0.0f32; 3];
+    /// // broadcast subtraction: out[i] = xs[i] - 1.5
+    /// ctx.map32_slice(OpKind::Sub, &xs[..], 1.5f32, &mut out);
+    /// assert_eq!(out, [1.5, 3.0, 4.5]);
+    /// ```
+    pub fn map32_slice<'a>(
+        &mut self,
+        op: OpKind,
+        a: impl Into<Operand32<'a>>,
+        b: impl Into<Operand32<'a>>,
+        out: &mut [f32],
+    ) {
+        let (a, b) = (a.into(), b.into());
+        a.check_len(out.len());
+        b.check_len(out.len());
+        if out.is_empty() {
+            return;
+        }
+        if self.trace.is_some() {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = self.op32(op, a.at(i), b.at(i));
+            }
+            return;
+        }
+        let bits = match self.current32 {
+            CompiledFpi::Exact => ew32(&Exact32, op, a, b, out),
+            CompiledFpi::Truncate(k) => ew32(&Trunc32 { mask: trunc_mask_f32(k) }, op, a, b, out),
+            CompiledFpi::Dyn(id) => match (a, b) {
+                (Operand32::Slice(sa), Operand32::Slice(sb)) => {
+                    // the FPI's own block entry point (scalar-fallback
+                    // default; overrides must stay element-wise identical)
+                    self.lib.get(id).perform_f32_slice(op, sa, sb, out);
+                    let mut bits = 0u64;
+                    for i in 0..out.len() {
+                        bits += bits32(sa[i], sb[i], out[i]);
+                    }
+                    bits
+                }
+                _ => ew32(&Dyn32(self.lib.get(id)), op, a, b, out),
+            },
+        };
+        self.commit32(op, out.len() as u64, bits);
+    }
+
+    /// Elementwise double-precision block op (see
+    /// [`FpContext::map32_slice`]).
+    pub fn map64_slice<'a>(
+        &mut self,
+        op: OpKind,
+        a: impl Into<Operand64<'a>>,
+        b: impl Into<Operand64<'a>>,
+        out: &mut [f64],
+    ) {
+        let (a, b) = (a.into(), b.into());
+        a.check_len(out.len());
+        b.check_len(out.len());
+        if out.is_empty() {
+            return;
+        }
+        if self.trace.is_some() {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = self.op64(op, a.at(i), b.at(i));
+            }
+            return;
+        }
+        let bits = match self.current64 {
+            CompiledFpi::Exact => ew64(&Exact64, op, a, b, out),
+            CompiledFpi::Truncate(k) => ew64(&Trunc64 { mask: trunc_mask_f64(k) }, op, a, b, out),
+            CompiledFpi::Dyn(id) => match (a, b) {
+                (Operand64::Slice(sa), Operand64::Slice(sb)) => {
+                    self.lib.get(id).perform_f64_slice(op, sa, sb, out);
+                    let mut bits = 0u64;
+                    for i in 0..out.len() {
+                        bits += bits64(sa[i], sb[i], out[i]);
+                    }
+                    bits
+                }
+                _ => ew64(&Dyn64(self.lib.get(id)), op, a, b, out),
+            },
+        };
+        self.commit64(op, out.len() as u64, bits);
+    }
+
+    /// Slice add: `out[i] = add32(a[i], b[i])` (`ADDSS` over a block).
+    #[inline]
+    pub fn add32_slice(&mut self, a: &[f32], b: &[f32], out: &mut [f32]) {
+        self.map32_slice(OpKind::Add, a, b, out)
+    }
+
+    /// Slice subtract: `out[i] = sub32(a[i], b[i])`.
+    #[inline]
+    pub fn sub32_slice(&mut self, a: &[f32], b: &[f32], out: &mut [f32]) {
+        self.map32_slice(OpKind::Sub, a, b, out)
+    }
+
+    /// Slice multiply: `out[i] = mul32(a[i], b[i])`.
+    #[inline]
+    pub fn mul32_slice(&mut self, a: &[f32], b: &[f32], out: &mut [f32]) {
+        self.map32_slice(OpKind::Mul, a, b, out)
+    }
+
+    /// Slice divide: `out[i] = div32(a[i], b[i])`.
+    #[inline]
+    pub fn div32_slice(&mut self, a: &[f32], b: &[f32], out: &mut [f32]) {
+        self.map32_slice(OpKind::Div, a, b, out)
+    }
+
+    /// Slice add, double precision.
+    #[inline]
+    pub fn add64_slice(&mut self, a: &[f64], b: &[f64], out: &mut [f64]) {
+        self.map64_slice(OpKind::Add, a, b, out)
+    }
+
+    /// Slice subtract, double precision.
+    #[inline]
+    pub fn sub64_slice(&mut self, a: &[f64], b: &[f64], out: &mut [f64]) {
+        self.map64_slice(OpKind::Sub, a, b, out)
+    }
+
+    /// Slice multiply, double precision.
+    #[inline]
+    pub fn mul64_slice(&mut self, a: &[f64], b: &[f64], out: &mut [f64]) {
+        self.map64_slice(OpKind::Mul, a, b, out)
+    }
+
+    /// Slice divide, double precision.
+    #[inline]
+    pub fn div64_slice(&mut self, a: &[f64], b: &[f64], out: &mut [f64]) {
+        self.map64_slice(OpKind::Div, a, b, out)
+    }
+
+    /// In-place accumulating add: `acc[i] = add32(acc[i], xs[i])` — the
+    /// shape of per-cluster / per-bin accumulation loops, which cannot
+    /// use [`FpContext::add32_slice`] because the accumulator is both
+    /// input and output.
+    pub fn add_assign32_slice(&mut self, acc: &mut [f32], xs: &[f32]) {
+        assert_eq!(acc.len(), xs.len(), "add_assign32_slice length mismatch");
+        if acc.is_empty() {
+            return;
+        }
+        if self.trace.is_some() {
+            for (i, &x) in xs.iter().enumerate() {
+                acc[i] = self.op32(OpKind::Add, acc[i], x);
+            }
+            return;
+        }
+        let bits = match self.current32 {
+            CompiledFpi::Exact => add_assign32(&Exact32, acc, xs),
+            CompiledFpi::Truncate(k) => {
+                add_assign32(&Trunc32 { mask: trunc_mask_f32(k) }, acc, xs)
+            }
+            CompiledFpi::Dyn(id) => add_assign32(&Dyn32(self.lib.get(id)), acc, xs),
+        };
+        self.commit32(OpKind::Add, xs.len() as u64, bits);
+    }
+
+    /// Fused running sum: `acc = add32(acc, xs[i])` from `acc = 0.0`,
+    /// returning the final accumulator — identical to the scalar
+    /// reduction loop, one counter commit.
+    ///
+    /// ```
+    /// use neat::engine::FpContext;
+    ///
+    /// let mut ctx = FpContext::profiler();
+    /// assert_eq!(ctx.sum32_slice(&[1.0, 2.0, 3.5]), 6.5);
+    /// assert_eq!(ctx.counters().total_flops(), 3);
+    /// ```
+    pub fn sum32_slice(&mut self, xs: &[f32]) -> f32 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        if self.trace.is_some() {
+            let mut acc = 0.0f32;
+            for &x in xs {
+                acc = self.op32(OpKind::Add, acc, x);
+            }
+            return acc;
+        }
+        let mut bits = 0u64;
+        let acc = match self.current32 {
+            CompiledFpi::Exact => sum32(&Exact32, xs, &mut bits),
+            CompiledFpi::Truncate(k) => sum32(&Trunc32 { mask: trunc_mask_f32(k) }, xs, &mut bits),
+            CompiledFpi::Dyn(id) => sum32(&Dyn32(self.lib.get(id)), xs, &mut bits),
+        };
+        self.commit32(OpKind::Add, xs.len() as u64, bits);
+        acc
+    }
+
+    /// Fused running sum, double precision (see
+    /// [`FpContext::sum32_slice`]).
+    pub fn sum64_slice(&mut self, xs: &[f64]) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        if self.trace.is_some() {
+            let mut acc = 0.0f64;
+            for &x in xs {
+                acc = self.op64(OpKind::Add, acc, x);
+            }
+            return acc;
+        }
+        let mut bits = 0u64;
+        let acc = match self.current64 {
+            CompiledFpi::Exact => sum64(&Exact64, xs, &mut bits),
+            CompiledFpi::Truncate(k) => sum64(&Trunc64 { mask: trunc_mask_f64(k) }, xs, &mut bits),
+            CompiledFpi::Dyn(id) => sum64(&Dyn64(self.lib.get(id)), xs, &mut bits),
+        };
+        self.commit64(OpKind::Add, xs.len() as u64, bits);
+        acc
+    }
+
+    /// Fused dot product: per element `p = mul32(a[i], b[i]); acc =
+    /// add32(acc, p)` from `acc = 0.0` — the interleaved multiply/add
+    /// order of a scalar reduction loop, so values match it exactly.
+    pub fn dot32_slice(&mut self, a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len(), "dot32_slice length mismatch");
+        if a.is_empty() {
+            return 0.0;
+        }
+        if self.trace.is_some() {
+            let mut acc = 0.0f32;
+            for (&x, &y) in a.iter().zip(b) {
+                let p = self.op32(OpKind::Mul, x, y);
+                acc = self.op32(OpKind::Add, acc, p);
+            }
+            return acc;
+        }
+        let (mut bm, mut ba) = (0u64, 0u64);
+        let acc = match self.current32 {
+            CompiledFpi::Exact => dot32(&Exact32, a, b, &mut bm, &mut ba),
+            CompiledFpi::Truncate(k) => {
+                dot32(&Trunc32 { mask: trunc_mask_f32(k) }, a, b, &mut bm, &mut ba)
+            }
+            CompiledFpi::Dyn(id) => dot32(&Dyn32(self.lib.get(id)), a, b, &mut bm, &mut ba),
+        };
+        self.commit32(OpKind::Mul, a.len() as u64, bm);
+        self.commit32(OpKind::Add, a.len() as u64, ba);
+        acc
+    }
+
+    /// Fused dot product, double precision (see
+    /// [`FpContext::dot32_slice`]).
+    pub fn dot64_slice(&mut self, a: &[f64], b: &[f64]) -> f64 {
+        assert_eq!(a.len(), b.len(), "dot64_slice length mismatch");
+        if a.is_empty() {
+            return 0.0;
+        }
+        if self.trace.is_some() {
+            let mut acc = 0.0f64;
+            for (&x, &y) in a.iter().zip(b) {
+                let p = self.op64(OpKind::Mul, x, y);
+                acc = self.op64(OpKind::Add, acc, p);
+            }
+            return acc;
+        }
+        let (mut bm, mut ba) = (0u64, 0u64);
+        let acc = match self.current64 {
+            CompiledFpi::Exact => dot64(&Exact64, a, b, &mut bm, &mut ba),
+            CompiledFpi::Truncate(k) => {
+                dot64(&Trunc64 { mask: trunc_mask_f64(k) }, a, b, &mut bm, &mut ba)
+            }
+            CompiledFpi::Dyn(id) => dot64(&Dyn64(self.lib.get(id)), a, b, &mut bm, &mut ba),
+        };
+        self.commit64(OpKind::Mul, a.len() as u64, bm);
+        self.commit64(OpKind::Add, a.len() as u64, ba);
+        acc
+    }
+
+    /// Fused axpy: `out[i] = add32(mul32(alpha, x[i]), y[i])`.
+    pub fn axpy32_slice(&mut self, alpha: f32, x: &[f32], y: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), out.len(), "axpy32_slice length mismatch");
+        assert_eq!(y.len(), out.len(), "axpy32_slice length mismatch");
+        if out.is_empty() {
+            return;
+        }
+        if self.trace.is_some() {
+            for (i, o) in out.iter_mut().enumerate() {
+                let p = self.op32(OpKind::Mul, alpha, x[i]);
+                *o = self.op32(OpKind::Add, p, y[i]);
+            }
+            return;
+        }
+        let (mut bm, mut ba) = (0u64, 0u64);
+        match self.current32 {
+            CompiledFpi::Exact => axpy32(&Exact32, alpha, x, y, out, &mut bm, &mut ba),
+            CompiledFpi::Truncate(k) => {
+                axpy32(&Trunc32 { mask: trunc_mask_f32(k) }, alpha, x, y, out, &mut bm, &mut ba)
+            }
+            CompiledFpi::Dyn(id) => {
+                axpy32(&Dyn32(self.lib.get(id)), alpha, x, y, out, &mut bm, &mut ba)
+            }
+        }
+        self.commit32(OpKind::Mul, out.len() as u64, bm);
+        self.commit32(OpKind::Add, out.len() as u64, ba);
+    }
+
+    /// Fused axpy, double precision (see [`FpContext::axpy32_slice`]).
+    pub fn axpy64_slice(&mut self, alpha: f64, x: &[f64], y: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), out.len(), "axpy64_slice length mismatch");
+        assert_eq!(y.len(), out.len(), "axpy64_slice length mismatch");
+        if out.is_empty() {
+            return;
+        }
+        if self.trace.is_some() {
+            for (i, o) in out.iter_mut().enumerate() {
+                let p = self.op64(OpKind::Mul, alpha, x[i]);
+                *o = self.op64(OpKind::Add, p, y[i]);
+            }
+            return;
+        }
+        let (mut bm, mut ba) = (0u64, 0u64);
+        match self.current64 {
+            CompiledFpi::Exact => axpy64(&Exact64, alpha, x, y, out, &mut bm, &mut ba),
+            CompiledFpi::Truncate(k) => {
+                axpy64(&Trunc64 { mask: trunc_mask_f64(k) }, alpha, x, y, out, &mut bm, &mut ba)
+            }
+            CompiledFpi::Dyn(id) => {
+                axpy64(&Dyn64(self.lib.get(id)), alpha, x, y, out, &mut bm, &mut ba)
+            }
+        }
+        self.commit64(OpKind::Mul, out.len() as u64, bm);
+        self.commit64(OpKind::Add, out.len() as u64, ba);
+    }
+
+    /// Fused squared Euclidean distance: per element `d = sub32(a[i],
+    /// b[i]); s = mul32(d, d); acc = add32(acc, s)` from `acc = 0.0` —
+    /// the exact op order of the classic distance reduction loop
+    /// (kmeans' `dist2`).
+    pub fn sqdist32_slice(&mut self, a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len(), "sqdist32_slice length mismatch");
+        if a.is_empty() {
+            return 0.0;
+        }
+        if self.trace.is_some() {
+            let mut acc = 0.0f32;
+            for (&x, &y) in a.iter().zip(b) {
+                let d = self.op32(OpKind::Sub, x, y);
+                let s = self.op32(OpKind::Mul, d, d);
+                acc = self.op32(OpKind::Add, acc, s);
+            }
+            return acc;
+        }
+        let (mut bs, mut bm, mut ba) = (0u64, 0u64, 0u64);
+        let acc = match self.current32 {
+            CompiledFpi::Exact => sqdist32(&Exact32, a, b, &mut bs, &mut bm, &mut ba),
+            CompiledFpi::Truncate(k) => {
+                sqdist32(&Trunc32 { mask: trunc_mask_f32(k) }, a, b, &mut bs, &mut bm, &mut ba)
+            }
+            CompiledFpi::Dyn(id) => {
+                sqdist32(&Dyn32(self.lib.get(id)), a, b, &mut bs, &mut bm, &mut ba)
+            }
+        };
+        self.commit32(OpKind::Sub, a.len() as u64, bs);
+        self.commit32(OpKind::Mul, a.len() as u64, bm);
+        self.commit32(OpKind::Add, a.len() as u64, ba);
+        acc
+    }
+
+    // --- block memory traffic ------------------------------------------
+
+    /// Account a block of single-precision loads (`MOVSS` reads) — the
+    /// traffic of streaming `xs` from off-chip memory, committed to the
+    /// counters in one step. Identical totals to calling
+    /// [`FpContext::load32`] per element; values are untouched, so the
+    /// slice form takes no output.
+    pub fn load32_slice(&mut self, xs: &[f32]) {
+        if xs.is_empty() {
+            return;
+        }
+        let mut bits = 0u64;
+        for &x in xs {
+            bits += mem_bits_f32(x) as u64;
+        }
+        let st = self.counters.stats_mut(self.current_func);
+        st.mem_ops[Precision::Single as usize] += xs.len() as u64;
+        st.mem_bits[Precision::Single as usize] += bits;
+    }
+
+    /// Account a block of single-precision stores (`MOVSS` writes).
+    #[inline]
+    pub fn store32_slice(&mut self, xs: &[f32]) {
+        self.load32_slice(xs) // same traffic accounting both directions
+    }
+
+    /// Account a block of double-precision loads (`MOVSD` reads).
+    pub fn load64_slice(&mut self, xs: &[f64]) {
+        if xs.is_empty() {
+            return;
+        }
+        let mut bits = 0u64;
+        for &x in xs {
+            bits += mem_bits_f64(x) as u64;
+        }
+        let st = self.counters.stats_mut(self.current_func);
+        st.mem_ops[Precision::Double as usize] += xs.len() as u64;
+        st.mem_bits[Precision::Double as usize] += bits;
+    }
+
+    /// Account a block of double-precision stores (`MOVSD` writes).
+    #[inline]
+    pub fn store64_slice(&mut self, xs: &[f64]) {
+        self.load64_slice(xs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::FpContext;
+    use crate::fpi::perturb::{PerturbFpi, PerturbMode};
+    use crate::fpi::FpiLibrary;
+    use crate::placement::Placement;
+    use crate::util::Pcg64;
+    use std::sync::Arc;
+
+    fn data(seed: u64, n: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg64::new(seed);
+        let a = (0..n).map(|_| (rng.normal() * 40.0) as f32).collect();
+        let b = (0..n).map(|_| (rng.normal() * 40.0 + 1.0) as f32).collect();
+        (a, b)
+    }
+
+    /// Contexts for the three CompiledFpi variants.
+    fn contexts() -> Vec<(&'static str, FpContext, FpContext)> {
+        let mut out = Vec::new();
+        let make = |placement: &Placement, lib: &FpiLibrary| {
+            (FpContext::new(lib.clone(), placement.clone()), FpContext::new(lib.clone(), placement.clone()))
+        };
+        let lib = FpiLibrary::truncation_family(crate::fpi::Precision::Single);
+        let exact = Placement::whole_program_exact();
+        let (a, b) = make(&exact, &lib);
+        out.push(("exact", a, b));
+        let trunc = Placement::whole_program(FpiLibrary::truncation_id(6));
+        let (a, b) = make(&trunc, &lib);
+        out.push(("truncate", a, b));
+        let mut dyn_lib = FpiLibrary::new();
+        let id = dyn_lib.register(Arc::new(PerturbFpi::new(5, PerturbMode::Result)));
+        let dynp = Placement::whole_program(id);
+        let (a, b) = make(&dynp, &dyn_lib);
+        out.push(("dyn", a, b));
+        out
+    }
+
+    fn assert_counters_eq(tag: &str, a: &FpContext, b: &FpContext) {
+        assert_eq!(a.counters().aggregate(), b.counters().aggregate(), "{tag}: counters differ");
+    }
+
+    #[test]
+    fn elementwise_matches_scalar_loop_per_variant() {
+        let (xs, ys) = data(3, 37);
+        for (tag, mut scalar, mut block) in contexts() {
+            for op in OpKind::ALL {
+                let want: Vec<f32> = xs
+                    .iter()
+                    .zip(&ys)
+                    .map(|(&x, &y)| scalar.op32(op, x, y))
+                    .collect();
+                let mut got = vec![0.0f32; xs.len()];
+                block.map32_slice(op, &xs[..], &ys[..], &mut got);
+                for i in 0..xs.len() {
+                    assert_eq!(got[i].to_bits(), want[i].to_bits(), "{tag}/{op:?} lane {i}");
+                }
+            }
+            assert_counters_eq(tag, &scalar, &block);
+        }
+    }
+
+    #[test]
+    fn broadcast_operands_match_scalar_loop() {
+        let (xs, _) = data(11, 21);
+        let mut scalar = FpContext::profiler();
+        let mut block = FpContext::profiler();
+        let want: Vec<f32> = xs.iter().map(|&x| scalar.op32(OpKind::Sub, 1.5, x)).collect();
+        let mut got = vec![0.0f32; xs.len()];
+        block.map32_slice(OpKind::Sub, 1.5f32, &xs[..], &mut got);
+        assert_eq!(want, got);
+        let want2: Vec<f32> = xs.iter().map(|&x| scalar.op32(OpKind::Div, x, 3.0)).collect();
+        block.map32_slice(OpKind::Div, &xs[..], 3.0f32, &mut got);
+        assert_eq!(want2, got);
+        assert_counters_eq("broadcast", &scalar, &block);
+    }
+
+    #[test]
+    fn fused_kernels_match_their_scalar_sequences() {
+        let (xs, ys) = data(29, 64);
+        for (tag, mut scalar, mut block) in contexts() {
+            // sum
+            let mut acc = 0.0f32;
+            for &x in &xs {
+                acc = scalar.op32(OpKind::Add, acc, x);
+            }
+            assert_eq!(acc.to_bits(), block.sum32_slice(&xs).to_bits(), "{tag} sum");
+            // dot
+            let mut acc = 0.0f32;
+            for (&x, &y) in xs.iter().zip(&ys) {
+                let p = scalar.op32(OpKind::Mul, x, y);
+                acc = scalar.op32(OpKind::Add, acc, p);
+            }
+            assert_eq!(acc.to_bits(), block.dot32_slice(&xs, &ys).to_bits(), "{tag} dot");
+            // sqdist
+            let mut acc = 0.0f32;
+            for (&x, &y) in xs.iter().zip(&ys) {
+                let d = scalar.op32(OpKind::Sub, x, y);
+                let s = scalar.op32(OpKind::Mul, d, d);
+                acc = scalar.op32(OpKind::Add, acc, s);
+            }
+            assert_eq!(acc.to_bits(), block.sqdist32_slice(&xs, &ys).to_bits(), "{tag} sqdist");
+            // axpy
+            let mut want = vec![0.0f32; xs.len()];
+            for i in 0..xs.len() {
+                let p = scalar.op32(OpKind::Mul, 0.75, xs[i]);
+                want[i] = scalar.op32(OpKind::Add, p, ys[i]);
+            }
+            let mut got = vec![0.0f32; xs.len()];
+            block.axpy32_slice(0.75, &xs, &ys, &mut got);
+            assert_eq!(want, got, "{tag} axpy");
+            // add_assign
+            let mut want_acc = ys.clone();
+            for i in 0..xs.len() {
+                want_acc[i] = scalar.op32(OpKind::Add, want_acc[i], xs[i]);
+            }
+            let mut got_acc = ys.clone();
+            block.add_assign32_slice(&mut got_acc, &xs);
+            assert_eq!(want_acc, got_acc, "{tag} add_assign");
+            assert_counters_eq(tag, &scalar, &block);
+        }
+    }
+
+    #[test]
+    fn double_precision_kernels_match_scalar() {
+        let (xs32, ys32) = data(41, 33);
+        let xs: Vec<f64> = xs32.iter().map(|&x| x as f64).collect();
+        let ys: Vec<f64> = ys32.iter().map(|&y| y as f64).collect();
+        let lib = FpiLibrary::truncation_family(crate::fpi::Precision::Double);
+        let p = Placement::whole_program(FpiLibrary::truncation_id(11));
+        let mut scalar = FpContext::new(lib.clone(), p.clone());
+        let mut block = FpContext::new(lib, p);
+        for op in OpKind::ALL {
+            let want: Vec<f64> =
+                xs.iter().zip(&ys).map(|(&x, &y)| scalar.op64(op, x, y)).collect();
+            let mut got = vec![0.0f64; xs.len()];
+            block.map64_slice(op, &xs[..], &ys[..], &mut got);
+            for i in 0..xs.len() {
+                assert_eq!(got[i].to_bits(), want[i].to_bits(), "{op:?} lane {i}");
+            }
+        }
+        let mut acc = 0.0f64;
+        for &x in &xs {
+            acc = scalar.op64(OpKind::Add, acc, x);
+        }
+        assert_eq!(acc.to_bits(), block.sum64_slice(&xs).to_bits());
+        let mut acc = 0.0f64;
+        for (&x, &y) in xs.iter().zip(&ys) {
+            let p = scalar.op64(OpKind::Mul, x, y);
+            acc = scalar.op64(OpKind::Add, acc, p);
+        }
+        assert_eq!(acc.to_bits(), block.dot64_slice(&xs, &ys).to_bits());
+        let mut want = vec![0.0f64; xs.len()];
+        for i in 0..xs.len() {
+            let p = scalar.op64(OpKind::Mul, 1.25, xs[i]);
+            want[i] = scalar.op64(OpKind::Add, p, ys[i]);
+        }
+        let mut got = vec![0.0f64; xs.len()];
+        block.axpy64_slice(1.25, &xs, &ys, &mut got);
+        assert_eq!(want, got);
+        assert_counters_eq("f64", &scalar, &block);
+    }
+
+    #[test]
+    fn slice_loads_match_scalar_loads() {
+        let (xs, _) = data(5, 19);
+        let mut scalar = FpContext::profiler();
+        let mut block = FpContext::profiler();
+        for &x in &xs {
+            scalar.load32(x);
+            scalar.store32(x);
+        }
+        block.load32_slice(&xs);
+        block.store32_slice(&xs);
+        let xs64: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+        for &x in &xs64 {
+            scalar.load64(x);
+        }
+        block.load64_slice(&xs64);
+        assert_counters_eq("mem", &scalar, &block);
+    }
+
+    #[test]
+    fn tracing_falls_back_to_identical_scalar_lines() {
+        use crate::engine::trace::TraceSink;
+        use std::io::Write;
+        use std::sync::Mutex;
+        #[derive(Clone)]
+        struct Buf(Arc<Mutex<Vec<u8>>>);
+        impl Write for Buf {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let (xs, ys) = data(17, 9);
+        let sbuf = Buf(Arc::new(Mutex::new(Vec::new())));
+        let bbuf = Buf(Arc::new(Mutex::new(Vec::new())));
+        let mut scalar = FpContext::profiler();
+        scalar.set_trace(TraceSink::new(Box::new(sbuf.clone())));
+        let mut block = FpContext::profiler();
+        block.set_trace(TraceSink::new(Box::new(bbuf.clone())));
+        let want: Vec<f32> =
+            xs.iter().zip(&ys).map(|(&x, &y)| scalar.op32(OpKind::Mul, x, y)).collect();
+        let mut got = vec![0.0f32; xs.len()];
+        block.mul32_slice(&xs, &ys, &mut got);
+        assert_eq!(want, got);
+        assert_eq!(*sbuf.0.lock().unwrap(), *bbuf.0.lock().unwrap(), "trace bytes differ");
+    }
+
+    #[test]
+    fn empty_slices_touch_nothing() {
+        let mut ctx = FpContext::profiler();
+        let mut out: [f32; 0] = [];
+        ctx.add32_slice(&[], &[], &mut out);
+        assert_eq!(ctx.sum32_slice(&[]), 0.0);
+        assert_eq!(ctx.dot64_slice(&[], &[]), 0.0);
+        ctx.load32_slice(&[]);
+        assert_eq!(ctx.counters().aggregate(), Default::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mismatched_fused_lengths_panic() {
+        let mut ctx = FpContext::profiler();
+        ctx.dot32_slice(&[1.0, 2.0], &[1.0]);
+    }
+}

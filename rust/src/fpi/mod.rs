@@ -20,7 +20,10 @@ pub mod truncate;
 pub use exact::ExactFpi;
 pub use library::FpiLibrary;
 pub use perturb::PerturbFpi;
-pub use truncate::{truncate_f32, truncate_f64, used_bits_f32, used_bits_f64, TruncateFpi};
+pub use truncate::{
+    apply_mask_f32, apply_mask_f64, trunc_mask_f32, trunc_mask_f64, truncate_f32,
+    truncate_f64, used_bits_f32, used_bits_f64, TruncateFpi,
+};
 
 /// Which scalar arithmetic instruction a FLOP is (the paper instruments
 /// `ADDSS/SUBSS/MULSS/DIVSS` and their `SD` doubles).
@@ -146,6 +149,34 @@ pub trait FpImplementation: Send + Sync {
     /// full width — is correct for FPIs that do not narrow the format.
     fn keep_bits(&self, precision: Precision) -> u32 {
         precision.mantissa_bits()
+    }
+
+    /// Compute one single-precision FLOP per element of a slice — the
+    /// block-mode entry point used by the engine's slice kernels
+    /// ([`crate::engine::FpContext::add32_slice`] and friends) when this
+    /// FPI is active.
+    ///
+    /// The default loops [`FpImplementation::perform_f32`] over the
+    /// elements, so existing FPIs keep working unchanged. An override
+    /// may hoist per-call setup out of the loop (see [`TruncateFpi`])
+    /// but **must stay element-wise identical** to `perform_f32`: the
+    /// engine's contract is that block mode changes scheduling, never
+    /// values, and the slice-vs-scalar property tests pin it.
+    ///
+    /// All three slices have the same length (the engine checks before
+    /// dispatching).
+    fn perform_f32_slice(&self, op: OpKind, a: &[f32], b: &[f32], out: &mut [f32]) {
+        for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+            *o = self.perform_f32(op, x, y);
+        }
+    }
+
+    /// Compute one double-precision FLOP per element of a slice (see
+    /// [`FpImplementation::perform_f32_slice`] for the contract).
+    fn perform_f64_slice(&self, op: OpKind, a: &[f64], b: &[f64], out: &mut [f64]) {
+        for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+            *o = self.perform_f64(op, x, y);
+        }
     }
 }
 

@@ -14,28 +14,58 @@
 
 use super::{raw_f32, raw_f64, FpImplementation, OpKind, Precision};
 
+/// The bit mask that keeps the top `keep` mantissa bits of an `f32`
+/// (counting the implicit leading one; `keep` is clamped to `[1, 24]`).
+///
+/// This is the *single* definition of the truncation-mask math: the
+/// scalar engine fast path, the block-mode slice kernels, and
+/// [`TruncateFpi`] all hoist their masks through here, so the inlined
+/// engine path and the FPI cannot drift apart.
+#[inline(always)]
+pub fn trunc_mask_f32(keep: u32) -> u32 {
+    u32::MAX << 24u32.saturating_sub(keep.max(1)).min(23)
+}
+
+/// The `f64` truncation mask for `keep` mantissa bits (of 53, incl. the
+/// implicit one; clamped to `[1, 53]`). See [`trunc_mask_f32`].
+#[inline(always)]
+pub fn trunc_mask_f64(keep: u32) -> u64 {
+    u64::MAX << 53u32.saturating_sub(keep.max(1)).min(52)
+}
+
+/// Apply a precomputed [`trunc_mask_f32`] mask: zero the low mantissa
+/// bits, round toward zero, pass non-finite values through untouched.
+#[inline(always)]
+pub fn apply_mask_f32(x: f32, mask: u32) -> f32 {
+    if x.is_finite() {
+        f32::from_bits(x.to_bits() & mask)
+    } else {
+        x
+    }
+}
+
+/// Apply a precomputed [`trunc_mask_f64`] mask (see [`apply_mask_f32`]).
+#[inline(always)]
+pub fn apply_mask_f64(x: f64, mask: u64) -> f64 {
+    if x.is_finite() {
+        f64::from_bits(x.to_bits() & mask)
+    } else {
+        x
+    }
+}
+
 /// Truncate an `f32` to `keep` mantissa bits (of 24, incl. implicit one).
 ///
 /// `keep` is clamped to `[1, 24]`; non-finite values pass through.
 #[inline(always)]
 pub fn truncate_f32(x: f32, keep: u32) -> f32 {
-    if !x.is_finite() {
-        return x;
-    }
-    let zeroed = 24u32.saturating_sub(keep.max(1)).min(23);
-    let mask = u32::MAX << zeroed;
-    f32::from_bits(x.to_bits() & mask)
+    apply_mask_f32(x, trunc_mask_f32(keep))
 }
 
 /// Truncate an `f64` to `keep` mantissa bits (of 53, incl. implicit one).
 #[inline(always)]
 pub fn truncate_f64(x: f64, keep: u32) -> f64 {
-    if !x.is_finite() {
-        return x;
-    }
-    let zeroed = 53u32.saturating_sub(keep.max(1)).min(52);
-    let mask = u64::MAX << zeroed;
-    f64::from_bits(x.to_bits() & mask)
+    apply_mask_f64(x, trunc_mask_f64(keep))
 }
 
 /// Manipulated mantissa bits of an `f32` per the paper's §III-C rule:
@@ -92,6 +122,26 @@ impl FpImplementation for TruncateFpi {
         let k = self.keep_bits;
         let r = raw_f64(op, truncate_f64(a, k), truncate_f64(b, k));
         truncate_f64(r, k)
+    }
+
+    /// Block-mode override: the mask is computed once per slice instead
+    /// of once per element. Element-wise identical to `perform_f32` by
+    /// construction (both go through [`apply_mask_f32`]).
+    fn perform_f32_slice(&self, op: OpKind, a: &[f32], b: &[f32], out: &mut [f32]) {
+        let mask = trunc_mask_f32(self.keep_bits);
+        for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+            let r = raw_f32(op, apply_mask_f32(x, mask), apply_mask_f32(y, mask));
+            *o = apply_mask_f32(r, mask);
+        }
+    }
+
+    /// Block-mode override, double precision (see `perform_f32_slice`).
+    fn perform_f64_slice(&self, op: OpKind, a: &[f64], b: &[f64], out: &mut [f64]) {
+        let mask = trunc_mask_f64(self.keep_bits);
+        for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+            let r = raw_f64(op, apply_mask_f64(x, mask), apply_mask_f64(y, mask));
+            *o = apply_mask_f64(r, mask);
+        }
     }
 
     fn keep_bits(&self, precision: Precision) -> u32 {
@@ -187,5 +237,46 @@ mod tests {
     #[test]
     fn name_embeds_width() {
         assert_eq!(TruncateFpi::new(7).name(), "truncate[7b]");
+    }
+
+    #[test]
+    fn mask_helpers_match_per_element_truncation() {
+        let mut rng = crate::util::Pcg64::new(41);
+        for keep in [0u32, 1, 5, 13, 24, 99] {
+            let m32 = trunc_mask_f32(keep);
+            let m64 = trunc_mask_f64(keep);
+            for _ in 0..200 {
+                let x32 = (rng.normal() * 1e3) as f32;
+                let x64 = rng.normal() * 1e3;
+                assert_eq!(apply_mask_f32(x32, m32).to_bits(), truncate_f32(x32, keep).to_bits());
+                assert_eq!(apply_mask_f64(x64, m64).to_bits(), truncate_f64(x64, keep).to_bits());
+            }
+            assert!(apply_mask_f32(f32::NAN, m32).is_nan());
+            assert_eq!(apply_mask_f64(f64::INFINITY, m64), f64::INFINITY);
+        }
+    }
+
+    #[test]
+    fn slice_override_is_elementwise_identical() {
+        let fpi = TruncateFpi::new(5);
+        let mut rng = crate::util::Pcg64::new(7);
+        let a: Vec<f32> = (0..64).map(|_| (rng.normal() * 50.0) as f32).collect();
+        let b: Vec<f32> = (0..64).map(|_| (rng.normal() * 50.0) as f32).collect();
+        for op in OpKind::ALL {
+            let mut out = vec![0.0f32; 64];
+            fpi.perform_f32_slice(op, &a, &b, &mut out);
+            for i in 0..64 {
+                assert_eq!(out[i].to_bits(), fpi.perform_f32(op, a[i], b[i]).to_bits());
+            }
+        }
+        let a64: Vec<f64> = a.iter().map(|&x| x as f64).collect();
+        let b64: Vec<f64> = b.iter().map(|&x| x as f64).collect();
+        for op in OpKind::ALL {
+            let mut out = vec![0.0f64; 64];
+            fpi.perform_f64_slice(op, &a64, &b64, &mut out);
+            for i in 0..64 {
+                assert_eq!(out[i].to_bits(), fpi.perform_f64(op, a64[i], b64[i]).to_bits());
+            }
+        }
     }
 }

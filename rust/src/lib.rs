@@ -19,7 +19,10 @@
 //!   53 double precision levels),
 //! * [`engine`] — the Pin substitute: an instrumented FP execution engine
 //!   with per-function scopes, call-stack tracking, FLOP census and
-//!   operand tracing,
+//!   operand tracing. Two hot paths, one contract: scalar per-FLOP ops
+//!   and the block-mode slice kernels (`engine::slice` — effective FPI
+//!   resolved once per slice, monomorphized inner loops, one counter
+//!   commit per call), bit-identical in values, counters, and trace,
 //! * [`placement`] — WP / CIP / FCS rules plus programmable custom rules,
 //! * [`energy`] — EPI tables (paper Fig. 1) and manipulated-bit counting,
 //! * [`bench_suite`] — Rust reimplementations of the ten evaluated

@@ -38,14 +38,17 @@ fn usage() -> &'static str {
                [--population N] [--generations N] [--seed N] [--threads N]\n\
        tune    <benchmark> [--rule wp|cip|fcs] [--target single|double]\n\
                [--error-budget E | --energy-budget P] [--max-evals N]\n\
-               [--descent lattice|binary] [--exchange-moves N] [--test-seeds]\n\
+               [--descent lattice|binary] [--exchange-moves N]\n\
+               [--exchange-partners K] [--test-seeds]\n\
                [--threads N]                   heuristic constraint-driven tuning\n\
                (budgets are fractions: --error-budget 0.01 = 1% accuracy loss,\n\
                 --energy-budget 0.5 = half the baseline energy; default 0.01.\n\
                 --descent lattice probes each gene's whole width lattice in one\n\
                 wave (default); --exchange-moves bounds the pairwise exchange\n\
-                phase (0 disables); --test-seeds re-evaluates the tuned config\n\
-                on held-out seeds and reports the constraint overshoot)\n\
+                phase (0 disables); --exchange-partners caps the raise partners\n\
+                probed per lowered gene, most sensitive first (default 4);\n\
+                --test-seeds re-evaluates the tuned config on held-out seeds\n\
+                and reports the constraint overshoot)\n\
        suite   [--run-dir DIR] [--resume] [--shard-threads N] [--threads N]\n\
                [--benchmarks a,b,c]            regenerate every figure with the\n\
                                                benchmark walk sharded across the\n\
@@ -80,7 +83,7 @@ fn parse_args(raw: &[String]) -> Args {
         let a = &raw[i];
         if let Some(name) = a.strip_prefix("--") {
             // value-taking flags; everything else is a switch
-            const VALUED: [&str; 16] = [
+            const VALUED: [&str; 17] = [
                 "rule",
                 "target",
                 "population",
@@ -97,6 +100,7 @@ fn parse_args(raw: &[String]) -> Args {
                 "benchmarks",
                 "descent",
                 "exchange-moves",
+                "exchange-partners",
             ];
             if VALUED.contains(&name) && i + 1 < raw.len() {
                 flags.insert(name.to_string(), raw[i + 1].clone());
@@ -303,12 +307,25 @@ fn cmd_tune(args: &Args) -> Result<()> {
         Some(v) => v.parse().context("--exchange-moves must be a non-negative integer")?,
         None => neat::tuner::DEFAULT_EXCHANGE_ROUNDS,
     };
+    let exchange_partners: usize = match args.flags.get("exchange-partners") {
+        Some(v) => {
+            let k: usize =
+                v.parse().context("--exchange-partners must be a positive integer")?;
+            if k == 0 {
+                // 0 would be silently clamped to 1 by the tuner; the
+                // phase itself is disabled via --exchange-moves 0
+                bail!("--exchange-partners must be >= 1 (use --exchange-moves 0 to disable the exchange phase)");
+            }
+            k
+        }
+        None => neat::tuner::DEFAULT_EXCHANGE_PARTNERS,
+    };
     let exec = args.executor();
     eprintln!("profiling {name} and preparing baselines...");
     let eval = Evaluator::new(w, target);
     eprintln!(
         "tuning {} / {} under {:?}: {} targets, ≤{} probes, {:?} descent, \
-         ≤{} exchange moves/phase, {} worker threads",
+         ≤{} exchange moves/phase (top-{} partners), {} worker threads",
         name,
         rule.name(),
         goal,
@@ -316,11 +333,18 @@ fn cmd_tune(args: &Args) -> Result<()> {
         max_evals,
         strategy,
         exchange_rounds,
+        exchange_partners,
         exec.threads()
     );
     let problem = EvalProblem::with_executor(&eval, rule, exec.clone());
-    let result =
-        Tuner::new(TunerConfig { goal, max_evals, strategy, exchange_rounds }).run(&problem);
+    let result = Tuner::new(TunerConfig {
+        goal,
+        max_evals,
+        strategy,
+        exchange_rounds,
+        exchange_partners,
+    })
+    .run(&problem);
 
     let target_names: Vec<String> = match rule {
         RuleKind::Wp => vec!["whole-program".to_string()],

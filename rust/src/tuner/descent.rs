@@ -321,18 +321,28 @@ pub(super) fn ascend_energy_budget(
 }
 
 /// Bounded pairwise exchange refinement: up to `max_rounds` rounds,
-/// each assembling every (lower gene *i* by one bit, raise gene *j* by
-/// one bit) neighbor of the incumbent into **one** `evaluate_batch`
-/// wave and accepting the feasible candidate that most improves — and
+/// each assembling (lower gene *i* by one bit, raise gene *j* by one
+/// bit) neighbors of the incumbent into **one** `evaluate_batch` wave
+/// and accepting the feasible candidate that most improves — and
 /// *strictly* improves — the goal's objective ([`TuneGoal::score`]).
+///
+/// The wave is **sensitivity-pruned**: for each lowerable gene *i*,
+/// only the top `max_partners` raise partners from `partner_order`
+/// (most error-sensitive first — the genes whose widened datapath buys
+/// the most headroom) are probed, so a round costs O(len ×
+/// max_partners) probes instead of the O(len²) full neighborhood that
+/// starved the 400-probe budget on 10-gene benchmarks. Pass
+/// `max_partners ≥ len` to recover the exhaustive wave.
 ///
 /// The strict-improvement accept rule is what makes the phase safe to
 /// run under either goal: under an error budget an exchange must lower
 /// energy while [`TuneGoal::feasible`] keeps the error inside ε, under
 /// an energy budget it must lower error while staying inside ψ, and
 /// because the score strictly decreases on every accepted move the
-/// phase can never cycle. Ties break toward the earliest `(i, j)` pair,
-/// so the whole phase is deterministic.
+/// phase can never cycle. Ties break toward the earliest planned
+/// `(i, j)` pair, so the whole phase is deterministic (`partner_order`
+/// itself is deterministic — it comes from the seed wave's ranking).
+#[allow(clippy::too_many_arguments)]
 pub(super) fn exchange_phase(
     probes: &mut ProbeSet<'_>,
     genome: &mut Genome,
@@ -340,6 +350,8 @@ pub(super) fn exchange_phase(
     goal: TuneGoal,
     max_bits: u32,
     max_rounds: usize,
+    partner_order: &[usize],
+    max_partners: usize,
 ) -> Vec<ExchangeStep> {
     let len = genome.len();
     let mut steps = Vec::new();
@@ -353,10 +365,15 @@ pub(super) fn exchange_phase(
             if genome[i] <= 1 {
                 continue;
             }
-            for j in 0..len {
+            let mut taken = 0usize;
+            for &j in partner_order {
+                if taken >= max_partners {
+                    break;
+                }
                 if j == i || genome[j] >= max_bits {
                     continue;
                 }
+                taken += 1;
                 let mut g = genome.clone();
                 g[i] -= 1;
                 g[j] += 1;
@@ -605,6 +622,8 @@ mod tests {
             TuneGoal::ErrorBudget(eps),
             24,
             16,
+            &[0, 1],
+            2,
         );
         assert!(!swaps.is_empty(), "exchange must escape the local minimum");
         let mut last = 76.0 / 96.0;
@@ -642,8 +661,47 @@ mod tests {
             TuneGoal::ErrorBudget(0.01),
             24,
             8,
+            &[0, 1],
+            2,
         );
         assert!(swaps.is_empty(), "score-neutral exchanges must be rejected");
         assert_eq!(genome, vec![19, 19]);
+    }
+
+    #[test]
+    fn exchange_wave_is_pruned_to_top_k_partners() {
+        // 5 genes, everything lowerable and raisable: the full
+        // neighborhood is 5×4 = 20 candidates; with one partner per
+        // lowered gene the wave must probe at most 5
+        let p = FnProblem {
+            len: 5,
+            max_bits: 24,
+            f: |g: &Genome| Objectives {
+                error: (120 - g.iter().sum::<u32>()) as f64 * 0.001,
+                energy: g.iter().enumerate().map(|(i, &x)| (i as f64 + 1.0) * x as f64).sum::<f64>()
+                    / (15.0 * 24.0),
+            },
+        };
+        let genome = vec![12u32; 5];
+        // error = (120 - 60)·0.001, energy = Σ (i+1)·12 / (15·24)
+        let incumbent = Objectives { error: 0.06, energy: 0.5 };
+        let run = |k: usize| {
+            let mut probes = ProbeSet::new(&p, 400);
+            let mut g = genome.clone();
+            let mut obj = incumbent;
+            exchange_phase(
+                &mut probes,
+                &mut g,
+                &mut obj,
+                TuneGoal::ErrorBudget(1.0),
+                24,
+                1,
+                &[4, 3, 2, 1, 0],
+                k,
+            );
+            probes.used()
+        };
+        assert!(run(1) <= 5, "pruned wave probed too much");
+        assert!(run(5) <= 20 && run(5) > 5, "exhaustive wave expected");
     }
 }

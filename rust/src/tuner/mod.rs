@@ -143,6 +143,10 @@ pub enum DescentStrategy {
 /// phase ([`TunerConfig::exchange_rounds`]).
 pub const DEFAULT_EXCHANGE_ROUNDS: usize = 4;
 
+/// Default number of raise partners probed per lowered gene in an
+/// exchange wave ([`TunerConfig::exchange_partners`]).
+pub const DEFAULT_EXCHANGE_PARTNERS: usize = 4;
+
 /// Tuner knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct TunerConfig {
@@ -154,22 +158,30 @@ pub struct TunerConfig {
     /// energy-budget ascent is already wave-based).
     pub strategy: DescentStrategy,
     /// Bound on accepted exchange moves per exchange phase — each round
-    /// is one `evaluate_batch` wave of every (lower gene *i*, raise
-    /// gene *j*) neighbor. `0` disables the phase entirely,
+    /// is one `evaluate_batch` wave of sensitivity-pruned (lower gene
+    /// *i*, raise gene *j*) neighbors. `0` disables the phase entirely,
     /// reproducing the PR 2 monotone descent.
     pub exchange_rounds: usize,
+    /// Raise partners probed per lowered gene in each exchange wave,
+    /// ranked most error-sensitive first from the seed wave's profile —
+    /// an exchange round costs O(genes × partners) probes instead of
+    /// the O(genes²) full neighborhood, which is what kept 10-gene
+    /// benchmarks from starving the 400-probe budget. Set it to the
+    /// genome length (or larger) for the exhaustive wave.
+    pub exchange_partners: usize,
 }
 
 impl TunerConfig {
     /// Default configuration for a goal: the §V-A 400-probe budget,
     /// lattice descent, and a [`DEFAULT_EXCHANGE_ROUNDS`]-move exchange
-    /// phase.
+    /// phase probing [`DEFAULT_EXCHANGE_PARTNERS`] partners per gene.
     pub fn new(goal: TuneGoal) -> Self {
         Self {
             goal,
             max_evals: 400,
             strategy: DescentStrategy::default(),
             exchange_rounds: DEFAULT_EXCHANGE_ROUNDS,
+            exchange_partners: DEFAULT_EXCHANGE_PARTNERS,
         }
     }
 }
@@ -402,6 +414,9 @@ impl Tuner {
         // goal's score strictly decreases across every exchange, so the
         // cycle terminates even before the probe budget runs out.
         let order: Vec<usize> = sensitivity.iter().map(|r| r.target).collect();
+        // Exchange raise partners, most error-sensitive first: raising
+        // the touchiest gene buys the most feasibility headroom per bit.
+        let partner_order: Vec<usize> = order.iter().rev().copied().collect();
         let mut steps = Vec::new();
         let mut exchanges = Vec::new();
         loop {
@@ -429,6 +444,8 @@ impl Tuner {
                 goal,
                 hi,
                 self.config.exchange_rounds,
+                &partner_order,
+                self.config.exchange_partners.max(1),
             );
             if swaps.is_empty() {
                 break;

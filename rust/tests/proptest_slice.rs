@@ -1,0 +1,322 @@
+//! Property tests pinning the block-mode contract: slice kernels change
+//! scheduling, never values. For random slices, placements (WP / CIP /
+//! FCS), truncation widths, and the perturb FPI (the dyn-dispatch
+//! path), every slice kernel must be bit-identical to its scalar op
+//! sequence in **values, counters, and trace content** — which is what
+//! keeps archives produced above the engine byte-identical no matter
+//! which API a workload uses.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+
+use neat::engine::trace::TraceSink;
+use neat::engine::{FpContext, FuncId};
+use neat::fpi::perturb::{PerturbFpi, PerturbMode};
+use neat::fpi::{FpiLibrary, OpKind, Precision};
+use neat::placement::Placement;
+use neat::util::proptest_lite::{check, Config};
+use neat::util::Pcg64;
+
+fn cfg(cases: u64) -> Config {
+    Config { cases, ..Default::default() }
+}
+
+/// Scalar reference op through the public API.
+fn scalar_op32(c: &mut FpContext, op: OpKind, a: f32, b: f32) -> f32 {
+    match op {
+        OpKind::Add => c.add32(a, b),
+        OpKind::Sub => c.sub32(a, b),
+        OpKind::Mul => c.mul32(a, b),
+        OpKind::Div => c.div32(a, b),
+    }
+}
+
+fn scalar_op64(c: &mut FpContext, op: OpKind, a: f64, b: f64) -> f64 {
+    match op {
+        OpKind::Add => c.add64(a, b),
+        OpKind::Sub => c.sub64(a, b),
+        OpKind::Mul => c.mul64(a, b),
+        OpKind::Div => c.div64(a, b),
+    }
+}
+
+/// One generated scenario: a placement (WP-truncate, WP-dyn-perturb,
+/// CIP, FCS), a truncation width, an op, and operand data.
+#[derive(Debug, Clone)]
+struct Scenario {
+    kind: u8,
+    width: u32,
+    op: OpKind,
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+fn gen_scenario(rng: &mut Pcg64) -> Scenario {
+    let n = 1 + rng.below(40) as usize;
+    let ops = OpKind::ALL;
+    Scenario {
+        kind: rng.below(4) as u8,
+        width: 1 + rng.below(24) as u32,
+        op: ops[rng.below(4) as usize],
+        a: (0..n).map(|_| (rng.normal() * 60.0) as f32).collect(),
+        b: (0..n).map(|_| (rng.normal() * 60.0 + 0.5) as f32).collect(),
+    }
+}
+
+/// Build the scenario's context; returns the context and the function
+/// scope to run inside (`None` = toplevel).
+fn build_ctx(s: &Scenario) -> (FpContext, Option<Vec<FuncId>>) {
+    match s.kind {
+        0 => {
+            // WP truncation: the engine's inlined fast path
+            let lib = FpiLibrary::truncation_family(Precision::Single);
+            let p = Placement::whole_program(FpiLibrary::truncation_id(s.width));
+            (FpContext::new(lib, p), None)
+        }
+        1 => {
+            // WP perturb: the dyn-dispatch path
+            let mut lib = FpiLibrary::new();
+            let id = lib.register(Arc::new(PerturbFpi::new(s.width, PerturbMode::Result)));
+            (FpContext::new(lib, Placement::whole_program(id)), None)
+        }
+        2 => {
+            // CIP: FLOPs run inside a mapped function frame
+            let lib = FpiLibrary::truncation_family(Precision::Single);
+            let mut map = HashMap::new();
+            map.insert("hot".to_string(), FpiLibrary::truncation_id(s.width));
+            let mut ctx = FpContext::new(lib, Placement::current_function(map));
+            let hot = ctx.register("hot");
+            (ctx, Some(vec![hot]))
+        }
+        _ => {
+            // FCS: an unmapped kernel inheriting a mapped caller
+            let lib = FpiLibrary::truncation_family(Precision::Single);
+            let mut map = HashMap::new();
+            map.insert("caller".to_string(), FpiLibrary::truncation_id(s.width));
+            let mut ctx = FpContext::new(lib, Placement::call_stack(map));
+            let caller = ctx.register("caller");
+            let kernel = ctx.register("kernel");
+            (ctx, Some(vec![caller, kernel]))
+        }
+    }
+}
+
+/// Run `body` inside the scenario's frame stack.
+fn in_scope<R>(ctx: &mut FpContext, frames: &Option<Vec<FuncId>>, body: impl FnOnce(&mut FpContext) -> R) -> R {
+    match frames {
+        None => body(ctx),
+        Some(fs) => {
+            for &f in fs {
+                ctx.enter(f);
+            }
+            let r = body(ctx);
+            for _ in fs {
+                ctx.exit();
+            }
+            r
+        }
+    }
+}
+
+fn counters_match(a: &FpContext, b: &FpContext) -> bool {
+    a.counters() == b.counters()
+}
+
+#[test]
+fn prop_elementwise_slice_is_bit_identical_to_scalar() {
+    check("map32_slice == scalar loop", cfg(192), gen_scenario, |s| {
+        let (mut scalar, frames) = build_ctx(s);
+        let (mut block, bframes) = build_ctx(s);
+        let want: Vec<f32> = in_scope(&mut scalar, &frames, |c| {
+            s.a.iter().zip(&s.b).map(|(&x, &y)| scalar_op32(c, s.op, x, y)).collect()
+        });
+        let mut got = vec![0.0f32; s.a.len()];
+        in_scope(&mut block, &bframes, |c| {
+            c.map32_slice(s.op, &s.a[..], &s.b[..], &mut got);
+        });
+        let values_ok =
+            want.iter().zip(&got).all(|(w, g)| w.to_bits() == g.to_bits());
+        values_ok && counters_match(&scalar, &block)
+    });
+}
+
+#[test]
+fn prop_fused_kernels_are_bit_identical_to_scalar() {
+    check("fused kernels == scalar sequences", cfg(128), gen_scenario, |s| {
+        let (mut scalar, frames) = build_ctx(s);
+        let (mut block, bframes) = build_ctx(s);
+        // scalar reference: sum, dot, sqdist in sequence
+        let (w_sum, w_dot, w_sq) = in_scope(&mut scalar, &frames, |c| {
+            let mut sum = 0.0f32;
+            for &x in &s.a {
+                sum = c.add32(sum, x);
+            }
+            let mut dot = 0.0f32;
+            for (&x, &y) in s.a.iter().zip(&s.b) {
+                let p = c.mul32(x, y);
+                dot = c.add32(dot, p);
+            }
+            let mut sq = 0.0f32;
+            for (&x, &y) in s.a.iter().zip(&s.b) {
+                let d = c.sub32(x, y);
+                let m = c.mul32(d, d);
+                sq = c.add32(sq, m);
+            }
+            (sum, dot, sq)
+        });
+        let (g_sum, g_dot, g_sq) = in_scope(&mut block, &bframes, |c| {
+            (c.sum32_slice(&s.a), c.dot32_slice(&s.a, &s.b), c.sqdist32_slice(&s.a, &s.b))
+        });
+        w_sum.to_bits() == g_sum.to_bits()
+            && w_dot.to_bits() == g_dot.to_bits()
+            && w_sq.to_bits() == g_sq.to_bits()
+            && counters_match(&scalar, &block)
+    });
+}
+
+#[test]
+fn prop_broadcast_and_mem_slices_match_scalar() {
+    check("broadcast + mem traffic identical", cfg(128), gen_scenario, |s| {
+        let (mut scalar, frames) = build_ctx(s);
+        let (mut block, bframes) = build_ctx(s);
+        let beta = s.b[0];
+        let want: Vec<f32> = in_scope(&mut scalar, &frames, |c| {
+            let out: Vec<f32> = s.a.iter().map(|&x| scalar_op32(c, s.op, x, beta)).collect();
+            for &x in &s.a {
+                c.load32(x);
+            }
+            for &x in &out {
+                c.store32(x);
+            }
+            out
+        });
+        let mut got = vec![0.0f32; s.a.len()];
+        in_scope(&mut block, &bframes, |c| {
+            c.map32_slice(s.op, &s.a[..], beta, &mut got);
+            c.load32_slice(&s.a);
+            c.store32_slice(&got);
+        });
+        let values_ok =
+            want.iter().zip(&got).all(|(w, g)| w.to_bits() == g.to_bits());
+        values_ok && counters_match(&scalar, &block)
+    });
+}
+
+#[test]
+fn prop_f64_slices_match_scalar_under_target_filter() {
+    // double-precision kernels under a Single optimization target must
+    // stay exact — the precomputed effective FPI has to honor the
+    // target exactly like the scalar path does
+    check("f64 slices + target filter", cfg(128), gen_scenario, |s| {
+        let a64: Vec<f64> = s.a.iter().map(|&x| x as f64).collect();
+        let b64: Vec<f64> = s.b.iter().map(|&x| x as f64).collect();
+        for target in [None, Some(Precision::Single), Some(Precision::Double)] {
+            let (mut scalar, frames) = build_ctx(s);
+            let (mut block, bframes) = build_ctx(s);
+            if let Some(t) = target {
+                scalar.set_target(t);
+                block.set_target(t);
+            }
+            let want: Vec<f64> = in_scope(&mut scalar, &frames, |c| {
+                a64.iter().zip(&b64).map(|(&x, &y)| scalar_op64(c, s.op, x, y)).collect()
+            });
+            let mut got = vec![0.0f64; a64.len()];
+            in_scope(&mut block, &bframes, |c| {
+                c.map64_slice(s.op, &a64[..], &b64[..], &mut got);
+            });
+            if !want.iter().zip(&got).all(|(w, g)| w.to_bits() == g.to_bits()) {
+                return false;
+            }
+            if !counters_match(&scalar, &block) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+/// Shared in-memory trace buffer.
+#[derive(Clone)]
+struct Buf(Arc<Mutex<Vec<u8>>>);
+
+impl Write for Buf {
+    fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(b);
+        Ok(b.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+#[test]
+fn prop_trace_content_is_identical_in_block_mode() {
+    check("trace bytes identical", cfg(96), gen_scenario, |s| {
+        let (mut scalar, frames) = build_ctx(s);
+        let (mut block, bframes) = build_ctx(s);
+        let sbuf = Buf(Arc::new(Mutex::new(Vec::new())));
+        let bbuf = Buf(Arc::new(Mutex::new(Vec::new())));
+        scalar.set_trace(TraceSink::new(Box::new(sbuf.clone())));
+        block.set_trace(TraceSink::new(Box::new(bbuf.clone())));
+        let want: Vec<f32> = in_scope(&mut scalar, &frames, |c| {
+            s.a.iter().zip(&s.b).map(|(&x, &y)| scalar_op32(c, s.op, x, y)).collect()
+        });
+        let mut got = vec![0.0f32; s.a.len()];
+        in_scope(&mut block, &bframes, |c| {
+            c.map32_slice(s.op, &s.a[..], &s.b[..], &mut got);
+        });
+        let values_ok =
+            want.iter().zip(&got).all(|(w, g)| w.to_bits() == g.to_bits());
+        values_ok
+            && *sbuf.0.lock().unwrap() == *bbuf.0.lock().unwrap()
+            && counters_match(&scalar, &block)
+    });
+}
+
+#[test]
+fn pooled_context_block_mode_survives_set_placement_swaps() {
+    // The executor's worker pool reuses one context across
+    // configurations via set_placement; the precomputed effective FPI
+    // must never leak across swaps.
+    let lib = FpiLibrary::truncation_family(Precision::Single);
+    let placements: Vec<Placement> = vec![
+        Placement::whole_program(FpiLibrary::truncation_id(3)),
+        Placement::whole_program_exact(),
+        Placement::whole_program(FpiLibrary::truncation_id(17)),
+        Placement::current_function(HashMap::from([(
+            "hot".to_string(),
+            FpiLibrary::truncation_id(2),
+        )])),
+        Placement::whole_program(FpiLibrary::truncation_id(9)),
+    ];
+    let mut rng = Pcg64::new(0xB10C);
+    let a: Vec<f32> = (0..64).map(|_| (rng.normal() * 30.0) as f32).collect();
+    let b: Vec<f32> = (0..64).map(|_| (rng.normal() * 30.0 + 1.0) as f32).collect();
+
+    let mut pooled = FpContext::new(lib.clone(), placements[0].clone());
+    let hot = pooled.register("hot");
+    for p in &placements {
+        pooled.set_placement(p.clone());
+        // fresh context for the same placement = the reference run
+        let mut fresh = FpContext::new(lib.clone(), p.clone());
+        let fresh_hot = fresh.register("hot");
+        let mut want = vec![0.0f32; a.len()];
+        fresh.call(fresh_hot, |c| c.mul32_slice(&a, &b, &mut want));
+        let w_sum = fresh.call(fresh_hot, |c| c.sum32_slice(&a));
+
+        let mut got = vec![0.0f32; a.len()];
+        pooled.call(hot, |c| c.mul32_slice(&a, &b, &mut got));
+        let g_sum = pooled.call(hot, |c| c.sum32_slice(&a));
+
+        for i in 0..a.len() {
+            assert_eq!(want[i].to_bits(), got[i].to_bits(), "lane {i} after swap");
+        }
+        assert_eq!(w_sum.to_bits(), g_sum.to_bits());
+        assert_eq!(
+            fresh.counters().aggregate(),
+            pooled.counters().aggregate(),
+            "counters diverged after set_placement"
+        );
+    }
+}
