@@ -1,5 +1,5 @@
 //! Bench: scalar vs block-mode FLOP throughput per `CompiledFpi`
-//! variant — the PR 5 datapoint for the perf trajectory.
+//! variant — the perf-trajectory datapoint.
 //!
 //! Measures 1k-element slices (the acceptance shape): an add+mul pass
 //! issued per scalar op versus the same pass through `add32_slice` /
@@ -7,7 +7,15 @@
 //! Emits a machine-readable baseline to `BENCH_engine.json` (override
 //! the path with `NEAT_BENCH_ENGINE_OUT`).
 //!
-//!     cargo bench --bench engine
+//! The slice tier being measured is compile-time: without features the
+//! slice pass runs the block (scalar-loop) kernels and fills the
+//! `block_mflops` column; with `--features lanes` the same pass runs
+//! the lane-parallel kernels and fills `lanes_mflops` instead (the
+//! `lanes_feature` field records which build wrote the file). The
+//! three-way table therefore comes from two runs:
+//!
+//!     cargo bench --bench engine                    # scalar + block
+//!     cargo bench --bench engine --features lanes   # scalar + lanes
 
 #[path = "harness.rs"]
 mod harness;
@@ -22,6 +30,10 @@ use neat::fpi::{FpiLibrary, Precision};
 use neat::placement::Placement;
 
 const N: usize = 1024;
+
+/// Which slice tier this binary's kernels run (set by the cargo
+/// feature): the block scalar loops, or the lane-parallel blocks.
+const LANES_ON: bool = cfg!(feature = "lanes");
 
 fn min_nanos(m: &Measurement) -> f64 {
     m.samples
@@ -64,10 +76,12 @@ fn block_pass(ctx: &mut FpContext, a: &[f32], b: &[f32], tmp: &mut [f32], out: &
 struct VariantResult {
     fpi: &'static str,
     scalar_mflops: f64,
-    block_mflops: f64,
+    /// Slice-pass throughput under this binary's tier (block or lanes).
+    slice_mflops: f64,
 }
 
 fn run_variant(fpi: &'static str, mut ctx: FpContext, reports: &mut Vec<String>) -> VariantResult {
+    let tier = if LANES_ON { "lanes" } else { "block" };
     let (a, b) = inputs();
     let flops = 2 * N as u64;
     let mut out = vec![0.0f32; N];
@@ -76,17 +90,17 @@ fn run_variant(fpi: &'static str, mut ctx: FpContext, reports: &mut Vec<String>)
         std::hint::black_box(&out);
     });
     let mut tmp = vec![0.0f32; N];
-    let block = bench(&format!("block  {fpi} (1k slices)"), flops, "flops", || {
+    let slice = bench(&format!("{tier:<6} {fpi} (1k slices)"), flops, "flops", || {
         block_pass(&mut ctx, &a, &b, &mut tmp, &mut out);
         std::hint::black_box(&out);
     });
     let result = VariantResult {
         fpi,
         scalar_mflops: rate(&scalar) / 1e6,
-        block_mflops: rate(&block) / 1e6,
+        slice_mflops: rate(&slice) / 1e6,
     };
     reports.push(scalar.report());
-    reports.push(block.report());
+    reports.push(slice.report());
     result
 }
 
@@ -106,37 +120,46 @@ fn main() {
     let dynamic = FpContext::new(dyn_lib, Placement::whole_program(id));
     results.push(run_variant("dyn(perturb)", dynamic, &mut reports));
 
-    println!("== engine: scalar vs block mode ({N}-element slices) ==");
+    let tier = if LANES_ON { "lanes" } else { "block" };
+    println!("== engine: scalar vs {tier} mode ({N}-element slices) ==");
     for r in &reports {
         println!("{r}");
     }
     println!();
     for v in &results {
         println!(
-            "{:<14} scalar {:>9.2} Mflops/s   block {:>9.2} Mflops/s   speedup {:.2}x",
+            "{:<14} scalar {:>9.2} Mflops/s   {tier} {:>9.2} Mflops/s   speedup {:.2}x",
             v.fpi,
             v.scalar_mflops,
-            v.block_mflops,
-            v.block_mflops / v.scalar_mflops.max(1e-9)
+            v.slice_mflops,
+            v.slice_mflops / v.scalar_mflops.max(1e-9)
         );
     }
 
-    // machine-readable baseline for the perf trajectory
+    // machine-readable baseline for the perf trajectory: the slice
+    // column this build measured is filled, the other is null (merge
+    // the default and `--features lanes` runs for the three-way table)
     let mut json = String::from("{\n");
     let _ = writeln!(json, "  \"bench\": \"engine\",");
     let _ = writeln!(json, "  \"slice_len\": {N},");
     let _ = writeln!(json, "  \"flops_per_pass\": {},", 2 * N);
+    let _ = writeln!(json, "  \"lanes_feature\": {LANES_ON},");
     let _ = writeln!(json, "  \"variants\": [");
     for (i, v) in results.iter().enumerate() {
         let comma = if i + 1 == results.len() { "" } else { "," };
+        let slice_col = format!("{:.3}", v.slice_mflops);
+        let (block_col, lanes_col) = if LANES_ON {
+            ("null".to_string(), slice_col)
+        } else {
+            (slice_col, "null".to_string())
+        };
         let _ = writeln!(
             json,
-            "    {{\"fpi\": \"{}\", \"scalar_mflops\": {:.3}, \"block_mflops\": {:.3}, \
-             \"speedup\": {:.3}}}{comma}",
+            "    {{\"fpi\": \"{}\", \"scalar_mflops\": {:.3}, \"block_mflops\": {block_col}, \
+             \"lanes_mflops\": {lanes_col}, \"speedup\": {:.3}}}{comma}",
             v.fpi,
             v.scalar_mflops,
-            v.block_mflops,
-            v.block_mflops / v.scalar_mflops.max(1e-9)
+            v.slice_mflops / v.scalar_mflops.max(1e-9)
         );
     }
     let _ = writeln!(json, "  ]");

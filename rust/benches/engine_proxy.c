@@ -1,0 +1,311 @@
+/* C proxy for `cargo bench --bench engine` — measurement provenance.
+ *
+ * The container this tree grows in has no Rust toolchain, so the
+ * committed BENCH_engine.json numbers cannot come from the Rust bench
+ * binary itself. This file replicates the three slice tiers of
+ * `src/engine/slice.rs` — scalar, block, lanes — structure-for-
+ * structure in C, and the committed numbers were measured by compiling
+ * it on the growth container's hardware:
+ *
+ *     gcc -O3 -o /tmp/engine_proxy rust/benches/engine_proxy.c
+ *     /tmp/engine_proxy
+ *
+ * `-O3`, **no** `-march=native`: rustc's release default targets
+ * baseline x86-64 (SSE2), so the proxy must not borrow AVX-512 the
+ * Rust build would not use. Once a Rust toolchain is available,
+ * `cargo bench --bench engine` (with and without `--features lanes`)
+ * overwrites BENCH_engine.json with first-party numbers and this proxy
+ * becomes historical.
+ *
+ * What is replicated per tier (same accounting, same masks, same
+ * per-op bit counting as the Rust engine):
+ *
+ * - scalar: per-FLOP dispatch on the cached FPI enum, mask recomputed
+ *   per op (one shift), bits32(a,b,r) into the shared stats struct,
+ *   trace-sink null check — the body of `FpContext::op32`.
+ * - block:  monomorphized per-variant loop, mask hoisted out of the
+ *   loop, bit counter in a local, one commit per call — the body of
+ *   `ew32::<Trunc32>` etc.
+ * - lanes:  8-wide hand-unrolled lane blocks over arrays (mask per
+ *   lane, raw op per lane, bits per lane), scalar remainder tail —
+ *   the `--features lanes` path. The dyn variant keeps the scalar
+ *   loop through a function pointer (LANE_OK = false).
+ *
+ * The workload is the bench's add+mul pass over 1024-element slices.
+ */
+
+#include <stdint.h>
+#include <stdio.h>
+#include <string.h>
+#include <time.h>
+
+#define N 1024
+#define LANES 8
+
+typedef enum { OP_ADD = 0, OP_SUB, OP_MUL, OP_DIV } op_t;
+typedef enum { FPI_EXACT, FPI_TRUNC, FPI_DYN } fpi_t;
+
+typedef struct {
+    uint64_t flops[4];
+    uint64_t flop_bits[4];
+} stats_t;
+
+typedef float (*dyn_fn)(op_t, float, float);
+
+typedef struct {
+    fpi_t current32;   /* resolved effective FPI (cached, like current32) */
+    uint32_t keep;     /* truncation width */
+    dyn_fn dyn_op;     /* dyn-dispatch table entry */
+    void *trace;       /* trace sink; NULL here, but checked per op */
+    stats_t st;
+} ctx_t;
+
+static inline uint32_t f2b(float x) { uint32_t b; memcpy(&b, &x, 4); return b; }
+static inline float b2f(uint32_t b) { float x; memcpy(&x, &b, 4); return x; }
+
+static inline uint32_t trunc_mask_f32(uint32_t keep) {
+    uint32_t k = keep < 1 ? 1 : keep;
+    uint32_t sh = 24 - k;
+    if (sh > 23) sh = 23;
+    return 0xffffffffu << sh;
+}
+
+static inline float apply_mask_f32(float x, uint32_t mask) {
+    uint32_t b = f2b(x);
+    if ((b & 0x7f800000u) != 0x7f800000u) return b2f(b & mask);
+    return x;
+}
+
+static inline uint32_t used_bits_f32(float x) {
+    uint32_t m = f2b(x) & 0x007fffffu;
+    uint32_t tz = m ? (uint32_t)__builtin_ctz(m) : 23u;
+    return 24 - tz;
+}
+
+static inline float raw_f32(op_t op, float a, float b) {
+    switch (op) {
+        case OP_ADD: return a + b;
+        case OP_SUB: return a - b;
+        case OP_MUL: return a * b;
+        default:     return a / b;
+    }
+}
+
+/* PerturbFpi::perform_f32 (Result mode): mask recomputed per call,
+ * reached through an indirect call like the dyn trait object. */
+static float perturb_result(op_t op, float a, float b) {
+    return apply_mask_f32(raw_f32(op, a, b), trunc_mask_f32(8));
+}
+
+/* --- scalar tier: FpContext::op32 ---------------------------------- */
+
+static float op32(ctx_t *c, op_t op, float a, float b) {
+    float r;
+    switch (c->current32) {
+        case FPI_EXACT:
+            r = raw_f32(op, a, b);
+            break;
+        case FPI_TRUNC: {
+            uint32_t mask = trunc_mask_f32(c->keep);
+            r = apply_mask_f32(
+                raw_f32(op, apply_mask_f32(a, mask), apply_mask_f32(b, mask)), mask);
+            break;
+        }
+        default:
+            r = c->dyn_op(op, a, b);
+    }
+    uint32_t bits = used_bits_f32(a) + used_bits_f32(b) + used_bits_f32(r);
+    c->st.flops[op] += 1;
+    c->st.flop_bits[op] += bits;
+    if (c->trace) { /* TraceSink::record32 — never taken here */ }
+    return r;
+}
+
+static void scalar_pass(ctx_t *c, const float *a, const float *b, float *out) {
+    for (int i = 0; i < N; i++) out[i] = op32(c, OP_ADD, a[i], b[i]);
+    for (int i = 0; i < N; i++) out[i] = op32(c, OP_MUL, out[i], b[i]);
+}
+
+/* --- block tier: monomorphized ew32 loops -------------------------- */
+
+static void ew_exact(op_t op, const float *a, const float *b, float *out, uint64_t *bits) {
+    uint64_t bb = 0;
+    for (int i = 0; i < N; i++) {
+        float r = raw_f32(op, a[i], b[i]);
+        bb += used_bits_f32(a[i]) + used_bits_f32(b[i]) + used_bits_f32(r);
+        out[i] = r;
+    }
+    *bits = bb;
+}
+
+static void ew_trunc(op_t op, uint32_t mask, const float *a, const float *b, float *out,
+                     uint64_t *bits) {
+    uint64_t bb = 0;
+    for (int i = 0; i < N; i++) {
+        float r = apply_mask_f32(
+            raw_f32(op, apply_mask_f32(a[i], mask), apply_mask_f32(b[i], mask)), mask);
+        bb += used_bits_f32(a[i]) + used_bits_f32(b[i]) + used_bits_f32(r);
+        out[i] = r;
+    }
+    *bits = bb;
+}
+
+static void ew_dyn(op_t op, dyn_fn f, const float *a, const float *b, float *out,
+                   uint64_t *bits) {
+    uint64_t bb = 0;
+    for (int i = 0; i < N; i++) {
+        float r = f(op, a[i], b[i]);
+        bb += used_bits_f32(a[i]) + used_bits_f32(b[i]) + used_bits_f32(r);
+        out[i] = r;
+    }
+    *bits = bb;
+}
+
+static void commit(ctx_t *c, op_t op, uint64_t n, uint64_t bits) {
+    c->st.flops[op] += n;
+    c->st.flop_bits[op] += bits;
+}
+
+static void block_slice(ctx_t *c, op_t op, const float *a, const float *b, float *out) {
+    uint64_t bits = 0;
+    switch (c->current32) {
+        case FPI_EXACT: ew_exact(op, a, b, out, &bits); break;
+        case FPI_TRUNC: ew_trunc(op, trunc_mask_f32(c->keep), a, b, out, &bits); break;
+        default:        ew_dyn(op, c->dyn_op, a, b, out, &bits); break;
+    }
+    commit(c, op, N, bits);
+}
+
+static void block_pass(ctx_t *c, const float *a, const float *b, float *tmp, float *out) {
+    block_slice(c, OP_ADD, a, b, tmp);
+    block_slice(c, OP_MUL, tmp, b, out);
+}
+
+/* --- lane tier: 8-wide unrolled blocks + scalar tail --------------- */
+
+static void lanes_exact(op_t op, const float *a, const float *b, float *out,
+                        uint64_t *bits) {
+    uint64_t bb = 0;
+    int i = 0;
+    for (; i + LANES <= N; i += LANES) {
+        float r[LANES];
+        for (int j = 0; j < LANES; j++) r[j] = raw_f32(op, a[i + j], b[i + j]);
+        for (int j = 0; j < LANES; j++)
+            bb += used_bits_f32(a[i + j]) + used_bits_f32(b[i + j]) + used_bits_f32(r[j]);
+        for (int j = 0; j < LANES; j++) out[i + j] = r[j];
+    }
+    for (; i < N; i++) {
+        float r = raw_f32(op, a[i], b[i]);
+        bb += used_bits_f32(a[i]) + used_bits_f32(b[i]) + used_bits_f32(r);
+        out[i] = r;
+    }
+    *bits = bb;
+}
+
+static void lanes_trunc(op_t op, uint32_t mask, const float *a, const float *b, float *out,
+                        uint64_t *bits) {
+    uint64_t bb = 0;
+    int i = 0;
+    for (; i + LANES <= N; i += LANES) {
+        float ma[LANES], mb[LANES], r[LANES];
+        for (int j = 0; j < LANES; j++) ma[j] = apply_mask_f32(a[i + j], mask);
+        for (int j = 0; j < LANES; j++) mb[j] = apply_mask_f32(b[i + j], mask);
+        for (int j = 0; j < LANES; j++)
+            r[j] = apply_mask_f32(raw_f32(op, ma[j], mb[j]), mask);
+        for (int j = 0; j < LANES; j++)
+            bb += used_bits_f32(a[i + j]) + used_bits_f32(b[i + j]) + used_bits_f32(r[j]);
+        for (int j = 0; j < LANES; j++) out[i + j] = r[j];
+    }
+    for (; i < N; i++) {
+        float r = apply_mask_f32(
+            raw_f32(op, apply_mask_f32(a[i], mask), apply_mask_f32(b[i], mask)), mask);
+        bb += used_bits_f32(a[i]) + used_bits_f32(b[i]) + used_bits_f32(r);
+        out[i] = r;
+    }
+    *bits = bb;
+}
+
+static void lanes_slice(ctx_t *c, op_t op, const float *a, const float *b, float *out) {
+    uint64_t bits = 0;
+    switch (c->current32) {
+        case FPI_EXACT: lanes_exact(op, a, b, out, &bits); break;
+        case FPI_TRUNC: lanes_trunc(op, trunc_mask_f32(c->keep), a, b, out, &bits); break;
+        default:        ew_dyn(op, c->dyn_op, a, b, out, &bits); break; /* LANE_OK=false */
+    }
+    commit(c, op, N, bits);
+}
+
+static void lanes_pass(ctx_t *c, const float *a, const float *b, float *tmp, float *out) {
+    lanes_slice(c, OP_ADD, a, b, tmp);
+    lanes_slice(c, OP_MUL, tmp, b, out);
+}
+
+/* --- measurement ---------------------------------------------------- */
+
+static double now_ns(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return (double)ts.tv_sec * 1e9 + (double)ts.tv_nsec;
+}
+
+typedef void (*pass_fn)(ctx_t *, const float *, const float *, float *, float *);
+
+static void scalar_adapter(ctx_t *c, const float *a, const float *b, float *tmp,
+                           float *out) {
+    (void)tmp;
+    scalar_pass(c, a, b, out);
+}
+
+volatile float sink;
+
+/* min ns per pass over samples of ~10ms each, after warmup */
+static double measure(pass_fn f, ctx_t *c, const float *a, const float *b) {
+    float tmp[N], out[N];
+    for (int w = 0; w < 200; w++) f(c, a, b, tmp, out);
+    double best = 1e30;
+    for (int s = 0; s < 9; s++) {
+        int iters = 0;
+        double t0 = now_ns(), t1;
+        do {
+            f(c, a, b, tmp, out);
+            iters++;
+            t1 = now_ns();
+        } while (t1 - t0 < 1e7);
+        double per = (t1 - t0) / iters;
+        if (per < best) best = per;
+    }
+    sink = out[0] + (float)c->st.flop_bits[0];
+    return best;
+}
+
+/* xorshift-ish deterministic inputs, roughly matching the bench's
+ * normal(0,20) scale */
+static void fill(float *a, float *b) {
+    uint64_t s = 0xE9;
+    for (int i = 0; i < N; i++) {
+        s = s * 6364136223846793005ull + 1442695040888963407ull;
+        a[i] = (float)((int64_t)(s >> 33) % 4000) / 100.0f;
+        s = s * 6364136223846793005ull + 1442695040888963407ull;
+        b[i] = (float)((int64_t)(s >> 33) % 4000) / 100.0f + 1.0f;
+    }
+}
+
+int main(void) {
+    float a[N], b[N];
+    fill(a, b);
+    const double flops = 2.0 * N;
+    const char *names[3] = {"exact", "truncate[8b]", "dyn(perturb)"};
+    printf("fpi,scalar_mflops,block_mflops,lanes_mflops\n");
+    for (int v = 0; v < 3; v++) {
+        ctx_t c = {0};
+        c.current32 = (fpi_t)v;
+        c.keep = 8;
+        c.dyn_op = perturb_result;
+        double s = measure(scalar_adapter, &c, a, b);
+        double bl = measure(block_pass, &c, a, b);
+        double ln = measure(lanes_pass, &c, a, b);
+        printf("%s,%.1f,%.1f,%.1f\n", names[v], flops / s * 1e3, flops / bl * 1e3,
+               flops / ln * 1e3);
+    }
+    return 0;
+}

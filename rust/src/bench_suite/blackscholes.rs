@@ -12,7 +12,7 @@ use crate::engine::{FpContext, FuncId};
 use crate::fpi::Precision;
 use crate::util::Pcg64;
 
-use super::math32::{cndf32, exp32, ln32, sqrt32};
+use super::math32::{cndf32, exp32, ln32, sqrt32_slice};
 use super::Workload;
 
 /// One option contract.
@@ -60,8 +60,10 @@ impl Blackscholes {
             .collect()
     }
 
-    fn price(&self, ctx: &mut FpContext, f: &Funcs, opt: Option32) -> f32 {
+    fn price(&self, ctx: &mut FpContext, f: &Funcs, opt: Option32, sqrt_t: f32) -> f32 {
         // d1 = (ln(S/K) + (r + v²/2) T) / (v √T);  d2 = d1 - v √T
+        // (√T arrives precomputed by the block sqrt pre-pass in `run`,
+        // which executes the identical Newton sequence in d1d2's frame)
         let (d1, d2, disc) = ctx.call(f.d1d2, |c| {
             let ratio = c.div32(opt.spot, opt.strike);
             let log_term = ln32(c, ratio);
@@ -70,7 +72,6 @@ impl Blackscholes {
             let drift = c.add32(opt.rate, half_v2);
             let drift_t = c.mul32(drift, opt.time);
             let num = c.add32(log_term, drift_t);
-            let sqrt_t = sqrt32(c, opt.time);
             let v_sqrt_t = c.mul32(opt.volatility, sqrt_t);
             let d1 = c.div32(num, v_sqrt_t);
             let d2 = c.sub32(d1, v_sqrt_t);
@@ -152,9 +153,17 @@ impl Workload for Blackscholes {
         let strikes: Vec<f32> = options.iter().map(|o| o.strike).collect();
         ctx.load32_slice(&spots);
         ctx.load32_slice(&strikes);
+        // √T pre-pass: every option needs sqrt(T) in d1d2, and the
+        // Newton block kernel is lane-parallel — one sqrt32_slice call
+        // in d1d2's frame replaces the per-option scalar sqrt (same op
+        // sequence per element, so values and attribution are unchanged)
+        let times: Vec<f32> = options.iter().map(|o| o.time).collect();
+        let mut sqrt_ts = vec![0.0f32; times.len()];
+        ctx.call(funcs.d1d2, |c| sqrt32_slice(c, &times, &mut sqrt_ts));
         options
             .into_iter()
-            .map(|opt| self.price(ctx, &funcs, opt) as f64)
+            .zip(sqrt_ts)
+            .map(|(opt, st)| self.price(ctx, &funcs, opt, st) as f64)
             .collect()
     }
 }
@@ -215,7 +224,8 @@ mod tests {
             time: 1.0,
             is_call: true,
         };
-        let p = w.price(&mut ctx, &f, opt);
+        let sqrt_t = crate::bench_suite::math32::sqrt32(&mut ctx, opt.time);
+        let p = w.price(&mut ctx, &f, opt, sqrt_t);
         assert!((p - 10.45).abs() < 0.05, "got {p}");
     }
 }

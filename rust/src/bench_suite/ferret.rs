@@ -10,11 +10,11 @@
 //! either half.
 
 use crate::engine::{FpContext, FuncId};
-use crate::fpi::Precision;
+use crate::fpi::{OpKind, Precision};
 use crate::util::Pcg64;
 
 use super::math32::sqrt32;
-use super::math64::{exp64, sqrt64};
+use super::math64::{exp64, sqrt64, sqrt64_slice};
 use super::Workload;
 
 const IMG: usize = 16;
@@ -162,9 +162,10 @@ fn extract_features(ctx: &mut FpContext, f: &Funcs, img: &[f32]) -> Vec<f32> {
 fn emd_distance(ctx: &mut FpContext, f: &Funcs, a: &[f32], b: &[f32]) -> f64 {
     ctx.call(f.emd, |c| {
         // 1-D EMD over the histogram prefix: |cumsum(a) - cumsum(b)|
-        let mut flow = 0.0f64;
         let mut ca = 0.0f64;
         let mut cb = 0.0f64;
+        let mut cas = [0.0f64; BINS];
+        let mut cbs = [0.0f64; BINS];
         for k in 0..BINS {
             // the ranking library streams both feature vectors from
             // memory (doubles on its side of the ABI)...
@@ -177,13 +178,24 @@ fn emd_distance(ctx: &mut FpContext, f: &Funcs, a: &[f32], b: &[f32]) -> f64 {
             // traffic shrinks with the double-target precision)
             c.store64(ca);
             c.store64(cb);
-            let d = c.call(f.flow_cost, |c| {
-                let diff = c.sub64(ca, cb);
-                let d2 = c.mul64(diff, diff);
-                sqrt64(c, d2) // |diff| through the instrumented path
-            });
-            flow = c.add64(flow, d);
+            cas[k] = ca;
+            cbs[k] = cb;
         }
+        // per-bin flow costs |Δcumsum|: the sub/mul/Newton-sqrt chain
+        // is independent per bin, so the whole table runs as one
+        // lane-parallel block inside a single flow_cost frame — same
+        // per-element op sequence, values, and per-function counters
+        // as the per-bin scalar frames it replaces
+        let mut diffs = [0.0f64; BINS];
+        let mut d2s = [0.0f64; BINS];
+        let mut ds = [0.0f64; BINS];
+        c.call(f.flow_cost, |c| {
+            c.map64_slice(OpKind::Sub, &cas[..], &cbs[..], &mut diffs);
+            c.mul64_slice(&diffs, &diffs, &mut d2s);
+            sqrt64_slice(c, &d2s, &mut ds); // |diff| through the instrumented path
+        });
+        // the flow accumulation chain stays serial in emd's frame
+        let mut flow = c.sum64_slice(&ds);
         // cross-bin ground-distance term (the quadratic EMD relaxation
         // ferret's ranking library computes): Σᵢⱼ |i−j|·aᵢ·bⱼ
         let mut ground = 0.0f64;

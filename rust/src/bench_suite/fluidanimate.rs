@@ -135,18 +135,20 @@ impl Fluidanimate {
             out
         };
 
-        // --- density + pressure
+        // --- density + pressure — the r² chains against the whole
+        //     neighbor list run as one fused gather kernel (per-neighbor
+        //     sub/sub/mul/mul/add, independent per element, so the block
+        //     form is bit-identical to the scalar chain); the poly6
+        //     contributions stay scalar because they branch on r²
         ctx.call(f.compute_density, |c| {
+            let mut r2s: Vec<f32> = Vec::new();
             for i in 0..n {
                 let mut rho = 0.0f32;
-                for &j in &neighbors(i, s) {
-                    let dx = c.sub32(s.px[i], s.px[j]);
-                    let dy = c.sub32(s.py[i], s.py[j]);
-                    let r2 = {
-                        let xx = c.mul32(dx, dx);
-                        let yy = c.mul32(dy, dy);
-                        c.add32(xx, yy)
-                    };
+                let nb = neighbors(i, s);
+                r2s.clear();
+                r2s.resize(nb.len(), 0.0);
+                c.gather_sqdist2d32_slice(s.px[i], s.py[i], &s.px, &s.py, &nb, &mut r2s);
+                for &r2 in &r2s {
                     if r2 < h2 {
                         let w = c.call(f.poly6, |c| {
                             // poly6: (h² - r²)³ (normalisation folded in mass)
@@ -176,25 +178,29 @@ impl Fluidanimate {
             c.store32_slice(&s.pressure);
         });
 
-        // --- forces
+        // --- forces — the r² prefilter over each neighbor list is the
+        //     same fused gather kernel as the density pass; the in-range
+        //     pairs (a small minority) recompute dx/dy scalar for the
+        //     direction vectors and keep their data-dependent force
+        //     chains scalar
         ctx.call(f.compute_forces, |c| {
+            let mut nb: Vec<usize> = Vec::new();
+            let mut r2s: Vec<f32> = Vec::new();
             for i in 0..n {
                 let mut fx = 0.0f32;
                 let mut fy = c.mul32(mass, -9.8); // gravity
-                for &j in &neighbors(i, s) {
-                    if i == j {
+                nb.clear();
+                nb.extend(neighbors(i, s).into_iter().filter(|&j| j != i));
+                r2s.clear();
+                r2s.resize(nb.len(), 0.0);
+                c.gather_sqdist2d32_slice(s.px[i], s.py[i], &s.px, &s.py, &nb, &mut r2s);
+                for (e, &j) in nb.iter().enumerate() {
+                    let r2 = r2s[e];
+                    if r2 >= h2 || r2 <= 1e-12 {
                         continue;
                     }
                     let dx = c.sub32(s.px[i], s.px[j]);
                     let dy = c.sub32(s.py[i], s.py[j]);
-                    let r2 = {
-                        let xx = c.mul32(dx, dx);
-                        let yy = c.mul32(dy, dy);
-                        c.add32(xx, yy)
-                    };
-                    if r2 >= h2 || r2 <= 1e-12 {
-                        continue;
-                    }
                     let r = sqrt32(c, r2);
                     // pressure force (spiky gradient)
                     let fp = c.call(f.spiky, |c| {

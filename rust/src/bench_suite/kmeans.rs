@@ -9,7 +9,7 @@ use crate::engine::{FpContext, FuncId};
 use crate::fpi::{OpKind, Precision};
 use crate::util::Pcg64;
 
-use super::math32::sqrt32;
+use super::math32::{sqrt32, sqrt32_slice};
 use super::Workload;
 
 /// Kmeans workload configuration.
@@ -127,18 +127,24 @@ impl Workload for Kmeans {
             }
         });
 
-        // deterministic farthest-point-ish init
+        // deterministic farthest-point-ish init — the k seed rows are
+        // scattered through the point array, so they stream in as one
+        // gathered block load (same per-element load accounting)
         let mut centers = vec![0.0f32; k * d];
         ctx.call(f.init_centers, |c| {
-            for ci in 0..k {
-                let p = (ci * n) / k;
-                for dim in 0..d {
-                    centers[ci * d + dim] = c.load32(pts[p * d + dim]);
-                }
-            }
+            let idx: Vec<usize> = (0..k)
+                .flat_map(|ci| {
+                    let p = (ci * n) / k;
+                    (0..d).map(move |dim| p * d + dim)
+                })
+                .collect();
+            c.gather32_slice(&pts, &idx, &mut centers);
         });
 
         let mut assignment = vec![0usize; n];
+        // membership-distance scratch for the block sqrt post-pass
+        let mut best_d2 = vec![0.0f32; n];
+        let mut best_dist = vec![0.0f32; n];
         for _iter in 0..self.iters {
             // assignment step
             ctx.call(f.assign, |c| {
@@ -164,10 +170,15 @@ impl Workload for Kmeans {
                         });
                     }
                     assignment[p] = best_c;
-                    // write the membership distance (Rodinia keeps a
-                    // per-point distance array)
-                    c.store32(best);
+                    best_d2[p] = best;
                 }
+                // membership distances (Rodinia keeps a per-point
+                // distance array): one lane-parallel Newton block sqrt
+                // over the winning d² values, streamed out as a block
+                // store — the distance post-pass that used to be a
+                // per-point scalar store of d²
+                sqrt32_slice(c, &best_d2, &mut best_dist);
+                c.store32_slice(&best_dist);
             });
 
             // update step

@@ -159,16 +159,19 @@ impl Workload for Particlefilter {
             ctx.call(f.likelihood, |c| {
                 for i in 0..PARTICLES {
                     let wsum = c.call(f.window_sum, |c| {
+                        // gather the 3×3 pixel window, then one fused
+                        // gathered load+sum kernel (same serial add
+                        // chain and load totals as the scalar loop)
                         let (cx, cy) = (px[i] as usize, py[i] as usize);
-                        let mut acc = 0.0f64;
+                        let mut win = [0usize; 9];
                         for dy in 0..3usize {
                             for dx in 0..3usize {
                                 let ix = (cx + dx).saturating_sub(1).min(IMG - 1);
                                 let iy = (cy + dy).saturating_sub(1).min(IMG - 1);
-                                let v = c.load64(frame[iy * IMG + ix]);
-                                acc = c.add64(acc, v);
+                                win[dy * 3 + dx] = iy * IMG + ix;
                             }
                         }
+                        let acc = c.gather_sum64_slice(&frame, &win);
                         c.div64(acc, 9.0)
                     });
                     // log-likelihood of a bright window under the target
@@ -211,19 +214,26 @@ impl Workload for Particlefilter {
                 }
             });
             ctx.call(f.resample, |c| {
+                // walk the cdf to pick the survivor indices (the u
+                // accumulation chain stays scalar — it is serial), then
+                // pull both coordinate arrays through gathered block
+                // loads: same values and load totals as the interleaved
+                // per-particle loads
                 let step = c.div64(1.0, PARTICLES as f64);
                 let mut u = c.mul64(step, rng.f64());
-                let mut nx = vec![0.0f64; PARTICLES];
-                let mut ny = vec![0.0f64; PARTICLES];
+                let mut sel = [0usize; PARTICLES];
                 let mut idx = 0usize;
-                for k in 0..PARTICLES {
+                for slot in sel.iter_mut() {
                     while idx < PARTICLES - 1 && cdf[idx] < u {
                         idx += 1;
                     }
-                    nx[k] = c.load64(px[idx]);
-                    ny[k] = c.load64(py[idx]);
+                    *slot = idx;
                     u = c.add64(u, step);
                 }
+                let mut nx = vec![0.0f64; PARTICLES];
+                let mut ny = vec![0.0f64; PARTICLES];
+                c.gather64_slice(&px, &sel, &mut nx);
+                c.gather64_slice(&py, &sel, &mut ny);
                 px = nx;
                 py = ny;
             });

@@ -180,9 +180,13 @@ impl Workload for Srad {
             // --- diffusion update — the 4-neighbor divergence runs as
             //     one broadcast subtraction plus a fused dot over the
             //     gathered stencil (block form of the scalar sub/mul/add
-            //     chain; values identical)
+            //     chain; values identical); the relaxation step img' =
+            //     old + λ·div is then a single fused axpy over the whole
+            //     image instead of a per-pixel mul/add pair — the hot
+            //     lane-parallel kernel of this workload
             ctx.call(f.update, |c| {
                 let old = img.clone();
+                let mut divs = vec![0.0f32; SIZE * SIZE];
                 for y in 0..SIZE {
                     for x in 0..SIZE {
                         let center = old[idx(x, y)];
@@ -200,12 +204,17 @@ impl Workload for Srad {
                         ];
                         let mut dd = [0.0f32; 4];
                         c.map32_slice(OpKind::Sub, &vv[..], center, &mut dd);
-                        let div = c.dot32_slice(&cc, &dd);
-                        let scaled = c.mul32(LAMBDA, div);
-                        let nv = c.add32(center, scaled);
-                        img[idx(x, y)] = c.store32(nv.max(1e-4));
+                        divs[idx(x, y)] = c.dot32_slice(&cc, &dd);
                     }
                 }
+                let mut upd = vec![0.0f32; SIZE * SIZE];
+                c.axpy32_slice(LAMBDA, &divs, &old, &mut upd);
+                // floor clamp is a pure bit-pattern select (no FLOP),
+                // then the new image streams out as one block store
+                for (dst, v) in img.iter_mut().zip(&upd) {
+                    *dst = v.max(1e-4);
+                }
+                c.store32_slice(&img);
             });
         }
 

@@ -408,14 +408,10 @@ struct Fig8Row {
     savings: Vec<f64>,
 }
 
-/// One Fig. 8 shard: explore one `(benchmark, target)` CIP space. Pure
-/// in `(name, target, budget)` — the executor only changes scheduling —
-/// so rows computed on any shard layout reassemble into the same
-/// figure.
-fn fig8_job(name: &str, target: Precision, budget: Budget, exec: &Executor) -> Fig8Row {
-    let w = bench_suite::by_name(name).expect("known benchmark");
-    let eval = Evaluator::new(w, Some(target));
-    let res = explore_rule_with(&eval, RuleKind::Cip, budget, exec);
+/// Render one Fig. 8 row from a CIP archive. Separated from the search
+/// so a row reloaded from a run artifact renders identically to a
+/// freshly explored one.
+fn fig8_row(name: &str, target: Precision, res: &RuleResult) -> Fig8Row {
     // Fig. 8 plots total-FPU savings per target (choosing the wrong
     // target saves almost nothing of the total); §V-E's "92% of
     // double-instruction energy" quote is the class-relative view,
@@ -432,6 +428,17 @@ fn fig8_job(name: &str, target: Precision, budget: Budget, exec: &Executor) -> F
         ),
         savings: sav,
     }
+}
+
+/// One Fig. 8 shard: explore one `(benchmark, target)` CIP space. Pure
+/// in `(name, target, budget)` — the executor only changes scheduling —
+/// so rows computed on any shard layout reassemble into the same
+/// figure.
+fn fig8_job(name: &str, target: Precision, budget: Budget, exec: &Executor) -> Fig8Row {
+    let w = bench_suite::by_name(name).expect("known benchmark");
+    let eval = Evaluator::new(w, Some(target));
+    let res = explore_rule_with(&eval, RuleKind::Cip, budget, exec);
+    fig8_row(name, target, &res)
 }
 
 fn render_fig8(rd: &ResultsDir, rows: Vec<Fig8Row>) -> Result<String> {
@@ -472,21 +479,63 @@ pub fn fig8(
 /// the worker pool ([`suite::shard_map`]) under the suite's global
 /// thread budget — no figure runs outside it. Output identical to the
 /// serial [`fig8`]: sharding changes scheduling, never values.
+///
+/// With a `run_dir` configured every shard writes a resumable
+/// `fig8_<benchmark>_<target>.json` archive (same atomic-write and
+/// round-trip discipline as the Table-II walk: the figure always
+/// renders from artifact-backed data); with `resume` set, shards whose
+/// artifact matches the budget are reloaded instead of re-explored.
 pub fn fig8_sharded(
     rd: &ResultsDir,
     budget: Budget,
     plan: suite::ShardPlan,
+    run_dir: Option<&std::path::Path>,
+    resume: bool,
     log: &mut (impl FnMut(&str) + Send),
 ) -> Result<String> {
+    use anyhow::Context as _;
+    if let Some(dir) = run_dir {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating run dir {}", dir.display()))?;
+    }
     let log: Mutex<&mut (dyn FnMut(&str) + Send)> = Mutex::new(log);
-    let rows = suite::shard_map(plan, FIG8_CASES.len(), |i, exec| {
+    let rows = suite::shard_map(plan, FIG8_CASES.len(), |i, exec| -> Result<Fig8Row> {
         let (name, target) = FIG8_CASES[i];
-        {
+        let say = |m: String| {
             let mut g = log.lock().expect("log poisoned");
-            (*g)(&format!("fig8: {name} targeting {}", target.name()));
+            (*g)(&m);
+        };
+        let label = format!("{name}/{}", target.name());
+        let path = run_dir.map(|d| d.join(format!("fig8_{name}_{}.json", target.name())));
+        let w = bench_suite::by_name(name).expect("known benchmark");
+        let eval = Evaluator::new(w, Some(target));
+        if resume {
+            if let Some(p) = &path {
+                if let Some(details) = suite::load_rule_artifact(p, "fig8", &label, budget) {
+                    // same staleness guard as the suite shards: a genome
+                    // that no longer fits the CIP target count would
+                    // silently misplace on reload
+                    if details.iter().all(|(g, _)| g.len() == eval.genome_len(RuleKind::Cip)) {
+                        say(format!("fig8: {label} resumed from {}", p.display()));
+                        let res = RuleResult { rule: RuleKind::Cip, details };
+                        return Ok(fig8_row(name, target, &res));
+                    }
+                    say(format!("fig8: {label} artifact genome shape is stale; re-running"));
+                }
+            }
         }
-        fig8_job(name, target, budget, exec)
+        say(format!("fig8: {name} targeting {}", target.name()));
+        let t0 = std::time::Instant::now();
+        let mut res = explore_rule_with(&eval, RuleKind::Cip, budget, exec);
+        if let Some(p) = &path {
+            suite::write_rule_artifact(p, "fig8", &label, budget, &res.details, t0.elapsed())?;
+            let details = suite::load_rule_artifact(p, "fig8", &label, budget)
+                .with_context(|| format!("artifact round-trip failed: {}", p.display()))?;
+            res = RuleResult { rule: RuleKind::Cip, details };
+        }
+        Ok(fig8_row(name, target, &res))
     });
+    let rows = rows.into_iter().collect::<Result<Vec<_>>>()?;
     render_fig8(rd, rows)
 }
 
@@ -528,23 +577,57 @@ pub fn fig9(
 }
 
 /// [`fig9`] with the two rule searches as shards on the worker pool —
-/// see [`fig8_sharded`] for the contract.
+/// see [`fig8_sharded`] for the contract, including the resumable
+/// `fig9_radar_<rule>.json` run artifacts.
 pub fn fig9_sharded(
     rd: &ResultsDir,
     budget: Budget,
     plan: suite::ShardPlan,
+    run_dir: Option<&std::path::Path>,
+    resume: bool,
     log: &mut (impl FnMut(&str) + Send),
 ) -> Result<String> {
+    use anyhow::Context as _;
+    if let Some(dir) = run_dir {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating run dir {}", dir.display()))?;
+    }
     let log: Mutex<&mut (dyn FnMut(&str) + Send)> = Mutex::new(log);
-    let mut rows = suite::shard_map(plan, FIG9_RULES.len(), |i, exec| {
-        {
+    let mut rows = suite::shard_map(plan, FIG9_RULES.len(), |i, exec| -> Result<Vec<f64>> {
+        let rule = FIG9_RULES[i];
+        let say = |m: String| {
             let mut g = log.lock().expect("log poisoned");
-            (*g)(&format!("fig9: radar {}", FIG9_RULES[i].name()));
+            (*g)(&m);
+        };
+        let label = format!("radar/{}", rule.name());
+        let path =
+            run_dir.map(|d| d.join(format!("fig9_radar_{}.json", rule.name().to_lowercase())));
+        let eval = Evaluator::new(bench_suite::by_name("radar").unwrap(), None);
+        if resume {
+            if let Some(p) = &path {
+                if let Some(details) = suite::load_rule_artifact(p, "fig9", &label, budget) {
+                    if details.iter().all(|(g, _)| g.len() == eval.genome_len(rule)) {
+                        say(format!("fig9: {label} resumed from {}", p.display()));
+                        let res = RuleResult { rule, details };
+                        return Ok(savings_row(&res.fpu_points()));
+                    }
+                    say(format!("fig9: {label} artifact genome shape is stale; re-running"));
+                }
+            }
         }
-        fig9_job(FIG9_RULES[i], budget, exec)
+        say(format!("fig9: radar {}", rule.name()));
+        let t0 = std::time::Instant::now();
+        let mut res = explore_rule_with(&eval, rule, budget, exec);
+        if let Some(p) = &path {
+            suite::write_rule_artifact(p, "fig9", &label, budget, &res.details, t0.elapsed())?;
+            let details = suite::load_rule_artifact(p, "fig9", &label, budget)
+                .with_context(|| format!("artifact round-trip failed: {}", p.display()))?;
+            res = RuleResult { rule, details };
+        }
+        Ok(savings_row(&res.fpu_points()))
     });
-    let fcs_s = rows.pop().expect("two shards");
-    let cip_s = rows.pop().expect("two shards");
+    let fcs_s = rows.pop().expect("two shards")?;
+    let cip_s = rows.pop().expect("two shards")?;
     render_fig9(rd, cip_s, fcs_s)
 }
 
@@ -1114,11 +1197,12 @@ pub fn run_all_with_suite(
             let cfg = r.config();
             let plan8 =
                 suite::plan_shards(cfg.threads, cfg.shard_threads, FIG8_CASES.len());
-            report.push_str(&fig8_sharded(rd, budget, plan8, log)?);
+            let (dir, resume) = (cfg.run_dir.clone(), cfg.resume);
+            report.push_str(&fig8_sharded(rd, budget, plan8, dir.as_deref(), resume, log)?);
             report.push('\n');
             let plan9 =
                 suite::plan_shards(cfg.threads, cfg.shard_threads, FIG9_RULES.len());
-            report.push_str(&fig9_sharded(rd, budget, plan9, log)?);
+            report.push_str(&fig9_sharded(rd, budget, plan9, dir.as_deref(), resume, log)?);
         }
         None => {
             report.push_str(&fig8(rd, budget, exec, log)?);

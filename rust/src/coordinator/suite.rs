@@ -465,6 +465,72 @@ pub fn load_artifact(
     Some((decode("wp")?, decode("cip")?))
 }
 
+/// Write a single-archive figure-shard artifact — the Fig. 8/9
+/// analogue of [`write_artifact`]. One placement-rule archive is stored
+/// under a `(kind, label)` pair (e.g. `("fig8", "ferret/double")`), with
+/// the same atomic temp-file + rename and `complete` marker discipline,
+/// so the figure shards resume exactly like the Table-II walk.
+pub fn write_rule_artifact(
+    path: &Path,
+    kind: &str,
+    label: &str,
+    budget: Budget,
+    details: &[(Genome, EvalDetail)],
+    wall: Duration,
+) -> Result<()> {
+    let mut text = String::from("{\n");
+    let _ = writeln!(text, "  \"schema\": {SCHEMA},");
+    let _ = writeln!(text, "  \"kind\": \"{kind}\",");
+    let _ = writeln!(text, "  \"label\": \"{label}\",");
+    // seed as a string for the same f64-exactness reason as above
+    let _ = writeln!(text, "  \"seed\": \"{}\",", budget.seed);
+    let _ = writeln!(text, "  \"population\": {},", budget.population);
+    let _ = writeln!(text, "  \"generations\": {},", budget.generations);
+    write_archive(&mut text, "archive", details);
+    let _ = writeln!(text, "  \"wall_clock_ms\": {:.3},", wall.as_secs_f64() * 1e3);
+    text.push_str("  \"complete\": 1\n}\n");
+    let tmp = path.with_extension("json.tmp");
+    fs::write(&tmp, text)
+        .with_context(|| format!("writing artifact {}", tmp.display()))?;
+    fs::rename(&tmp, path)
+        .with_context(|| format!("committing artifact {}", path.display()))?;
+    Ok(())
+}
+
+/// Load a figure-shard archive written by [`write_rule_artifact`].
+///
+/// `None` — the shard re-runs — on a missing/torn file, schema or
+/// budget mismatch, or a different `(kind, label)`; identical refusal
+/// semantics to [`load_artifact`].
+pub fn load_rule_artifact(
+    path: &Path,
+    kind: &str,
+    label: &str,
+    budget: Budget,
+) -> Option<RuleArchive> {
+    let text = fs::read_to_string(path).ok()?;
+    let meta = kv::parse(&text);
+    if meta.numbers.get("schema").copied()? != SCHEMA as f64 {
+        return None;
+    }
+    if meta.numbers.get("complete").copied()? != 1.0 {
+        return None;
+    }
+    if meta.strings.get("kind")? != kind || meta.strings.get("label")? != label {
+        return None;
+    }
+    if meta.strings.get("seed")? != &budget.seed.to_string() {
+        return None;
+    }
+    if meta.numbers.get("population").copied()? != budget.population as f64 {
+        return None;
+    }
+    if meta.numbers.get("generations").copied()? != budget.generations as f64 {
+        return None;
+    }
+    meta.string_lists.get("archive")?.iter().map(|s| decode_entry(s)).collect()
+}
+
 /// An artifact with its timing field blanked: the byte-identity
 /// contract covers everything *but* wall clock, which legitimately
 /// differs between runs of identical work.
@@ -599,6 +665,39 @@ mod tests {
         let torn = &text[..text.len() / 2];
         fs::write(&path, torn).unwrap();
         assert!(load_artifact(&path, "blackscholes", budget).is_none());
+    }
+
+    #[test]
+    fn rule_artifact_round_trips_and_rejects_mismatches() {
+        let g: Genome = vec![24, 8, 1];
+        let d = EvalDetail {
+            error: 0.25,
+            fpu_nec: 0.5,
+            mem_nec: 1.0 / 3.0,
+            fpu_target_nec: f64::from_bits(0x3FD5_5555_5555_5555),
+        };
+        let details = vec![(g.clone(), d)];
+        let budget = Budget::quick();
+        let dir = std::env::temp_dir().join("neat_rule_artifact_test");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fig8_ferret_double.json");
+        write_rule_artifact(&path, "fig8", "ferret/double", budget, &details, Duration::ZERO)
+            .unwrap();
+
+        let loaded =
+            load_rule_artifact(&path, "fig8", "ferret/double", budget).expect("load");
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded[0].0, g);
+        assert_eq!(loaded[0].1.fpu_target_nec.to_bits(), d.fpu_target_nec.to_bits());
+
+        // wrong kind, wrong label, wrong budget, torn file: all refuse
+        assert!(load_rule_artifact(&path, "fig9", "ferret/double", budget).is_none());
+        assert!(load_rule_artifact(&path, "fig8", "ferret/single", budget).is_none());
+        let other = Budget { generations: budget.generations + 1, ..budget };
+        assert!(load_rule_artifact(&path, "fig8", "ferret/double", other).is_none());
+        let text = fs::read_to_string(&path).unwrap();
+        fs::write(&path, &text[..text.len() / 2]).unwrap();
+        assert!(load_rule_artifact(&path, "fig8", "ferret/double", budget).is_none());
     }
 
     #[test]

@@ -38,7 +38,7 @@ use crate::placement::{CompiledFpi, Placement};
 use counters::{Counters, FuncStats};
 use trace::TraceSink;
 
-pub use slice::{Operand32, Operand64};
+pub use slice::{Operand32, Operand64, LANES32, LANES64};
 
 /// Interned function handle. `FuncId(0)` is the implicit `<toplevel>`
 /// frame that is always on the stack.

@@ -25,6 +25,39 @@
 //! hex trace keeps the exact per-FLOP line order (tracing is a
 //! debugging mode, not the search hot path).
 //!
+//! # The lane tier (`--features lanes`)
+//!
+//! With the `lanes` cargo feature the monomorphized kernels process
+//! fixed-width lane blocks — [`LANES32`] (8) single-precision or
+//! [`LANES64`] (4) double-precision elements at a time — instead of a
+//! scalar loop, with a scalar tail for the remainder. The blocks are
+//! hand-unrolled over `[f32; LANES32]` arrays on stable Rust (each
+//! per-lane loop has a constant trip count over a fixed-size array, the
+//! shape LLVM auto-vectorizes), and the structure is lane-for-lane what
+//! a later `std::simd` swap would use: [`Kern32::op_block`] is the
+//! would-be `Simd<f32, 8>` op, the hoisted truncate mask is applied per
+//! lane, and the op match is resolved once per block, not per element.
+//!
+//! The determinism contract is unchanged, by construction:
+//!
+//! - elementwise kernels (`map*`, `axpy`, `add_assign`, the gathers)
+//!   compute independent per-element op sequences, so lane order cannot
+//!   affect values;
+//! - reductions (`sum`, `dot`, `sqdist`) keep the exact scalar
+//!   accumulation order — only the masking and the multiplies are
+//!   lane-parallel, the add chain stays serial — and re-masking an
+//!   already-masked operand is a no-op (`apply_mask` is idempotent), so
+//!   the serial chain sees bit-identical inputs;
+//! - bit counters sum the same per-op `u64` terms (integer addition is
+//!   exact, so accumulation order is irrelevant), and tracing still
+//!   falls back to the scalar loop;
+//! - `Dyn` FPIs keep the scalar per-element virtual call — a custom
+//!   FPI never observes a lane width it did not opt into.
+//!
+//! `tests/proptest_slice.rs` runs every kernel scalar/block/lanes and
+//! pins values + counters + trace bytes across placements, widths, and
+//! adversarial lengths (0, 1, lane±1, non-multiples).
+//!
 //! ```
 //! use neat::engine::FpContext;
 //! use neat::fpi::{FpiLibrary, Precision};
@@ -128,6 +161,15 @@ impl Operand64<'_> {
     }
 }
 
+/// Single-precision lane width of the `lanes` block tier (one AVX2
+/// register of `f32`). Fixed regardless of features so tests and docs
+/// can probe remainder-tail boundaries unconditionally.
+pub const LANES32: usize = 8;
+
+/// Double-precision lane width of the `lanes` block tier (one AVX2
+/// register of `f64`).
+pub const LANES64: usize = 4;
+
 // --- monomorphized per-variant kernels ---------------------------------
 //
 // One zero-cost kernel type per CompiledFpi variant; the public entry
@@ -135,9 +177,102 @@ impl Operand64<'_> {
 // loop to a monomorphized body, so the per-element work carries no
 // dispatch beyond the data itself. `Dyn` keeps the virtual call per
 // element — exactly what the scalar path pays for custom FPIs.
+//
+// Under `--features lanes` the trait grows a block form: `LANE_OK`
+// gates which kernels may take the lane path (`Exact`/`Trunc` do, `Dyn`
+// must not), `op_block` is one op across a lane block with the op match
+// hoisted out of the per-lane loop, and `premask_block` is the
+// lane-parallel half of a reduction (mask the inputs in blocks, keep
+// the add chain serial). `LANE_OK` is an associated const, so the
+// lane/scalar branch in each helper is resolved at monomorphization
+// time — the `Dyn` instantiations compile to exactly the scalar loop.
 
 trait Kern32 {
     fn op(&self, op: OpKind, a: f32, b: f32) -> f32;
+
+    #[cfg(feature = "lanes")]
+    const LANE_OK: bool = false;
+
+    /// One op across a lane block. Must be lane-for-lane identical to
+    /// [`Kern32::op`]; the default is the scalar loop.
+    #[cfg(feature = "lanes")]
+    #[inline(always)]
+    fn op_block(&self, op: OpKind, a: &[f32; LANES32], b: &[f32; LANES32]) -> [f32; LANES32] {
+        let mut r = [0.0f32; LANES32];
+        for j in 0..LANES32 {
+            r[j] = self.op(op, a[j], b[j]);
+        }
+        r
+    }
+
+    /// Operand pre-masking for reductions: lane-parallel the part of
+    /// [`Kern32::op`] that is per-operand (the truncate mask), leaving
+    /// the serial add chain untouched. Identity for mask-free kernels.
+    #[cfg(feature = "lanes")]
+    #[inline(always)]
+    fn premask_block(&self, xs: &[f32; LANES32]) -> [f32; LANES32] {
+        *xs
+    }
+}
+
+/// IEEE-exact op over one lane block, op match hoisted: the body LLVM
+/// turns into a single vector instruction per arm.
+#[cfg(feature = "lanes")]
+#[inline(always)]
+fn raw32_block(op: OpKind, a: &[f32; LANES32], b: &[f32; LANES32]) -> [f32; LANES32] {
+    let mut r = [0.0f32; LANES32];
+    match op {
+        OpKind::Add => {
+            for j in 0..LANES32 {
+                r[j] = a[j] + b[j];
+            }
+        }
+        OpKind::Sub => {
+            for j in 0..LANES32 {
+                r[j] = a[j] - b[j];
+            }
+        }
+        OpKind::Mul => {
+            for j in 0..LANES32 {
+                r[j] = a[j] * b[j];
+            }
+        }
+        OpKind::Div => {
+            for j in 0..LANES32 {
+                r[j] = a[j] / b[j];
+            }
+        }
+    }
+    r
+}
+
+#[cfg(feature = "lanes")]
+#[inline(always)]
+fn raw64_block(op: OpKind, a: &[f64; LANES64], b: &[f64; LANES64]) -> [f64; LANES64] {
+    let mut r = [0.0f64; LANES64];
+    match op {
+        OpKind::Add => {
+            for j in 0..LANES64 {
+                r[j] = a[j] + b[j];
+            }
+        }
+        OpKind::Sub => {
+            for j in 0..LANES64 {
+                r[j] = a[j] - b[j];
+            }
+        }
+        OpKind::Mul => {
+            for j in 0..LANES64 {
+                r[j] = a[j] * b[j];
+            }
+        }
+        OpKind::Div => {
+            for j in 0..LANES64 {
+                r[j] = a[j] / b[j];
+            }
+        }
+    }
+    r
 }
 
 struct Exact32;
@@ -147,10 +282,31 @@ impl Kern32 for Exact32 {
     fn op(&self, op: OpKind, a: f32, b: f32) -> f32 {
         raw_f32(op, a, b)
     }
+
+    #[cfg(feature = "lanes")]
+    const LANE_OK: bool = true;
+
+    #[cfg(feature = "lanes")]
+    #[inline(always)]
+    fn op_block(&self, op: OpKind, a: &[f32; LANES32], b: &[f32; LANES32]) -> [f32; LANES32] {
+        raw32_block(op, a, b)
+    }
 }
 
 struct Trunc32 {
     mask: u32,
+}
+
+#[cfg(feature = "lanes")]
+impl Trunc32 {
+    #[inline(always)]
+    fn mask_block(&self, xs: &[f32; LANES32]) -> [f32; LANES32] {
+        let mut r = [0.0f32; LANES32];
+        for j in 0..LANES32 {
+            r[j] = apply_mask_f32(xs[j], self.mask);
+        }
+        r
+    }
 }
 
 impl Kern32 for Trunc32 {
@@ -158,6 +314,22 @@ impl Kern32 for Trunc32 {
     fn op(&self, op: OpKind, a: f32, b: f32) -> f32 {
         let raw = raw_f32(op, apply_mask_f32(a, self.mask), apply_mask_f32(b, self.mask));
         apply_mask_f32(raw, self.mask)
+    }
+
+    #[cfg(feature = "lanes")]
+    const LANE_OK: bool = true;
+
+    #[cfg(feature = "lanes")]
+    #[inline(always)]
+    fn op_block(&self, op: OpKind, a: &[f32; LANES32], b: &[f32; LANES32]) -> [f32; LANES32] {
+        let raw = raw32_block(op, &self.mask_block(a), &self.mask_block(b));
+        self.mask_block(&raw)
+    }
+
+    #[cfg(feature = "lanes")]
+    #[inline(always)]
+    fn premask_block(&self, xs: &[f32; LANES32]) -> [f32; LANES32] {
+        self.mask_block(xs)
     }
 }
 
@@ -168,10 +340,31 @@ impl Kern32 for Dyn32<'_> {
     fn op(&self, op: OpKind, a: f32, b: f32) -> f32 {
         self.0.perform_f32(op, a, b)
     }
+    // `LANE_OK` stays false: a custom FPI sees the same per-element
+    // virtual call whether or not `lanes` is compiled in.
 }
 
 trait Kern64 {
     fn op(&self, op: OpKind, a: f64, b: f64) -> f64;
+
+    #[cfg(feature = "lanes")]
+    const LANE_OK: bool = false;
+
+    #[cfg(feature = "lanes")]
+    #[inline(always)]
+    fn op_block(&self, op: OpKind, a: &[f64; LANES64], b: &[f64; LANES64]) -> [f64; LANES64] {
+        let mut r = [0.0f64; LANES64];
+        for j in 0..LANES64 {
+            r[j] = self.op(op, a[j], b[j]);
+        }
+        r
+    }
+
+    #[cfg(feature = "lanes")]
+    #[inline(always)]
+    fn premask_block(&self, xs: &[f64; LANES64]) -> [f64; LANES64] {
+        *xs
+    }
 }
 
 struct Exact64;
@@ -181,10 +374,31 @@ impl Kern64 for Exact64 {
     fn op(&self, op: OpKind, a: f64, b: f64) -> f64 {
         raw_f64(op, a, b)
     }
+
+    #[cfg(feature = "lanes")]
+    const LANE_OK: bool = true;
+
+    #[cfg(feature = "lanes")]
+    #[inline(always)]
+    fn op_block(&self, op: OpKind, a: &[f64; LANES64], b: &[f64; LANES64]) -> [f64; LANES64] {
+        raw64_block(op, a, b)
+    }
 }
 
 struct Trunc64 {
     mask: u64,
+}
+
+#[cfg(feature = "lanes")]
+impl Trunc64 {
+    #[inline(always)]
+    fn mask_block(&self, xs: &[f64; LANES64]) -> [f64; LANES64] {
+        let mut r = [0.0f64; LANES64];
+        for j in 0..LANES64 {
+            r[j] = apply_mask_f64(xs[j], self.mask);
+        }
+        r
+    }
 }
 
 impl Kern64 for Trunc64 {
@@ -192,6 +406,22 @@ impl Kern64 for Trunc64 {
     fn op(&self, op: OpKind, a: f64, b: f64) -> f64 {
         let raw = raw_f64(op, apply_mask_f64(a, self.mask), apply_mask_f64(b, self.mask));
         apply_mask_f64(raw, self.mask)
+    }
+
+    #[cfg(feature = "lanes")]
+    const LANE_OK: bool = true;
+
+    #[cfg(feature = "lanes")]
+    #[inline(always)]
+    fn op_block(&self, op: OpKind, a: &[f64; LANES64], b: &[f64; LANES64]) -> [f64; LANES64] {
+        let raw = raw64_block(op, &self.mask_block(a), &self.mask_block(b));
+        self.mask_block(&raw)
+    }
+
+    #[cfg(feature = "lanes")]
+    #[inline(always)]
+    fn premask_block(&self, xs: &[f64; LANES64]) -> [f64; LANES64] {
+        self.mask_block(xs)
     }
 }
 
@@ -216,14 +446,50 @@ fn bits64(a: f64, b: f64, r: f64) -> u64 {
     (used_bits_f64(a) + used_bits_f64(b) + used_bits_f64(r)) as u64
 }
 
+/// Copy one lane block out of an operand (slice window or broadcast
+/// splat). The constant-trip copy loop is the gather LLVM vectorizes.
+#[cfg(feature = "lanes")]
+#[inline(always)]
+fn lane32(src: &Operand32, base: usize) -> [f32; LANES32] {
+    let mut r = [0.0f32; LANES32];
+    for j in 0..LANES32 {
+        r[j] = src.at(base + j);
+    }
+    r
+}
+
+#[cfg(feature = "lanes")]
+#[inline(always)]
+fn lane64(src: &Operand64, base: usize) -> [f64; LANES64] {
+    let mut r = [0.0f64; LANES64];
+    for j in 0..LANES64 {
+        r[j] = src.at(base + j);
+    }
+    r
+}
+
 #[inline(always)]
 fn ew32<K: Kern32>(k: &K, op: OpKind, a: Operand32, b: Operand32, out: &mut [f32]) -> u64 {
     let mut bits = 0u64;
-    for (i, o) in out.iter_mut().enumerate() {
+    let mut i = 0usize;
+    #[cfg(feature = "lanes")]
+    if K::LANE_OK {
+        while i + LANES32 <= out.len() {
+            let (xa, xb) = (lane32(&a, i), lane32(&b, i));
+            let r = k.op_block(op, &xa, &xb);
+            for j in 0..LANES32 {
+                bits += bits32(xa[j], xb[j], r[j]);
+                out[i + j] = r[j];
+            }
+            i += LANES32;
+        }
+    }
+    while i < out.len() {
         let (x, y) = (a.at(i), b.at(i));
         let r = k.op(op, x, y);
         bits += bits32(x, y, r);
-        *o = r;
+        out[i] = r;
+        i += 1;
     }
     bits
 }
@@ -231,19 +497,55 @@ fn ew32<K: Kern32>(k: &K, op: OpKind, a: Operand32, b: Operand32, out: &mut [f32
 #[inline(always)]
 fn ew64<K: Kern64>(k: &K, op: OpKind, a: Operand64, b: Operand64, out: &mut [f64]) -> u64 {
     let mut bits = 0u64;
-    for (i, o) in out.iter_mut().enumerate() {
+    let mut i = 0usize;
+    #[cfg(feature = "lanes")]
+    if K::LANE_OK {
+        while i + LANES64 <= out.len() {
+            let (xa, xb) = (lane64(&a, i), lane64(&b, i));
+            let r = k.op_block(op, &xa, &xb);
+            for j in 0..LANES64 {
+                bits += bits64(xa[j], xb[j], r[j]);
+                out[i + j] = r[j];
+            }
+            i += LANES64;
+        }
+    }
+    while i < out.len() {
         let (x, y) = (a.at(i), b.at(i));
         let r = k.op(op, x, y);
         bits += bits64(x, y, r);
-        *o = r;
+        out[i] = r;
+        i += 1;
     }
     bits
 }
 
+// Reductions below keep the serial accumulation chain in every tier —
+// the lane path only hoists the per-operand masking (and, for dot /
+// sqdist, the independent multiplies) into blocks. Re-masking a value
+// the kernel already masked is a no-op (`apply_mask` is idempotent),
+// so feeding pre-masked operands to `Kern::op` is bit-identical to the
+// scalar sequence; bits accounting always uses the *original* operands,
+// exactly as the scalar path does.
+
 #[inline(always)]
 fn sum32<K: Kern32>(k: &K, xs: &[f32], bits: &mut u64) -> f32 {
     let mut acc = 0.0f32;
-    for &x in xs {
+    let mut i = 0usize;
+    #[cfg(feature = "lanes")]
+    if K::LANE_OK {
+        while i + LANES32 <= xs.len() {
+            let xb: [f32; LANES32] = xs[i..i + LANES32].try_into().unwrap();
+            let mx = k.premask_block(&xb);
+            for j in 0..LANES32 {
+                let r = k.op(OpKind::Add, acc, mx[j]);
+                *bits += bits32(acc, xb[j], r);
+                acc = r;
+            }
+            i += LANES32;
+        }
+    }
+    for &x in &xs[i..] {
         let r = k.op(OpKind::Add, acc, x);
         *bits += bits32(acc, x, r);
         acc = r;
@@ -254,7 +556,21 @@ fn sum32<K: Kern32>(k: &K, xs: &[f32], bits: &mut u64) -> f32 {
 #[inline(always)]
 fn sum64<K: Kern64>(k: &K, xs: &[f64], bits: &mut u64) -> f64 {
     let mut acc = 0.0f64;
-    for &x in xs {
+    let mut i = 0usize;
+    #[cfg(feature = "lanes")]
+    if K::LANE_OK {
+        while i + LANES64 <= xs.len() {
+            let xb: [f64; LANES64] = xs[i..i + LANES64].try_into().unwrap();
+            let mx = k.premask_block(&xb);
+            for j in 0..LANES64 {
+                let r = k.op(OpKind::Add, acc, mx[j]);
+                *bits += bits64(acc, xb[j], r);
+                acc = r;
+            }
+            i += LANES64;
+        }
+    }
+    for &x in &xs[i..] {
         let r = k.op(OpKind::Add, acc, x);
         *bits += bits64(acc, x, r);
         acc = r;
@@ -265,7 +581,27 @@ fn sum64<K: Kern64>(k: &K, xs: &[f64], bits: &mut u64) -> f64 {
 #[inline(always)]
 fn dot32<K: Kern32>(k: &K, a: &[f32], b: &[f32], bm: &mut u64, ba: &mut u64) -> f32 {
     let mut acc = 0.0f32;
-    for (&x, &y) in a.iter().zip(b) {
+    let mut i = 0usize;
+    #[cfg(feature = "lanes")]
+    if K::LANE_OK {
+        while i + LANES32 <= a.len() {
+            let xb: [f32; LANES32] = a[i..i + LANES32].try_into().unwrap();
+            let yb: [f32; LANES32] = b[i..i + LANES32].try_into().unwrap();
+            // lane-parallel multiplies (independent per element)...
+            let p = k.op_block(OpKind::Mul, &xb, &yb);
+            for j in 0..LANES32 {
+                *bm += bits32(xb[j], yb[j], p[j]);
+            }
+            // ...serial add chain (the reduction order is the contract)
+            for &pj in &p {
+                let r = k.op(OpKind::Add, acc, pj);
+                *ba += bits32(acc, pj, r);
+                acc = r;
+            }
+            i += LANES32;
+        }
+    }
+    for (&x, &y) in a[i..].iter().zip(&b[i..]) {
         let p = k.op(OpKind::Mul, x, y);
         *bm += bits32(x, y, p);
         let r = k.op(OpKind::Add, acc, p);
@@ -278,7 +614,25 @@ fn dot32<K: Kern32>(k: &K, a: &[f32], b: &[f32], bm: &mut u64, ba: &mut u64) -> 
 #[inline(always)]
 fn dot64<K: Kern64>(k: &K, a: &[f64], b: &[f64], bm: &mut u64, ba: &mut u64) -> f64 {
     let mut acc = 0.0f64;
-    for (&x, &y) in a.iter().zip(b) {
+    let mut i = 0usize;
+    #[cfg(feature = "lanes")]
+    if K::LANE_OK {
+        while i + LANES64 <= a.len() {
+            let xb: [f64; LANES64] = a[i..i + LANES64].try_into().unwrap();
+            let yb: [f64; LANES64] = b[i..i + LANES64].try_into().unwrap();
+            let p = k.op_block(OpKind::Mul, &xb, &yb);
+            for j in 0..LANES64 {
+                *bm += bits64(xb[j], yb[j], p[j]);
+            }
+            for &pj in &p {
+                let r = k.op(OpKind::Add, acc, pj);
+                *ba += bits64(acc, pj, r);
+                acc = r;
+            }
+            i += LANES64;
+        }
+    }
+    for (&x, &y) in a[i..].iter().zip(&b[i..]) {
         let p = k.op(OpKind::Mul, x, y);
         *bm += bits64(x, y, p);
         let r = k.op(OpKind::Add, acc, p);
@@ -298,12 +652,30 @@ fn axpy32<K: Kern32>(
     bm: &mut u64,
     ba: &mut u64,
 ) {
-    for (i, o) in out.iter_mut().enumerate() {
+    let mut i = 0usize;
+    #[cfg(feature = "lanes")]
+    if K::LANE_OK {
+        let alpha_b = [alpha; LANES32];
+        while i + LANES32 <= out.len() {
+            let xb: [f32; LANES32] = x[i..i + LANES32].try_into().unwrap();
+            let yb: [f32; LANES32] = y[i..i + LANES32].try_into().unwrap();
+            let p = k.op_block(OpKind::Mul, &alpha_b, &xb);
+            let r = k.op_block(OpKind::Add, &p, &yb);
+            for j in 0..LANES32 {
+                *bm += bits32(alpha, xb[j], p[j]);
+                *ba += bits32(p[j], yb[j], r[j]);
+                out[i + j] = r[j];
+            }
+            i += LANES32;
+        }
+    }
+    while i < out.len() {
         let p = k.op(OpKind::Mul, alpha, x[i]);
         *bm += bits32(alpha, x[i], p);
         let r = k.op(OpKind::Add, p, y[i]);
         *ba += bits32(p, y[i], r);
-        *o = r;
+        out[i] = r;
+        i += 1;
     }
 }
 
@@ -317,12 +689,30 @@ fn axpy64<K: Kern64>(
     bm: &mut u64,
     ba: &mut u64,
 ) {
-    for (i, o) in out.iter_mut().enumerate() {
+    let mut i = 0usize;
+    #[cfg(feature = "lanes")]
+    if K::LANE_OK {
+        let alpha_b = [alpha; LANES64];
+        while i + LANES64 <= out.len() {
+            let xb: [f64; LANES64] = x[i..i + LANES64].try_into().unwrap();
+            let yb: [f64; LANES64] = y[i..i + LANES64].try_into().unwrap();
+            let p = k.op_block(OpKind::Mul, &alpha_b, &xb);
+            let r = k.op_block(OpKind::Add, &p, &yb);
+            for j in 0..LANES64 {
+                *bm += bits64(alpha, xb[j], p[j]);
+                *ba += bits64(p[j], yb[j], r[j]);
+                out[i + j] = r[j];
+            }
+            i += LANES64;
+        }
+    }
+    while i < out.len() {
         let p = k.op(OpKind::Mul, alpha, x[i]);
         *bm += bits64(alpha, x[i], p);
         let r = k.op(OpKind::Add, p, y[i]);
         *ba += bits64(p, y[i], r);
-        *o = r;
+        out[i] = r;
+        i += 1;
     }
 }
 
@@ -336,7 +726,29 @@ fn sqdist32<K: Kern32>(
     ba: &mut u64,
 ) -> f32 {
     let mut acc = 0.0f32;
-    for (&x, &y) in a.iter().zip(b) {
+    let mut i = 0usize;
+    #[cfg(feature = "lanes")]
+    if K::LANE_OK {
+        while i + LANES32 <= a.len() {
+            let xb: [f32; LANES32] = a[i..i + LANES32].try_into().unwrap();
+            let yb: [f32; LANES32] = b[i..i + LANES32].try_into().unwrap();
+            // lane-parallel sub + square (independent per element)...
+            let d = k.op_block(OpKind::Sub, &xb, &yb);
+            let s = k.op_block(OpKind::Mul, &d, &d);
+            for j in 0..LANES32 {
+                *bs += bits32(xb[j], yb[j], d[j]);
+                *bm += bits32(d[j], d[j], s[j]);
+            }
+            // ...serial accumulation chain
+            for &sj in &s {
+                let r = k.op(OpKind::Add, acc, sj);
+                *ba += bits32(acc, sj, r);
+                acc = r;
+            }
+            i += LANES32;
+        }
+    }
+    for (&x, &y) in a[i..].iter().zip(&b[i..]) {
         let d = k.op(OpKind::Sub, x, y);
         *bs += bits32(x, y, d);
         let s = k.op(OpKind::Mul, d, d);
@@ -351,13 +763,172 @@ fn sqdist32<K: Kern32>(
 #[inline(always)]
 fn add_assign32<K: Kern32>(k: &K, acc: &mut [f32], xs: &[f32]) -> u64 {
     let mut bits = 0u64;
-    for (o, &x) in acc.iter_mut().zip(xs) {
-        let a = *o;
-        let r = k.op(OpKind::Add, a, x);
-        bits += bits32(a, x, r);
-        *o = r;
+    let mut i = 0usize;
+    #[cfg(feature = "lanes")]
+    if K::LANE_OK {
+        // elementwise, not a reduction: acc[i] cells are independent
+        while i + LANES32 <= acc.len() {
+            let ab: [f32; LANES32] = acc[i..i + LANES32].try_into().unwrap();
+            let xb: [f32; LANES32] = xs[i..i + LANES32].try_into().unwrap();
+            let r = k.op_block(OpKind::Add, &ab, &xb);
+            for j in 0..LANES32 {
+                bits += bits32(ab[j], xb[j], r[j]);
+                acc[i + j] = r[j];
+            }
+            i += LANES32;
+        }
+    }
+    while i < acc.len() {
+        let a = acc[i];
+        let r = k.op(OpKind::Add, a, xs[i]);
+        bits += bits32(a, xs[i], r);
+        acc[i] = r;
+        i += 1;
     }
     bits
+}
+
+// --- gather kernels ----------------------------------------------------
+//
+// Neighbor-list access patterns: the per-element op chains are
+// independent (the gathered index only selects operands), so the lane
+// tier may batch them freely; the serial chain in `gsum64` stays
+// serial like every other reduction.
+
+/// `out[e] = add32(acc=…)`-free 2-D squared distance against a gathered
+/// point set: `dx = sub(x0, xs[idx[e]]); dy = sub(y0, ys[idx[e]]);
+/// xx = mul(dx,dx); yy = mul(dy,dy); out[e] = add(xx,yy)`.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn gsq32<K: Kern32>(
+    k: &K,
+    x0: f32,
+    y0: f32,
+    xs: &[f32],
+    ys: &[f32],
+    idx: &[usize],
+    out: &mut [f32],
+    bs: &mut u64,
+    bm: &mut u64,
+    ba: &mut u64,
+) {
+    let mut e = 0usize;
+    #[cfg(feature = "lanes")]
+    if K::LANE_OK {
+        let x0b = [x0; LANES32];
+        let y0b = [y0; LANES32];
+        while e + LANES32 <= idx.len() {
+            let mut xj = [0.0f32; LANES32];
+            let mut yj = [0.0f32; LANES32];
+            for j in 0..LANES32 {
+                xj[j] = xs[idx[e + j]];
+                yj[j] = ys[idx[e + j]];
+            }
+            let dx = k.op_block(OpKind::Sub, &x0b, &xj);
+            let dy = k.op_block(OpKind::Sub, &y0b, &yj);
+            let xx = k.op_block(OpKind::Mul, &dx, &dx);
+            let yy = k.op_block(OpKind::Mul, &dy, &dy);
+            let r2 = k.op_block(OpKind::Add, &xx, &yy);
+            for j in 0..LANES32 {
+                *bs += bits32(x0, xj[j], dx[j]) + bits32(y0, yj[j], dy[j]);
+                *bm += bits32(dx[j], dx[j], xx[j]) + bits32(dy[j], dy[j], yy[j]);
+                *ba += bits32(xx[j], yy[j], r2[j]);
+                out[e + j] = r2[j];
+            }
+            e += LANES32;
+        }
+    }
+    while e < idx.len() {
+        let (xj, yj) = (xs[idx[e]], ys[idx[e]]);
+        let dx = k.op(OpKind::Sub, x0, xj);
+        *bs += bits32(x0, xj, dx);
+        let dy = k.op(OpKind::Sub, y0, yj);
+        *bs += bits32(y0, yj, dy);
+        let xx = k.op(OpKind::Mul, dx, dx);
+        *bm += bits32(dx, dx, xx);
+        let yy = k.op(OpKind::Mul, dy, dy);
+        *bm += bits32(dy, dy, yy);
+        let r2 = k.op(OpKind::Add, xx, yy);
+        *ba += bits32(xx, yy, r2);
+        out[e] = r2;
+        e += 1;
+    }
+}
+
+/// Gathered axpy: `out[e] = add32(mul32(alpha, src[idx[e]]), ys[e])`.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn gaxpy32<K: Kern32>(
+    k: &K,
+    alpha: f32,
+    src: &[f32],
+    idx: &[usize],
+    ys: &[f32],
+    out: &mut [f32],
+    bm: &mut u64,
+    ba: &mut u64,
+) {
+    let mut e = 0usize;
+    #[cfg(feature = "lanes")]
+    if K::LANE_OK {
+        let alpha_b = [alpha; LANES32];
+        while e + LANES32 <= idx.len() {
+            let mut xb = [0.0f32; LANES32];
+            for j in 0..LANES32 {
+                xb[j] = src[idx[e + j]];
+            }
+            let yb: [f32; LANES32] = ys[e..e + LANES32].try_into().unwrap();
+            let p = k.op_block(OpKind::Mul, &alpha_b, &xb);
+            let r = k.op_block(OpKind::Add, &p, &yb);
+            for j in 0..LANES32 {
+                *bm += bits32(alpha, xb[j], p[j]);
+                *ba += bits32(p[j], yb[j], r[j]);
+                out[e + j] = r[j];
+            }
+            e += LANES32;
+        }
+    }
+    while e < idx.len() {
+        let x = src[idx[e]];
+        let p = k.op(OpKind::Mul, alpha, x);
+        *bm += bits32(alpha, x, p);
+        let r = k.op(OpKind::Add, p, ys[e]);
+        *ba += bits32(p, ys[e], r);
+        out[e] = r;
+        e += 1;
+    }
+}
+
+/// Gathered running sum: `acc = add64(acc, src[idx[e]])` from 0.0 —
+/// serial chain, lane-parallel pre-masking only.
+#[inline(always)]
+fn gsum64<K: Kern64>(k: &K, src: &[f64], idx: &[usize], bits: &mut u64) -> f64 {
+    let mut acc = 0.0f64;
+    let mut e = 0usize;
+    #[cfg(feature = "lanes")]
+    if K::LANE_OK {
+        while e + LANES64 <= idx.len() {
+            let mut xb = [0.0f64; LANES64];
+            for j in 0..LANES64 {
+                xb[j] = src[idx[e + j]];
+            }
+            let mx = k.premask_block(&xb);
+            for j in 0..LANES64 {
+                let r = k.op(OpKind::Add, acc, mx[j]);
+                *bits += bits64(acc, xb[j], r);
+                acc = r;
+            }
+            e += LANES64;
+        }
+    }
+    while e < idx.len() {
+        let x = src[idx[e]];
+        let r = k.op(OpKind::Add, acc, x);
+        *bits += bits64(acc, x, r);
+        acc = r;
+        e += 1;
+    }
+    acc
 }
 
 impl FpContext {
@@ -748,6 +1319,197 @@ impl FpContext {
         acc
     }
 
+    // --- gather kernels ------------------------------------------------
+
+    /// Fused gathered 2-D squared distance — the neighbor-list kernel of
+    /// SPH codes (fluidanimate's `compute_density`/`compute_forces`):
+    /// per neighbor `e`, with `j = idx[e]`,
+    /// `dx = sub32(x0, xs[j]); dy = sub32(y0, ys[j]);
+    /// xx = mul32(dx, dx); yy = mul32(dy, dy); out[e] = add32(xx, yy)` —
+    /// bit-identical (values, counters, trace) to issuing that scalar
+    /// sequence per neighbor. Like the scalar original it accounts FLOPs
+    /// only; the gathered reads carry no memory traffic.
+    pub fn gather_sqdist2d32_slice(
+        &mut self,
+        x0: f32,
+        y0: f32,
+        xs: &[f32],
+        ys: &[f32],
+        idx: &[usize],
+        out: &mut [f32],
+    ) {
+        assert_eq!(idx.len(), out.len(), "gather_sqdist2d32_slice length mismatch");
+        assert_eq!(xs.len(), ys.len(), "gather_sqdist2d32_slice coordinate arrays differ");
+        if idx.is_empty() {
+            return;
+        }
+        if self.trace.is_some() {
+            for (e, o) in out.iter_mut().enumerate() {
+                let (xj, yj) = (xs[idx[e]], ys[idx[e]]);
+                let dx = self.op32(OpKind::Sub, x0, xj);
+                let dy = self.op32(OpKind::Sub, y0, yj);
+                let xx = self.op32(OpKind::Mul, dx, dx);
+                let yy = self.op32(OpKind::Mul, dy, dy);
+                *o = self.op32(OpKind::Add, xx, yy);
+            }
+            return;
+        }
+        let (mut bs, mut bm, mut ba) = (0u64, 0u64, 0u64);
+        match self.current32 {
+            CompiledFpi::Exact => {
+                gsq32(&Exact32, x0, y0, xs, ys, idx, out, &mut bs, &mut bm, &mut ba)
+            }
+            CompiledFpi::Truncate(k) => gsq32(
+                &Trunc32 { mask: trunc_mask_f32(k) },
+                x0,
+                y0,
+                xs,
+                ys,
+                idx,
+                out,
+                &mut bs,
+                &mut bm,
+                &mut ba,
+            ),
+            CompiledFpi::Dyn(id) => gsq32(
+                &Dyn32(self.lib.get(id)),
+                x0,
+                y0,
+                xs,
+                ys,
+                idx,
+                out,
+                &mut bs,
+                &mut bm,
+                &mut ba,
+            ),
+        }
+        let n = idx.len() as u64;
+        self.commit32(OpKind::Sub, 2 * n, bs);
+        self.commit32(OpKind::Mul, 2 * n, bm);
+        self.commit32(OpKind::Add, n, ba);
+    }
+
+    /// Fused gathered axpy:
+    /// `out[e] = add32(mul32(alpha, src[idx[e]]), ys[e])` — the
+    /// stencil-weights shape (`J[qN[i]]`-style indirection in Rodinia
+    /// kernels). Bit-identical to the per-element scalar sequence.
+    pub fn gather_axpy32_slice(
+        &mut self,
+        alpha: f32,
+        src: &[f32],
+        idx: &[usize],
+        ys: &[f32],
+        out: &mut [f32],
+    ) {
+        assert_eq!(idx.len(), out.len(), "gather_axpy32_slice length mismatch");
+        assert_eq!(ys.len(), out.len(), "gather_axpy32_slice length mismatch");
+        if idx.is_empty() {
+            return;
+        }
+        if self.trace.is_some() {
+            for (e, o) in out.iter_mut().enumerate() {
+                let p = self.op32(OpKind::Mul, alpha, src[idx[e]]);
+                *o = self.op32(OpKind::Add, p, ys[e]);
+            }
+            return;
+        }
+        let (mut bm, mut ba) = (0u64, 0u64);
+        match self.current32 {
+            CompiledFpi::Exact => gaxpy32(&Exact32, alpha, src, idx, ys, out, &mut bm, &mut ba),
+            CompiledFpi::Truncate(k) => gaxpy32(
+                &Trunc32 { mask: trunc_mask_f32(k) },
+                alpha,
+                src,
+                idx,
+                ys,
+                out,
+                &mut bm,
+                &mut ba,
+            ),
+            CompiledFpi::Dyn(id) => {
+                gaxpy32(&Dyn32(self.lib.get(id)), alpha, src, idx, ys, out, &mut bm, &mut ba)
+            }
+        }
+        self.commit32(OpKind::Mul, idx.len() as u64, bm);
+        self.commit32(OpKind::Add, idx.len() as u64, ba);
+    }
+
+    /// Gathered running sum with load accounting — the pixel-window
+    /// kernel of particlefilter's likelihood: per element, with
+    /// `j = idx[e]`, `v = load64(src[j]); acc = add64(acc, v)` from
+    /// `acc = 0.0`. Identical totals and values to the interleaved
+    /// scalar loop (loads are not traced, so batching the traffic commit
+    /// ahead of the add chain is observationally identical).
+    pub fn gather_sum64_slice(&mut self, src: &[f64], idx: &[usize]) -> f64 {
+        if idx.is_empty() {
+            return 0.0;
+        }
+        let mut mbits = 0u64;
+        for &j in idx {
+            mbits += mem_bits_f64(src[j]) as u64;
+        }
+        let st = self.counters.stats_mut(self.current_func);
+        st.mem_ops[Precision::Double as usize] += idx.len() as u64;
+        st.mem_bits[Precision::Double as usize] += mbits;
+        if self.trace.is_some() {
+            let mut acc = 0.0f64;
+            for &j in idx {
+                let v = src[j];
+                acc = self.op64(OpKind::Add, acc, v);
+            }
+            return acc;
+        }
+        let mut bits = 0u64;
+        let acc = match self.current64 {
+            CompiledFpi::Exact => gsum64(&Exact64, src, idx, &mut bits),
+            CompiledFpi::Truncate(k) => {
+                gsum64(&Trunc64 { mask: trunc_mask_f64(k) }, src, idx, &mut bits)
+            }
+            CompiledFpi::Dyn(id) => gsum64(&Dyn64(self.lib.get(id)), src, idx, &mut bits),
+        };
+        self.commit64(OpKind::Add, idx.len() as u64, bits);
+        acc
+    }
+
+    /// Gathered block load: `out[e] = load32(src[idx[e]])` — values are
+    /// copied through unchanged, traffic is accounted like the
+    /// per-element scalar loads (one commit per call).
+    pub fn gather32_slice(&mut self, src: &[f32], idx: &[usize], out: &mut [f32]) {
+        assert_eq!(idx.len(), out.len(), "gather32_slice length mismatch");
+        if idx.is_empty() {
+            return;
+        }
+        let mut bits = 0u64;
+        for (o, &j) in out.iter_mut().zip(idx) {
+            let v = src[j];
+            bits += mem_bits_f32(v) as u64;
+            *o = v;
+        }
+        let st = self.counters.stats_mut(self.current_func);
+        st.mem_ops[Precision::Single as usize] += idx.len() as u64;
+        st.mem_bits[Precision::Single as usize] += bits;
+    }
+
+    /// Gathered block load, double precision (see
+    /// [`FpContext::gather32_slice`]) — the resampling shape of
+    /// particlefilter (`nx[k] = load64(px[idx])`).
+    pub fn gather64_slice(&mut self, src: &[f64], idx: &[usize], out: &mut [f64]) {
+        assert_eq!(idx.len(), out.len(), "gather64_slice length mismatch");
+        if idx.is_empty() {
+            return;
+        }
+        let mut bits = 0u64;
+        for (o, &j) in out.iter_mut().zip(idx) {
+            let v = src[j];
+            bits += mem_bits_f64(v) as u64;
+            *o = v;
+        }
+        let st = self.counters.stats_mut(self.current_func);
+        st.mem_ops[Precision::Double as usize] += idx.len() as u64;
+        st.mem_bits[Precision::Double as usize] += bits;
+    }
+
     // --- block memory traffic ------------------------------------------
 
     /// Account a block of single-precision loads (`MOVSS` reads) — the
@@ -1024,5 +1786,164 @@ mod tests {
     fn mismatched_fused_lengths_panic() {
         let mut ctx = FpContext::profiler();
         ctx.dot32_slice(&[1.0, 2.0], &[1.0]);
+    }
+
+    /// Deterministic pseudo-random index list into `0..n` (valid for
+    /// the gather kernels, with repeats).
+    fn indices(seed: u64, n: usize, len: usize) -> Vec<usize> {
+        let mut rng = Pcg64::new(seed);
+        (0..len).map(|_| rng.below(n as u64) as usize).collect()
+    }
+
+    #[test]
+    fn gather_sqdist_matches_scalar_sequence_per_variant() {
+        let (xs, ys) = data(7, 45);
+        let idx = indices(13, xs.len(), 29);
+        for (tag, mut scalar, mut block) in contexts() {
+            let (x0, y0) = (0.62f32, 0.31f32);
+            let want: Vec<f32> = idx
+                .iter()
+                .map(|&j| {
+                    let dx = scalar.op32(OpKind::Sub, x0, xs[j]);
+                    let dy = scalar.op32(OpKind::Sub, y0, ys[j]);
+                    let xx = scalar.op32(OpKind::Mul, dx, dx);
+                    let yy = scalar.op32(OpKind::Mul, dy, dy);
+                    scalar.op32(OpKind::Add, xx, yy)
+                })
+                .collect();
+            let mut got = vec![0.0f32; idx.len()];
+            block.gather_sqdist2d32_slice(x0, y0, &xs, &ys, &idx, &mut got);
+            for e in 0..idx.len() {
+                assert_eq!(got[e].to_bits(), want[e].to_bits(), "{tag} elem {e}");
+            }
+            assert_counters_eq(tag, &scalar, &block);
+        }
+    }
+
+    #[test]
+    fn gather_axpy_matches_scalar_sequence_per_variant() {
+        let (xs, ys) = data(19, 40);
+        let idx = indices(23, xs.len(), 27);
+        for (tag, mut scalar, mut block) in contexts() {
+            let want: Vec<f32> = idx
+                .iter()
+                .enumerate()
+                .map(|(e, &j)| {
+                    let p = scalar.op32(OpKind::Mul, 0.4, xs[j]);
+                    scalar.op32(OpKind::Add, p, ys[e])
+                })
+                .collect();
+            let mut got = vec![0.0f32; idx.len()];
+            block.gather_axpy32_slice(0.4, &xs, &idx, &ys[..idx.len()], &mut got);
+            for e in 0..idx.len() {
+                assert_eq!(got[e].to_bits(), want[e].to_bits(), "{tag} elem {e}");
+            }
+            assert_counters_eq(tag, &scalar, &block);
+        }
+    }
+
+    #[test]
+    fn gather_sum_matches_interleaved_load_add_loop() {
+        let (xs32, _) = data(31, 50);
+        let xs: Vec<f64> = xs32.iter().map(|&x| x as f64).collect();
+        let idx = indices(37, xs.len(), 9);
+        let lib = FpiLibrary::truncation_family(crate::fpi::Precision::Double);
+        let p = Placement::whole_program(FpiLibrary::truncation_id(9));
+        let mut scalar = FpContext::new(lib.clone(), p.clone());
+        let mut block = FpContext::new(lib, p);
+        let mut acc = 0.0f64;
+        for &j in &idx {
+            let v = scalar.load64(xs[j]);
+            acc = scalar.op64(OpKind::Add, acc, v);
+        }
+        let got = block.gather_sum64_slice(&xs, &idx);
+        assert_eq!(acc.to_bits(), got.to_bits());
+        assert_counters_eq("gather_sum", &scalar, &block);
+    }
+
+    #[test]
+    fn gather_loads_match_scalar_loads() {
+        let (xs, _) = data(43, 30);
+        let idx = indices(47, xs.len(), 21);
+        let mut scalar = FpContext::profiler();
+        let mut block = FpContext::profiler();
+        let want: Vec<f32> = idx.iter().map(|&j| scalar.load32(xs[j])).collect();
+        let mut got = vec![0.0f32; idx.len()];
+        block.gather32_slice(&xs, &idx, &mut got);
+        assert_eq!(want, got);
+        let xs64: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+        let want64: Vec<f64> = idx.iter().map(|&j| scalar.load64(xs64[j])).collect();
+        let mut got64 = vec![0.0f64; idx.len()];
+        block.gather64_slice(&xs64, &idx, &mut got64);
+        assert_eq!(want64, got64);
+        assert_counters_eq("gather_mem", &scalar, &block);
+    }
+
+    #[test]
+    fn gather_tracing_falls_back_to_identical_scalar_lines() {
+        use crate::engine::trace::TraceSink;
+        use std::io::Write;
+        use std::sync::Mutex;
+        #[derive(Clone)]
+        struct Buf(Arc<Mutex<Vec<u8>>>);
+        impl Write for Buf {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let (xs, ys) = data(53, 25);
+        let idx = indices(59, xs.len(), 17);
+        let sbuf = Buf(Arc::new(Mutex::new(Vec::new())));
+        let bbuf = Buf(Arc::new(Mutex::new(Vec::new())));
+        let mut scalar = FpContext::profiler();
+        scalar.set_trace(TraceSink::new(Box::new(sbuf.clone())));
+        let mut block = FpContext::profiler();
+        block.set_trace(TraceSink::new(Box::new(bbuf.clone())));
+        let want: Vec<f32> = idx
+            .iter()
+            .map(|&j| {
+                let dx = scalar.op32(OpKind::Sub, 0.5, xs[j]);
+                let dy = scalar.op32(OpKind::Sub, 0.25, ys[j]);
+                let xx = scalar.op32(OpKind::Mul, dx, dx);
+                let yy = scalar.op32(OpKind::Mul, dy, dy);
+                scalar.op32(OpKind::Add, xx, yy)
+            })
+            .collect();
+        let mut got = vec![0.0f32; idx.len()];
+        block.gather_sqdist2d32_slice(0.5, 0.25, &xs, &ys, &idx, &mut got);
+        assert_eq!(want, got);
+        assert_eq!(*sbuf.0.lock().unwrap(), *bbuf.0.lock().unwrap(), "trace bytes differ");
+    }
+
+    #[test]
+    fn remainder_tails_cover_every_boundary_length() {
+        // 0, 1, lane-1, lane, lane+1, non-multiple — the lane tier's
+        // remainder tail must agree with the scalar loop at each
+        for n in [0usize, 1, LANES32 - 1, LANES32, LANES32 + 1, 3 * LANES32 - 2] {
+            let (xs, ys) = data(61 + n as u64, n.max(1));
+            let (xs, ys) = (&xs[..n], &ys[..n]);
+            for (tag, mut scalar, mut block) in contexts() {
+                let want: Vec<f32> =
+                    xs.iter().zip(ys).map(|(&x, &y)| scalar.op32(OpKind::Mul, x, y)).collect();
+                let mut got = vec![0.0f32; n];
+                block.map32_slice(OpKind::Mul, xs, ys, &mut got);
+                assert_eq!(want, got, "{tag} n={n}");
+                let mut acc = 0.0f32;
+                for (&x, &y) in xs.iter().zip(ys) {
+                    let p = scalar.op32(OpKind::Mul, x, y);
+                    acc = scalar.op32(OpKind::Add, acc, p);
+                }
+                assert_eq!(
+                    acc.to_bits(),
+                    block.dot32_slice(xs, ys).to_bits(),
+                    "{tag} dot n={n}"
+                );
+                assert_counters_eq(tag, &scalar, &block);
+            }
+        }
     }
 }

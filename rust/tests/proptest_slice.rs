@@ -275,6 +275,121 @@ fn prop_trace_content_is_identical_in_block_mode() {
 }
 
 #[test]
+fn prop_boundary_lengths_pin_lane_remainder_tails() {
+    // Lane-parallel builds (`--features lanes`) split every slice into
+    // whole lane blocks plus a scalar remainder tail; without the
+    // feature the loop is scalar throughout. Either way these lengths —
+    // empty, single, one-under/at/over a lane, and a ragged multiple —
+    // must stay bit-identical to the scalar op sequence in values and
+    // counters for every placement kind.
+    use neat::engine::{LANES32, LANES64};
+    let lens =
+        [0usize, 1, LANES32 - 1, LANES32, LANES32 + 1, 2 * LANES32 + 3, LANES64 + 1];
+    check("boundary lengths == scalar", cfg(48), gen_scenario, |s| {
+        for &n in &lens {
+            let a: Vec<f32> = s.a.iter().copied().cycle().take(n).collect();
+            let b: Vec<f32> = s.b.iter().copied().cycle().take(n).collect();
+            let (mut scalar, frames) = build_ctx(s);
+            let (mut block, bframes) = build_ctx(s);
+            let (want, w_dot) = in_scope(&mut scalar, &frames, |c| {
+                let out: Vec<f32> =
+                    a.iter().zip(&b).map(|(&x, &y)| scalar_op32(c, s.op, x, y)).collect();
+                let mut dot = 0.0f32;
+                for (&x, &y) in a.iter().zip(&b) {
+                    let p = c.mul32(x, y);
+                    dot = c.add32(dot, p);
+                }
+                (out, dot)
+            });
+            let mut got = vec![0.0f32; n];
+            let g_dot = in_scope(&mut block, &bframes, |c| {
+                c.map32_slice(s.op, &a[..], &b[..], &mut got);
+                c.dot32_slice(&a, &b)
+            });
+            if !want.iter().zip(&got).all(|(w, g)| w.to_bits() == g.to_bits()) {
+                return false;
+            }
+            if w_dot.to_bits() != g_dot.to_bits() || !counters_match(&scalar, &block) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_gather_kernels_match_scalar_sequences() {
+    // The gather kernels (neighbor-list / pixel-window shapes) against
+    // their per-element scalar sequences: values, counters, and trace
+    // bytes, for every placement kind.
+    check("gather kernels == scalar", cfg(96), gen_scenario, |s| {
+        let n = s.a.len();
+        let mut rng = Pcg64::new(n as u64 ^ 0x6A77);
+        let idx: Vec<usize> = (0..n).map(|_| rng.below(n as u64) as usize).collect();
+        let alpha = s.b[0];
+        let (x0, y0) = (s.a[0], s.b[0]);
+        let a64: Vec<f64> = s.a.iter().map(|&x| x as f64).collect();
+
+        // both trace states: untraced drives the monomorphized (and,
+        // under `--features lanes`, lane-parallel) kernels; traced
+        // drives the scalar fallback and must also match byte-for-byte
+        for traced in [false, true] {
+            let (mut scalar, frames) = build_ctx(s);
+            let (mut block, bframes) = build_ctx(s);
+            let sbuf = Buf(Arc::new(Mutex::new(Vec::new())));
+            let bbuf = Buf(Arc::new(Mutex::new(Vec::new())));
+            if traced {
+                scalar.set_trace(TraceSink::new(Box::new(sbuf.clone())));
+                block.set_trace(TraceSink::new(Box::new(bbuf.clone())));
+            }
+
+            let (w_axpy, w_sq, w_sum) = in_scope(&mut scalar, &frames, |c| {
+                let axpy: Vec<f32> = idx
+                    .iter()
+                    .zip(&s.b)
+                    .map(|(&j, &y)| {
+                        let p = c.mul32(alpha, s.a[j]);
+                        c.add32(p, y)
+                    })
+                    .collect();
+                let sq: Vec<f32> = idx
+                    .iter()
+                    .map(|&j| {
+                        let dx = c.sub32(x0, s.a[j]);
+                        let dy = c.sub32(y0, s.b[j]);
+                        let xx = c.mul32(dx, dx);
+                        let yy = c.mul32(dy, dy);
+                        c.add32(xx, yy)
+                    })
+                    .collect();
+                let mut sum = 0.0f64;
+                for &j in &idx {
+                    let v = c.load64(a64[j]);
+                    sum = c.add64(sum, v);
+                }
+                (axpy, sq, sum)
+            });
+            let mut g_axpy = vec![0.0f32; n];
+            let mut g_sq = vec![0.0f32; n];
+            let g_sum = in_scope(&mut block, &bframes, |c| {
+                c.gather_axpy32_slice(alpha, &s.a, &idx, &s.b, &mut g_axpy);
+                c.gather_sqdist2d32_slice(x0, y0, &s.a, &s.b, &idx, &mut g_sq);
+                c.gather_sum64_slice(&a64, &idx)
+            });
+            let ok = w_axpy.iter().zip(&g_axpy).all(|(w, g)| w.to_bits() == g.to_bits())
+                && w_sq.iter().zip(&g_sq).all(|(w, g)| w.to_bits() == g.to_bits())
+                && w_sum.to_bits() == g_sum.to_bits()
+                && *sbuf.0.lock().unwrap() == *bbuf.0.lock().unwrap()
+                && counters_match(&scalar, &block);
+            if !ok {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
 fn pooled_context_block_mode_survives_set_placement_swaps() {
     // The executor's worker pool reuses one context across
     // configurations via set_placement; the precomputed effective FPI
@@ -301,16 +416,26 @@ fn pooled_context_block_mode_survives_set_placement_swaps() {
         // fresh context for the same placement = the reference run
         let mut fresh = FpContext::new(lib.clone(), p.clone());
         let fresh_hot = fresh.register("hot");
+        let idx: Vec<usize> = (0..a.len()).map(|i| (i * 7) % a.len()).collect();
         let mut want = vec![0.0f32; a.len()];
+        let mut w_gsq = vec![0.0f32; a.len()];
         fresh.call(fresh_hot, |c| c.mul32_slice(&a, &b, &mut want));
         let w_sum = fresh.call(fresh_hot, |c| c.sum32_slice(&a));
+        fresh.call(fresh_hot, |c| {
+            c.gather_sqdist2d32_slice(a[0], b[0], &a, &b, &idx, &mut w_gsq)
+        });
 
         let mut got = vec![0.0f32; a.len()];
+        let mut g_gsq = vec![0.0f32; a.len()];
         pooled.call(hot, |c| c.mul32_slice(&a, &b, &mut got));
         let g_sum = pooled.call(hot, |c| c.sum32_slice(&a));
+        pooled.call(hot, |c| {
+            c.gather_sqdist2d32_slice(a[0], b[0], &a, &b, &idx, &mut g_gsq)
+        });
 
         for i in 0..a.len() {
             assert_eq!(want[i].to_bits(), got[i].to_bits(), "lane {i} after swap");
+            assert_eq!(w_gsq[i].to_bits(), g_gsq[i].to_bits(), "gather lane {i} after swap");
         }
         assert_eq!(w_sum.to_bits(), g_sum.to_bits());
         assert_eq!(
