@@ -1,0 +1,211 @@
+//! Bench: the service layer — replay a job trace against `Service`
+//! cold (empty content-addressed cache), warm (same daemon, same
+//! trace), and restart-warm (fresh daemon over the same cache dir),
+//! plus a two-tenant fairness trace under one runner.
+//!
+//!     cargo bench --bench service
+//!
+//! Emits a machine-readable baseline to `BENCH_service.json` (override
+//! the path with `NEAT_BENCH_SERVICE_OUT`). Acceptance (ISSUE PR 7):
+//! warm replay >= 10x faster than cold, and in the fairness trace
+//! neither tenant falls below 25% of fair share while both are
+//! backlogged.
+//!
+//! The replay trace mixes per-width probes with a Table-VI-style tune
+//! per benchmark: the tune is what makes the cache interesting — cold
+//! it is ~80 engine evaluations, warm the identical deterministic
+//! probe sequence is answered from the content-addressed store and
+//! only the search bookkeeping remains.
+//!
+//! Fairness is sampled *mid-run* (when half the shards are done), not
+//! at the end: once the queue drains, served-ms is demand-driven and
+//! says nothing about scheduling. At the halfway mark a FIFO queue
+//! would show the first tenant near 200% of fair share and the second
+//! near 0%; deficit fair-share holds both near 100%.
+
+use std::fmt::Write as _;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use neat::coordinator::RuleKind;
+use neat::service::{JobKind, JobSpec, JobState, Service, ServiceConfig};
+use neat::tuner::TuneGoal;
+
+const THREADS: usize = 4;
+const TRACE_BENCHMARKS: [&str; 2] = ["blackscholes", "kmeans"];
+const TRACE_WIDTHS: [u32; 8] = [4, 6, 8, 10, 12, 14, 16, 20];
+const TUNE_EVALS: usize = 80;
+
+fn probe(tenant: &str, benchmark: &str, width: u32) -> JobSpec {
+    JobSpec {
+        tenant: tenant.to_string(),
+        priority: 1,
+        target: None,
+        kind: JobKind::Probe {
+            benchmark: benchmark.to_string(),
+            rule: RuleKind::Wp,
+            genome: vec![width],
+        },
+    }
+}
+
+fn tune(tenant: &str, benchmark: &str) -> JobSpec {
+    JobSpec {
+        tenant: tenant.to_string(),
+        priority: 1,
+        target: None,
+        kind: JobKind::Tune {
+            benchmark: benchmark.to_string(),
+            rule: RuleKind::Cip,
+            goal: TuneGoal::ErrorBudget(0.05),
+            max_evals: TUNE_EVALS,
+        },
+    }
+}
+
+fn service(cache_dir: &Path) -> Service {
+    let mut cfg = ServiceConfig::new();
+    cfg.threads = THREADS;
+    cfg.cache_dir = Some(cache_dir.to_path_buf());
+    Service::start(cfg).expect("service start")
+}
+
+/// Submit the whole trace, wait for every job, return wall time and
+/// the summed persistent-cache hit/miss counts.
+fn replay(svc: &Service) -> (Duration, usize, usize) {
+    let start = Instant::now();
+    let mut ids = Vec::new();
+    for b in TRACE_BENCHMARKS {
+        ids.push(svc.submit(tune("replay", b)).expect("submit"));
+        for w in TRACE_WIDTHS {
+            ids.push(svc.submit(probe("replay", b, w)).expect("submit"));
+        }
+    }
+    let (mut hits, mut misses) = (0, 0);
+    for id in ids {
+        let snap = svc.wait(id, Duration::from_secs(600)).expect("known job");
+        assert_eq!(snap.state, JobState::Done, "job {id}: {:?}", snap.error);
+        hits += snap.cache_hits;
+        misses += snap.cache_misses;
+    }
+    (start.elapsed(), hits, misses)
+}
+
+fn main() {
+    let cache_dir = std::env::temp_dir().join("neat_service_bench_cache");
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    let trace_jobs = TRACE_BENCHMARKS.len() * (1 + TRACE_WIDTHS.len());
+    println!(
+        "== service replay ({trace_jobs} jobs: {} tunes @{TUNE_EVALS} evals + {} probes, {THREADS} threads) ==",
+        TRACE_BENCHMARKS.len(),
+        TRACE_BENCHMARKS.len() * TRACE_WIDTHS.len()
+    );
+
+    // cold: every unique genome goes to the engine and is stored
+    let svc = service(&cache_dir);
+    let (cold, h0, m0) = replay(&svc);
+    println!("cold    {:>10.1} ms  (hits {h0}, misses {m0})", cold.as_secs_f64() * 1e3);
+    assert_eq!(h0, 0, "cold replay must not hit");
+
+    // warm, same daemon: the deterministic probe sequences replay as
+    // cache reads
+    let (warm, h1, m1) = replay(&svc);
+    println!("warm    {:>10.1} ms  (hits {h1}, misses {m1})", warm.as_secs_f64() * 1e3);
+    assert_eq!(m1, 0, "warm replay must not miss");
+    svc.shutdown();
+
+    // restart-warm: a fresh daemon over the same cache dir — the
+    // cross-run promise, including evaluator (baseline) rebuild cost
+    let svc = service(&cache_dir);
+    let (restart, h2, m2) = replay(&svc);
+    println!(
+        "restart {:>10.1} ms  (hits {h2}, misses {m2})",
+        restart.as_secs_f64() * 1e3
+    );
+    assert_eq!(m2, 0, "restart replay must not miss");
+    svc.shutdown();
+
+    let speedup_warm = cold.as_secs_f64() / warm.as_secs_f64().max(1e-9);
+    let speedup_restart = cold.as_secs_f64() / restart.as_secs_f64().max(1e-9);
+    println!("speedup: warm {speedup_warm:.1}x, restart {speedup_restart:.1}x");
+
+    // fairness: one runner, two tenants with equal backlogs, "bulk"
+    // enqueued entirely before "interactive"; sample served-ms when
+    // half the shards are done
+    println!("== two-tenant fairness (1 runner, sampled at half done) ==");
+    let mut cfg = ServiceConfig::new();
+    cfg.threads = 1;
+    let svc = Service::start(cfg).expect("service start");
+    let mut ids = Vec::new();
+    for tenant in ["bulk", "interactive"] {
+        for w in TRACE_WIDTHS {
+            for b in TRACE_BENCHMARKS {
+                ids.push(svc.submit(probe(tenant, b, w)).expect("submit"));
+            }
+        }
+    }
+    let half = ids.len() / 2;
+    let done = |svc: &Service, ids: &[u64]| {
+        ids.iter()
+            .filter(|&&id| svc.status(id).is_some_and(|s| s.state.is_terminal()))
+            .count()
+    };
+    while done(&svc, &ids) < half {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let mid = svc.tenant_served();
+    for &id in &ids {
+        let snap = svc.wait(id, Duration::from_secs(600)).expect("known job");
+        assert_eq!(snap.state, JobState::Done, "job {id}: {:?}", snap.error);
+    }
+    svc.shutdown();
+    let total: f64 = mid.iter().map(|(_, ms)| ms).sum();
+    let fair = total / mid.len() as f64;
+    let mut fairness_rows = String::new();
+    let mut min_share = f64::INFINITY;
+    for (tenant, ms) in &mid {
+        let share = ms / fair.max(1e-9);
+        min_share = min_share.min(share);
+        println!(
+            "tenant {tenant:<12} served {ms:>9.1} ms at half-done  ({:.0}% of fair share)",
+            share * 100.0
+        );
+        let _ = write!(
+            fairness_rows,
+            "{}{{\"tenant\": \"{tenant}\", \"served_ms_at_half\": {ms:.1}, \"share_of_fair\": {share:.3}}}",
+            if fairness_rows.is_empty() { "" } else { ",\n    " }
+        );
+    }
+
+    let mut json = String::from("{\n");
+    let _ = writeln!(json, "  \"bench\": \"service\",");
+    let _ = writeln!(json, "  \"trace_jobs\": {trace_jobs},");
+    let _ = writeln!(json, "  \"tune_evals\": {TUNE_EVALS},");
+    let _ = writeln!(json, "  \"threads\": {THREADS},");
+    let _ = writeln!(json, "  \"cold_ms\": {:.1},", cold.as_secs_f64() * 1e3);
+    let _ = writeln!(json, "  \"warm_ms\": {:.1},", warm.as_secs_f64() * 1e3);
+    let _ = writeln!(json, "  \"restart_warm_ms\": {:.1},", restart.as_secs_f64() * 1e3);
+    let _ = writeln!(json, "  \"speedup_warm\": {speedup_warm:.1},");
+    let _ = writeln!(json, "  \"speedup_restart\": {speedup_restart:.1},");
+    let _ = writeln!(json, "  \"cold_misses\": {m0},");
+    let _ = writeln!(json, "  \"warm_hits\": {h1},");
+    let _ = writeln!(json, "  \"fairness_at_half_done\": [");
+    let _ = writeln!(json, "    {fairness_rows}");
+    let _ = writeln!(json, "  ]");
+    json.push_str("}\n");
+    let path = std::env::var("NEAT_BENCH_SERVICE_OUT")
+        .unwrap_or_else(|_| "BENCH_service.json".to_string());
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    assert!(
+        speedup_warm >= 10.0,
+        "acceptance: warm replay must be >= 10x cold (got {speedup_warm:.1}x)"
+    );
+    assert!(
+        min_share >= 0.25,
+        "acceptance: every tenant >= 25% of fair share (got {min_share:.2})"
+    );
+}

@@ -51,6 +51,15 @@ pub trait Workload: Send + Sync {
         Vec::new()
     }
 
+    /// Version of the workload's algorithm + input generation. The
+    /// content-addressed result cache (`service::cache`) keys on it:
+    /// bump this whenever a change alters the outputs a seed produces,
+    /// so stale cross-run cache entries become misses instead of being
+    /// served as current results.
+    fn version(&self) -> u32 {
+        1
+    }
+
     /// Seeds of the training inputs (paper Table II "training inputs").
     fn train_seeds(&self) -> Vec<u64> {
         (0..5).map(|i| 0x5EED + i).collect()

@@ -3,7 +3,7 @@
 //! its artifact into `results/` as CSV plus a human-readable summary.
 
 use std::fmt::Write as _;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
@@ -18,6 +18,7 @@ use crate::explore::{Genome, Nsga2, Nsga2Params, Objectives, Problem};
 use crate::fpi::Precision;
 use crate::report::{ascii_tradeoff_plot, savings_table, ResultsDir};
 use crate::runtime::{ArtifactPaths, LenetRuntime};
+use crate::service::cache::ResultCache;
 use crate::stats::{self, lower_convex_hull, savings_at_thresholds, TradeoffPoint};
 use crate::tuner::{warm_start_genomes, HeldOutReport, TuneGoal, Tuner};
 
@@ -697,8 +698,20 @@ struct Table6Row {
 /// ([`warm_start_genomes`]). Pure in `(bench, budget)` — the tuner has
 /// no RNG, the warm search's seed is fixed, and the executor only
 /// changes scheduling — so rows computed on different shards reassemble
-/// into the same table.
-fn table6_row(b: &BenchResult, budget: Budget, exec: &Executor) -> Table6Row {
+/// into the same table. With `cache` set, both searches resolve
+/// repeated configurations through the content-addressed cross-run
+/// cache (still value-identical: cached entries are exact bit patterns
+/// of what the engine would produce).
+fn table6_row(
+    b: &BenchResult,
+    budget: Budget,
+    exec: &Executor,
+    cache: Option<&Arc<ResultCache>>,
+) -> Table6Row {
+    let problem_for = |rule| match cache {
+        Some(c) => EvalProblem::with_cache(&b.eval, rule, exec.clone(), c.clone()),
+        None => EvalProblem::with_executor(&b.eval, rule, exec.clone()),
+    };
     let wp = savings_at_thresholds(&b.wp.fpu_points(), &TUNE_BUDGETS);
     let ga = savings_at_thresholds(&b.cip.fpu_points(), &TUNE_BUDGETS);
     let mut necs = [0.0f64; 8];
@@ -707,7 +720,7 @@ fn table6_row(b: &BenchResult, budget: Budget, exec: &Executor) -> Table6Row {
     // one problem for both budgets: the tuner's goal-independent
     // seed wave (baseline + ladder + sensitivity probes) is answered
     // from the genome cache on the second run
-    let problem = EvalProblem::with_executor(&b.eval, RuleKind::Cip, exec.clone());
+    let problem = problem_for(RuleKind::Cip);
     let mut tuner_cols: Vec<(f64, usize)> = Vec::new();
     let mut warm_seeds: Vec<Genome> = Vec::new();
     let mut neighborhoods: Vec<Genome> = Vec::new();
@@ -739,7 +752,7 @@ fn table6_row(b: &BenchResult, budget: Budget, exec: &Executor) -> Table6Row {
             warm_seeds.push(g);
         }
     }
-    let warm_problem = EvalProblem::with_executor(&b.eval, RuleKind::Cip, exec.clone());
+    let warm_problem = problem_for(RuleKind::Cip);
     Nsga2::new(budget.params_with_initial(warm_seeds)).run(&warm_problem);
     let warm = RuleResult { rule: RuleKind::Cip, details: warm_problem.take_details() };
     let ws = savings_at_thresholds(&warm.fpu_points(), &TUNE_BUDGETS);
@@ -764,12 +777,14 @@ fn table6_row(b: &BenchResult, budget: Budget, exec: &Executor) -> Table6Row {
 /// columns are quantized from the suite's existing archives; the
 /// `nsga+ws` column re-searches with the tuner's warm start; the
 /// held-out block re-evaluates every tuned configuration on the test
-/// seeds and reports the constraint overshoot.
+/// seeds and reports the constraint overshoot. `cache` (when set)
+/// routes every search through the content-addressed cross-run cache.
 pub fn table6(
     rd: &ResultsDir,
     suite: &[BenchResult],
     budget: Budget,
     exec: &Executor,
+    cache: Option<&Arc<ResultCache>>,
     log: &mut impl FnMut(&str),
 ) -> Result<String> {
     let rows = suite
@@ -779,7 +794,7 @@ pub fn table6(
                 "table6: tuning {} + warm-started NSGA-II (CIP, 1% and 10% budgets)",
                 b.name
             ));
-            table6_row(b, budget, exec)
+            table6_row(b, budget, exec, cache)
         })
         .collect();
     render_table6(rd, rows)
@@ -794,6 +809,7 @@ pub fn table6_sharded(
     suite_results: &[BenchResult],
     budget: Budget,
     plan: suite::ShardPlan,
+    cache: Option<&Arc<ResultCache>>,
     log: &mut (impl FnMut(&str) + Send),
 ) -> Result<String> {
     let log: Mutex<&mut (dyn FnMut(&str) + Send)> = Mutex::new(log);
@@ -806,7 +822,7 @@ pub fn table6_sharded(
                 b.name
             ));
         }
-        table6_row(b, budget, exec)
+        table6_row(b, budget, exec, cache)
     });
     render_table6(rd, rows)
 }
@@ -944,27 +960,54 @@ pub fn fig11(
     let mut all_rows = Vec::new();
     let mut savings_rows = Vec::new();
     let mut pli_details = Vec::new();
+    // PLI warm-start seeds harvested from the PLC round (tuner-led)
+    let mut pli_seeds: Vec<Genome> = Vec::new();
     for rule in [CnnRule::Plc, CnnRule::Pli] {
         log(&format!("fig11: exploring {} ({} genes)", rule.name(), rule.genome_len()));
         let problem = CnnProblem::new(runtime, rule, search_batches)?;
-        // warm-start PLI with category-tied genomes: the PLC space is a
+        // warm-start PLI from the PLC round: the PLC space is a
         // subspace of PLI, so the finer search starts no worse than the
-        // coarse one and refines from there (paper Fig. 11's shape)
+        // coarse one and refines from there (paper Fig. 11's shape).
+        // The tuner's constraint points (and their one-bit
+        // neighborhoods) lead the seed list — same recipe as Table VI's
+        // nsga+ws column — with random category-tied genomes after
+        // them, so population truncation drops the random filler first.
         let params = if rule == CnnRule::Pli {
+            let mut initial = pli_seeds.clone();
             let mut rng = crate::util::Pcg64::new(budget.seed ^ 0x511);
-            let tied: Vec<Genome> = (0..10)
-                .map(|_| {
-                    let cat: Genome =
-                        (0..5).map(|_| rng.range_inclusive(1, 24) as u32).collect();
-                    CnnRule::Plc.expand(&cat).to_vec()
-                })
-                .collect();
-            budget.params_with_initial(tied)
+            for _ in 0..10 {
+                let cat: Genome =
+                    (0..5).map(|_| rng.range_inclusive(1, 24) as u32).collect();
+                let tied = CnnRule::Plc.expand(&cat).to_vec();
+                if !initial.contains(&tied) {
+                    initial.push(tied);
+                }
+            }
+            budget.params_with_initial(initial)
         } else {
             budget.params()
         };
         Nsga2::new(params).run(&problem);
         let details = problem.take_details();
+        if rule == CnnRule::Plc {
+            // constraint-driven lattice descent on the PLC space at the
+            // paper's two budgets; its waves reuse the NSGA round's
+            // genome memo, so the extra probes are cheap. Each tuned
+            // genome expands through the PLC→PLI category map.
+            for &eps in &TUNE_BUDGETS {
+                let tuned = Tuner::error_budget(eps).run(&problem);
+                for g in warm_start_genomes(&tuned.genome, problem.max_bits()) {
+                    let expanded = CnnRule::Plc.expand(&g).to_vec();
+                    if !pli_seeds.contains(&expanded) {
+                        pli_seeds.push(expanded);
+                    }
+                }
+            }
+            log(&format!(
+                "fig11: PLC lattice descent seeds {} PLI warm-start genomes",
+                pli_seeds.len()
+            ));
+        }
         let points: Vec<TradeoffPoint> =
             details.iter().map(|(_, d)| TradeoffPoint::new(d.error, d.nec)).collect();
         for (bits, d) in &details {
@@ -1213,13 +1256,32 @@ pub fn run_all_with_suite(
     report.push('\n');
     report.push_str(&table3(rd, &suite, exec, log)?);
     report.push('\n');
+    // `--cache-dir` routes every Table VI search through the
+    // content-addressed cross-run cache shared with `neat serve`; a
+    // failure to open it degrades to uncached (values are identical).
+    let table6_cache: Option<Arc<ResultCache>> = runner
+        .and_then(|r| r.config().cache_dir.as_ref())
+        .and_then(|dir| match ResultCache::new(dir) {
+            Ok(c) => Some(Arc::new(c)),
+            Err(e) => {
+                log(&format!("table6: cache at {} unavailable ({e:#}); running uncached", dir.display()));
+                None
+            }
+        });
     match runner {
         Some(r) => {
             let plan =
                 suite::plan_shards(r.config().threads, r.config().shard_threads, suite.len());
-            report.push_str(&table6_sharded(rd, &suite, budget, plan, log)?);
+            report.push_str(&table6_sharded(rd, &suite, budget, plan, table6_cache.as_ref(), log)?);
         }
-        None => report.push_str(&table6(rd, &suite, budget, exec, log)?),
+        None => report.push_str(&table6(rd, &suite, budget, exec, table6_cache.as_ref(), log)?),
+    }
+    if let Some(c) = &table6_cache {
+        let cc = c.counters();
+        log(&format!(
+            "table6: persistent cache {} hits / {} misses / {} stores",
+            cc.hits, cc.misses, cc.stores
+        ));
     }
     report.push('\n');
 
@@ -1325,7 +1387,8 @@ mod tests {
         let wp = explore_rule_with(&eval, RuleKind::Wp, Budget::quick(), &exec);
         let cip = explore_rule_with(&eval, RuleKind::Cip, Budget::quick(), &exec);
         let suite = vec![BenchResult { name: "blackscholes".to_string(), eval, wp, cip }];
-        let text = table6(&tmp_rd(), &suite, Budget::quick(), &exec, &mut |_| {}).unwrap();
+        let text =
+            table6(&tmp_rd(), &suite, Budget::quick(), &exec, None, &mut |_| {}).unwrap();
         for col in [
             "wp@1%", "nsga@1%", "nsga+ws@1%", "tuner@1%", "wp@10%", "nsga@10%",
             "nsga+ws@10%", "tuner@10%",

@@ -15,9 +15,9 @@ pub mod experiments;
 pub mod pool;
 pub mod suite;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::bench_suite::Workload;
 use crate::energy::{estimate, EnergyEstimate, EpiTable};
@@ -26,6 +26,7 @@ use crate::engine::FpContext;
 use crate::explore::{Genome, Objectives, Problem};
 use crate::fpi::{FpiLibrary, Precision};
 use crate::placement::Placement;
+use crate::service::cache::{engine_mode, CacheKey, ResultCache, CACHE_SCHEMA};
 
 pub use executor::Executor;
 pub use suite::{SuiteConfig, SuiteOutcome, SuiteRunner};
@@ -280,6 +281,47 @@ pub struct EvalProblem<'a> {
     cache: Mutex<HashMap<Genome, EvalDetail>>,
     cache_hits: AtomicUsize,
     cache_misses: AtomicUsize,
+    persist: Option<PersistSeam>,
+    persist_hits: AtomicUsize,
+    persist_misses: AtomicUsize,
+}
+
+/// The persistent cache attached to a problem: the shared store plus
+/// the precomputed key prefix everything but the genome hangs off.
+struct PersistSeam {
+    cache: Arc<ResultCache>,
+    base: CacheKey,
+}
+
+impl PersistSeam {
+    fn genome_key(&self, genome: &Genome) -> CacheKey {
+        self.base.clone().genome(genome)
+    }
+}
+
+/// The cache-key prefix for training-set evaluations of `(eval, rule)`:
+/// every field the determinism contract says a result depends on,
+/// except the genome itself. Seeds are part of the key because a result
+/// is the median over the seed set; the engine mode is included so a
+/// (contract-violating) scalar/lanes divergence could never serve
+/// cross-mode entries.
+fn train_cache_key(eval: &Evaluator, rule: RuleKind) -> CacheKey {
+    let seeds = eval
+        .workload()
+        .train_seeds()
+        .iter()
+        .map(|s| s.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    CacheKey::new()
+        .field("schema", CACHE_SCHEMA)
+        .field("workload", eval.workload().name())
+        .field("workload_version", eval.workload().version())
+        .field("target", eval.target.name())
+        .field("rule", rule.name())
+        .field("set", "train")
+        .field("seeds", seeds)
+        .field("engine", engine_mode())
 }
 
 impl<'a> EvalProblem<'a> {
@@ -298,7 +340,29 @@ impl<'a> EvalProblem<'a> {
             cache: Mutex::new(HashMap::new()),
             cache_hits: AtomicUsize::new(0),
             cache_misses: AtomicUsize::new(0),
+            persist: None,
+            persist_hits: AtomicUsize::new(0),
+            persist_misses: AtomicUsize::new(0),
         }
+    }
+
+    /// Like [`EvalProblem::with_executor`], with a persistent
+    /// content-addressed cache layered between the per-problem memo
+    /// cache and the engine: a genome missing from the memo is looked
+    /// up on disk before any evaluation is scheduled, and every freshly
+    /// computed result is written back. Because evaluations are pure
+    /// functions of the cache key, attaching a cache changes
+    /// *scheduling, never values* — the serve-vs-CLI determinism test
+    /// pins this.
+    pub fn with_cache(
+        eval: &'a Evaluator,
+        rule: RuleKind,
+        executor: Executor,
+        cache: Arc<ResultCache>,
+    ) -> Self {
+        let mut p = Self::with_executor(eval, rule, executor);
+        p.persist = Some(PersistSeam { cache, base: train_cache_key(eval, rule) });
+        p
     }
 
     /// Drain the recorded evaluation details.
@@ -306,27 +370,72 @@ impl<'a> EvalProblem<'a> {
         std::mem::take(&mut self.details.lock().unwrap())
     }
 
-    /// `(hits, misses)` of the genome memo cache so far. `misses` counts
-    /// unique genomes actually executed; `hits` counts evaluations
-    /// answered from the cache.
+    /// `(hits, misses)` of the genome memo cache so far. `misses`
+    /// counts unique genomes resolved outside the memo — through the
+    /// persistent cache (when attached) or the engine; `hits` counts
+    /// evaluations answered from the memo.
     pub fn cache_stats(&self) -> (usize, usize) {
         (self.cache_hits.load(Ordering::Relaxed), self.cache_misses.load(Ordering::Relaxed))
     }
 
+    /// `(hits, misses)` of the persistent content-addressed cache layer
+    /// for this problem. `(0, 0)` when no cache is attached; `misses`
+    /// counts unique genomes that reached the engine.
+    pub fn persist_stats(&self) -> (usize, usize) {
+        (self.persist_hits.load(Ordering::Relaxed), self.persist_misses.load(Ordering::Relaxed))
+    }
+
     /// Evaluate a batch with memoization, recording every call.
     fn evaluate_details(&self, genomes: &[Genome]) -> Vec<EvalDetail> {
-        // Collect genomes not yet in the cache (duplicates within the
-        // batch are fine — the executor dedups them again).
-        let misses: Vec<Genome> = {
+        // Genomes not yet in the memo cache, deduped, first-appearance
+        // order (the executor would dedup again, but the persistent
+        // layer should see each genome once).
+        let missing: Vec<Genome> = {
             let cache = self.cache.lock().unwrap();
-            genomes.iter().filter(|g| !cache.contains_key(*g)).cloned().collect()
+            let mut seen: HashSet<&Genome> = HashSet::new();
+            genomes
+                .iter()
+                .filter(|g| !cache.contains_key(*g) && seen.insert(*g))
+                .cloned()
+                .collect()
         };
         let mut inserted = 0usize;
-        if !misses.is_empty() {
+        // Persistent layer: answered genomes skip the engine entirely.
+        let to_run: Vec<Genome> = if let Some(p) = &self.persist {
+            let mut to_run = Vec::new();
+            let mut found: Vec<(Genome, EvalDetail)> = Vec::new();
+            for g in missing {
+                match p.cache.lookup(&p.genome_key(&g)) {
+                    Some(d) => found.push((g, d)),
+                    None => to_run.push(g),
+                }
+            }
+            self.persist_hits.fetch_add(found.len(), Ordering::Relaxed);
+            self.persist_misses.fetch_add(to_run.len(), Ordering::Relaxed);
+            if !found.is_empty() {
+                let mut cache = self.cache.lock().unwrap();
+                for (g, d) in found {
+                    if cache.insert(g, d).is_none() {
+                        inserted += 1;
+                    }
+                }
+            }
+            to_run
+        } else {
+            missing
+        };
+        if !to_run.is_empty() {
             let computed =
-                self.eval.evaluate_train_batch(self.rule, &misses, &self.executor);
+                self.eval.evaluate_train_batch(self.rule, &to_run, &self.executor);
+            if let Some(p) = &self.persist {
+                // Best-effort write-back; failures are counted on the
+                // cache and the evaluation proceeds uncached.
+                for (g, d) in to_run.iter().zip(&computed) {
+                    let _ = p.cache.store(&p.genome_key(g), d);
+                }
+            }
             let mut cache = self.cache.lock().unwrap();
-            for (g, d) in misses.into_iter().zip(computed) {
+            for (g, d) in to_run.into_iter().zip(computed) {
                 if cache.insert(g, d).is_none() {
                     inserted += 1;
                 }

@@ -81,6 +81,11 @@ pub struct SuiteConfig {
     /// Restrict the run to these benchmarks, in order. `None` runs the
     /// full Table II suite ([`bench_suite::table2`]).
     pub benchmarks: Option<Vec<String>>,
+    /// Content-addressed cross-run result cache (`--cache-dir`),
+    /// shared with `neat serve`. When set, the Table VI tuner searches
+    /// resolve repeated configurations through
+    /// [`crate::service::cache::ResultCache`] instead of the engine.
+    pub cache_dir: Option<PathBuf>,
 }
 
 impl SuiteConfig {
@@ -95,6 +100,7 @@ impl SuiteConfig {
             run_dir: None,
             resume: false,
             benchmarks: None,
+            cache_dir: None,
         }
     }
 }

@@ -63,6 +63,14 @@
 //! * [`cnn`] + [`runtime`] — the LeNet-5 case study: the AOT-compiled
 //!   JAX/Pallas inference module executed via PJRT with per-layer
 //!   precision as a runtime input,
+//! * [`service`] — the always-on daemon (`neat serve`): an HTTP/JSON
+//!   front end over `std::net` accepts tuning/exploration jobs from
+//!   multiple tenants, schedules their shards fair-share over the same
+//!   worker pool and thread budget as `neat suite`, and promotes the
+//!   run artifact idea into a *content-addressed cross-run result
+//!   cache* (`service::cache`) consulted between the in-memory memo
+//!   and the engine — repeated popular configurations are cache reads,
+//!   across jobs, tenants, restarts, and the CLI,
 //! * [`stats`], [`report`], [`util`] — supporting math and I/O.
 //!
 //! Python appears only on the compile path (`python/compile/`); after
@@ -89,6 +97,7 @@ pub mod fpi;
 pub mod placement;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod stats;
 pub mod tuner;
 pub mod util;

@@ -8,6 +8,7 @@
 //! neat explore <benchmark> [options]   steps 2-6: search one benchmark
 //! neat tune <benchmark> [options]      constraint-driven heuristic tuning
 //! neat suite [options]                 sharded, resumable figure regeneration
+//! neat serve [options]                 always-on tuning daemon (HTTP/JSON)
 //! neat figure <id|all>                 regenerate a paper table/figure
 //! neat ablation <id|all>               DESIGN.md ablations
 //! neat list                            benchmarks + figure ids
@@ -26,6 +27,7 @@ use neat::explore::Objectives;
 use neat::fpi::Precision;
 use neat::report::ResultsDir;
 use neat::runtime::{ArtifactPaths, LenetRuntime};
+use neat::service::{http, Service, ServiceConfig};
 use neat::stats::lower_convex_hull;
 use neat::tuner::{DescentStrategy, HeldOutReport, TuneGoal, Tuner, TunerConfig};
 
@@ -50,11 +52,24 @@ fn usage() -> &'static str {
                 --test-seeds re-evaluates the tuned config on held-out seeds\n\
                 and reports the constraint overshoot)\n\
        suite   [--run-dir DIR] [--resume] [--shard-threads N] [--threads N]\n\
-               [--benchmarks a,b,c]            regenerate every figure with the\n\
+               [--benchmarks a,b,c] [--cache-dir DIR]\n\
+                                               regenerate every figure with the\n\
                                                benchmark walk sharded across the\n\
                                                worker pool; completed shards are\n\
                                                written as resumable artifacts under\n\
-                                               --run-dir and skipped on --resume\n\
+                                               --run-dir and skipped on --resume;\n\
+                                               --cache-dir routes the Table VI tuner\n\
+                                               searches through the content-addressed\n\
+                                               result cache shared with `neat serve`\n\
+       serve   [--addr HOST:PORT] [--threads N] [--shard-threads N]\n\
+               [--cache-dir DIR] [--run-dir DIR]\n\
+                                               always-on daemon: accepts tuning /\n\
+                                               exploration jobs over HTTP/JSON\n\
+                                               (default 127.0.0.1:4517), schedules\n\
+                                               tenants fair-share over the worker\n\
+                                               pool, serves repeated configurations\n\
+                                               from the content-addressed cache, and\n\
+                                               parks queued jobs on POST /shutdown\n\
        figure  <id|all>                        fig1 fig4 fig5 fig6 fig7 fig8\n\
                                                fig9 fig10 fig11 table1 table2\n\
                                                table3 table5 table6\n\
@@ -83,7 +98,7 @@ fn parse_args(raw: &[String]) -> Args {
         let a = &raw[i];
         if let Some(name) = a.strip_prefix("--") {
             // value-taking flags; everything else is a switch
-            const VALUED: [&str; 17] = [
+            const VALUED: [&str; 19] = [
                 "rule",
                 "target",
                 "population",
@@ -101,6 +116,8 @@ fn parse_args(raw: &[String]) -> Args {
                 "descent",
                 "exchange-moves",
                 "exchange-partners",
+                "addr",
+                "cache-dir",
             ];
             if VALUED.contains(&name) && i + 1 < raw.len() {
                 flags.insert(name.to_string(), raw[i + 1].clone());
@@ -484,6 +501,7 @@ fn cmd_suite(args: &Args) -> Result<()> {
     cfg.benchmarks = args.flags.get("benchmarks").map(|s| {
         s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect()
     });
+    cfg.cache_dir = args.flags.get("cache-dir").map(std::path::PathBuf::from);
     let run_dir = cfg.run_dir.clone().expect("run dir set above");
     let resume = cfg.resume;
     let runner = SuiteRunner::new(cfg);
@@ -503,6 +521,45 @@ fn cmd_suite(args: &Args) -> Result<()> {
     println!("{text}");
     eprintln!("[neat] run artifacts under {}", run_dir.display());
     eprintln!("[neat] CSV outputs under {}", rd.root().display());
+    Ok(())
+}
+
+/// `neat serve` — the always-on precision-tuning daemon: HTTP/JSON job
+/// intake, fair-share multi-tenant scheduling over the worker pool, and
+/// the content-addressed cross-run result cache.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let rd = args.results()?;
+    let mut cfg = ServiceConfig::new();
+    cfg.threads = args.executor().threads();
+    cfg.shard_threads = args.flags.get("shard-threads").and_then(|v| v.parse().ok());
+    cfg.cache_dir = Some(
+        args.flags
+            .get("cache-dir")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| rd.path("service_cache")),
+    );
+    cfg.run_dir = Some(
+        args.flags
+            .get("run-dir")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| rd.path("service_run")),
+    );
+    let addr = args.flags.get("addr").map(String::as_str).unwrap_or("127.0.0.1:4517");
+    let listener =
+        std::net::TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let service = Service::start(cfg)?;
+    let resumed = service.resume_parked()?;
+    if resumed > 0 {
+        eprintln!("[neat] resumed {resumed} parked job(s)");
+    }
+    let (runners, shard_threads) = service.thread_plan();
+    eprintln!(
+        "[neat] serving on http://{}  ({runners} runner(s) x {shard_threads} thread(s) each; \
+         POST /shutdown for graceful shutdown)",
+        listener.local_addr()?
+    );
+    http::serve(&service, listener)?;
+    eprintln!("[neat] service stopped");
     Ok(())
 }
 
@@ -527,7 +584,18 @@ fn cmd_figure(args: &Args) -> Result<()> {
                 "fig5" => experiments::fig5(&rd, &suite)?,
                 "fig6" => experiments::fig6(&rd, &suite)?,
                 "fig7" => experiments::fig7(&rd, &suite)?,
-                "table6" => experiments::table6(&rd, &suite, budget, &exec, &mut log)?,
+                "table6" => {
+                    // --cache-dir shares the content-addressed result
+                    // cache with `neat serve` / `neat suite`
+                    let cache = match args.flags.get("cache-dir") {
+                        Some(d) => Some(std::sync::Arc::new(
+                            neat::service::cache::ResultCache::new(d)
+                                .with_context(|| format!("opening cache at {d}"))?,
+                        )),
+                        None => None,
+                    };
+                    experiments::table6(&rd, &suite, budget, &exec, cache.as_ref(), &mut log)?
+                }
                 _ => experiments::table3(&rd, &suite, &exec, &mut log)?,
             }
         }
@@ -593,6 +661,7 @@ fn main() -> ExitCode {
         "explore" => cmd_explore(&args),
         "tune" => cmd_tune(&args),
         "suite" => cmd_suite(&args),
+        "serve" => cmd_serve(&args),
         "figure" => cmd_figure(&args),
         "ablation" => cmd_ablation(&args),
         "" | "help" | "--help" | "-h" => {

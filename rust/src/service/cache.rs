@@ -1,0 +1,329 @@
+//! Content-addressed cross-run result cache.
+//!
+//! The determinism contract makes every configuration evaluation a pure
+//! function of `(workload id + version, placement rule, genome, seed
+//! set, engine mode)` — batching, sharding, and the lane tier change
+//! *scheduling, never values*. That makes results safely cacheable
+//! forever: this module generalizes the PR 1 per-process genome memo
+//! cache into a persistent store shared across runs, processes, and
+//! daemon restarts.
+//!
+//! Layout: one flat JSON file per entry under a two-hex-char fanout
+//! directory, named by the fingerprint of the entry's canonical key.
+//! Writes use the same atomic temp-file + rename discipline as the
+//! suite run artifacts, entries carry a `"complete": 1` marker plus the
+//! full canonical key, and *any* defect on load — torn file, truncated
+//! field, fingerprint collision, schema drift — is treated as a miss,
+//! never a panic: the caller simply re-evaluates and overwrites.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::EvalDetail;
+use crate::explore::Genome;
+use crate::util::kv;
+
+/// On-disk schema version of a cache entry.
+pub const CACHE_SCHEMA: u32 = 1;
+
+/// The engine mode baked into this binary, as a cache-key field: the
+/// lane tier is bit-identical to block mode by contract, but keying on
+/// it means a contract regression can never serve cross-mode results.
+pub fn engine_mode() -> &'static str {
+    if cfg!(feature = "lanes") {
+        "lanes"
+    } else {
+        "block"
+    }
+}
+
+/// A cache key: an unordered set of named string fields.
+///
+/// The canonical form sorts fields by name, so two call sites that
+/// assemble the same fields in different orders produce the same
+/// fingerprint (pinned by `integration_service.rs`). Field names and
+/// values are generated internally (workload names, rule names, decimal
+/// seed lists, `|`-joined genomes) and never contain `=` or `;`, so the
+/// canonical join needs no escaping.
+#[derive(Debug, Clone, Default)]
+pub struct CacheKey {
+    fields: Vec<(String, String)>,
+}
+
+impl CacheKey {
+    /// An empty key.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a named field (builder style).
+    pub fn field(mut self, name: &str, value: impl std::fmt::Display) -> Self {
+        self.fields.push((name.to_string(), value.to_string()));
+        self
+    }
+
+    /// Add a genome field in the suite artifacts' `a|b|c` form.
+    pub fn genome(self, genome: &Genome) -> Self {
+        let joined =
+            genome.iter().map(|g| g.to_string()).collect::<Vec<_>>().join("|");
+        self.field("genome", joined)
+    }
+
+    /// The canonical (order-independent) text form: fields sorted by
+    /// name, rendered `name=value` and joined with `;`.
+    pub fn canonical(&self) -> String {
+        let mut fields = self.fields.clone();
+        fields.sort();
+        fields
+            .iter()
+            .map(|(n, v)| format!("{n}={v}"))
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+
+    /// 128-bit fingerprint of the canonical form as 32 hex chars: two
+    /// independent FNV-1a 64-bit lanes (different offset bases). Used as
+    /// the entry's file name; the stored canonical key is re-checked on
+    /// load so even a full fingerprint collision degrades to a miss.
+    pub fn fingerprint(&self) -> String {
+        let canon = self.canonical();
+        let a = fnv1a64(canon.as_bytes(), 0xcbf2_9ce4_8422_2325);
+        let b = fnv1a64(canon.as_bytes(), 0x9e37_79b9_7f4a_7c15);
+        format!("{a:016x}{b:016x}")
+    }
+}
+
+fn fnv1a64(bytes: &[u8], offset: u64) -> u64 {
+    let mut h = offset;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Counters a [`ResultCache`] accumulates over its lifetime.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheCounters {
+    /// Lookups answered from disk.
+    pub hits: u64,
+    /// Lookups that found no (valid) entry.
+    pub misses: u64,
+    /// Entries written.
+    pub stores: u64,
+    /// Store attempts that failed (cache stays best-effort).
+    pub store_errors: u64,
+}
+
+/// A persistent, content-addressed `CacheKey` → [`EvalDetail`] store.
+///
+/// Thread-safe and crash-safe: concurrent stores of the same key race
+/// benignly (atomic rename, and the determinism contract guarantees the
+/// racers carry identical bytes), and readers of a torn or stale entry
+/// get a miss.
+pub struct ResultCache {
+    dir: PathBuf,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    stores: AtomicU64,
+    store_errors: AtomicU64,
+    tmp_seq: AtomicU64,
+    /// Serializes directory creation (cheap; stores are file-sized).
+    mkdir: Mutex<()>,
+}
+
+impl ResultCache {
+    /// Open (creating if needed) a cache rooted at `dir`.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("create cache dir {}", dir.display()))?;
+        Ok(Self {
+            dir,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            stores: AtomicU64::new(0),
+            store_errors: AtomicU64::new(0),
+            tmp_seq: AtomicU64::new(0),
+            mkdir: Mutex::new(()),
+        })
+    }
+
+    /// The cache root directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn entry_path(&self, fingerprint: &str) -> PathBuf {
+        // Two-hex-char fanout keeps directories small at scale.
+        self.dir.join(&fingerprint[..2]).join(format!("{fingerprint}.json"))
+    }
+
+    /// Look `key` up. Any defect in the stored entry is a miss.
+    pub fn lookup(&self, key: &CacheKey) -> Option<EvalDetail> {
+        let found = self.lookup_inner(key);
+        match found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    fn lookup_inner(&self, key: &CacheKey) -> Option<EvalDetail> {
+        let path = self.entry_path(&key.fingerprint());
+        let text = fs::read_to_string(path).ok()?;
+        let meta = kv::parse(&text);
+        if meta.numbers.get("schema").copied() != Some(CACHE_SCHEMA as f64) {
+            return None;
+        }
+        if meta.numbers.get("complete").copied() != Some(1.0) {
+            return None;
+        }
+        if meta.strings.get("key").map(String::as_str) != Some(key.canonical().as_str()) {
+            return None; // fingerprint collision or foreign entry
+        }
+        let bits = |name: &str| -> Option<f64> {
+            let hex = meta.strings.get(name)?;
+            u64::from_str_radix(hex, 16).ok().map(f64::from_bits)
+        };
+        Some(EvalDetail {
+            error: bits("error")?,
+            fpu_nec: bits("fpu_nec")?,
+            mem_nec: bits("mem_nec")?,
+            fpu_target_nec: bits("fpu_target_nec")?,
+        })
+    }
+
+    /// Store `detail` under `key` with atomic temp-file + rename.
+    ///
+    /// Best-effort by design: callers on the evaluation path count
+    /// failures (see [`ResultCache::counters`]) but do not abort — a
+    /// cache that cannot persist degrades to the uncached behavior.
+    pub fn store(&self, key: &CacheKey, detail: &EvalDetail) -> Result<()> {
+        let r = self.store_inner(key, detail);
+        match r {
+            Ok(()) => self.stores.fetch_add(1, Ordering::Relaxed),
+            Err(_) => self.store_errors.fetch_add(1, Ordering::Relaxed),
+        };
+        r
+    }
+
+    fn store_inner(&self, key: &CacheKey, detail: &EvalDetail) -> Result<()> {
+        let fp = key.fingerprint();
+        let path = self.entry_path(&fp);
+        let parent = path.parent().expect("entry path has fanout parent");
+        {
+            let _g = self.mkdir.lock().unwrap();
+            fs::create_dir_all(parent)
+                .with_context(|| format!("create {}", parent.display()))?;
+        }
+        // Objective values are stored as exact f64 bit patterns, the
+        // same discipline as the suite archives: the cache must be
+        // byte-faithful or the determinism tests would see it.
+        let body = format!(
+            "{{\n  \"schema\": {CACHE_SCHEMA},\n  \"key\": \"{}\",\n  \
+             \"error\": \"{:016x}\",\n  \"fpu_nec\": \"{:016x}\",\n  \
+             \"mem_nec\": \"{:016x}\",\n  \"fpu_target_nec\": \"{:016x}\",\n  \
+             \"complete\": 1\n}}\n",
+            key.canonical(),
+            detail.error.to_bits(),
+            detail.fpu_nec.to_bits(),
+            detail.mem_nec.to_bits(),
+            detail.fpu_target_nec.to_bits(),
+        );
+        let seq = self.tmp_seq.fetch_add(1, Ordering::Relaxed);
+        let tmp = parent.join(format!("{fp}.tmp.{}.{seq}", std::process::id()));
+        fs::write(&tmp, body).with_context(|| format!("write {}", tmp.display()))?;
+        fs::rename(&tmp, &path)
+            .with_context(|| format!("rename into {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Lifetime counters.
+    pub fn counters(&self) -> CacheCounters {
+        CacheCounters {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            stores: self.stores.load(Ordering::Relaxed),
+            store_errors: self.store_errors.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Number of complete entries on disk (walks the fanout dirs; test
+    /// and bench helper, not a hot-path call).
+    pub fn entries(&self) -> usize {
+        let Ok(fanout) = fs::read_dir(&self.dir) else { return 0 };
+        let mut n = 0;
+        for sub in fanout.flatten() {
+            let Ok(files) = fs::read_dir(sub.path()) else { continue };
+            n += files
+                .flatten()
+                .filter(|f| f.path().extension().is_some_and(|e| e == "json"))
+                .count();
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn detail() -> EvalDetail {
+        EvalDetail { error: 0.015625, fpu_nec: 0.75, mem_nec: 0.875, fpu_target_nec: 0.5 }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("neat_cache_unit_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn canonical_sorts_fields() {
+        let a = CacheKey::new().field("b", 2).field("a", 1);
+        let b = CacheKey::new().field("a", 1).field("b", 2);
+        assert_eq!(a.canonical(), "a=1;b=2");
+        assert_eq!(a.canonical(), b.canonical());
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_separates_values() {
+        let a = CacheKey::new().field("workload", "kmeans").field("v", 1);
+        let b = CacheKey::new().field("workload", "kmeans").field("v", 2);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn store_then_lookup_roundtrips_bits() {
+        let cache = ResultCache::new(tmp_dir("roundtrip")).unwrap();
+        let key = CacheKey::new().field("w", "bs").genome(&vec![4, 8, 24]);
+        assert!(cache.lookup(&key).is_none());
+        cache.store(&key, &detail()).unwrap();
+        let got = cache.lookup(&key).expect("hit after store");
+        assert_eq!(got.error.to_bits(), detail().error.to_bits());
+        assert_eq!(got.fpu_target_nec.to_bits(), detail().fpu_target_nec.to_bits());
+        let c = cache.counters();
+        assert_eq!((c.hits, c.misses, c.stores), (1, 1, 1));
+        assert_eq!(cache.entries(), 1);
+    }
+
+    #[test]
+    fn mismatched_stored_key_is_a_miss() {
+        let cache = ResultCache::new(tmp_dir("collide")).unwrap();
+        let key = CacheKey::new().field("w", "bs");
+        cache.store(&key, &detail()).unwrap();
+        // Overwrite the entry body with a different canonical key but
+        // the colliding file name: must be refused, not served.
+        let path = cache.entry_path(&key.fingerprint());
+        let text = fs::read_to_string(&path).unwrap().replace("w=bs", "w=km");
+        fs::write(&path, text).unwrap();
+        assert!(cache.lookup(&key).is_none());
+    }
+}

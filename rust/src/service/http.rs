@@ -1,0 +1,169 @@
+//! Dependency-light HTTP/JSON front end for the daemon.
+//!
+//! A deliberately tiny HTTP/1.1 server over `std::net::TcpListener` —
+//! no async runtime, no external crates. One request per connection
+//! (`Connection: close`), flat JSON in and out (the same forgiving
+//! [`kv`] dialect the artifact store uses), localhost by default.
+//!
+//! Routes:
+//!
+//! | Route             | Meaning                                          |
+//! |-------------------|--------------------------------------------------|
+//! | `GET /healthz`    | liveness — `{"ok":1}`                            |
+//! | `GET /stats`      | [`Service::stats_json`]: throughput, queue wait, cache hit-rate, per-tenant service |
+//! | `POST /jobs`      | submit a job ([`spec_from_meta`] fields) — `{"ok":1,"id":N}` |
+//! | `GET /jobs/<id>`  | [`JobSnapshot::to_json`](super::JobSnapshot::to_json): state, shard/wave progress, cache hits, outputs |
+//! | `POST /shutdown`  | graceful shutdown: park queued jobs, finish in-flight shards, then `{"ok":1,"parked":K}` |
+//!
+//! The accept loop is single-threaded: handlers only touch the job
+//! registry and scheduler queues (the runner threads do all the heavy
+//! work), so each request is serviced in microseconds and a serial
+//! loop keeps the server trivially race-free.
+
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use crate::util::kv;
+
+use super::{json_escape, spec_from_meta, Service};
+
+/// Read cap for request heads (64 KiB) and bodies (1 MiB).
+const MAX_HEAD: usize = 64 * 1024;
+const MAX_BODY: usize = 1024 * 1024;
+
+/// Run the accept loop until [`Service::shutdown`] is triggered
+/// (usually by `POST /shutdown`); returns once the loop exits.
+pub fn serve(service: &Service, listener: TcpListener) -> io::Result<()> {
+    listener.set_nonblocking(true)?;
+    loop {
+        if service.is_shutdown() {
+            return Ok(());
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // a broken client connection must not take the daemon down
+                let _ = handle(service, stream);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(25)),
+        }
+    }
+}
+
+fn handle(service: &Service, mut stream: TcpStream) -> io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    let (method, path, body) = read_request(&mut stream)?;
+    let (status, payload) = route(service, &method, &path, &body);
+    respond(&mut stream, status, &payload)
+}
+
+/// Dispatch one request; returns `(status code, JSON body)`.
+fn route(service: &Service, method: &str, path: &str, body: &[u8]) -> (u16, String) {
+    match (method, path) {
+        ("GET", "/healthz") => (200, "{\"ok\":1}".to_string()),
+        ("GET", "/stats") => (200, service.stats_json()),
+        ("GET", p) if p.starts_with("/jobs/") => match p["/jobs/".len()..].parse::<u64>() {
+            Ok(id) => match service.status(id) {
+                Some(snap) => (200, snap.to_json()),
+                None => (404, format!("{{\"error\":\"no job {id}\"}}")),
+            },
+            Err(_) => (400, "{\"error\":\"bad job id\"}".to_string()),
+        },
+        ("POST", "/jobs") => {
+            let text = String::from_utf8_lossy(body);
+            match spec_from_meta(&kv::parse(&text)).and_then(|s| service.submit(s)) {
+                Ok(id) => (200, format!("{{\"ok\":1,\"id\":{id}}}")),
+                Err(e) => {
+                    (400, format!("{{\"error\":\"{}\"}}", json_escape(&format!("{e:#}"))))
+                }
+            }
+        }
+        ("POST", "/shutdown") => {
+            // parks queued jobs and waits out in-flight shards, so the
+            // response doubles as the "fully drained" acknowledgment
+            let parked = service.shutdown();
+            (200, format!("{{\"ok\":1,\"parked\":{}}}", parked.len()))
+        }
+        _ => (404, "{\"error\":\"no such route\"}".to_string()),
+    }
+}
+
+/// Parse one request: `(METHOD, path, body)`.
+fn read_request(stream: &mut TcpStream) -> io::Result<(String, String, Vec<u8>)> {
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let head_end = loop {
+        if let Some(pos) = find(&buf, b"\r\n\r\n") {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "request head too large"));
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "truncated request"));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+    let mut lines = head.lines();
+    let mut request = lines.next().unwrap_or("").split_whitespace();
+    let method = request.next().unwrap_or("").to_ascii_uppercase();
+    let path = request.next().unwrap_or("").to_string();
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let content_length = content_length.min(MAX_BODY);
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    Ok((method, path, body))
+}
+
+fn find(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+fn respond(stream: &mut TcpStream, status: u16, body: &str) -> io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn find_locates_head_separator() {
+        assert_eq!(find(b"GET / HTTP/1.1\r\n\r\nbody", b"\r\n\r\n"), Some(14));
+        assert_eq!(find(b"no separator", b"\r\n\r\n"), None);
+    }
+}

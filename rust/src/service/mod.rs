@@ -1,0 +1,1166 @@
+//! The always-on precision-tuning service (`neat serve`).
+//!
+//! Everything a server needs already existed in one-shot form — the
+//! persistent [`coordinator::pool`](crate::coordinator::pool) worker
+//! pool, the sharded suite scheduler, resumable atomic artifacts, the
+//! per-problem genome memo cache. This module keeps those pieces alive
+//! across requests:
+//!
+//! * [`Service`] — job registry + runner threads. Each accepted job is
+//!   decomposed into shards (a tune/probe/explore is one shard; a
+//!   multi-benchmark sweep is one shard per benchmark) and queued on a
+//!   per-tenant fair-share [`sched::Scheduler`], so a long Table-VI
+//!   style sweep cannot starve a one-genome probe. Runner threads —
+//!   `concurrent_shards` of them, each owning an [`Executor`] with
+//!   `shard_threads` workers — keep the whole daemon under one global
+//!   thread budget, exactly like `neat suite`.
+//! * [`cache::ResultCache`] — the content-addressed cross-run result
+//!   cache. Attached via [`EvalProblem::with_cache`], it is consulted
+//!   after the per-problem memo cache and before the engine, and every
+//!   fresh result is written back, so repeated popular configurations
+//!   never touch the engine — across jobs, tenants, restarts, and the
+//!   CLI (`neat suite --cache-dir` shares the same store).
+//! * [`http`] — a dependency-light localhost HTTP/JSON front end over
+//!   `std::net::TcpListener` (no async runtime): submit jobs, poll
+//!   status/progress (waves, shards, cache hits), scrape `/stats`,
+//!   trigger graceful shutdown.
+//! * Graceful shutdown parks still-queued jobs as atomic JSON artifacts
+//!   under `run_dir/parked/`; [`Service::resume_parked`] re-queues them
+//!   on the next start, and the content-addressed cache makes replaying
+//!   any already-computed shard nearly free.
+//!
+//! Determinism: a job executed through the daemon yields byte-identical
+//! results to the same job through `neat tune`/`neat explore` — the
+//! scheduler, the cache, and the thread budget change *scheduling,
+//! never values* (pinned by `tests/integration_service.rs`).
+
+pub mod cache;
+pub mod http;
+pub mod sched;
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::bench_suite;
+use crate::coordinator::{suite, EvalDetail, EvalProblem, Evaluator, Executor, RuleKind};
+use crate::explore::{Genome, Nsga2, Nsga2Params, Objectives};
+use crate::fpi::Precision;
+use crate::tuner::{TuneGoal, Tuner, TunerConfig};
+use crate::util::kv;
+
+use cache::ResultCache;
+use sched::Scheduler;
+
+/// On-disk schema version of a parked-job artifact.
+pub const PARK_SCHEMA: u32 = 1;
+
+/// Daemon configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Global thread budget shared by every tenant (`--threads`).
+    pub threads: usize,
+    /// Executor workers per shard (`--shard-threads`); `None` favors
+    /// shard concurrency, like the suite planner.
+    pub shard_threads: Option<usize>,
+    /// Content-addressed result cache directory (`--cache-dir`).
+    /// `None` disables the persistent cache (memo caches still apply).
+    pub cache_dir: Option<PathBuf>,
+    /// Directory for parked-job artifacts (`--run-dir`). `None`
+    /// disables parking: a shutdown drops queued jobs.
+    pub run_dir: Option<PathBuf>,
+}
+
+impl ServiceConfig {
+    /// All cores, no persistent cache, no parking.
+    pub fn new() -> Self {
+        Self {
+            threads: Executor::default_parallel().threads(),
+            shard_threads: None,
+            cache_dir: None,
+            run_dir: None,
+        }
+    }
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// What a job asks the daemon to run.
+#[derive(Debug, Clone)]
+pub enum JobKind {
+    /// Evaluate one configuration (the latency-sensitive request).
+    Probe {
+        /// Benchmark name ([`bench_suite::by_name`]).
+        benchmark: String,
+        /// Placement rule.
+        rule: RuleKind,
+        /// The configuration to evaluate.
+        genome: Genome,
+    },
+    /// One constraint-driven tuner search.
+    Tune {
+        /// Benchmark name.
+        benchmark: String,
+        /// Placement rule.
+        rule: RuleKind,
+        /// Tuning constraint.
+        goal: TuneGoal,
+        /// Evaluation budget (unique configurations).
+        max_evals: usize,
+    },
+    /// One NSGA-II exploration (WP uses the exhaustive sweep).
+    Explore {
+        /// Benchmark name.
+        benchmark: String,
+        /// Placement rule.
+        rule: RuleKind,
+        /// NSGA-II population.
+        population: usize,
+        /// NSGA-II generations.
+        generations: usize,
+        /// Search seed.
+        seed: u64,
+    },
+    /// A Table-VI style multi-benchmark tuning sweep: one shard per
+    /// benchmark, scheduled independently so other tenants interleave.
+    Sweep {
+        /// Benchmark names, one shard each.
+        benchmarks: Vec<String>,
+        /// Placement rule.
+        rule: RuleKind,
+        /// Tuning constraint.
+        goal: TuneGoal,
+        /// Evaluation budget per benchmark.
+        max_evals: usize,
+    },
+}
+
+/// A submitted job: who wants what, how urgently.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Tenant name — the fair-share accounting bucket.
+    pub tenant: String,
+    /// Fair-share weight (≥ 1): a priority-2 tenant is entitled to
+    /// twice the service of a priority-1 tenant under contention.
+    pub priority: u32,
+    /// Optimization target override (`None` = workload default).
+    pub target: Option<Precision>,
+    /// The work itself.
+    pub kind: JobKind,
+}
+
+/// Job lifecycle states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Queued, no shard has started.
+    Queued,
+    /// At least one shard is (or was) executing.
+    Running,
+    /// All shards finished.
+    Done,
+    /// A shard errored or panicked; see [`JobSnapshot::error`].
+    Failed,
+    /// Shut down before completion; re-submittable from the parked
+    /// artifact (completed shards replay from the result cache).
+    Parked,
+}
+
+impl JobState {
+    /// Stable lowercase name for the HTTP API.
+    pub fn name(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Parked => "parked",
+        }
+    }
+
+    /// Whether the job will make no further progress.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Parked)
+    }
+}
+
+/// A tuner shard's result.
+#[derive(Debug, Clone)]
+pub struct TuneOutcome {
+    /// Benchmark tuned.
+    pub benchmark: String,
+    /// The tuned configuration.
+    pub genome: Genome,
+    /// Its training objectives.
+    pub objectives: Objectives,
+    /// Whether the goal's constraint was met.
+    pub feasible: bool,
+    /// `evaluate_batch` round-trips used.
+    pub waves: usize,
+    /// Unique configurations probed.
+    pub probes: usize,
+}
+
+/// One completed shard's output.
+#[derive(Debug, Clone)]
+pub enum ShardOutput {
+    /// From [`JobKind::Tune`] / [`JobKind::Sweep`].
+    Tune(TuneOutcome),
+    /// From [`JobKind::Probe`].
+    Probe {
+        /// The evaluated configuration.
+        genome: Genome,
+        /// Its full evaluation detail.
+        detail: EvalDetail,
+    },
+    /// From [`JobKind::Explore`].
+    Explore {
+        /// Configurations recorded by the search.
+        evaluations: usize,
+        /// Pareto front (error vs FPU NEC), capped at 16 entries for
+        /// the status payload.
+        front: Vec<(Genome, EvalDetail)>,
+    },
+}
+
+/// A point-in-time copy of a job's progress (the `/jobs/<id>` payload).
+#[derive(Debug, Clone)]
+pub struct JobSnapshot {
+    /// Job id.
+    pub id: u64,
+    /// Owning tenant.
+    pub tenant: String,
+    /// Lifecycle state.
+    pub state: JobState,
+    /// Shards the job decomposes into.
+    pub shards_total: usize,
+    /// Shards finished.
+    pub shards_done: usize,
+    /// Tuner `evaluate_batch` round-trips completed so far.
+    pub waves: usize,
+    /// Unique configurations probed so far.
+    pub probes: usize,
+    /// Persistent-cache hits across the job's shards.
+    pub cache_hits: usize,
+    /// Persistent-cache misses (configurations that reached the engine).
+    pub cache_misses: usize,
+    /// Completed shard outputs, shard order.
+    pub outputs: Vec<ShardOutput>,
+    /// First error, if the job failed.
+    pub error: Option<String>,
+}
+
+impl JobSnapshot {
+    /// Whether the job was served *entirely* from the persistent cache
+    /// — the "repeated popular configuration" fast path (at least one
+    /// lookup, zero engine evaluations).
+    pub fn cache_hit(&self) -> bool {
+        self.cache_hits > 0 && self.cache_misses == 0
+    }
+
+    /// Render as the HTTP status JSON.
+    pub fn to_json(&self) -> String {
+        let mut outputs = String::new();
+        for (i, o) in self.outputs.iter().enumerate() {
+            if i > 0 {
+                outputs.push(',');
+            }
+            outputs.push_str(&shard_output_json(o));
+        }
+        let error = match &self.error {
+            Some(e) => format!(",\"error\":\"{}\"", json_escape(e)),
+            None => String::new(),
+        };
+        format!(
+            "{{\"id\":{},\"tenant\":\"{}\",\"state\":\"{}\",\"shards_total\":{},\
+             \"shards_done\":{},\"waves\":{},\"probes\":{},\"cache_hits\":{},\
+             \"cache_misses\":{},\"cache_hit\":{},\"outputs\":[{}]{}}}",
+            self.id,
+            json_escape(&self.tenant),
+            self.state.name(),
+            self.shards_total,
+            self.shards_done,
+            self.waves,
+            self.probes,
+            self.cache_hits,
+            self.cache_misses,
+            if self.cache_hit() { "true" } else { "false" },
+            outputs,
+            error,
+        )
+    }
+}
+
+/// Render a genome in the artifact `a|b|c` form.
+pub fn genome_str(genome: &Genome) -> String {
+    genome.iter().map(|g| g.to_string()).collect::<Vec<_>>().join("|")
+}
+
+/// Parse the `a|b|c` genome form.
+pub fn parse_genome(text: &str) -> Option<Genome> {
+    if text.is_empty() {
+        return None;
+    }
+    text.split('|').map(|p| p.trim().parse::<u32>().ok()).collect()
+}
+
+pub(crate) fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push(' '),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn shard_output_json(o: &ShardOutput) -> String {
+    match o {
+        ShardOutput::Tune(t) => format!(
+            "{{\"kind\":\"tune\",\"benchmark\":\"{}\",\"genome\":\"{}\",\
+             \"error\":{},\"energy\":{},\"error_bits\":\"{:016x}\",\
+             \"energy_bits\":\"{:016x}\",\"feasible\":{},\"waves\":{},\"probes\":{}}}",
+            json_escape(&t.benchmark),
+            genome_str(&t.genome),
+            t.objectives.error,
+            t.objectives.energy,
+            t.objectives.error.to_bits(),
+            t.objectives.energy.to_bits(),
+            u8::from(t.feasible),
+            t.waves,
+            t.probes,
+        ),
+        ShardOutput::Probe { genome, detail } => format!(
+            "{{\"kind\":\"probe\",\"genome\":\"{}\",\"error\":{},\"fpu_nec\":{},\
+             \"mem_nec\":{},\"fpu_target_nec\":{},\"error_bits\":\"{:016x}\",\
+             \"fpu_nec_bits\":\"{:016x}\"}}",
+            genome_str(genome),
+            detail.error,
+            detail.fpu_nec,
+            detail.mem_nec,
+            detail.fpu_target_nec,
+            detail.error.to_bits(),
+            detail.fpu_nec.to_bits(),
+        ),
+        ShardOutput::Explore { evaluations, front } => {
+            let pts = front
+                .iter()
+                .map(|(g, d)| {
+                    format!(
+                        "{{\"genome\":\"{}\",\"error\":{},\"energy\":{}}}",
+                        genome_str(g),
+                        d.error,
+                        d.fpu_nec
+                    )
+                })
+                .collect::<Vec<_>>()
+                .join(",");
+            format!(
+                "{{\"kind\":\"explore\",\"evaluations\":{evaluations},\
+                 \"front_size\":{},\"front\":[{pts}]}}",
+                front.len()
+            )
+        }
+    }
+}
+
+/// Registry entry: one submitted job and its live progress counters.
+struct JobHandle {
+    id: u64,
+    spec: JobSpec,
+    state: Mutex<JobState>,
+    shards_total: usize,
+    shards_done: AtomicUsize,
+    waves: AtomicUsize,
+    probes: AtomicUsize,
+    cache_hits: AtomicUsize,
+    cache_misses: AtomicUsize,
+    outputs: Mutex<Vec<Option<ShardOutput>>>,
+    error: Mutex<Option<String>>,
+}
+
+impl JobHandle {
+    fn new(id: u64, spec: JobSpec) -> Self {
+        let shards_total = match &spec.kind {
+            JobKind::Sweep { benchmarks, .. } => benchmarks.len(),
+            _ => 1,
+        };
+        Self {
+            id,
+            spec,
+            state: Mutex::new(JobState::Queued),
+            shards_total,
+            shards_done: AtomicUsize::new(0),
+            waves: AtomicUsize::new(0),
+            probes: AtomicUsize::new(0),
+            cache_hits: AtomicUsize::new(0),
+            cache_misses: AtomicUsize::new(0),
+            outputs: Mutex::new((0..shards_total).map(|_| None).collect()),
+            error: Mutex::new(None),
+        }
+    }
+
+    fn snapshot(&self, tenant: &str) -> JobSnapshot {
+        let outputs: Vec<ShardOutput> =
+            self.outputs.lock().unwrap().iter().flatten().cloned().collect();
+        JobSnapshot {
+            id: self.id,
+            tenant: tenant.to_string(),
+            state: *self.state.lock().unwrap(),
+            shards_total: self.shards_total,
+            shards_done: self.shards_done.load(Ordering::Relaxed),
+            waves: self.waves.load(Ordering::Relaxed),
+            probes: self.probes.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            outputs,
+            error: self.error.lock().unwrap().clone(),
+        }
+    }
+
+    fn absorb(&self, problem: &EvalProblem<'_>) {
+        let (h, m) = problem.persist_stats();
+        self.cache_hits.fetch_add(h, Ordering::Relaxed);
+        self.cache_misses.fetch_add(m, Ordering::Relaxed);
+    }
+
+    fn finish_shard(&self, idx: usize, out: ShardOutput) {
+        self.outputs.lock().unwrap()[idx] = Some(out);
+        let done = self.shards_done.fetch_add(1, Ordering::Relaxed) + 1;
+        if done == self.shards_total {
+            let mut st = self.state.lock().unwrap();
+            if *st == JobState::Running || *st == JobState::Queued {
+                *st = JobState::Done;
+            }
+        }
+    }
+
+    fn fail(&self, msg: String) {
+        let mut err = self.error.lock().unwrap();
+        if err.is_none() {
+            *err = Some(msg);
+        }
+        let mut st = self.state.lock().unwrap();
+        if !st.is_terminal() {
+            *st = JobState::Failed;
+        }
+    }
+}
+
+/// One schedulable unit: a job plus which of its shards to run.
+struct Shard {
+    job: Arc<JobHandle>,
+    idx: usize,
+}
+
+struct QueueStats {
+    count: u64,
+    sum_ms: f64,
+    max_ms: f64,
+    recent: std::collections::VecDeque<f64>,
+}
+
+struct Metrics {
+    started: Instant,
+    jobs: AtomicUsize,
+    shards_done: AtomicUsize,
+    queue: Mutex<QueueStats>,
+}
+
+struct Inner {
+    cfg: ServiceConfig,
+    sched: Scheduler<Shard>,
+    cache: Option<Arc<ResultCache>>,
+    evaluators: Mutex<HashMap<String, Arc<Evaluator>>>,
+    jobs: Mutex<std::collections::BTreeMap<u64, Arc<JobHandle>>>,
+    next_id: AtomicU64,
+    shutdown: AtomicBool,
+    metrics: Metrics,
+    shard_threads: usize,
+    runners: usize,
+}
+
+impl Inner {
+    fn evaluator(&self, benchmark: &str, target: Option<Precision>) -> Result<Arc<Evaluator>> {
+        let key = format!(
+            "{benchmark}/{}",
+            target.map(|t| t.name()).unwrap_or("default")
+        );
+        if let Some(e) = self.evaluators.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        // Build outside the lock (profiling + baselines are the daemon's
+        // per-benchmark warmup cost); a racing duplicate build is pure
+        // and benign — first insert wins.
+        let w = bench_suite::by_name(benchmark)
+            .with_context(|| format!("unknown benchmark {benchmark}"))?;
+        let eval = Arc::new(Evaluator::new(w, target));
+        Ok(self.evaluators.lock().unwrap().entry(key).or_insert(eval).clone())
+    }
+
+    fn problem<'a>(
+        &self,
+        eval: &'a Evaluator,
+        rule: RuleKind,
+        exec: &Executor,
+    ) -> EvalProblem<'a> {
+        match &self.cache {
+            Some(c) => EvalProblem::with_cache(eval, rule, exec.clone(), c.clone()),
+            None => EvalProblem::with_executor(eval, rule, exec.clone()),
+        }
+    }
+
+    fn note_queue_wait(&self, ms: f64) {
+        let mut q = self.metrics.queue.lock().unwrap();
+        q.count += 1;
+        q.sum_ms += ms;
+        q.max_ms = q.max_ms.max(ms);
+        if q.recent.len() >= 512 {
+            q.recent.pop_front();
+        }
+        q.recent.push_back(ms);
+    }
+}
+
+fn run_tune_shard(
+    inner: &Inner,
+    exec: &Executor,
+    job: &JobHandle,
+    benchmark: &str,
+    rule: RuleKind,
+    goal: TuneGoal,
+    max_evals: usize,
+) -> Result<ShardOutput> {
+    let eval = inner.evaluator(benchmark, job.spec.target)?;
+    let problem = inner.problem(&eval, rule, exec);
+    let mut cfg = TunerConfig::new(goal);
+    cfg.max_evals = max_evals;
+    let r = Tuner::new(cfg).run(&problem);
+    job.waves.fetch_add(r.waves, Ordering::Relaxed);
+    job.probes.fetch_add(r.probes_used, Ordering::Relaxed);
+    job.absorb(&problem);
+    Ok(ShardOutput::Tune(TuneOutcome {
+        benchmark: benchmark.to_string(),
+        genome: r.genome,
+        objectives: r.objectives,
+        feasible: r.feasible,
+        waves: r.waves,
+        probes: r.probes_used,
+    }))
+}
+
+fn run_shard(inner: &Inner, exec: &Executor, job: &JobHandle, idx: usize) -> Result<ShardOutput> {
+    match &job.spec.kind {
+        JobKind::Probe { benchmark, rule, genome } => {
+            let eval = inner.evaluator(benchmark, job.spec.target)?;
+            let want = eval.genome_len(*rule);
+            if genome.len() != want {
+                bail!(
+                    "genome has {} genes; {} needs {want} for {benchmark}",
+                    genome.len(),
+                    rule.name()
+                );
+            }
+            let problem = inner.problem(&eval, *rule, exec);
+            use crate::explore::Problem as _;
+            let _ = problem.evaluate(genome);
+            let (g, d) = problem.take_details().pop().context("probe recorded no detail")?;
+            job.probes.fetch_add(1, Ordering::Relaxed);
+            job.absorb(&problem);
+            Ok(ShardOutput::Probe { genome: g, detail: d })
+        }
+        JobKind::Tune { benchmark, rule, goal, max_evals } => {
+            run_tune_shard(inner, exec, job, benchmark, *rule, *goal, *max_evals)
+        }
+        JobKind::Sweep { benchmarks, rule, goal, max_evals } => {
+            run_tune_shard(inner, exec, job, &benchmarks[idx], *rule, *goal, *max_evals)
+        }
+        JobKind::Explore { benchmark, rule, population, generations, seed } => {
+            let eval = inner.evaluator(benchmark, job.spec.target)?;
+            let problem = inner.problem(&eval, *rule, exec);
+            match rule {
+                RuleKind::Wp => {
+                    // single-gene space: exhaustive sweep, like the CLI
+                    use crate::explore::Problem as _;
+                    let sweep: Vec<Genome> =
+                        (1..=eval.target.mantissa_bits()).map(|k| vec![k]).collect();
+                    let _ = problem.evaluate_batch(&sweep);
+                }
+                _ => {
+                    let params = Nsga2Params {
+                        population: *population,
+                        generations: *generations,
+                        seed: *seed,
+                        ..Default::default()
+                    };
+                    Nsga2::new(params).run(&problem);
+                }
+            }
+            let details = problem.take_details();
+            job.probes.fetch_add(details.len(), Ordering::Relaxed);
+            job.absorb(&problem);
+            let evaluations = details.len();
+            let rr = crate::coordinator::experiments::RuleResult { rule: *rule, details };
+            let mut front = rr.front();
+            front.truncate(16);
+            Ok(ShardOutput::Explore { evaluations, front })
+        }
+    }
+}
+
+fn runner_loop(inner: Arc<Inner>) {
+    let mut exec = Executor::new(inner.shard_threads);
+    while let Some(popped) = inner.sched.pop_blocking() {
+        let sched::Popped { item, tenant, queued_ms } = popped;
+        inner.note_queue_wait(queued_ms);
+        let job = item.job;
+        {
+            let mut st = job.state.lock().unwrap();
+            if *st == JobState::Queued {
+                *st = JobState::Running;
+            }
+        }
+        let t0 = Instant::now();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_shard(&inner, &exec, &job, item.idx)
+        }));
+        match result {
+            Ok(Ok(out)) => job.finish_shard(item.idx, out),
+            Ok(Err(e)) => job.fail(format!("{e:#}")),
+            Err(_) => {
+                job.fail("shard panicked".to_string());
+                // a panic can leave the pool mid-teardown; start fresh
+                exec = Executor::new(inner.shard_threads);
+            }
+        }
+        inner.sched.complete(&tenant, t0.elapsed().as_secs_f64() * 1e3);
+        inner.metrics.shards_done.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// The daemon: job registry, fair-share scheduler, runner threads, and
+/// (optionally) the persistent result cache. See the module docs.
+pub struct Service {
+    inner: Arc<Inner>,
+    runners: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Service {
+    /// Start the runner threads and open the cache/park directories.
+    pub fn start(cfg: ServiceConfig) -> Result<Self> {
+        let cache = match &cfg.cache_dir {
+            Some(d) => Some(Arc::new(ResultCache::new(d)?)),
+            None => None,
+        };
+        if let Some(rd) = &cfg.run_dir {
+            fs::create_dir_all(rd.join("parked"))
+                .with_context(|| format!("create run dir {}", rd.display()))?;
+        }
+        // same planner as `neat suite`: the global budget splits into
+        // concurrent shards × per-shard executor workers
+        let plan = suite::plan_shards(cfg.threads, cfg.shard_threads, cfg.threads);
+        let inner = Arc::new(Inner {
+            cfg,
+            sched: Scheduler::new(),
+            cache,
+            evaluators: Mutex::new(HashMap::new()),
+            jobs: Mutex::new(std::collections::BTreeMap::new()),
+            next_id: AtomicU64::new(1),
+            shutdown: AtomicBool::new(false),
+            metrics: Metrics {
+                started: Instant::now(),
+                jobs: AtomicUsize::new(0),
+                shards_done: AtomicUsize::new(0),
+                queue: Mutex::new(QueueStats {
+                    count: 0,
+                    sum_ms: 0.0,
+                    max_ms: 0.0,
+                    recent: std::collections::VecDeque::new(),
+                }),
+            },
+            shard_threads: plan.shard_threads,
+            runners: plan.concurrent_shards,
+        });
+        let mut handles = Vec::new();
+        for i in 0..inner.runners {
+            let inner2 = inner.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("neat-runner-{i}"))
+                .spawn(move || runner_loop(inner2))
+                .context("spawn runner thread")?;
+            handles.push(h);
+        }
+        Ok(Self { inner, runners: Mutex::new(handles) })
+    }
+
+    /// The effective `(runner threads, executor workers per shard)`
+    /// split of the global budget.
+    pub fn thread_plan(&self) -> (usize, usize) {
+        (self.inner.runners, self.inner.shard_threads)
+    }
+
+    /// The attached persistent cache, if any.
+    pub fn cache(&self) -> Option<&Arc<ResultCache>> {
+        self.inner.cache.as_ref()
+    }
+
+    /// Whether shutdown has begun.
+    pub fn is_shutdown(&self) -> bool {
+        self.inner.shutdown.load(Ordering::Relaxed)
+    }
+
+    /// Validate and enqueue a job; returns its id.
+    pub fn submit(&self, spec: JobSpec) -> Result<u64> {
+        if self.is_shutdown() {
+            bail!("service is shutting down");
+        }
+        let benchmarks: Vec<&str> = match &spec.kind {
+            JobKind::Probe { benchmark, .. }
+            | JobKind::Tune { benchmark, .. }
+            | JobKind::Explore { benchmark, .. } => vec![benchmark.as_str()],
+            JobKind::Sweep { benchmarks, .. } => {
+                if benchmarks.is_empty() {
+                    bail!("sweep needs at least one benchmark");
+                }
+                benchmarks.iter().map(String::as_str).collect()
+            }
+        };
+        for b in benchmarks {
+            if bench_suite::by_name(b).is_none() {
+                bail!("unknown benchmark {b}");
+            }
+        }
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let tenant = spec.tenant.clone();
+        let weight = spec.priority.max(1) as f64;
+        let job = Arc::new(JobHandle::new(id, spec));
+        self.inner.jobs.lock().unwrap().insert(id, job.clone());
+        self.inner.metrics.jobs.fetch_add(1, Ordering::Relaxed);
+        for idx in 0..job.shards_total {
+            self.inner.sched.enqueue(&tenant, weight, Shard { job: job.clone(), idx });
+        }
+        Ok(id)
+    }
+
+    /// A job's current progress, or `None` for an unknown id.
+    pub fn status(&self, id: u64) -> Option<JobSnapshot> {
+        let job = self.inner.jobs.lock().unwrap().get(&id).cloned()?;
+        Some(job.snapshot(&job.spec.tenant))
+    }
+
+    /// Poll `id` until it reaches a terminal state or `timeout` passes;
+    /// returns the last snapshot either way (`None` = unknown id).
+    pub fn wait(&self, id: u64, timeout: Duration) -> Option<JobSnapshot> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let snap = self.status(id)?;
+            if snap.state.is_terminal() || Instant::now() >= deadline {
+                return Some(snap);
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    /// Per-tenant `(name, served_ms)` fairness snapshot.
+    pub fn tenant_served(&self) -> Vec<(String, f64)> {
+        self.inner.sched.served()
+    }
+
+    /// The `/stats` payload: uptime, throughput, queue latency,
+    /// per-tenant service, cache counters.
+    pub fn stats_json(&self) -> String {
+        let m = &self.inner.metrics;
+        let uptime = m.started.elapsed().as_secs_f64();
+        let shards = m.shards_done.load(Ordering::Relaxed);
+        let (mean, p50, max, samples) = {
+            let q = m.queue.lock().unwrap();
+            let mean = if q.count > 0 { q.sum_ms / q.count as f64 } else { 0.0 };
+            let mut recent: Vec<f64> = q.recent.iter().copied().collect();
+            recent.sort_by(f64::total_cmp);
+            let p50 = recent.get(recent.len() / 2).copied().unwrap_or(0.0);
+            (mean, p50, q.max_ms, q.count)
+        };
+        let cache = match &self.inner.cache {
+            Some(c) => {
+                let cc = c.counters();
+                let total = cc.hits + cc.misses;
+                let rate = if total > 0 { cc.hits as f64 / total as f64 } else { 0.0 };
+                format!(
+                    "{{\"hits\":{},\"misses\":{},\"stores\":{},\"store_errors\":{},\
+                     \"hit_rate\":{rate}}}",
+                    cc.hits, cc.misses, cc.stores, cc.store_errors
+                )
+            }
+            None => "null".to_string(),
+        };
+        let tenants = self
+            .inner
+            .sched
+            .served()
+            .into_iter()
+            .map(|(n, ms)| format!("\"{}\":{ms}", json_escape(&n)))
+            .collect::<Vec<_>>()
+            .join(",");
+        format!(
+            "{{\"uptime_s\":{uptime},\"jobs\":{},\"shards_done\":{shards},\
+             \"shards_per_sec\":{},\"pending_shards\":{},\
+             \"queue_wait_ms\":{{\"mean\":{mean},\"p50\":{p50},\"max\":{max},\
+             \"samples\":{samples}}},\"threads\":{},\"runners\":{},\
+             \"shard_threads\":{},\"cache\":{cache},\"tenants\":{{{tenants}}}}}",
+            m.jobs.load(Ordering::Relaxed),
+            if uptime > 0.0 { shards as f64 / uptime } else { 0.0 },
+            self.inner.sched.pending(),
+            self.inner.cfg.threads,
+            self.inner.runners,
+            self.inner.shard_threads,
+        )
+    }
+
+    /// Re-queue every parked-job artifact under `run_dir/parked/`
+    /// (deleting each artifact once re-queued); returns how many jobs
+    /// were resumed. Completed shards of a resumed job replay from the
+    /// content-addressed cache instead of the engine.
+    pub fn resume_parked(&self) -> Result<usize> {
+        let Some(rd) = &self.inner.cfg.run_dir else { return Ok(0) };
+        let dir = rd.join("parked");
+        let Ok(entries) = fs::read_dir(&dir) else { return Ok(0) };
+        let mut paths: Vec<PathBuf> = entries
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|e| e == "json"))
+            .collect();
+        paths.sort(); // deterministic re-queue order
+        let mut resumed = 0;
+        for p in paths {
+            let Ok(text) = fs::read_to_string(&p) else { continue };
+            let Some(spec) = spec_from_park(&kv::parse(&text)) else {
+                continue; // unreadable/foreign artifact: leave in place
+            };
+            self.submit(spec)?;
+            let _ = fs::remove_file(&p);
+            resumed += 1;
+        }
+        Ok(resumed)
+    }
+
+    /// Graceful shutdown: stop accepting jobs, park everything still
+    /// queued as resumable artifacts (when `run_dir` is set), let
+    /// in-flight shards finish, and join the runner threads. Returns
+    /// the parked job ids. Idempotent.
+    pub fn shutdown(&self) -> Vec<u64> {
+        if self.inner.shutdown.swap(true, Ordering::SeqCst) {
+            return Vec::new();
+        }
+        let drained = self.inner.sched.drain_and_shutdown();
+        // one park per job, even when several of its shards were queued
+        let mut parked: Vec<Arc<JobHandle>> = Vec::new();
+        for shard in drained {
+            if !parked.iter().any(|j| j.id == shard.job.id) {
+                parked.push(shard.job);
+            }
+        }
+        let mut ids = Vec::new();
+        for job in &parked {
+            {
+                let mut st = job.state.lock().unwrap();
+                if st.is_terminal() {
+                    continue;
+                }
+                *st = JobState::Parked;
+            }
+            ids.push(job.id);
+            if let Some(rd) = &self.inner.cfg.run_dir {
+                let path = rd.join("parked").join(format!("job_{}.json", job.id));
+                let tmp = rd.join("parked").join(format!("job_{}.json.tmp", job.id));
+                let body = park_json(&job.spec);
+                if fs::write(&tmp, body).and_then(|()| fs::rename(&tmp, &path)).is_err() {
+                    // parking is best-effort; the job is simply dropped
+                    let _ = fs::remove_file(&tmp);
+                }
+            }
+        }
+        let handles: Vec<_> = std::mem::take(&mut *self.runners.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        ids
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Serialize a spec as a parked-job artifact (kv-parseable flat JSON).
+fn park_json(spec: &JobSpec) -> String {
+    let mut fields = vec![
+        format!("\"schema\": {PARK_SCHEMA}"),
+        format!("\"tenant\": \"{}\"", json_escape(&spec.tenant)),
+        format!("\"priority\": {}", spec.priority),
+    ];
+    if let Some(t) = spec.target {
+        fields.push(format!("\"target\": \"{}\"", t.name()));
+    }
+    let goal_fields = |goal: &TuneGoal| {
+        let v = match goal {
+            TuneGoal::ErrorBudget(v) | TuneGoal::EnergyBudget(v) => *v,
+        };
+        // f64 Display is shortest-roundtrip, so the decimal form is
+        // exact through the kv number parser
+        vec![format!("\"goal\": \"{}\"", goal.name()), format!("\"budget\": {v}")]
+    };
+    match &spec.kind {
+        JobKind::Probe { benchmark, rule, genome } => {
+            fields.push("\"kind\": \"probe\"".to_string());
+            fields.push(format!("\"benchmark\": \"{}\"", json_escape(benchmark)));
+            fields.push(format!("\"rule\": \"{}\"", rule.name().to_lowercase()));
+            fields.push(format!("\"genome\": \"{}\"", genome_str(genome)));
+        }
+        JobKind::Tune { benchmark, rule, goal, max_evals } => {
+            fields.push("\"kind\": \"tune\"".to_string());
+            fields.push(format!("\"benchmark\": \"{}\"", json_escape(benchmark)));
+            fields.push(format!("\"rule\": \"{}\"", rule.name().to_lowercase()));
+            fields.extend(goal_fields(goal));
+            fields.push(format!("\"max_evals\": {max_evals}"));
+        }
+        JobKind::Explore { benchmark, rule, population, generations, seed } => {
+            fields.push("\"kind\": \"explore\"".to_string());
+            fields.push(format!("\"benchmark\": \"{}\"", json_escape(benchmark)));
+            fields.push(format!("\"rule\": \"{}\"", rule.name().to_lowercase()));
+            fields.push(format!("\"population\": {population}"));
+            fields.push(format!("\"generations\": {generations}"));
+            fields.push(format!("\"seed\": \"{seed}\""));
+        }
+        JobKind::Sweep { benchmarks, rule, goal, max_evals } => {
+            fields.push("\"kind\": \"sweep\"".to_string());
+            fields.push(format!(
+                "\"benchmarks\": \"{}\"",
+                json_escape(&benchmarks.join(","))
+            ));
+            fields.push(format!("\"rule\": \"{}\"", rule.name().to_lowercase()));
+            fields.extend(goal_fields(goal));
+            fields.push(format!("\"max_evals\": {max_evals}"));
+        }
+    }
+    fields.push("\"complete\": 1".to_string());
+    format!("{{\n  {}\n}}\n", fields.join(",\n  "))
+}
+
+/// Parse a placement rule name (HTTP + park artifacts).
+pub fn parse_rule(text: &str) -> Option<RuleKind> {
+    match text.to_ascii_lowercase().as_str() {
+        "wp" => Some(RuleKind::Wp),
+        "cip" => Some(RuleKind::Cip),
+        "fcs" => Some(RuleKind::Fcs),
+        _ => None,
+    }
+}
+
+/// Parse an optimization target name.
+pub fn parse_precision(text: &str) -> Option<Precision> {
+    match text.to_ascii_lowercase().as_str() {
+        "single" => Some(Precision::Single),
+        "double" => Some(Precision::Double),
+        _ => None,
+    }
+}
+
+/// Build a [`JobSpec`] from parsed flat JSON — the shared decoder for
+/// HTTP `POST /jobs` bodies and parked-job artifacts. See the README's
+/// `neat serve` quickstart for the field list.
+pub fn spec_from_meta(meta: &kv::FlatMeta) -> Result<JobSpec> {
+    let tenant = meta.strings.get("tenant").cloned().unwrap_or_else(|| "default".to_string());
+    let priority = meta.numbers.get("priority").copied().unwrap_or(1.0).max(1.0) as u32;
+    let target = match meta.strings.get("target") {
+        Some(t) => Some(parse_precision(t).with_context(|| format!("bad target {t}"))?),
+        None => None,
+    };
+    let rule = match meta.strings.get("rule") {
+        Some(r) => parse_rule(r).with_context(|| format!("bad rule {r}"))?,
+        None => RuleKind::Cip,
+    };
+    let goal = || -> TuneGoal {
+        let v = meta.numbers.get("budget").copied().unwrap_or(0.01);
+        match meta.strings.get("goal").map(String::as_str) {
+            Some("energy-budget") => TuneGoal::EnergyBudget(v),
+            _ => TuneGoal::ErrorBudget(v),
+        }
+    };
+    let max_evals = meta.numbers.get("max_evals").copied().unwrap_or(400.0).max(1.0) as usize;
+    let benchmark = || -> Result<String> {
+        meta.strings.get("benchmark").cloned().context("missing \"benchmark\"")
+    };
+    let kind = match meta.strings.get("kind").map(String::as_str).unwrap_or("tune") {
+        "tune" => JobKind::Tune { benchmark: benchmark()?, rule, goal: goal(), max_evals },
+        "probe" => {
+            let text = meta.strings.get("genome").context("probe needs \"genome\"")?;
+            let genome =
+                parse_genome(text).with_context(|| format!("bad genome {text}"))?;
+            JobKind::Probe { benchmark: benchmark()?, rule, genome }
+        }
+        "explore" => JobKind::Explore {
+            benchmark: benchmark()?,
+            rule,
+            population: meta.numbers.get("population").copied().unwrap_or(40.0).max(2.0)
+                as usize,
+            generations: meta.numbers.get("generations").copied().unwrap_or(9.0).max(1.0)
+                as usize,
+            seed: meta
+                .strings
+                .get("seed")
+                .and_then(|s| s.parse().ok())
+                .or_else(|| meta.numbers.get("seed").map(|&n| n as u64))
+                .unwrap_or(42),
+        },
+        "sweep" => {
+            let benchmarks: Vec<String> = meta
+                .strings
+                .get("benchmarks")
+                .context("sweep needs \"benchmarks\"")?
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            JobKind::Sweep { benchmarks, rule, goal: goal(), max_evals }
+        }
+        other => bail!("unknown job kind {other}"),
+    };
+    Ok(JobSpec { tenant, priority, target, kind })
+}
+
+/// Parse a parked-job artifact (requires the completion marker).
+fn spec_from_park(meta: &kv::FlatMeta) -> Option<JobSpec> {
+    if meta.numbers.get("schema").copied() != Some(PARK_SCHEMA as f64) {
+        return None;
+    }
+    if meta.numbers.get("complete").copied() != Some(1.0) {
+        return None;
+    }
+    spec_from_meta(meta).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn park_roundtrips_every_kind() {
+        let specs = vec![
+            JobSpec {
+                tenant: "a".into(),
+                priority: 2,
+                target: Some(Precision::Double),
+                kind: JobKind::Probe {
+                    benchmark: "kmeans".into(),
+                    rule: RuleKind::Wp,
+                    genome: vec![7],
+                },
+            },
+            JobSpec {
+                tenant: "b".into(),
+                priority: 1,
+                target: None,
+                kind: JobKind::Tune {
+                    benchmark: "blackscholes".into(),
+                    rule: RuleKind::Cip,
+                    goal: TuneGoal::ErrorBudget(0.01),
+                    max_evals: 120,
+                },
+            },
+            JobSpec {
+                tenant: "c".into(),
+                priority: 3,
+                target: None,
+                kind: JobKind::Explore {
+                    benchmark: "radar".into(),
+                    rule: RuleKind::Fcs,
+                    population: 12,
+                    generations: 4,
+                    seed: 99,
+                },
+            },
+            JobSpec {
+                tenant: "d".into(),
+                priority: 1,
+                target: None,
+                kind: JobKind::Sweep {
+                    benchmarks: vec!["kmeans".into(), "radar".into()],
+                    rule: RuleKind::Cip,
+                    goal: TuneGoal::EnergyBudget(0.5),
+                    max_evals: 80,
+                },
+            },
+        ];
+        for spec in specs {
+            let text = park_json(&spec);
+            let back = spec_from_park(&kv::parse(&text)).expect("parseable park artifact");
+            assert_eq!(back.tenant, spec.tenant);
+            assert_eq!(back.priority, spec.priority);
+            assert_eq!(format!("{:?}", back.kind), format!("{:?}", spec.kind));
+            assert_eq!(format!("{:?}", back.target), format!("{:?}", spec.target));
+        }
+    }
+
+    #[test]
+    fn park_without_complete_marker_is_rejected() {
+        let spec = JobSpec {
+            tenant: "a".into(),
+            priority: 1,
+            target: None,
+            kind: JobKind::Tune {
+                benchmark: "kmeans".into(),
+                rule: RuleKind::Cip,
+                goal: TuneGoal::ErrorBudget(0.1),
+                max_evals: 40,
+            },
+        };
+        let torn = park_json(&spec).replace("\"complete\": 1", "\"complete\": 0");
+        assert!(spec_from_park(&kv::parse(&torn)).is_none());
+    }
+
+    #[test]
+    fn snapshot_json_is_kv_parseable() {
+        let snap = JobSnapshot {
+            id: 7,
+            tenant: "t".into(),
+            state: JobState::Done,
+            shards_total: 1,
+            shards_done: 1,
+            waves: 3,
+            probes: 40,
+            cache_hits: 40,
+            cache_misses: 0,
+            outputs: vec![ShardOutput::Probe {
+                genome: vec![4, 8],
+                detail: EvalDetail {
+                    error: 0.25,
+                    fpu_nec: 0.5,
+                    mem_nec: 1.0,
+                    fpu_target_nec: 0.5,
+                },
+            }],
+            error: None,
+        };
+        let meta = kv::parse(&snap.to_json());
+        assert_eq!(meta.numbers["id"], 7.0);
+        assert_eq!(meta.strings["state"], "done");
+        assert_eq!(meta.numbers["cache_hits"], 40.0);
+        assert!(snap.cache_hit());
+    }
+}

@@ -1,0 +1,254 @@
+//! Multi-tenant fair-share shard scheduler.
+//!
+//! The daemon funnels every job's shards through one of these: a
+//! per-tenant FIFO queue plus a *deficit counter* — the weighted
+//! virtual service time each tenant has consumed. `pop` always serves
+//! the tenant with the least virtual time among those with work, so a
+//! long Table-VI sweep and a one-genome probe interleave at the ratio
+//! of their weights instead of strict arrival order: the sweep cannot
+//! starve the probe, and the probe cannot starve the sweep.
+//!
+//! The scheduler is generic over the queued item so the policy is
+//! unit-testable with plain integers; the service instantiates it with
+//! its shard type.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// A queued item handed back by [`Scheduler::pop_blocking`].
+pub struct Popped<T> {
+    /// The item.
+    pub item: T,
+    /// Owning tenant (pass back to [`Scheduler::complete`]).
+    pub tenant: String,
+    /// Milliseconds the item sat queued — the queue-latency sample.
+    pub queued_ms: f64,
+}
+
+struct Tenant<T> {
+    /// Fair-share weight (priority): a weight-2 tenant is entitled to
+    /// twice the service of a weight-1 tenant under contention.
+    weight: f64,
+    /// Total wall-clock milliseconds of shard execution charged.
+    served_ms: f64,
+    /// Shards currently executing on runner threads.
+    running: usize,
+    queue: VecDeque<(T, Instant)>,
+}
+
+impl<T> Tenant<T> {
+    fn vtime(&self) -> f64 {
+        self.served_ms / self.weight
+    }
+
+    fn active(&self) -> bool {
+        self.running > 0 || !self.queue.is_empty()
+    }
+}
+
+#[derive(Default)]
+struct Inner<T> {
+    /// BTreeMap so vtime ties break in stable (name) order.
+    tenants: BTreeMap<String, Tenant<T>>,
+    pending: usize,
+    shutdown: bool,
+}
+
+/// Deficit fair-share queue: see the module docs.
+pub struct Scheduler<T> {
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+}
+
+impl<T> Default for Scheduler<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Scheduler<T> {
+    /// An empty scheduler.
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(Inner { tenants: BTreeMap::new(), pending: 0, shutdown: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Queue `item` for `tenant` (created on first use) with the given
+    /// fair-share weight. A tenant returning from idle has its virtual
+    /// time caught up to the busiest-behind active tenant, so idling
+    /// banks no credit it could later burst with.
+    pub fn enqueue(&self, tenant: &str, weight: f64, item: T) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.shutdown {
+            return; // parked by the caller via drain_and_shutdown
+        }
+        let floor = inner
+            .tenants
+            .values()
+            .filter(|t| t.active())
+            .map(Tenant::vtime)
+            .fold(f64::INFINITY, f64::min);
+        let t = inner.tenants.entry(tenant.to_string()).or_insert_with(|| Tenant {
+            weight: 1.0,
+            served_ms: 0.0,
+            running: 0,
+            queue: VecDeque::new(),
+        });
+        t.weight = weight.max(f64::MIN_POSITIVE);
+        if !t.active() && floor.is_finite() {
+            t.served_ms = t.served_ms.max(floor * t.weight);
+        }
+        t.queue.push_back((item, Instant::now()));
+        inner.pending += 1;
+        drop(inner);
+        self.cv.notify_one();
+    }
+
+    /// Block until an item is available (fair-share order) or the
+    /// scheduler is shut down (`None`).
+    pub fn pop_blocking(&self) -> Option<Popped<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.shutdown {
+                return None;
+            }
+            let next = inner
+                .tenants
+                .iter()
+                .filter(|(_, t)| !t.queue.is_empty())
+                .min_by(|(_, a), (_, b)| a.vtime().total_cmp(&b.vtime()))
+                .map(|(name, _)| name.clone());
+            if let Some(name) = next {
+                let t = inner.tenants.get_mut(&name).expect("tenant exists");
+                let (item, since) = t.queue.pop_front().expect("queue non-empty");
+                t.running += 1;
+                inner.pending -= 1;
+                return Some(Popped {
+                    item,
+                    tenant: name,
+                    queued_ms: since.elapsed().as_secs_f64() * 1e3,
+                });
+            }
+            inner = self.cv.wait(inner).unwrap();
+        }
+    }
+
+    /// Charge `elapsed_ms` of service to `tenant` after its popped item
+    /// finished executing.
+    pub fn complete(&self, tenant: &str, elapsed_ms: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(t) = inner.tenants.get_mut(tenant) {
+            t.running = t.running.saturating_sub(1);
+            t.served_ms += elapsed_ms.max(0.0);
+        }
+    }
+
+    /// Items queued (not yet popped).
+    pub fn pending(&self) -> usize {
+        self.inner.lock().unwrap().pending
+    }
+
+    /// `(tenant, served_ms)` fairness snapshot, name order.
+    pub fn served(&self) -> Vec<(String, f64)> {
+        let inner = self.inner.lock().unwrap();
+        inner.tenants.iter().map(|(n, t)| (n.clone(), t.served_ms)).collect()
+    }
+
+    /// Shut down: wake every blocked popper (they get `None`) and hand
+    /// back all still-queued items so the caller can park them.
+    pub fn drain_and_shutdown(&self) -> Vec<T> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.shutdown = true;
+        let mut drained = Vec::new();
+        for t in inner.tenants.values_mut() {
+            while let Some((item, _)) = t.queue.pop_front() {
+                drained.push(item);
+            }
+        }
+        inner.pending = 0;
+        drop(inner);
+        self.cv.notify_all();
+        drained
+    }
+
+    /// Whether [`Scheduler::drain_and_shutdown`] has run.
+    pub fn is_shutdown(&self) -> bool {
+        self.inner.lock().unwrap().shutdown
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fair_share_interleaves_tenants() {
+        let s: Scheduler<u32> = Scheduler::new();
+        for i in 0..4 {
+            s.enqueue("bulk", 1.0, i);
+        }
+        s.enqueue("probe", 1.0, 100);
+        // bulk got in first, but after one unit of bulk service the
+        // probe's lower vtime must win the next pop.
+        let p1 = s.pop_blocking().unwrap();
+        assert_eq!(p1.tenant, "bulk");
+        s.complete("bulk", 10.0);
+        let p2 = s.pop_blocking().unwrap();
+        assert_eq!((p2.tenant.as_str(), p2.item), ("probe", 100));
+        s.complete("probe", 1.0);
+        assert_eq!(s.pop_blocking().unwrap().tenant, "bulk");
+    }
+
+    #[test]
+    fn weight_doubles_share() {
+        let s: Scheduler<u32> = Scheduler::new();
+        for i in 0..6 {
+            s.enqueue("heavy", 2.0, i);
+            s.enqueue("light", 1.0, 10 + i);
+        }
+        let mut heavy = 0;
+        for _ in 0..6 {
+            let p = s.pop_blocking().unwrap();
+            if p.tenant == "heavy" {
+                heavy += 1;
+            }
+            s.complete(&p.tenant, 10.0);
+        }
+        // weight 2 : 1 → heavy should take about 2/3 of the service.
+        assert_eq!(heavy, 4, "heavy popped {heavy}/6");
+    }
+
+    #[test]
+    fn returning_tenant_banks_no_credit() {
+        let s: Scheduler<u32> = Scheduler::new();
+        s.enqueue("busy", 1.0, 0);
+        let p = s.pop_blocking().unwrap();
+        s.complete(&p.tenant, 1000.0);
+        s.enqueue("busy", 1.0, 1);
+        // "idle" was created long "after" busy accumulated service; its
+        // vtime is caught up to busy's, so service alternates instead
+        // of idle draining its whole queue first.
+        for i in 0..3 {
+            s.enqueue("idle", 1.0, 10 + i);
+        }
+        let p = s.pop_blocking().unwrap();
+        s.complete(&p.tenant, 5.0);
+        let q = s.pop_blocking().unwrap();
+        assert_ne!(p.tenant, q.tenant, "catch-up must interleave, got {} twice", p.tenant);
+    }
+
+    #[test]
+    fn shutdown_drains_and_unblocks() {
+        let s: Scheduler<u32> = Scheduler::new();
+        s.enqueue("a", 1.0, 1);
+        s.enqueue("b", 1.0, 2);
+        let drained = s.drain_and_shutdown();
+        assert_eq!(drained.len(), 2);
+        assert!(s.pop_blocking().is_none());
+        s.enqueue("a", 1.0, 3); // ignored after shutdown
+        assert_eq!(s.pending(), 0);
+    }
+}

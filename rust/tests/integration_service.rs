@@ -1,0 +1,427 @@
+//! Integration tests for the service layer: content-addressed cache
+//! key stability and invalidation, corrupted-entry robustness,
+//! serve-vs-CLI byte-identical determinism, the cached-resubmit fast
+//! path across a daemon restart, graceful-shutdown parking + resume,
+//! and the HTTP front end end-to-end over a real localhost socket.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use neat::bench_suite::blackscholes::Blackscholes;
+use neat::bench_suite::Workload;
+use neat::coordinator::{EvalProblem, Evaluator, Executor, RuleKind};
+use neat::engine::FpContext;
+use neat::explore::Problem;
+use neat::fpi::Precision;
+use neat::service::cache::{CacheKey, ResultCache};
+use neat::service::{
+    http, JobKind, JobSpec, JobState, Service, ServiceConfig, ShardOutput,
+};
+use neat::tuner::{TuneGoal, Tuner, TunerConfig};
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("neat_service_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn evaluator() -> Evaluator {
+    Evaluator::new(Box::new(Blackscholes { options: 60 }), None)
+}
+
+fn spec(tenant: &str, kind: JobKind) -> JobSpec {
+    JobSpec { tenant: tenant.to_string(), priority: 1, target: None, kind }
+}
+
+/// The cache key is an unordered field set: assembling the same fields
+/// in a different order must produce the same canonical form and
+/// fingerprint, and a changed value must change the fingerprint.
+#[test]
+fn cache_key_stable_across_field_reordering() {
+    let a = CacheKey::new()
+        .field("workload", "blackscholes")
+        .field("rule", "CIP")
+        .field("seeds", "1,2,3")
+        .genome(&vec![4, 8]);
+    let b = CacheKey::new()
+        .genome(&vec![4, 8])
+        .field("seeds", "1,2,3")
+        .field("rule", "CIP")
+        .field("workload", "blackscholes");
+    assert_eq!(a.canonical(), b.canonical());
+    assert_eq!(a.fingerprint(), b.fingerprint());
+    let c = CacheKey::new()
+        .field("workload", "blackscholes")
+        .field("rule", "CIP")
+        .field("seeds", "1,2,3")
+        .genome(&vec![4, 9]);
+    assert_ne!(a.fingerprint(), c.fingerprint());
+}
+
+/// Blackscholes with its workload version bumped — simulates an
+/// algorithm/input-generation change that must invalidate old entries.
+struct VersionBumped(Blackscholes);
+
+impl Workload for VersionBumped {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+    fn default_target(&self) -> Precision {
+        self.0.default_target()
+    }
+    fn functions(&self) -> Vec<&'static str> {
+        self.0.functions()
+    }
+    fn fcs_shared(&self) -> Vec<&'static str> {
+        self.0.fcs_shared()
+    }
+    fn version(&self) -> u32 {
+        2
+    }
+    fn train_seeds(&self) -> Vec<u64> {
+        self.0.train_seeds()
+    }
+    fn test_seeds(&self) -> Vec<u64> {
+        self.0.test_seeds()
+    }
+    fn run(&self, ctx: &mut FpContext, seed: u64) -> Vec<f64> {
+        self.0.run(ctx, seed)
+    }
+    fn error(&self, baseline: &[f64], approx: &[f64]) -> f64 {
+        self.0.error(baseline, approx)
+    }
+}
+
+/// A second problem over the same cache hits; a problem whose workload
+/// version was bumped misses — stale cross-run entries are never served
+/// as current results.
+#[test]
+fn workload_version_bump_invalidates_entries() {
+    let cache = Arc::new(ResultCache::new(tmp("version")).unwrap());
+    let eval = evaluator();
+    let genome = vec![10u32; eval.genome_len(RuleKind::Cip)];
+
+    let p1 = EvalProblem::with_cache(&eval, RuleKind::Cip, Executor::serial(), cache.clone());
+    let first = p1.evaluate(&genome);
+    assert_eq!(p1.persist_stats(), (0, 1), "cold cache must miss");
+
+    let p2 = EvalProblem::with_cache(&eval, RuleKind::Cip, Executor::serial(), cache.clone());
+    let second = p2.evaluate(&genome);
+    assert_eq!(p2.persist_stats(), (1, 0), "same version must hit");
+    assert_eq!(first.error.to_bits(), second.error.to_bits());
+    assert_eq!(first.energy.to_bits(), second.energy.to_bits());
+
+    let bumped = Evaluator::new(Box::new(VersionBumped(Blackscholes { options: 60 })), None);
+    let p3 =
+        EvalProblem::with_cache(&bumped, RuleKind::Cip, Executor::serial(), cache.clone());
+    let third = p3.evaluate(&genome);
+    assert_eq!(p3.persist_stats(), (0, 1), "bumped version must miss");
+    // same algorithm underneath, so the value agrees — only the cache
+    // identity changed
+    assert_eq!(first.error.to_bits(), third.error.to_bits());
+}
+
+/// A corrupted or truncated entry is a miss (re-evaluated and
+/// overwritten), never a panic and never a wrong value.
+#[test]
+fn corrupted_entry_is_a_miss_not_a_panic() {
+    let dir = tmp("corrupt");
+    let cache = Arc::new(ResultCache::new(&dir).unwrap());
+    let eval = evaluator();
+    let genome = vec![9u32; eval.genome_len(RuleKind::Cip)];
+
+    let p1 = EvalProblem::with_cache(&eval, RuleKind::Cip, Executor::serial(), cache.clone());
+    let clean = p1.evaluate(&genome);
+    assert_eq!(cache.entries(), 1);
+
+    // mangle the single entry on disk: truncate to half, then also try
+    // plain garbage
+    let entry = walk_entries(&dir).pop().expect("one entry on disk");
+    let text = std::fs::read_to_string(&entry).unwrap();
+    for broken in [&text[..text.len() / 2], "{ not json", ""] {
+        std::fs::write(&entry, broken).unwrap();
+        let p = EvalProblem::with_cache(&eval, RuleKind::Cip, Executor::serial(), cache.clone());
+        let again = p.evaluate(&genome);
+        assert_eq!(p.persist_stats(), (0, 1), "defective entry must be a miss");
+        assert_eq!(clean.error.to_bits(), again.error.to_bits());
+        assert_eq!(clean.energy.to_bits(), again.energy.to_bits());
+    }
+    // the re-evaluation healed the entry
+    let p = EvalProblem::with_cache(&eval, RuleKind::Cip, Executor::serial(), cache);
+    p.evaluate(&genome);
+    assert_eq!(p.persist_stats(), (1, 0));
+}
+
+fn walk_entries(dir: &std::path::Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    for sub in std::fs::read_dir(dir).into_iter().flatten().flatten() {
+        if sub.path().is_dir() {
+            for f in std::fs::read_dir(sub.path()).into_iter().flatten().flatten() {
+                if f.path().extension().is_some_and(|e| e == "json") {
+                    out.push(f.path());
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The daemon and the CLI produce byte-identical tunes for the same job
+/// — the scheduler, the per-benchmark evaluator reuse, and the thread
+/// plan change scheduling, never values.
+#[test]
+fn serve_matches_cli_byte_identical() {
+    let mut cfg = ServiceConfig::new();
+    cfg.threads = 2;
+    let svc = Service::start(cfg).unwrap();
+    let id = svc
+        .submit(spec(
+            "determinism",
+            JobKind::Tune {
+                benchmark: "blackscholes".to_string(),
+                rule: RuleKind::Cip,
+                goal: TuneGoal::ErrorBudget(0.05),
+                max_evals: 60,
+            },
+        ))
+        .unwrap();
+    let snap = svc.wait(id, Duration::from_secs(300)).unwrap();
+    assert_eq!(snap.state, JobState::Done, "error: {:?}", snap.error);
+    let (svc_genome, svc_obj) = match &snap.outputs[0] {
+        ShardOutput::Tune(t) => (t.genome.clone(), t.objectives),
+        other => panic!("expected a tune output, got {other:?}"),
+    };
+    svc.shutdown();
+
+    // the CLI path: same benchmark registry entry, same tuner defaults
+    let w = neat::bench_suite::by_name("blackscholes").unwrap();
+    let eval = Evaluator::new(w, None);
+    let problem = EvalProblem::with_executor(&eval, RuleKind::Cip, Executor::new(2));
+    let mut tc = TunerConfig::new(TuneGoal::ErrorBudget(0.05));
+    tc.max_evals = 60;
+    let cli = Tuner::new(tc).run(&problem);
+
+    assert_eq!(svc_genome, cli.genome);
+    assert_eq!(svc_obj.error.to_bits(), cli.objectives.error.to_bits());
+    assert_eq!(svc_obj.energy.to_bits(), cli.objectives.energy.to_bits());
+}
+
+/// Resubmitting a completed job against the same cache directory — in a
+/// *fresh daemon*, as after a restart — is answered entirely from the
+/// content-addressed cache: `cache_hit` is true and the values are
+/// bit-identical.
+#[test]
+fn cached_resubmit_after_restart_is_a_cache_hit() {
+    let cache_dir = tmp("resubmit");
+    let probe = || {
+        spec(
+            "resubmit",
+            JobKind::Probe {
+                benchmark: "blackscholes".to_string(),
+                rule: RuleKind::Wp,
+                genome: vec![11],
+            },
+        )
+    };
+    let run = |expect_hit: bool| {
+        let mut cfg = ServiceConfig::new();
+        cfg.threads = 2;
+        cfg.cache_dir = Some(cache_dir.clone());
+        let svc = Service::start(cfg).unwrap();
+        let id = svc.submit(probe()).unwrap();
+        let snap = svc.wait(id, Duration::from_secs(120)).unwrap();
+        assert_eq!(snap.state, JobState::Done, "error: {:?}", snap.error);
+        assert_eq!(
+            snap.cache_hit(),
+            expect_hit,
+            "cache_hit: hits={} misses={}",
+            snap.cache_hits,
+            snap.cache_misses
+        );
+        svc.shutdown();
+        match &snap.outputs[0] {
+            ShardOutput::Probe { detail, .. } => *detail,
+            other => panic!("expected a probe output, got {other:?}"),
+        }
+    };
+    let cold = run(false);
+    let warm = run(true);
+    assert_eq!(cold.error.to_bits(), warm.error.to_bits());
+    assert_eq!(cold.fpu_nec.to_bits(), warm.fpu_nec.to_bits());
+    assert_eq!(cold.fpu_target_nec.to_bits(), warm.fpu_target_nec.to_bits());
+}
+
+/// Graceful shutdown parks still-queued jobs as artifacts; a fresh
+/// daemon over the same run dir resumes and completes them.
+#[test]
+fn shutdown_parks_queued_jobs_and_resume_completes_them() {
+    let run_dir = tmp("park");
+    let mut cfg = ServiceConfig::new();
+    cfg.threads = 1; // one runner: everything behind the first job queues
+    cfg.run_dir = Some(run_dir.clone());
+    let svc = Service::start(cfg.clone()).unwrap();
+    // the runner grabs this slow job first...
+    svc.submit(spec(
+        "park",
+        JobKind::Tune {
+            benchmark: "blackscholes".to_string(),
+            rule: RuleKind::Cip,
+            goal: TuneGoal::ErrorBudget(0.05),
+            max_evals: 40,
+        },
+    ))
+    .unwrap();
+    // ...so these three probes are still queued at shutdown
+    for width in [6u32, 12, 18] {
+        svc.submit(spec(
+            "park",
+            JobKind::Probe {
+                benchmark: "blackscholes".to_string(),
+                rule: RuleKind::Wp,
+                genome: vec![width],
+            },
+        ))
+        .unwrap();
+    }
+    let parked = svc.shutdown();
+    assert!(
+        !parked.is_empty(),
+        "at least the later probes must still be queued at shutdown"
+    );
+    let artifacts = std::fs::read_dir(run_dir.join("parked")).unwrap().count();
+    assert_eq!(artifacts, parked.len());
+
+    // fresh daemon, same run dir: resume and finish the parked jobs
+    let svc2 = Service::start(cfg).unwrap();
+    let resumed = svc2.resume_parked().unwrap();
+    assert_eq!(resumed, parked.len());
+    assert_eq!(
+        std::fs::read_dir(run_dir.join("parked")).unwrap().count(),
+        0,
+        "resume must consume the artifacts"
+    );
+    // resumed jobs get fresh ids starting at 1
+    for id in 1..=resumed as u64 {
+        let snap = svc2.wait(id, Duration::from_secs(120)).unwrap();
+        assert_eq!(snap.state, JobState::Done, "job {id} error: {:?}", snap.error);
+    }
+    svc2.shutdown();
+}
+
+/// Two tenants sharing one runner both make progress and both appear in
+/// the fairness accounting.
+#[test]
+fn both_tenants_accumulate_service() {
+    let mut cfg = ServiceConfig::new();
+    cfg.threads = 1;
+    let svc = Service::start(cfg).unwrap();
+    let mut ids = Vec::new();
+    for i in 0..3u32 {
+        for tenant in ["alpha", "beta"] {
+            ids.push(
+                svc.submit(spec(
+                    tenant,
+                    JobKind::Probe {
+                        benchmark: "blackscholes".to_string(),
+                        rule: RuleKind::Wp,
+                        genome: vec![4 + i * 5],
+                    },
+                ))
+                .unwrap(),
+            );
+        }
+    }
+    for id in ids {
+        let snap = svc.wait(id, Duration::from_secs(120)).unwrap();
+        assert_eq!(snap.state, JobState::Done, "job {id} error: {:?}", snap.error);
+    }
+    let served = svc.tenant_served();
+    let get = |name: &str| {
+        served.iter().find(|(n, _)| n == name).map(|(_, ms)| *ms).unwrap_or(0.0)
+    };
+    assert!(get("alpha") > 0.0, "alpha never served: {served:?}");
+    assert!(get("beta") > 0.0, "beta never served: {served:?}");
+    let stats = svc.stats_json();
+    assert!(stats.contains("\"tenants\""), "stats missing tenants: {stats}");
+    svc.shutdown();
+}
+
+fn http_request(addr: SocketAddr, request: &str) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream.write_all(request.as_bytes()).unwrap();
+    let mut out = String::new();
+    stream.read_to_string(&mut out).unwrap();
+    out
+}
+
+/// End-to-end over a real socket: health check, job submission, status
+/// polling to completion, stats, graceful shutdown.
+#[test]
+fn http_round_trip_submit_poll_shutdown() {
+    let mut cfg = ServiceConfig::new();
+    cfg.threads = 2;
+    let svc = Arc::new(Service::start(cfg).unwrap());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let svc2 = svc.clone();
+    let server = std::thread::spawn(move || http::serve(&svc2, listener));
+
+    let health = http_request(addr, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert!(health.contains("200 OK") && health.contains("{\"ok\":1}"), "{health}");
+
+    let body = "{\"kind\": \"probe\", \"tenant\": \"curl\", \"benchmark\": \"blackscholes\", \
+                \"rule\": \"wp\", \"genome\": \"12\"}";
+    let resp = http_request(
+        addr,
+        &format!(
+            "POST /jobs HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    );
+    assert!(resp.contains("200 OK") && resp.contains("\"id\":"), "{resp}");
+    let id: u64 = resp
+        .split("\"id\":")
+        .nth(1)
+        .map(|s| s.chars().take_while(char::is_ascii_digit).collect::<String>())
+        .and_then(|s| s.parse().ok())
+        .expect("job id in response");
+
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let status =
+            http_request(addr, &format!("GET /jobs/{id} HTTP/1.1\r\nHost: t\r\n\r\n"));
+        if status.contains("\"state\":\"done\"") {
+            assert!(status.contains("\"kind\":\"probe\""), "{status}");
+            break;
+        }
+        assert!(
+            !status.contains("\"state\":\"failed\""),
+            "job failed: {status}"
+        );
+        assert!(Instant::now() < deadline, "timed out polling; last: {status}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    let stats = http_request(addr, "GET /stats HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert!(
+        stats.contains("\"shards_done\"") && stats.contains("\"queue_wait_ms\""),
+        "{stats}"
+    );
+    let missing = http_request(addr, "GET /jobs/99999 HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert!(missing.contains("404"), "{missing}");
+    let bad = http_request(
+        addr,
+        "POST /jobs HTTP/1.1\r\nHost: t\r\nContent-Length: 2\r\n\r\n{}",
+    );
+    assert!(bad.contains("400"), "empty spec must be rejected: {bad}");
+
+    let down = http_request(addr, "POST /shutdown HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert!(down.contains("\"ok\":1"), "{down}");
+    server.join().unwrap().unwrap();
+    assert!(svc.is_shutdown());
+}
