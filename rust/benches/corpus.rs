@@ -1,0 +1,60 @@
+//! Bench: the generated expression-kernel corpus — grammar enumeration
+//! + generation throughput, the per-kernel differential identity check
+//! (the fuzz harness's unit of work), and block-vs-scalar-reference
+//! run times on sampled kernels.
+//!
+//!     cargo bench --bench corpus
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::bench;
+use neat::bench_suite::corpus::{self, CorpusKernel, EvalMode, DEFAULT_LEN};
+use neat::bench_suite::Workload;
+use neat::engine::FpContext;
+
+fn main() {
+    println!("== generation (grammar pool + admissibility + validity probe) ==");
+    for count in [64u64, 256] {
+        let m = bench(&format!("generate {count}"), count, "kernels", || {
+            std::hint::black_box(corpus::generate(count as usize, corpus::DEFAULT_SEED));
+        });
+        println!("{}", m.report());
+    }
+
+    let terms = corpus::generate(256, corpus::DEFAULT_SEED);
+    let picks = corpus::spread_indices(terms.len(), 4, corpus::DEFAULT_SEED);
+
+    println!("\n== per-kernel differential identity check (fuzz unit of work) ==");
+    for &i in &picks {
+        let term = terms[i].clone();
+        let m = bench(&term.canonical(), 0, "", || {
+            corpus::identity_check(&term, DEFAULT_LEN).expect("identity holds");
+        });
+        println!("{}", m.report());
+    }
+
+    println!("\n== kernel runs: block engine vs scalar-reference replay ==");
+    for &i in &picks {
+        for mode in [EvalMode::Block, EvalMode::ScalarReference] {
+            let k = CorpusKernel::with_len(terms[i].clone(), DEFAULT_LEN).with_mode(mode);
+            let seed = k.train_seeds()[0];
+            let mut counter = FpContext::profiler();
+            k.run(&mut counter, seed);
+            let flops = counter.counters().total_flops();
+            let label = format!(
+                "{} [{}]",
+                terms[i].canonical(),
+                match mode {
+                    EvalMode::Block => "block",
+                    EvalMode::ScalarReference => "scalar",
+                }
+            );
+            let m = bench(&label, flops, "flops", || {
+                let mut ctx = FpContext::profiler();
+                std::hint::black_box(k.run(&mut ctx, seed));
+            });
+            println!("{}", m.report());
+        }
+    }
+}

@@ -1,0 +1,736 @@
+//! The term grammar behind the generated corpus: straight-line FP
+//! expression kernels enumerated with plugged holes and canonical-form
+//! dedup filters (ruler's `enumo` idiom).
+//!
+//! A [`Term`] is one kernel: a root *shape* (elementwise map, fused
+//! map+sum, dot, axpy, squared distance, or an f32→f64 widening
+//! map+sum) applied to two expression operands over input arrays
+//! `x0..` and table constants `c0..`. Every term renders to a
+//! canonical s-expression string — the term's identity: dedup, the
+//! `corpus:`-prefixed workload name, the `--term` CLI reproducer, and
+//! `Workload::version()` (an FNV-1a hash of the string) all key on it.
+//! The string uses only letters, digits, parens, and spaces, so it is
+//! safe inside content-addressed cache-key field values (which forbid
+//! `=` and `;`).
+
+use std::collections::HashSet;
+
+use crate::fpi::{OpKind, Precision};
+use crate::util::Pcg64;
+
+/// The constant-leaf table: `c<i>` in a term renders to `CONSTS[i]`
+/// (cast to the term's width). Chosen so truncation widths bite —
+/// exact powers of two next to constants with trailing mantissa bits.
+pub const CONSTS: [f64; 4] = [0.5, 1.5, 2.0, 0.25];
+
+/// Number of input arrays a term may reference (`x0`..`x2`).
+pub const VARS: usize = 3;
+
+/// An expression over input arrays and table constants.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Expr {
+    /// Input array `x<i>` (one instrumented load per element).
+    Var(usize),
+    /// Table constant `c<i>` ([`CONSTS`]), broadcast across the slice.
+    Const(usize),
+    /// `sqrt` via the instrumented Newton kernels
+    /// (`math32::sqrt32_slice` / `math64::sqrt64_slice`).
+    Sqrt(Box<Expr>),
+    /// A binary op, one slice kernel per node.
+    Bin(OpKind, Box<Expr>, Box<Expr>),
+}
+
+impl Expr {
+    /// Canonical s-expression text, e.g. `(mul (sqrt x0) c1)`.
+    pub fn render(&self) -> String {
+        match self {
+            Expr::Var(i) => format!("x{i}"),
+            Expr::Const(i) => format!("c{i}"),
+            Expr::Sqrt(a) => format!("(sqrt {})", a.render()),
+            Expr::Bin(op, a, b) => {
+                format!("({} {} {})", op.name(), a.render(), b.render())
+            }
+        }
+    }
+
+    /// Tree depth: leaves are 0.
+    pub fn depth(&self) -> usize {
+        match self {
+            Expr::Var(_) | Expr::Const(_) => 0,
+            Expr::Sqrt(a) => 1 + a.depth(),
+            Expr::Bin(_, a, b) => 1 + a.depth().max(b.depth()),
+        }
+    }
+
+    /// Node count (ops + leaves) — the shrinker's size metric.
+    pub fn node_count(&self) -> usize {
+        match self {
+            Expr::Var(_) | Expr::Const(_) => 1,
+            Expr::Sqrt(a) => 1 + a.node_count(),
+            Expr::Bin(_, a, b) => 1 + a.node_count() + b.node_count(),
+        }
+    }
+
+    /// Does any leaf reference an input array?
+    pub fn contains_var(&self) -> bool {
+        match self {
+            Expr::Var(_) => true,
+            Expr::Const(_) => false,
+            Expr::Sqrt(a) => a.contains_var(),
+            Expr::Bin(_, a, b) => a.contains_var() || b.contains_var(),
+        }
+    }
+
+    /// Does the expression execute any FLOPs (i.e. is it not a bare leaf)?
+    pub fn has_ops(&self) -> bool {
+        !matches!(self, Expr::Var(_) | Expr::Const(_))
+    }
+
+    /// Does the tree contain a `sqrt` node?
+    pub fn contains_sqrt(&self) -> bool {
+        match self {
+            Expr::Var(_) | Expr::Const(_) => false,
+            Expr::Sqrt(_) => true,
+            Expr::Bin(_, a, b) => a.contains_sqrt() || b.contains_sqrt(),
+        }
+    }
+
+    /// Highest input-array index referenced, if any.
+    pub fn max_var(&self) -> Option<usize> {
+        match self {
+            Expr::Var(i) => Some(*i),
+            Expr::Const(_) => None,
+            Expr::Sqrt(a) => a.max_var(),
+            Expr::Bin(_, a, b) => match (a.max_var(), b.max_var()) {
+                (Some(x), Some(y)) => Some(x.max(y)),
+                (x, y) => x.or(y),
+            },
+        }
+    }
+
+    /// Is this a bare constant leaf (the broadcast-scalar case)?
+    pub fn is_const_leaf(&self) -> bool {
+        matches!(self, Expr::Const(_))
+    }
+
+    /// Canonical form: commutative (`add`/`mul`) children in render
+    /// order, applied bottom-up — `(mul x1 x0)` and `(mul x0 x1)`
+    /// collapse to one term. Division and subtraction keep operand
+    /// order (they are not symmetric in value).
+    pub fn canonicalize(self) -> Expr {
+        match self {
+            Expr::Var(_) | Expr::Const(_) => self,
+            Expr::Sqrt(a) => Expr::Sqrt(Box::new(a.canonicalize())),
+            Expr::Bin(op, a, b) => {
+                let a = a.canonicalize();
+                let b = b.canonicalize();
+                if matches!(op, OpKind::Add | OpKind::Mul) && a.render() > b.render() {
+                    Expr::Bin(op, Box::new(b), Box::new(a))
+                } else {
+                    Expr::Bin(op, Box::new(a), Box::new(b))
+                }
+            }
+        }
+    }
+
+    /// Node filters, applied recursively: `(sub e e)` / `(div e e)`
+    /// (identically zero / one), const-const binaries (fold at
+    /// generation time instead), and `sqrt` of a constant are all
+    /// rejected — they carry no search signal and bloat the corpus.
+    pub fn admissible(&self) -> bool {
+        match self {
+            Expr::Var(i) => *i < VARS,
+            Expr::Const(i) => *i < CONSTS.len(),
+            Expr::Sqrt(a) => !a.is_const_leaf() && a.admissible(),
+            Expr::Bin(op, a, b) => {
+                if a.is_const_leaf() && b.is_const_leaf() {
+                    return false;
+                }
+                if matches!(op, OpKind::Sub | OpKind::Div) && a == b {
+                    return false;
+                }
+                a.admissible() && b.admissible()
+            }
+        }
+    }
+}
+
+/// The root form a term's two operand expressions feed — each maps to
+/// one fused slice kernel (or an elementwise map) in the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Shape {
+    /// Elementwise `out[i] = op(lhs[i], rhs[i])` (`map32_slice`);
+    /// the output is the whole array.
+    Map(OpKind),
+    /// Elementwise map, then the fused slice reduction `sum*_slice`.
+    MapSum(OpKind),
+    /// f32 map, each element widened to f64 (exact, no FLOP), then
+    /// `sum64_slice` — the mixed-precision shape. Single-width only.
+    MapWideSum(OpKind),
+    /// Fused `dot*_slice(lhs, rhs)`.
+    Dot,
+    /// Fused `axpy*_slice(CONSTS[alpha], lhs, rhs, out)`; the payload
+    /// is the alpha constant's table index.
+    Axpy(usize),
+    /// Fused `sqdist32_slice(lhs, rhs)`. Single-width only (the
+    /// engine ships no f64 sqdist kernel).
+    Sqdist,
+}
+
+impl Shape {
+    /// Is this one of the map-rooted shapes (which accept a broadcast
+    /// constant as the right operand)?
+    fn is_map_family(self) -> bool {
+        matches!(self, Shape::Map(_) | Shape::MapSum(_) | Shape::MapWideSum(_))
+    }
+
+    /// Is the root symmetric in its operands (safe to order canonically)?
+    fn is_symmetric(self) -> bool {
+        match self {
+            Shape::Map(op) | Shape::MapSum(op) | Shape::MapWideSum(op) => {
+                matches!(op, OpKind::Add | OpKind::Mul)
+            }
+            // (a-b)² has the magnitude and mantissa of (b-a)² under
+            // every FPI in the library (truncation masks the mantissa,
+            // the sign bit is untouched), so sqdist is symmetric too.
+            Shape::Dot | Shape::Sqdist => true,
+            Shape::Axpy(_) => false,
+        }
+    }
+}
+
+/// One corpus kernel: width × shape × two operand expressions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Term {
+    /// Precision of every array and FLOP (the `MapWideSum` shape adds
+    /// an f64 reduction stage on top of a Single term).
+    pub width: Precision,
+    /// Root form.
+    pub shape: Shape,
+    /// Left operand expression (always references an input array).
+    pub lhs: Expr,
+    /// Right operand expression (a bare constant = broadcast, map
+    /// shapes only).
+    pub rhs: Expr,
+}
+
+fn width_tag(p: Precision) -> &'static str {
+    match p {
+        Precision::Single => "32",
+        Precision::Double => "64",
+    }
+}
+
+impl Term {
+    /// Canonical s-expression: `(<shape><width> [op|c<k>] <lhs> <rhs>)`,
+    /// e.g. `(mapsum32 mul (sqrt (add c1 x0)) x1)`.
+    pub fn canonical(&self) -> String {
+        let w = width_tag(self.width);
+        let (l, r) = (self.lhs.render(), self.rhs.render());
+        match self.shape {
+            Shape::Map(op) => format!("(map{w} {} {l} {r})", op.name()),
+            Shape::MapSum(op) => format!("(mapsum{w} {} {l} {r})", op.name()),
+            Shape::MapWideSum(op) => format!("(mapwsum32 {} {l} {r})", op.name()),
+            Shape::Dot => format!("(dot{w} {l} {r})"),
+            Shape::Axpy(k) => format!("(axpy{w} c{k} {l} {r})"),
+            Shape::Sqdist => format!("(sqdist32 {l} {r})"),
+        }
+    }
+
+    /// Canonicalize both operands and, for symmetric roots, order them
+    /// — without ever moving a broadcast constant into the left slot
+    /// (the left operand must stay an array).
+    pub fn canonicalized(mut self) -> Term {
+        self.lhs = self.lhs.canonicalize();
+        self.rhs = self.rhs.canonicalize();
+        if self.shape.is_symmetric()
+            && !self.rhs.is_const_leaf()
+            && self.lhs.render() > self.rhs.render()
+        {
+            std::mem::swap(&mut self.lhs, &mut self.rhs);
+        }
+        self
+    }
+
+    /// Term-level filters on top of [`Expr::admissible`]: the left
+    /// operand must be an array expression; fused shapes need an array
+    /// on the right too (only map shapes broadcast); `sqdist` and the
+    /// widening sum exist only at Single width.
+    pub fn admissible(&self) -> bool {
+        if !self.lhs.admissible() || !self.rhs.admissible() {
+            return false;
+        }
+        if !self.lhs.contains_var() {
+            return false;
+        }
+        if !self.rhs.contains_var() && !(self.shape.is_map_family() && self.rhs.is_const_leaf()) {
+            return false;
+        }
+        match self.shape {
+            Shape::MapWideSum(_) | Shape::Sqdist => self.width == Precision::Single,
+            Shape::Axpy(k) => k < CONSTS.len(),
+            _ => true,
+        }
+    }
+
+    /// FNV-1a-32 of the canonical string — the corpus kernel's
+    /// [`crate::bench_suite::Workload::version`], so the
+    /// content-addressed result cache keys each generated program
+    /// separately even across grammar evolution.
+    pub fn hash32(&self) -> u32 {
+        fnv1a32(self.canonical().as_bytes())
+    }
+
+    /// Does either operand contain a `sqrt` node?
+    pub fn contains_sqrt(&self) -> bool {
+        self.lhs.contains_sqrt() || self.rhs.contains_sqrt()
+    }
+
+    /// Highest input-array index the term references.
+    pub fn max_var(&self) -> Option<usize> {
+        match (self.lhs.max_var(), self.rhs.max_var()) {
+            (Some(x), Some(y)) => Some(x.max(y)),
+            (x, y) => x.or(y),
+        }
+    }
+
+    /// Shrinker size metric: operand nodes plus one for a fused root.
+    pub fn size(&self) -> usize {
+        let root = usize::from(!matches!(self.shape, Shape::Map(_)));
+        self.lhs.node_count() + self.rhs.node_count() + root
+    }
+}
+
+fn fnv1a32(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= u32::from(b);
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Parsing (the `--term` reproducer path and `corpus:` workload names)
+// ---------------------------------------------------------------------------
+
+fn op_from_name(name: &str) -> Option<OpKind> {
+    OpKind::ALL.into_iter().find(|op| op.name() == name)
+}
+
+fn tokenize(text: &str) -> Vec<String> {
+    let mut toks = Vec::new();
+    let mut cur = String::new();
+    for ch in text.chars() {
+        match ch {
+            '(' | ')' => {
+                if !cur.is_empty() {
+                    toks.push(std::mem::take(&mut cur));
+                }
+                toks.push(ch.to_string());
+            }
+            c if c.is_whitespace() => {
+                if !cur.is_empty() {
+                    toks.push(std::mem::take(&mut cur));
+                }
+            }
+            c => cur.push(c),
+        }
+    }
+    if !cur.is_empty() {
+        toks.push(cur);
+    }
+    toks
+}
+
+fn parse_leaf(tok: &str) -> Result<Expr, String> {
+    let idx = |s: &str| s.parse::<usize>().map_err(|_| format!("bad leaf index in `{tok}`"));
+    if let Some(i) = tok.strip_prefix('x') {
+        Ok(Expr::Var(idx(i)?))
+    } else if let Some(i) = tok.strip_prefix('c') {
+        Ok(Expr::Const(idx(i)?))
+    } else {
+        Err(format!("unknown leaf `{tok}` (expected x<i> or c<i>)"))
+    }
+}
+
+fn parse_expr(toks: &[String], pos: &mut usize) -> Result<Expr, String> {
+    let tok = toks.get(*pos).ok_or("unexpected end of term")?.clone();
+    *pos += 1;
+    if tok != "(" {
+        return parse_leaf(&tok);
+    }
+    let head = toks.get(*pos).ok_or("missing operator after `(`")?.clone();
+    *pos += 1;
+    let expr = if head == "sqrt" {
+        Expr::Sqrt(Box::new(parse_expr(toks, pos)?))
+    } else if let Some(op) = op_from_name(&head) {
+        let a = parse_expr(toks, pos)?;
+        let b = parse_expr(toks, pos)?;
+        Expr::Bin(op, Box::new(a), Box::new(b))
+    } else {
+        return Err(format!("unknown operator `{head}`"));
+    };
+    if toks.get(*pos).map(String::as_str) != Some(")") {
+        return Err(format!("missing `)` after `{head}` expression"));
+    }
+    *pos += 1;
+    Ok(expr)
+}
+
+/// Parse a term from its s-expression text (as printed by
+/// [`Term::canonical`] and accepted by `neat corpus --term` and
+/// `corpus:`-prefixed workload names). The result is canonicalized, so
+/// `parse_term(t.canonical())` round-trips; inadmissible terms are
+/// rejected with a diagnostic.
+pub fn parse_term(text: &str) -> Result<Term, String> {
+    let toks = tokenize(text);
+    let mut pos = 0;
+    if toks.first().map(String::as_str) != Some("(") {
+        return Err("term must start with `(`".to_string());
+    }
+    pos += 1;
+    let head = toks.get(pos).ok_or("missing shape head")?.clone();
+    pos += 1;
+    let width = if head.ends_with("64") { Precision::Double } else { Precision::Single };
+    let base = head.trim_end_matches(|c: char| c.is_ascii_digit());
+    if !head.ends_with("32") && !head.ends_with("64") {
+        return Err(format!("shape head `{head}` must end in 32 or 64"));
+    }
+    let mut shape_op = |toks: &[String], pos: &mut usize| -> Result<OpKind, String> {
+        let t = toks.get(*pos).ok_or("missing op after shape head")?.clone();
+        *pos += 1;
+        op_from_name(&t).ok_or(format!("unknown op `{t}`"))
+    };
+    let shape = match base {
+        "map" => Shape::Map(shape_op(&toks, &mut pos)?),
+        "mapsum" => Shape::MapSum(shape_op(&toks, &mut pos)?),
+        "mapwsum" => Shape::MapWideSum(shape_op(&toks, &mut pos)?),
+        "dot" => Shape::Dot,
+        "sqdist" => Shape::Sqdist,
+        "axpy" => {
+            let t = toks.get(pos).ok_or("missing alpha constant after axpy")?.clone();
+            pos += 1;
+            match parse_leaf(&t)? {
+                Expr::Const(k) => Shape::Axpy(k),
+                _ => return Err(format!("axpy alpha must be c<k>, got `{t}`")),
+            }
+        }
+        other => return Err(format!("unknown shape `{other}`")),
+    };
+    let lhs = parse_expr(&toks, &mut pos)?;
+    let rhs = parse_expr(&toks, &mut pos)?;
+    if toks.get(pos).map(String::as_str) != Some(")") {
+        return Err("missing final `)`".to_string());
+    }
+    if pos + 1 != toks.len() {
+        return Err("trailing tokens after term".to_string());
+    }
+    let term = Term { width, shape, lhs, rhs }.canonicalized();
+    if !term.admissible() {
+        return Err(format!("inadmissible term `{}`", term.canonical()));
+    }
+    Ok(term)
+}
+
+// ---------------------------------------------------------------------------
+// Enumeration and seeded generation
+// ---------------------------------------------------------------------------
+
+/// The corpus grammar: how many input arrays and table constants the
+/// leaves may reference, and how deep enumerated operand expressions
+/// grow.
+#[derive(Debug, Clone, Copy)]
+pub struct Grammar {
+    /// Input arrays available as leaves (`x0..x{vars-1}`).
+    pub vars: usize,
+    /// Table constants available as leaves (`c0..c{consts-1}`).
+    pub consts: usize,
+    /// Maximum operand-expression depth in the enumerated pool.
+    pub max_depth: usize,
+}
+
+impl Default for Grammar {
+    fn default() -> Self {
+        Grammar { vars: VARS, consts: CONSTS.len(), max_depth: 2 }
+    }
+}
+
+impl Grammar {
+    /// Enumerate the operand-expression pool, enumo style: start from
+    /// the atom layer (`x<i>`, `c<i>`), then repeatedly *plug* the
+    /// previous layer into the `(op ⋆ atom)` / `(op atom ⋆)` /
+    /// `(sqrt ⋆)` hole templates, keeping only admissible expressions
+    /// in canonical form and deduping on the rendered string. The
+    /// returned order is deterministic.
+    pub fn expr_pool(&self) -> Vec<Expr> {
+        let mut atoms: Vec<Expr> = (0..self.vars.min(VARS)).map(Expr::Var).collect();
+        atoms.extend((0..self.consts.min(CONSTS.len())).map(Expr::Const));
+
+        let mut seen: HashSet<String> = atoms.iter().map(Expr::render).collect();
+        let mut pool = atoms.clone();
+        let mut layer = atoms.clone();
+        for _ in 0..self.max_depth {
+            let mut next = Vec::new();
+            let mut push = |e: Expr, seen: &mut HashSet<String>, next: &mut Vec<Expr>| {
+                let e = e.canonicalize();
+                if e.admissible() && seen.insert(e.render()) {
+                    next.push(e);
+                }
+            };
+            for a in &layer {
+                push(Expr::Sqrt(Box::new(a.clone())), &mut seen, &mut next);
+                for b in &atoms {
+                    for op in OpKind::ALL {
+                        push(
+                            Expr::Bin(op, Box::new(a.clone()), Box::new(b.clone())),
+                            &mut seen,
+                            &mut next,
+                        );
+                        push(
+                            Expr::Bin(op, Box::new(b.clone()), Box::new(a.clone())),
+                            &mut seen,
+                            &mut next,
+                        );
+                    }
+                }
+            }
+            pool.extend(next.iter().cloned());
+            layer = next;
+        }
+        pool
+    }
+
+    /// Draw up to `count` distinct, admissible terms from the grammar,
+    /// deterministically from `seed`: operands come from the
+    /// enumerated pool, plugged into a sampled (width, shape) root;
+    /// duplicates (post-canonicalization) are skipped and `valid`
+    /// gates each candidate (the corpus layer passes a
+    /// finite-exact-output probe). Sampling stops early only if the
+    /// attempt budget runs dry — with the default grammar the
+    /// candidate space is ~10⁶, far past any practical `count`.
+    pub fn generate_with(
+        &self,
+        count: usize,
+        seed: u64,
+        valid: impl Fn(&Term) -> bool,
+    ) -> Vec<Term> {
+        let pool = self.expr_pool();
+        let arrayish: Vec<&Expr> = pool.iter().filter(|e| e.contains_var()).collect();
+        if arrayish.is_empty() {
+            return Vec::new();
+        }
+        let consts: Vec<Expr> = (0..self.consts.min(CONSTS.len())).map(Expr::Const).collect();
+        let nconsts = consts.len().max(1) as u64;
+        let mut rng = Pcg64::new(seed ^ 0x5EED_C095);
+        let mut seen: HashSet<String> = HashSet::new();
+        let mut terms = Vec::with_capacity(count);
+        let mut attempts: usize = 0;
+        let max_attempts = count.saturating_mul(400) + 10_000;
+        while terms.len() < count && attempts < max_attempts {
+            attempts += 1;
+            let op = OpKind::ALL[rng.below(4) as usize];
+            let shape = match rng.below(8) {
+                0 | 1 | 2 => Shape::Map(op),
+                3 => Shape::MapSum(op),
+                4 => Shape::MapWideSum(op),
+                5 => Shape::Dot,
+                6 => Shape::Axpy(rng.below(nconsts) as usize),
+                _ => Shape::Sqdist,
+            };
+            let width = if matches!(shape, Shape::MapWideSum(_) | Shape::Sqdist) {
+                Precision::Single
+            } else if rng.chance(0.4) {
+                Precision::Double
+            } else {
+                Precision::Single
+            };
+            let lhs = arrayish[rng.below(arrayish.len() as u64) as usize].clone();
+            let rhs = if shape.is_map_family() && !consts.is_empty() && rng.chance(0.15) {
+                consts[rng.below(nconsts) as usize].clone()
+            } else {
+                arrayish[rng.below(arrayish.len() as u64) as usize].clone()
+            };
+            let term = Term { width, shape, lhs, rhs }.canonicalized();
+            if !term.admissible() || !seen.insert(term.canonical()) {
+                continue;
+            }
+            if valid(&term) {
+                terms.push(term);
+            }
+        }
+        terms
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shrinking
+// ---------------------------------------------------------------------------
+
+/// All one-step structural reductions of an expression: replace any
+/// internal node by one of its children.
+fn expr_reductions(e: &Expr) -> Vec<Expr> {
+    match e {
+        Expr::Var(_) | Expr::Const(_) => Vec::new(),
+        Expr::Sqrt(a) => {
+            let mut out = vec![(**a).clone()];
+            out.extend(expr_reductions(a).into_iter().map(|r| Expr::Sqrt(Box::new(r))));
+            out
+        }
+        Expr::Bin(op, a, b) => {
+            let mut out = vec![(**a).clone(), (**b).clone()];
+            out.extend(
+                expr_reductions(a)
+                    .into_iter()
+                    .map(|r| Expr::Bin(*op, Box::new(r), b.clone())),
+            );
+            out.extend(
+                expr_reductions(b)
+                    .into_iter()
+                    .map(|r| Expr::Bin(*op, a.clone(), Box::new(r))),
+            );
+            out
+        }
+    }
+}
+
+/// One-step shrink candidates of a term — strictly smaller, admissible,
+/// canonical, deduped: operand subtree promotions plus collapsing a
+/// fused root to a plain elementwise map.
+pub fn shrink_candidates(t: &Term) -> Vec<Term> {
+    let mut out = Vec::new();
+    for lr in expr_reductions(&t.lhs) {
+        out.push(Term { lhs: lr, ..t.clone() });
+    }
+    for rr in expr_reductions(&t.rhs) {
+        out.push(Term { rhs: rr, ..t.clone() });
+    }
+    if !matches!(t.shape, Shape::Map(_)) {
+        out.push(Term { shape: Shape::Map(OpKind::Add), ..t.clone() });
+    }
+    let mut seen = HashSet::new();
+    out.into_iter()
+        .map(Term::canonicalized)
+        .filter(|c| c.admissible() && c.size() < t.size() && seen.insert(c.canonical()))
+        .collect()
+}
+
+/// Greedily shrink a failing term to a minimal reproducer: repeatedly
+/// take the first strictly-smaller candidate on which `still_fails`
+/// holds, until no candidate fails. The result is printed as a
+/// re-runnable `neat corpus --term '<canonical>'` string by the fuzz
+/// harness.
+pub fn shrink(term: &Term, still_fails: impl Fn(&Term) -> bool) -> Term {
+    let mut cur = term.clone().canonicalized();
+    loop {
+        let mut advanced = false;
+        for cand in shrink_candidates(&cur) {
+            if still_fails(&cand) {
+                cur = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            return cur;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(text: &str) -> Term {
+        parse_term(text).expect(text)
+    }
+
+    #[test]
+    fn canonical_round_trips_through_parse() {
+        for text in [
+            "(map32 mul (sqrt (add c1 x0)) x1)",
+            "(mapsum64 add x0 (div x1 c0))",
+            "(dot32 x0 x1)",
+            "(axpy64 c2 (sqrt x0) x1)",
+            "(sqdist32 x0 (add c1 x1))",
+            "(mapwsum32 mul x0 x0)",
+        ] {
+            let term = t(text);
+            assert_eq!(term.canonical(), text, "already-canonical text must round-trip");
+            assert_eq!(parse_term(&term.canonical()).unwrap(), term);
+        }
+    }
+
+    #[test]
+    fn commutative_operands_collapse_to_one_canonical_form() {
+        assert_eq!(t("(map32 add x1 x0)").canonical(), "(map32 add x0 x1)");
+        assert_eq!(
+            t("(map32 mul (mul x1 x0) x0)").canonical(),
+            "(map32 mul (mul x0 x1) x0)"
+        );
+        assert_eq!(t("(dot32 x1 x0)").canonical(), "(dot32 x0 x1)");
+        // a broadcast constant must stay on the right even when the
+        // render order says otherwise
+        assert_eq!(t("(map32 add x0 c0)").canonical(), "(map32 add x0 c0)");
+    }
+
+    #[test]
+    fn filters_reject_degenerate_terms() {
+        assert!(parse_term("(map32 sub x0 x0)").is_err(), "x - x");
+        assert!(parse_term("(map32 add c0 c1)").is_err(), "const-only lhs");
+        assert!(parse_term("(map32 mul (sqrt c1) x0)").is_err(), "sqrt of const");
+        assert!(parse_term("(dot32 x0 c1)").is_err(), "fused rhs must be an array");
+        assert!(parse_term("(sqdist64 x0 x1)").is_err(), "no f64 sqdist kernel");
+        assert!(parse_term("(map32 add x7 x0)").is_err(), "var index out of range");
+    }
+
+    #[test]
+    fn pool_is_deduped_and_deterministic() {
+        let g = Grammar::default();
+        let a = g.expr_pool();
+        let b = g.expr_pool();
+        assert_eq!(a, b);
+        let renders: HashSet<String> = a.iter().map(Expr::render).collect();
+        assert_eq!(renders.len(), a.len(), "pool contains duplicates");
+        assert!(a.iter().any(|e| e.contains_sqrt()), "pool must cover sqrt");
+        assert!(a.len() > 100, "pool unexpectedly small: {}", a.len());
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_deduped() {
+        let g = Grammar::default();
+        let a = g.generate_with(64, 7, |_| true);
+        let b = g.generate_with(64, 7, |_| true);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 64);
+        let keys: HashSet<String> = a.iter().map(Term::canonical).collect();
+        assert_eq!(keys.len(), a.len());
+        let c = g.generate_with(64, 8, |_| true);
+        assert_ne!(a, c, "different seeds must draw different corpora");
+    }
+
+    #[test]
+    fn shrink_reaches_a_local_minimum() {
+        // "fails" whenever the term still contains x0 under a sqrt
+        let fails = |t: &Term| {
+            fn sqrt_over_x0(e: &Expr) -> bool {
+                match e {
+                    Expr::Sqrt(a) => {
+                        a.contains_var() && a.max_var() == Some(0) || sqrt_over_x0(a)
+                    }
+                    Expr::Bin(_, a, b) => sqrt_over_x0(a) || sqrt_over_x0(b),
+                    _ => false,
+                }
+            }
+            sqrt_over_x0(&t.lhs) || sqrt_over_x0(&t.rhs)
+        };
+        let big = t("(mapsum32 mul (sqrt (add (mul c2 x0) c1)) (div x1 x2))");
+        assert!(fails(&big));
+        let min = shrink(&big, fails);
+        assert!(fails(&min), "shrink must preserve the failure");
+        assert!(min.size() < big.size());
+        for cand in shrink_candidates(&min) {
+            assert!(!fails(&cand), "minimum must be 1-minimal, {} still fails", cand.canonical());
+        }
+    }
+}

@@ -1,0 +1,867 @@
+//! Compiling a corpus [`Term`] into a runnable [`Workload`], plus the
+//! differential identity check the fuzz harness is built on.
+//!
+//! Every kernel evaluates in two modes. [`EvalMode::Block`] issues one
+//! slice kernel per expression node (`map32_slice`, the fused
+//! `sum/dot/axpy/sqdist` reductions, `sqrt*_slice`), which is what the
+//! block and lane tiers execute. [`EvalMode::ScalarReference`] replays
+//! the exact documented scalar op sequence of each of those slice
+//! kernels through the scalar API. The engine's determinism contract
+//! says the two must be bit-identical in values, counters, and trace
+//! bytes under every placement — [`identity_check`] asserts exactly
+//! that, turning the contract into a fuzzable property on programs
+//! nobody hand-wrote.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::bench_suite::{math32, math64, Workload};
+use crate::engine::trace::TraceSink;
+use crate::engine::{FpContext, FuncId};
+use crate::fpi::perturb::{PerturbFpi, PerturbMode};
+use crate::fpi::{FpiLibrary, OpKind, Precision};
+use crate::placement::Placement;
+use crate::util::Pcg64;
+
+use super::grammar::{Expr, Shape, Term, CONSTS};
+
+/// Default input-array length: ragged for both lane widths (101 = 12×8
+/// + 5 f32 lanes, 25×4 + 1 f64 lanes), so every corpus run covers
+/// whole lane blocks *and* a scalar remainder tail.
+pub const DEFAULT_LEN: usize = 101;
+
+/// How a [`CorpusKernel`] issues its FLOPs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalMode {
+    /// Slice kernels — one engine call per expression node (the block
+    /// tier; lane-parallel under `--features lanes`).
+    Block,
+    /// The scalar op sequence each slice kernel documents, replayed
+    /// through the scalar API — the differential harness's reference.
+    ScalarReference,
+}
+
+/// Intern a workload name: the [`Workload`] trait hands out
+/// `&'static str`, and corpus names are built at runtime from the
+/// canonical term, so each distinct name is leaked exactly once.
+fn intern_name(s: String) -> &'static str {
+    static POOL: OnceLock<Mutex<HashMap<String, &'static str>>> = OnceLock::new();
+    let pool = POOL.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut guard = pool.lock().unwrap();
+    if let Some(&v) = guard.get(&s) {
+        return v;
+    }
+    let leaked: &'static str = Box::leak(s.clone().into_boxed_str());
+    guard.insert(s, leaked);
+    leaked
+}
+
+/// A generated expression kernel, runnable as a first-class
+/// [`Workload`]: name `corpus:<canonical>`, version hashed from the
+/// canonical term, functions registered for WP/CIP/FCS placement, and
+/// slice call sites throughout so the block and lane tiers get
+/// coverage.
+pub struct CorpusKernel {
+    term: Term,
+    name: &'static str,
+    version: u32,
+    len: usize,
+    mode: EvalMode,
+}
+
+/// The function frames a corpus kernel registers: the two operand
+/// expressions, the root combine stage, and the shared sqrt kernel.
+struct Funcs {
+    lhs: FuncId,
+    rhs: FuncId,
+    combine: FuncId,
+    sqrt: FuncId,
+}
+
+/// An evaluated f32 operand: a materialized slice or a broadcast
+/// constant.
+enum Val32 {
+    Arr(Vec<f32>),
+    Scl(f32),
+}
+
+impl Val32 {
+    fn at(&self, i: usize) -> f32 {
+        match self {
+            Val32::Arr(v) => v[i],
+            Val32::Scl(s) => *s,
+        }
+    }
+    fn arr(&self) -> &[f32] {
+        match self {
+            Val32::Arr(v) => v,
+            Val32::Scl(_) => unreachable!("fused shapes never see a broadcast operand"),
+        }
+    }
+}
+
+enum Val64 {
+    Arr(Vec<f64>),
+    Scl(f64),
+}
+
+impl Val64 {
+    fn at(&self, i: usize) -> f64 {
+        match self {
+            Val64::Arr(v) => v[i],
+            Val64::Scl(s) => *s,
+        }
+    }
+    fn arr(&self) -> &[f64] {
+        match self {
+            Val64::Arr(v) => v,
+            Val64::Scl(_) => unreachable!("fused shapes never see a broadcast operand"),
+        }
+    }
+}
+
+fn scalar_op32(c: &mut FpContext, op: OpKind, a: f32, b: f32) -> f32 {
+    match op {
+        OpKind::Add => c.add32(a, b),
+        OpKind::Sub => c.sub32(a, b),
+        OpKind::Mul => c.mul32(a, b),
+        OpKind::Div => c.div32(a, b),
+    }
+}
+
+fn scalar_op64(c: &mut FpContext, op: OpKind, a: f64, b: f64) -> f64 {
+    match op {
+        OpKind::Add => c.add64(a, b),
+        OpKind::Sub => c.sub64(a, b),
+        OpKind::Mul => c.mul64(a, b),
+        OpKind::Div => c.div64(a, b),
+    }
+}
+
+impl CorpusKernel {
+    /// Compile a term at the default array length. Panics on an
+    /// inadmissible term — the generator and [`super::parse_term`]
+    /// both guarantee admissibility.
+    pub fn new(term: Term) -> Self {
+        Self::with_len(term, DEFAULT_LEN)
+    }
+
+    /// Compile a term with an explicit input-array length (the fuzz
+    /// harness sweeps adversarial lengths: 0, 1, lane±1, ragged).
+    pub fn with_len(term: Term, len: usize) -> Self {
+        let term = term.canonicalized();
+        assert!(term.admissible(), "inadmissible corpus term `{}`", term.canonical());
+        let version = term.hash32();
+        let name = intern_name(format!("corpus:{}", term.canonical()));
+        CorpusKernel { term, name, version, len, mode: EvalMode::Block }
+    }
+
+    /// Switch the evaluation mode (builder style).
+    pub fn with_mode(mut self, mode: EvalMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// The compiled term.
+    pub fn term(&self) -> &Term {
+        &self.term
+    }
+
+    /// Input-array length this kernel runs at.
+    pub fn array_len(&self) -> usize {
+        self.len
+    }
+
+    /// Deterministic inputs: positive values in `[0.25, 4)` (sqrt- and
+    /// div-safe), drawn from a stream keyed on (term hash, seed) so
+    /// distinct kernels see distinct data but a (term, seed) pair is
+    /// reproducible everywhere.
+    fn rng(&self, seed: u64) -> Pcg64 {
+        Pcg64::new(seed ^ (u64::from(self.version) << 20) ^ 0xC0_9705)
+    }
+
+    fn inputs32(&self, seed: u64, nvars: usize) -> Vec<Vec<f32>> {
+        let mut rng = self.rng(seed);
+        (0..nvars)
+            .map(|_| (0..self.len).map(|_| rng.uniform(0.25, 4.0) as f32).collect())
+            .collect()
+    }
+
+    fn inputs64(&self, seed: u64, nvars: usize) -> Vec<Vec<f64>> {
+        let mut rng = self.rng(seed);
+        (0..nvars).map(|_| (0..self.len).map(|_| rng.uniform(0.25, 4.0)).collect()).collect()
+    }
+
+    /// Elementwise map of `op` over two evaluated operands — one
+    /// `map32_slice` call in block mode, the per-element scalar loop
+    /// (broadcast constants included) in reference mode.
+    fn map32(&self, c: &mut FpContext, op: OpKind, a: &Val32, b: &Val32) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len];
+        match self.mode {
+            EvalMode::Block => match (a, b) {
+                (Val32::Arr(x), Val32::Arr(y)) => c.map32_slice(op, &x[..], &y[..], &mut out),
+                (Val32::Arr(x), Val32::Scl(s)) => c.map32_slice(op, &x[..], *s, &mut out),
+                (Val32::Scl(s), Val32::Arr(y)) => c.map32_slice(op, *s, &y[..], &mut out),
+                (Val32::Scl(_), Val32::Scl(_)) => {
+                    unreachable!("const-const binaries are filtered")
+                }
+            },
+            EvalMode::ScalarReference => {
+                for i in 0..self.len {
+                    out[i] = scalar_op32(c, op, a.at(i), b.at(i));
+                }
+            }
+        }
+        out
+    }
+
+    fn map64(&self, c: &mut FpContext, op: OpKind, a: &Val64, b: &Val64) -> Vec<f64> {
+        let mut out = vec![0.0f64; self.len];
+        match self.mode {
+            EvalMode::Block => match (a, b) {
+                (Val64::Arr(x), Val64::Arr(y)) => c.map64_slice(op, &x[..], &y[..], &mut out),
+                (Val64::Arr(x), Val64::Scl(s)) => c.map64_slice(op, &x[..], *s, &mut out),
+                (Val64::Scl(s), Val64::Arr(y)) => c.map64_slice(op, *s, &y[..], &mut out),
+                (Val64::Scl(_), Val64::Scl(_)) => {
+                    unreachable!("const-const binaries are filtered")
+                }
+            },
+            EvalMode::ScalarReference => {
+                for i in 0..self.len {
+                    out[i] = scalar_op64(c, op, a.at(i), b.at(i));
+                }
+            }
+        }
+        out
+    }
+
+    fn sum32(&self, c: &mut FpContext, xs: &[f32]) -> f32 {
+        match self.mode {
+            EvalMode::Block => c.sum32_slice(xs),
+            EvalMode::ScalarReference => {
+                let mut acc = 0.0f32;
+                for &x in xs {
+                    acc = c.add32(acc, x);
+                }
+                acc
+            }
+        }
+    }
+
+    fn sum64(&self, c: &mut FpContext, xs: &[f64]) -> f64 {
+        match self.mode {
+            EvalMode::Block => c.sum64_slice(xs),
+            EvalMode::ScalarReference => {
+                let mut acc = 0.0f64;
+                for &x in xs {
+                    acc = c.add64(acc, x);
+                }
+                acc
+            }
+        }
+    }
+
+    fn eval32(&self, c: &mut FpContext, f: &Funcs, e: &Expr, vars: &[Vec<f32>]) -> Val32 {
+        match e {
+            Expr::Var(i) => Val32::Arr(vars[*i].clone()),
+            Expr::Const(k) => Val32::Scl(CONSTS[*k] as f32),
+            Expr::Sqrt(a) => {
+                let av = self.eval32(c, f, a, vars);
+                let xs = av.arr().to_vec();
+                let mut out = vec![0.0f32; self.len];
+                c.call(f.sqrt, |c| match self.mode {
+                    EvalMode::Block => math32::sqrt32_slice(c, &xs, &mut out),
+                    EvalMode::ScalarReference => sqrt32_columnwise(c, &xs, &mut out),
+                });
+                Val32::Arr(out)
+            }
+            Expr::Bin(op, a, b) => {
+                let av = self.eval32(c, f, a, vars);
+                let bv = self.eval32(c, f, b, vars);
+                Val32::Arr(self.map32(c, *op, &av, &bv))
+            }
+        }
+    }
+
+    fn eval64(&self, c: &mut FpContext, f: &Funcs, e: &Expr, vars: &[Vec<f64>]) -> Val64 {
+        match e {
+            Expr::Var(i) => Val64::Arr(vars[*i].clone()),
+            Expr::Const(k) => Val64::Scl(CONSTS[*k]),
+            Expr::Sqrt(a) => {
+                let av = self.eval64(c, f, a, vars);
+                let xs = av.arr().to_vec();
+                let mut out = vec![0.0f64; self.len];
+                c.call(f.sqrt, |c| match self.mode {
+                    EvalMode::Block => math64::sqrt64_slice(c, &xs, &mut out),
+                    EvalMode::ScalarReference => sqrt64_columnwise(c, &xs, &mut out),
+                });
+                Val64::Arr(out)
+            }
+            Expr::Bin(op, a, b) => {
+                let av = self.eval64(c, f, a, vars);
+                let bv = self.eval64(c, f, b, vars);
+                Val64::Arr(self.map64(c, *op, &av, &bv))
+            }
+        }
+    }
+
+    fn register_funcs(ctx: &mut FpContext) -> Funcs {
+        Funcs {
+            lhs: ctx.register("corpus_lhs"),
+            rhs: ctx.register("corpus_rhs"),
+            combine: ctx.register("corpus_combine"),
+            sqrt: ctx.register("corpus_sqrt"),
+        }
+    }
+
+    fn run32(&self, ctx: &mut FpContext, seed: u64) -> Vec<f64> {
+        let n = self.len;
+        let nvars = self.term.max_var().map_or(0, |v| v + 1);
+        let vars = self.inputs32(seed, nvars);
+        let f = Self::register_funcs(ctx);
+        for a in &vars {
+            match self.mode {
+                EvalMode::Block => ctx.load32_slice(a),
+                EvalMode::ScalarReference => {
+                    for &x in a {
+                        ctx.load32(x);
+                    }
+                }
+            }
+        }
+        let lv = ctx.call(f.lhs, |c| self.eval32(c, &f, &self.term.lhs, &vars));
+        let rv = ctx.call(f.rhs, |c| self.eval32(c, &f, &self.term.rhs, &vars));
+        ctx.call(f.combine, |c| match self.term.shape {
+            Shape::Map(op) => {
+                let out = self.map32(c, op, &lv, &rv);
+                self.store32_all(c, &out);
+                out.iter().map(|&v| f64::from(v)).collect()
+            }
+            Shape::MapSum(op) => {
+                let m = self.map32(c, op, &lv, &rv);
+                let s = self.sum32(c, &m);
+                c.store32(s);
+                vec![f64::from(s)]
+            }
+            Shape::MapWideSum(op) => {
+                // widening f32 → f64 is exact and uninstrumented in
+                // both modes; the reduction itself runs in f64
+                let m = self.map32(c, op, &lv, &rv);
+                let wide: Vec<f64> = m.iter().map(|&v| f64::from(v)).collect();
+                let s = self.sum64(c, &wide);
+                c.store64(s);
+                vec![s]
+            }
+            Shape::Dot => {
+                let (x, y) = (lv.arr(), rv.arr());
+                let s = match self.mode {
+                    EvalMode::Block => c.dot32_slice(x, y),
+                    EvalMode::ScalarReference => {
+                        let mut acc = 0.0f32;
+                        for i in 0..n {
+                            let p = c.mul32(x[i], y[i]);
+                            acc = c.add32(acc, p);
+                        }
+                        acc
+                    }
+                };
+                c.store32(s);
+                vec![f64::from(s)]
+            }
+            Shape::Axpy(k) => {
+                let alpha = CONSTS[k] as f32;
+                let (x, y) = (lv.arr(), rv.arr());
+                let mut out = vec![0.0f32; n];
+                match self.mode {
+                    EvalMode::Block => c.axpy32_slice(alpha, x, y, &mut out),
+                    EvalMode::ScalarReference => {
+                        for i in 0..n {
+                            let p = c.mul32(alpha, x[i]);
+                            out[i] = c.add32(p, y[i]);
+                        }
+                    }
+                }
+                self.store32_all(c, &out);
+                out.iter().map(|&v| f64::from(v)).collect()
+            }
+            Shape::Sqdist => {
+                let (x, y) = (lv.arr(), rv.arr());
+                let s = match self.mode {
+                    EvalMode::Block => c.sqdist32_slice(x, y),
+                    EvalMode::ScalarReference => {
+                        let mut acc = 0.0f32;
+                        for i in 0..n {
+                            let d = c.sub32(x[i], y[i]);
+                            let m = c.mul32(d, d);
+                            acc = c.add32(acc, m);
+                        }
+                        acc
+                    }
+                };
+                c.store32(s);
+                vec![f64::from(s)]
+            }
+        })
+    }
+
+    fn run64(&self, ctx: &mut FpContext, seed: u64) -> Vec<f64> {
+        let n = self.len;
+        let nvars = self.term.max_var().map_or(0, |v| v + 1);
+        let vars = self.inputs64(seed, nvars);
+        let f = Self::register_funcs(ctx);
+        for a in &vars {
+            match self.mode {
+                EvalMode::Block => ctx.load64_slice(a),
+                EvalMode::ScalarReference => {
+                    for &x in a {
+                        ctx.load64(x);
+                    }
+                }
+            }
+        }
+        let lv = ctx.call(f.lhs, |c| self.eval64(c, &f, &self.term.lhs, &vars));
+        let rv = ctx.call(f.rhs, |c| self.eval64(c, &f, &self.term.rhs, &vars));
+        ctx.call(f.combine, |c| match self.term.shape {
+            Shape::Map(op) => {
+                let out = self.map64(c, op, &lv, &rv);
+                self.store64_all(c, &out);
+                out
+            }
+            Shape::MapSum(op) => {
+                let m = self.map64(c, op, &lv, &rv);
+                let s = self.sum64(c, &m);
+                c.store64(s);
+                vec![s]
+            }
+            Shape::Dot => {
+                let (x, y) = (lv.arr(), rv.arr());
+                let s = match self.mode {
+                    EvalMode::Block => c.dot64_slice(x, y),
+                    EvalMode::ScalarReference => {
+                        let mut acc = 0.0f64;
+                        for i in 0..n {
+                            let p = c.mul64(x[i], y[i]);
+                            acc = c.add64(acc, p);
+                        }
+                        acc
+                    }
+                };
+                c.store64(s);
+                vec![s]
+            }
+            Shape::Axpy(k) => {
+                let alpha = CONSTS[k];
+                let (x, y) = (lv.arr(), rv.arr());
+                let mut out = vec![0.0f64; n];
+                match self.mode {
+                    EvalMode::Block => c.axpy64_slice(alpha, x, y, &mut out),
+                    EvalMode::ScalarReference => {
+                        for i in 0..n {
+                            let p = c.mul64(alpha, x[i]);
+                            out[i] = c.add64(p, y[i]);
+                        }
+                    }
+                }
+                self.store64_all(c, &out);
+                out
+            }
+            Shape::MapWideSum(_) | Shape::Sqdist => {
+                unreachable!("single-width-only shapes are filtered at Double")
+            }
+        })
+    }
+
+    fn store32_all(&self, c: &mut FpContext, xs: &[f32]) {
+        match self.mode {
+            EvalMode::Block => c.store32_slice(xs),
+            EvalMode::ScalarReference => {
+                for &x in xs {
+                    c.store32(x);
+                }
+            }
+        }
+    }
+
+    fn store64_all(&self, c: &mut FpContext, xs: &[f64]) {
+        match self.mode {
+            EvalMode::Block => c.store64_slice(xs),
+            EvalMode::ScalarReference => {
+                for &x in xs {
+                    c.store64(x);
+                }
+            }
+        }
+    }
+}
+
+impl Workload for CorpusKernel {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn default_target(&self) -> Precision {
+        self.term.width
+    }
+
+    fn functions(&self) -> Vec<&'static str> {
+        let mut f = Vec::new();
+        if self.term.lhs.has_ops() {
+            f.push("corpus_lhs");
+        }
+        if self.term.rhs.has_ops() {
+            f.push("corpus_rhs");
+        }
+        f.push("corpus_combine");
+        if self.term.contains_sqrt() {
+            f.push("corpus_sqrt");
+        }
+        f
+    }
+
+    fn fcs_shared(&self) -> Vec<&'static str> {
+        if self.term.contains_sqrt() {
+            vec!["corpus_sqrt"]
+        } else {
+            Vec::new()
+        }
+    }
+
+    fn version(&self) -> u32 {
+        self.version
+    }
+
+    fn run(&self, ctx: &mut FpContext, seed: u64) -> Vec<f64> {
+        match self.term.width {
+            Precision::Single => self.run32(ctx, seed),
+            Precision::Double => self.run64(ctx, seed),
+        }
+    }
+}
+
+/// The scalar reference for [`math32::sqrt32_slice`]: the same
+/// pack → three column-major Newton steps → finishing multiply →
+/// scatter structure, but every op through the scalar API, in the
+/// slice kernel's column order — so values, counters, *and trace
+/// bytes* match the block kernel exactly. (A plain per-element
+/// [`math32::sqrt32`] loop matches values and counters but interleaves
+/// the trace rows element-major.)
+pub fn sqrt32_columnwise(ctx: &mut FpContext, xs: &[f32], out: &mut [f32]) {
+    assert_eq!(xs.len(), out.len(), "sqrt32_columnwise length mismatch");
+    let mut idx = Vec::with_capacity(xs.len());
+    let mut packed = Vec::with_capacity(xs.len());
+    for (i, &x) in xs.iter().enumerate() {
+        if x < 0.0 {
+            out[i] = f32::NAN;
+        } else if x == 0.0 {
+            out[i] = 0.0;
+        } else {
+            idx.push(i);
+            packed.push(x);
+        }
+    }
+    if packed.is_empty() {
+        return;
+    }
+    let n = packed.len();
+    let mut ys: Vec<f32> =
+        packed.iter().map(|&x| f32::from_bits(0x5f37_59df - (x.to_bits() >> 1))).collect();
+    let mut hx = vec![0.0f32; n];
+    let mut hxy = vec![0.0f32; n];
+    let mut hxy2 = vec![0.0f32; n];
+    let mut corr = vec![0.0f32; n];
+    let mut ny = vec![0.0f32; n];
+    for _ in 0..3 {
+        for i in 0..n {
+            hx[i] = ctx.mul32(0.5, packed[i]);
+        }
+        for i in 0..n {
+            hxy[i] = ctx.mul32(hx[i], ys[i]);
+        }
+        for i in 0..n {
+            hxy2[i] = ctx.mul32(hxy[i], ys[i]);
+        }
+        for i in 0..n {
+            corr[i] = ctx.sub32(1.5, hxy2[i]);
+        }
+        for i in 0..n {
+            ny[i] = ctx.mul32(ys[i], corr[i]);
+        }
+        std::mem::swap(&mut ys, &mut ny);
+    }
+    let mut res = vec![0.0f32; n];
+    for i in 0..n {
+        res[i] = ctx.mul32(packed[i], ys[i]);
+    }
+    for (k, &i) in idx.iter().enumerate() {
+        out[i] = res[k];
+    }
+}
+
+/// The scalar reference for [`math64::sqrt64_slice`] (four Newton
+/// refinements, column-major) — see [`sqrt32_columnwise`].
+pub fn sqrt64_columnwise(ctx: &mut FpContext, xs: &[f64], out: &mut [f64]) {
+    assert_eq!(xs.len(), out.len(), "sqrt64_columnwise length mismatch");
+    let mut idx = Vec::with_capacity(xs.len());
+    let mut packed = Vec::with_capacity(xs.len());
+    for (i, &x) in xs.iter().enumerate() {
+        if x < 0.0 {
+            out[i] = f64::NAN;
+        } else if x == 0.0 {
+            out[i] = 0.0;
+        } else {
+            idx.push(i);
+            packed.push(x);
+        }
+    }
+    if packed.is_empty() {
+        return;
+    }
+    let n = packed.len();
+    let mut ys: Vec<f64> = packed
+        .iter()
+        .map(|&x| f64::from_bits(0x5fe6_eb50_c7b5_37a9 - (x.to_bits() >> 1)))
+        .collect();
+    let mut hx = vec![0.0f64; n];
+    let mut hxy = vec![0.0f64; n];
+    let mut hxy2 = vec![0.0f64; n];
+    let mut corr = vec![0.0f64; n];
+    let mut ny = vec![0.0f64; n];
+    for _ in 0..4 {
+        for i in 0..n {
+            hx[i] = ctx.mul64(0.5, packed[i]);
+        }
+        for i in 0..n {
+            hxy[i] = ctx.mul64(hx[i], ys[i]);
+        }
+        for i in 0..n {
+            hxy2[i] = ctx.mul64(hxy[i], ys[i]);
+        }
+        for i in 0..n {
+            corr[i] = ctx.sub64(1.5, hxy2[i]);
+        }
+        for i in 0..n {
+            ny[i] = ctx.mul64(ys[i], corr[i]);
+        }
+        std::mem::swap(&mut ys, &mut ny);
+    }
+    let mut res = vec![0.0f64; n];
+    for i in 0..n {
+        res[i] = ctx.mul64(packed[i], ys[i]);
+    }
+    for (k, &i) in idx.iter().enumerate() {
+        out[i] = res[k];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The differential identity check
+// ---------------------------------------------------------------------------
+
+/// Shared in-memory trace buffer.
+#[derive(Clone)]
+struct TraceBuf(Arc<Mutex<Vec<u8>>>);
+
+impl Write for TraceBuf {
+    fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(b);
+        Ok(b.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Run one term at one length through the full placement battery —
+/// exact, WP truncation at three widths, the dyn-dispatch perturb FPI,
+/// CIP with per-function widths, FCS (the sqrt kernel inheriting its
+/// caller), and both optimization-target filters — comparing
+/// [`EvalMode::Block`] against [`EvalMode::ScalarReference`] each
+/// time: output bits, counters, and (on the first truncation scenario)
+/// trace bytes. Returns a diagnostic naming the first divergence.
+///
+/// Under `--features lanes` the block side drives the lane tier, so
+/// the same call pins scalar == lanes.
+pub fn identity_check(term: &Term, len: usize) -> Result<(), String> {
+    let term = term.clone().canonicalized();
+    if !term.admissible() {
+        return Err(format!("inadmissible term `{}`", term.canonical()));
+    }
+    let target = term.width;
+    let bits = target.mantissa_bits();
+    let widths = [1u32, (bits / 3).max(2), bits - 1];
+
+    type Mk = Box<dyn Fn() -> FpContext>;
+    let trunc = move |k: u32| {
+        FpContext::new(
+            FpiLibrary::truncation_family(target),
+            Placement::whole_program(FpiLibrary::truncation_id(k)),
+        )
+    };
+    let mut scenarios: Vec<(String, Mk, bool)> = vec![(
+        "exact".to_string(),
+        Box::new(FpContext::profiler) as Mk,
+        false,
+    )];
+    for (i, &k) in widths.iter().enumerate() {
+        scenarios.push((format!("wp-truncate[{k}]"), Box::new(move || trunc(k)), i == 0));
+    }
+    scenarios.push((
+        "wp-perturb-dyn".to_string(),
+        Box::new(|| {
+            let mut lib = FpiLibrary::new();
+            let id = lib.register(Arc::new(PerturbFpi::new(10, PerturbMode::Result)));
+            FpContext::new(lib, Placement::whole_program(id))
+        }),
+        false,
+    ));
+    let (k_mid, k_low) = (widths[1], 3.min(bits));
+    scenarios.push((
+        "cip".to_string(),
+        Box::new(move || {
+            let mut map = HashMap::new();
+            map.insert("corpus_combine".to_string(), FpiLibrary::truncation_id(k_mid));
+            map.insert("corpus_lhs".to_string(), FpiLibrary::truncation_id(k_low));
+            map.insert("corpus_sqrt".to_string(), FpiLibrary::truncation_id(k_mid));
+            FpContext::new(FpiLibrary::truncation_family(target), Placement::current_function(map))
+        }),
+        false,
+    ));
+    scenarios.push((
+        "fcs".to_string(),
+        Box::new(move || {
+            // the shared sqrt kernel is deliberately unmapped: its
+            // precision must follow whichever mapped frame calls it
+            let mut map = HashMap::new();
+            map.insert("corpus_lhs".to_string(), FpiLibrary::truncation_id(k_low));
+            map.insert("corpus_combine".to_string(), FpiLibrary::truncation_id(k_mid));
+            FpContext::new(FpiLibrary::truncation_family(target), Placement::call_stack(map))
+        }),
+        false,
+    ));
+    for t in [Precision::Single, Precision::Double] {
+        scenarios.push((
+            format!("wp-truncate+target-{}", t.name()),
+            Box::new(move || {
+                let mut ctx = trunc(5.min(bits));
+                ctx.set_target(t);
+                ctx
+            }),
+            false,
+        ));
+    }
+
+    for (label, mk, traced) in scenarios {
+        let kb = CorpusKernel::with_len(term.clone(), len);
+        let ks = CorpusKernel::with_len(term.clone(), len).with_mode(EvalMode::ScalarReference);
+        let seed = kb.train_seeds()[0];
+        let mut cb = mk();
+        let mut cs = mk();
+        let bbuf = TraceBuf(Arc::new(Mutex::new(Vec::new())));
+        let sbuf = TraceBuf(Arc::new(Mutex::new(Vec::new())));
+        if traced {
+            cb.set_trace(TraceSink::new(Box::new(bbuf.clone())));
+            cs.set_trace(TraceSink::new(Box::new(sbuf.clone())));
+        }
+        let ob = kb.run(&mut cb, seed);
+        let os = ks.run(&mut cs, seed);
+        let fail = |what: &str| {
+            Err(format!(
+                "{label}: {what} diverged between scalar and block (term `{}`, len {len})",
+                term.canonical()
+            ))
+        };
+        if os.len() != ob.len() {
+            return fail("output length");
+        }
+        for (a, b) in os.iter().zip(&ob) {
+            if a.to_bits() != b.to_bits() {
+                return fail("output values");
+            }
+        }
+        if cs.counters() != cb.counters() {
+            return fail("counters");
+        }
+        if traced && *sbuf.0.lock().unwrap() != *bbuf.0.lock().unwrap() {
+            return fail("trace bytes");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::grammar::parse_term;
+    use super::*;
+
+    #[test]
+    fn sqrt_columnwise_matches_scalar_newton_values() {
+        // same values and counters as mapping sqrt32/sqrt64 over the
+        // elements — only the trace interleaving differs
+        let xs32 = [2.0f32, 0.0, -1.0, 9.0, 0.3125];
+        let mut a = FpContext::profiler();
+        let want: Vec<f32> = xs32.iter().map(|&x| math32::sqrt32(&mut a, x)).collect();
+        let mut b = FpContext::profiler();
+        let mut got = vec![0.0f32; xs32.len()];
+        sqrt32_columnwise(&mut b, &xs32, &mut got);
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.to_bits(), g.to_bits());
+        }
+        assert_eq!(a.counters(), b.counters());
+
+        let xs64 = [2.0f64, 0.0, -1.0, 9.0, 0.3125];
+        let mut a = FpContext::profiler();
+        let want: Vec<f64> = xs64.iter().map(|&x| math64::sqrt64(&mut a, x)).collect();
+        let mut b = FpContext::profiler();
+        let mut got = vec![0.0f64; xs64.len()];
+        sqrt64_columnwise(&mut b, &xs64, &mut got);
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.to_bits(), g.to_bits());
+        }
+        assert_eq!(a.counters(), b.counters());
+    }
+
+    #[test]
+    fn kernel_runs_and_reports_function_flops() {
+        let term = parse_term("(mapsum32 mul (sqrt (add c1 x0)) x1)").unwrap();
+        let k = CorpusKernel::new(term);
+        assert_eq!(k.name(), "corpus:(mapsum32 mul (sqrt (add c1 x0)) x1)");
+        assert_eq!(k.functions(), vec!["corpus_lhs", "corpus_combine", "corpus_sqrt"]);
+        assert_eq!(k.fcs_shared(), vec!["corpus_sqrt"]);
+        let mut ctx = FpContext::profiler();
+        let out = k.run(&mut ctx, k.train_seeds()[0]);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].is_finite());
+        let stats = ctx.function_stats();
+        for f in k.functions() {
+            let row = stats.iter().find(|(n, _)| n == f);
+            assert!(row.is_some_and(|(_, s)| s.total_flops() > 0), "{f} executed no FLOPs");
+        }
+    }
+
+    #[test]
+    fn identity_holds_on_representative_terms() {
+        for text in [
+            "(map32 div (sqrt (add c1 x0)) x1)",
+            "(mapsum64 add x0 (div x1 c0))",
+            "(dot64 (sqrt x0) x1)",
+            "(axpy32 c2 (sqrt x0) x1)",
+            "(sqdist32 x0 (add c1 x1))",
+            "(mapwsum32 mul x0 x0)",
+        ] {
+            let term = parse_term(text).unwrap();
+            for len in [0usize, 1, 7, 8, 9, DEFAULT_LEN] {
+                identity_check(&term, len).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn version_is_the_canonical_hash_and_differs_across_terms() {
+        let a = CorpusKernel::new(parse_term("(dot32 x0 x1)").unwrap());
+        let b = CorpusKernel::new(parse_term("(dot64 x0 x1)").unwrap());
+        assert_eq!(a.version(), a.term().hash32());
+        assert_ne!(a.version(), b.version());
+        assert_ne!(a.name(), b.name());
+    }
+}

@@ -1,0 +1,128 @@
+//! Generated expression-kernel corpus: grammar-enumerated workloads as
+//! a differential fuzz harness and benchmark suite.
+//!
+//! The eleven hand-ported benchmarks pin the engine's bitwise-identity
+//! contracts only on code somebody hand-wrote. This module borrows
+//! ruler's `enumo` idiom — enumerate term workloads from a grammar
+//! with plugged holes and canonical-form dedup filters — to generate
+//! straight-line FP kernels nobody hand-wrote, and compiles each one
+//! into a first-class [`Workload`]:
+//!
+//! - [`grammar`](self): [`Term`] / [`Expr`] over add/sub/mul/div, the
+//!   fused sum/dot/axpy/sqdist forms, `sqrt` via the instrumented
+//!   Newton kernels, f32/f64 widths plus an f32→f64 widening-sum mix,
+//!   and broadcast constants. Canonical s-expression strings are the
+//!   identity: dedup, workload names (`corpus:<canonical>`), cache
+//!   versions, and `--term` reproducers all key on them.
+//! - [`CorpusKernel`]: each term runs through slice call sites (block
+//!   and lane tier coverage) *and* through a scalar-reference replay
+//!   of each slice kernel's documented op sequence;
+//!   [`identity_check`] asserts the two are bit-identical in values,
+//!   counters, and trace bytes under the full placement battery.
+//! - [`generate`]: the seeded, deterministic corpus — admissible,
+//!   deduped, and validated (exact outputs finite, at least one FLOP).
+//!
+//! Corpus kernels are *not* part of [`super::all`] (the paper's
+//! Table II registry stays fixed); they resolve through
+//! [`super::by_name`] via the `corpus:` prefix, which makes them
+//! usable everywhere a benchmark name is accepted — `neat profile`,
+//! `neat explore`, `neat tune`, and `neat serve` job submissions.
+
+mod grammar;
+mod kernel;
+
+pub use grammar::{
+    parse_term, shrink, shrink_candidates, Expr, Grammar, Shape, Term, CONSTS, VARS,
+};
+pub use kernel::{
+    identity_check, sqrt32_columnwise, sqrt64_columnwise, CorpusKernel, EvalMode, DEFAULT_LEN,
+};
+
+use crate::engine::FpContext;
+use crate::util::Pcg64;
+
+use super::Workload;
+
+/// The fixed generator seed used by `neat corpus` and the CI
+/// `corpus-fuzz` job when `--seed` is not given.
+pub const DEFAULT_SEED: u64 = 0x0C0_9705;
+
+/// Generate `count` distinct corpus kernels, deterministically from
+/// `seed`: terms are drawn from the default [`Grammar`], canonicalized
+/// and deduped, and validated by an exact probe run (finite outputs,
+/// at least one FLOP — terms that go NaN/inf on their own inputs make
+/// useless tuning subjects).
+pub fn generate(count: usize, seed: u64) -> Vec<Term> {
+    Grammar::default().generate_with(count, seed, |t| {
+        let k = CorpusKernel::with_len(t.clone(), 16);
+        let mut ctx = FpContext::profiler();
+        let out = k.run(&mut ctx, k.train_seeds()[0]);
+        !out.is_empty()
+            && out.iter().all(|v| v.is_finite())
+            && ctx.counters().total_flops() > 0
+    })
+}
+
+/// Convenience for summaries: bucket a corpus by shape/width for the
+/// `neat corpus` report, in a stable order.
+pub fn histogram(terms: &[Term]) -> Vec<(String, usize)> {
+    let mut counts: Vec<(String, usize)> = Vec::new();
+    for t in terms {
+        let head = t
+            .canonical()
+            .split_whitespace()
+            .next()
+            .unwrap_or("(?")
+            .trim_start_matches('(')
+            .to_string();
+        match counts.iter_mut().find(|(h, _)| *h == head) {
+            Some((_, n)) => *n += 1,
+            None => counts.push((head, 1)),
+        }
+    }
+    counts.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    counts
+}
+
+/// Deterministically pick `n` sample indices spread across a corpus —
+/// used by the CLI walk so the kernels it explores aren't just the
+/// first few draws.
+pub fn spread_indices(len: usize, n: usize, seed: u64) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..len).collect();
+    let mut rng = Pcg64::new(seed ^ 0x5A3D);
+    rng.shuffle(&mut idx);
+    idx.truncate(n.min(len));
+    idx.sort_unstable();
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_is_deterministic_and_validated() {
+        let a = generate(24, DEFAULT_SEED);
+        let b = generate(24, DEFAULT_SEED);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 24);
+        for t in &a {
+            let k = CorpusKernel::with_len(t.clone(), 16);
+            let mut ctx = FpContext::profiler();
+            let out = k.run(&mut ctx, k.train_seeds()[0]);
+            assert!(out.iter().all(|v| v.is_finite()), "{}", t.canonical());
+        }
+    }
+
+    #[test]
+    fn histogram_and_spread_are_stable() {
+        let terms = generate(24, DEFAULT_SEED);
+        let h = histogram(&terms);
+        assert_eq!(h.iter().map(|(_, n)| n).sum::<usize>(), terms.len());
+        let s1 = spread_indices(terms.len(), 4, 1);
+        let s2 = spread_indices(terms.len(), 4, 1);
+        assert_eq!(s1, s2);
+        assert_eq!(s1.len(), 4);
+        assert!(s1.windows(2).all(|w| w[0] < w[1]));
+    }
+}

@@ -17,6 +17,7 @@
 pub mod blackscholes;
 pub mod bodytrack;
 pub mod canneal;
+pub mod corpus;
 pub mod ferret;
 pub mod fluidanimate;
 pub mod heartwall;
@@ -119,8 +120,18 @@ pub fn table2() -> Vec<Box<dyn Workload>> {
     all().into_iter().filter(|w| !matches!(w.name(), "canneal" | "srad")).collect()
 }
 
-/// Look a workload up by name.
+/// Look a workload up by name. `corpus:<term>` names compile the term
+/// on the fly into a generated-corpus kernel (see [`corpus`]) — the
+/// prefix is what lets `neat tune` and `neat serve` accept
+/// user-provided programs the registry has never heard of. The
+/// compiled kernel's name is the *canonicalized* term, so looking up a
+/// non-canonical spelling succeeds but returns the canonical name.
 pub fn by_name(name: &str) -> Option<Box<dyn Workload>> {
+    if let Some(term) = name.strip_prefix("corpus:") {
+        return corpus::parse_term(term)
+            .ok()
+            .map(|t| Box::new(corpus::CorpusKernel::new(t)) as Box<dyn Workload>);
+    }
     all().into_iter().find(|w| w.name() == name)
 }
 
@@ -148,6 +159,18 @@ mod tests {
             assert!(by_name(w.name()).is_some());
         }
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn by_name_compiles_corpus_terms() {
+        let w = by_name("corpus:(dot32 x0 x1)").expect("corpus term must resolve");
+        assert_eq!(w.name(), "corpus:(dot32 x0 x1)");
+        assert!(by_name(w.name()).is_some(), "corpus names round-trip");
+        // non-canonical spellings resolve to the canonical name
+        let w = by_name("corpus:(dot32 x1 x0)").unwrap();
+        assert_eq!(w.name(), "corpus:(dot32 x0 x1)");
+        assert!(by_name("corpus:(map32 sub x0 x0)").is_none(), "inadmissible term");
+        assert!(by_name("corpus:garbage").is_none());
     }
 
     #[test]

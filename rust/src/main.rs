@@ -9,6 +9,7 @@
 //! neat tune <benchmark> [options]      constraint-driven heuristic tuning
 //! neat suite [options]                 sharded, resumable figure regeneration
 //! neat serve [options]                 always-on tuning daemon (HTTP/JSON)
+//! neat corpus [options]                generated-kernel corpus: fuzz + walk
 //! neat figure <id|all>                 regenerate a paper table/figure
 //! neat ablation <id|all>               DESIGN.md ablations
 //! neat list                            benchmarks + figure ids
@@ -70,6 +71,20 @@ fn usage() -> &'static str {
                                                pool, serves repeated configurations\n\
                                                from the content-addressed cache, and\n\
                                                parks queued jobs on POST /shutdown\n\
+       corpus  [--count N] [--seed N] [--walk K] [--smoke] [--threads N]\n\
+               [--term STR]                    generate the seeded expression-kernel\n\
+                                               corpus and differentially fuzz it:\n\
+                                               every kernel runs through the block\n\
+                                               engine and a scalar replay of the\n\
+                                               documented op sequences, asserting\n\
+                                               bitwise identity (values + counters +\n\
+                                               trace); any divergence is shrunk to a\n\
+                                               minimal `--term` reproducer. Then K\n\
+                                               sampled kernels walk explore + tune +\n\
+                                               a `neat serve` job round trip.\n\
+                                               --smoke is the CI preset; --term STR\n\
+                                               rechecks one kernel across boundary\n\
+                                               lengths\n\
        figure  <id|all>                        fig1 fig4 fig5 fig6 fig7 fig8\n\
                                                fig9 fig10 fig11 table1 table2\n\
                                                table3 table5 table6\n\
@@ -98,7 +113,10 @@ fn parse_args(raw: &[String]) -> Args {
         let a = &raw[i];
         if let Some(name) = a.strip_prefix("--") {
             // value-taking flags; everything else is a switch
-            const VALUED: [&str; 19] = [
+            const VALUED: [&str; 22] = [
+                "count",
+                "term",
+                "walk",
                 "rule",
                 "target",
                 "population",
@@ -563,6 +581,195 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `neat corpus` — generate the seeded expression-kernel corpus, run
+/// the scalar-vs-block differential identity check on every kernel
+/// (shrinking any divergence to a minimal `--term` reproducer), then
+/// walk a deterministic sample through explore + tune and a `neat
+/// serve` job round trip. `--smoke` is the CI preset: full generation
+/// and fuzz, a one-kernel walk, quick budgets.
+fn cmd_corpus(args: &Args) -> Result<()> {
+    use neat::bench_suite::corpus;
+    use neat::service::{JobKind, JobSpec, JobState};
+    use std::time::{Duration, Instant};
+
+    // Lane remainder edges for both element widths, plus the ragged
+    // default length.
+    let check_lens = [0usize, 1, 3, 4, 5, 7, 8, 9, corpus::DEFAULT_LEN];
+
+    // --term: recheck one kernel — the reproducer path printed when
+    // the fuzz loop finds a divergence.
+    if let Some(text) = args.flags.get("term") {
+        let term = corpus::parse_term(text).map_err(anyhow::Error::msg)?;
+        println!("term:    {}", term.canonical());
+        println!("name:    corpus:{}", term.canonical());
+        println!("version: {:08x}", term.hash32());
+        for len in check_lens {
+            corpus::identity_check(&term, len)
+                .map_err(|e| anyhow::anyhow!("identity divergence: {e}"))?;
+        }
+        println!(
+            "identity holds: scalar reference == {} engine (values + counters + \
+             trace) at lens {check_lens:?}",
+            neat::service::cache::engine_mode()
+        );
+        return Ok(());
+    }
+
+    let smoke = args.switches.contains("smoke");
+    let count: usize = match args.flags.get("count") {
+        Some(v) => v.parse().context("--count must be a positive integer")?,
+        None => 256,
+    };
+    let seed: u64 = match args.flags.get("seed") {
+        Some(v) => v.parse().context("--seed must be an integer")?,
+        None => corpus::DEFAULT_SEED,
+    };
+    let walk: usize = match args.flags.get("walk") {
+        Some(v) => v.parse().context("--walk must be an integer")?,
+        None if smoke => 1,
+        None => 2,
+    };
+
+    // Step 1: generate the corpus.
+    let t0 = Instant::now();
+    let terms = corpus::generate(count, seed);
+    if terms.len() < count {
+        bail!(
+            "generator produced only {} of {count} kernels from seed {seed:#x} \
+             (grammar pool exhausted — lower --count or deepen the grammar)",
+            terms.len()
+        );
+    }
+    println!(
+        "generated {} deduped kernels from seed {seed:#x} in {:.2?}",
+        terms.len(),
+        t0.elapsed()
+    );
+    for (head, n) in corpus::histogram(&terms) {
+        println!("  {head:<10} {n:>4}");
+    }
+    let with_sqrt = terms.iter().filter(|t| t.contains_sqrt()).count();
+    println!("  {:<10} {with_sqrt:>4}", "with sqrt");
+
+    // Step 2: differential fuzz — scalar reference vs the block/lanes
+    // engine on every kernel, under the full placement battery.
+    let t1 = Instant::now();
+    for term in &terms {
+        if let Err(e) = corpus::identity_check(term, corpus::DEFAULT_LEN) {
+            eprintln!("identity divergence: {e}");
+            let min = corpus::shrink(term, |t| {
+                corpus::identity_check(t, corpus::DEFAULT_LEN).is_err()
+            });
+            eprintln!("minimal reproducer:");
+            eprintln!("  neat corpus --term '{}'", min.canonical());
+            bail!("differential fuzz failed on {}", term.canonical());
+        }
+    }
+    println!(
+        "identity: scalar reference == {} engine on all {} kernels \
+         (values + counters + trace; {:.2?})",
+        neat::service::cache::engine_mode(),
+        terms.len(),
+        t1.elapsed()
+    );
+
+    if walk == 0 {
+        return Ok(());
+    }
+
+    // Step 3: walk a deterministic sample end-to-end — Table-II style
+    // exploration fronts, then the constraint-driven tuner.
+    let exec = args.executor();
+    let budget = if smoke { Budget::quick() } else { args.budget() };
+    let picks = corpus::spread_indices(terms.len(), walk, seed);
+    for &i in &picks {
+        let term = &terms[i];
+        let name = format!("corpus:{}", term.canonical());
+        let w = bench_suite::by_name(&name).expect("generated kernels resolve by name");
+        println!("\nwalking {name}");
+        let eval = Evaluator::new(w, None);
+        for rule in [RuleKind::Wp, RuleKind::Cip] {
+            let res = experiments::explore_rule_with(&eval, rule, budget, &exec);
+            let front = res.front();
+            let best = front
+                .iter()
+                .filter(|(_, d)| d.error <= 0.01)
+                .map(|(_, d)| d.fpu_nec)
+                .fold(f64::INFINITY, f64::min);
+            println!(
+                "  explore/{:<4} {:>3} configs, front {:>2}; best NEC at <=1% err {best:.4}",
+                rule.name(),
+                res.details.len(),
+                front.len()
+            );
+        }
+        let problem = EvalProblem::with_executor(&eval, RuleKind::Cip, exec.clone());
+        let tuned = Tuner::new(TunerConfig {
+            goal: TuneGoal::ErrorBudget(0.01),
+            max_evals: if smoke { 60 } else { 200 },
+            strategy: DescentStrategy::Lattice,
+            exchange_rounds: neat::tuner::DEFAULT_EXCHANGE_ROUNDS,
+            exchange_partners: neat::tuner::DEFAULT_EXCHANGE_PARTNERS,
+        })
+        .run(&problem);
+        println!(
+            "  tune/cip     [{}]  err {:.3}%  NEC {:.4}  ({} probes{})",
+            tuned.genome.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(","),
+            tuned.objectives.error * 100.0,
+            tuned.objectives.energy,
+            tuned.probes_used,
+            if tuned.feasible { "" } else { "; best effort" }
+        );
+    }
+
+    // Step 4: the service follow-on — a generated kernel as a
+    // user-provided `neat serve` workload. Submit a probe, wait,
+    // resubmit the same configuration to hit the content-addressed
+    // cache, shut down.
+    let rd = args.results()?;
+    let mut cfg = ServiceConfig::new();
+    cfg.threads = exec.threads();
+    cfg.cache_dir = Some(rd.path("corpus_cache"));
+    let service = Service::start(cfg)?;
+    let term = &terms[picks[0]];
+    let benchmark = format!("corpus:{}", term.canonical());
+    let bits = term.width.mantissa_bits() / 2;
+    let spec = || JobSpec {
+        tenant: "corpus".to_string(),
+        priority: 1,
+        target: None,
+        kind: JobKind::Probe {
+            benchmark: benchmark.clone(),
+            rule: RuleKind::Wp,
+            genome: vec![bits],
+        },
+    };
+    let id = service.submit(spec())?;
+    let snap =
+        service.wait(id, Duration::from_secs(600)).context("service probe did not finish")?;
+    if snap.state != JobState::Done {
+        bail!("service probe ended {} ({:?})", snap.state.name(), snap.error);
+    }
+    let id2 = service.submit(spec())?;
+    let snap2 =
+        service.wait(id2, Duration::from_secs(600)).context("repeat probe did not finish")?;
+    let _parked = service.shutdown();
+    println!(
+        "\nservice round trip on {benchmark}: job {id} ({}), repeat job {id2} ({}, \
+         cache_hit={})",
+        snap.state.name(),
+        snap2.state.name(),
+        snap2.cache_hit()
+    );
+    if snap2.state != JobState::Done {
+        bail!("repeat probe ended {} ({:?})", snap2.state.name(), snap2.error);
+    }
+    if !snap2.cache_hit() {
+        bail!("repeat probe missed the content-addressed result cache");
+    }
+    Ok(())
+}
+
 fn cmd_figure(args: &Args) -> Result<()> {
     let id = args.positional.get(1).map(String::as_str).unwrap_or("all");
     let rd = args.results()?;
@@ -662,6 +869,7 @@ fn main() -> ExitCode {
         "tune" => cmd_tune(&args),
         "suite" => cmd_suite(&args),
         "serve" => cmd_serve(&args),
+        "corpus" => cmd_corpus(&args),
         "figure" => cmd_figure(&args),
         "ablation" => cmd_ablation(&args),
         "" | "help" | "--help" | "-h" => {

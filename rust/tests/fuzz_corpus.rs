@@ -1,0 +1,223 @@
+//! Differential fuzz harness over the generated expression-kernel
+//! corpus: every grammar-enumerated kernel must satisfy the engine's
+//! bitwise-identity contracts on code nobody hand-wrote.
+//!
+//! Layer 1 — scalar vs block(/lanes): each kernel runs through the
+//! slice call sites and through a scalar replay of every slice
+//! kernel's documented op sequence; values, counters, and trace bytes
+//! must be bit-identical under the full placement battery (exact,
+//! WP-truncate, dynamic perturbation, CIP, FCS, target filters).
+//! Layer 2 — serial vs parallel vs sharded: exploring a corpus kernel
+//! must produce the same archive bit-for-bit regardless of the worker
+//! pool shape.
+//!
+//! Any layer-1 divergence is shrunk to a minimal term and printed as a
+//! re-runnable `neat corpus --term '<canonical>'` reproducer.
+
+use std::collections::HashSet;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use neat::bench_suite::corpus::{self, CorpusKernel, Term, DEFAULT_LEN};
+use neat::bench_suite::{self, Workload};
+use neat::coordinator::experiments::{explore_rule_with, Budget};
+use neat::coordinator::suite::{plan_shards, shard_map};
+use neat::coordinator::{EvalDetail, EvalProblem, Evaluator, Executor, RuleKind};
+use neat::service::{JobKind, JobSpec, JobState, Service, ServiceConfig};
+use neat::tuner::{DescentStrategy, TuneGoal, Tuner, TunerConfig};
+
+/// The CI corpus size (acceptance bar: >= 256 deduped kernels).
+const CORPUS_SIZE: usize = 256;
+
+fn corpus_terms() -> Vec<Term> {
+    corpus::generate(CORPUS_SIZE, corpus::DEFAULT_SEED)
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("neat_fuzz_corpus_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// On a divergence, shrink to a minimal failing term and panic with a
+/// reproducer the developer can paste straight into the CLI.
+fn fail_with_reproducer(term: &Term, len: usize, err: &str) -> ! {
+    let min = corpus::shrink(term, |t| corpus::identity_check(t, len).is_err());
+    panic!(
+        "identity divergence: {err}\n\
+         minimal reproducer:\n  neat corpus --term '{}'",
+        min.canonical()
+    );
+}
+
+/// Acceptance bar: the fixed seed yields at least 256 kernels, twice
+/// over identically, with no canonical-form duplicates, and the
+/// grammar's sqrt terms and fused shapes actually show up.
+#[test]
+fn corpus_reaches_256_deduped_kernels_deterministically() {
+    let a = corpus_terms();
+    let b = corpus_terms();
+    assert_eq!(a, b, "generation must be a pure function of the seed");
+    assert!(a.len() >= CORPUS_SIZE, "only {} kernels generated", a.len());
+
+    let canon: HashSet<String> = a.iter().map(|t| t.canonical()).collect();
+    assert_eq!(canon.len(), a.len(), "canonical-form dedup failed");
+
+    let with_sqrt = a.iter().filter(|t| t.contains_sqrt()).count();
+    assert!(with_sqrt > 0, "sqrt terms must appear in the corpus");
+    let heads = corpus::histogram(&a);
+    assert!(
+        heads.len() >= 6,
+        "expected a diverse shape mix, got only {heads:?}"
+    );
+}
+
+/// The tentpole assertion: scalar reference == block(/lanes) engine —
+/// values, counters, and trace bytes — on every generated kernel.
+#[test]
+fn differential_identity_holds_on_every_generated_kernel() {
+    let terms = corpus_terms();
+    for term in &terms {
+        if let Err(e) = corpus::identity_check(term, DEFAULT_LEN) {
+            fail_with_reproducer(term, DEFAULT_LEN, &e);
+        }
+    }
+}
+
+/// A spread sample re-checked at the lane remainder edges for both
+/// element widths (f32 lanes = 8, f64 lanes = 4): empty, singleton,
+/// lane-1, lane, lane+1, ragged.
+#[test]
+fn boundary_lengths_hold_on_sampled_kernels() {
+    let terms = corpus_terms();
+    let picks = corpus::spread_indices(terms.len(), 12, corpus::DEFAULT_SEED);
+    for &i in &picks {
+        for len in [0usize, 1, 3, 4, 5, 7, 8, 9, 17] {
+            if let Err(e) = corpus::identity_check(&terms[i], len) {
+                fail_with_reproducer(&terms[i], len, &e);
+            }
+        }
+    }
+}
+
+/// Satellite: every workload the content-addressed cache can see —
+/// hand-ported registry plus the full generated corpus — carries a
+/// distinct `(name, version())` pair, so no two workloads can ever
+/// collide on a cache key.
+#[test]
+fn workload_name_version_pairs_are_unique_across_registry_and_corpus() {
+    let mut pairs: Vec<(String, u32)> = bench_suite::all()
+        .iter()
+        .map(|w| (w.name().to_string(), w.version()))
+        .collect();
+    let terms = corpus_terms();
+    for t in &terms {
+        let k = CorpusKernel::new(t.clone());
+        pairs.push((k.name().to_string(), k.version()));
+    }
+    let total = pairs.len();
+    let unique: HashSet<&(String, u32)> = pairs.iter().collect();
+    assert_eq!(unique.len(), total, "duplicate (name, version) pair");
+
+    // the corpus versions are content hashes of the canonical term:
+    // distinct terms must not collide across the whole corpus
+    let versions: HashSet<u32> = terms.iter().map(|t| t.hash32()).collect();
+    assert_eq!(versions.len(), terms.len(), "version hash collision");
+
+    // and re-compiling the same term reproduces the same pair
+    let k1 = CorpusKernel::new(terms[0].clone());
+    let k2 = CorpusKernel::new(terms[0].clone());
+    assert_eq!((k1.name(), k1.version()), (k2.name(), k2.version()));
+}
+
+/// Layer 2: exploring a corpus kernel yields bit-identical archives —
+/// same genomes, same order, same `EvalDetail` bits — whether the
+/// walk runs serial, on a worker pool, or sharded with nested
+/// executors (the `neat suite` shape).
+#[test]
+fn serial_parallel_and_sharded_archives_are_bit_identical() {
+    let terms = corpus_terms();
+    let picks = corpus::spread_indices(terms.len(), 3, 0xA5);
+    let names: Vec<String> =
+        picks.iter().map(|&i| format!("corpus:{}", terms[i].canonical())).collect();
+
+    let archive = |name: &str, exec: &Executor| -> Vec<(Vec<u32>, EvalDetail)> {
+        let w = bench_suite::by_name(name).expect("corpus kernel resolves");
+        let eval = Evaluator::new(w, None);
+        explore_rule_with(&eval, RuleKind::Cip, Budget::quick(), exec).details
+    };
+    let assert_bitwise = |a: &[(Vec<u32>, EvalDetail)], b: &[(Vec<u32>, EvalDetail)]| {
+        assert_eq!(a.len(), b.len());
+        for ((ga, da), (gb, db)) in a.iter().zip(b) {
+            assert_eq!(ga, gb, "genome order must match");
+            assert_eq!(da.error.to_bits(), db.error.to_bits());
+            assert_eq!(da.fpu_nec.to_bits(), db.fpu_nec.to_bits());
+            assert_eq!(da.mem_nec.to_bits(), db.mem_nec.to_bits());
+            assert_eq!(da.fpu_target_nec.to_bits(), db.fpu_target_nec.to_bits());
+        }
+    };
+
+    let serial: Vec<_> = names.iter().map(|n| archive(n, &Executor::serial())).collect();
+    for (n, s) in names.iter().zip(&serial) {
+        let parallel = archive(n, &Executor::new(4));
+        assert_bitwise(s, &parallel);
+    }
+    let sharded = shard_map(plan_shards(4, Some(2), names.len()), names.len(), |i, exec| {
+        archive(&names[i], exec)
+    });
+    for (s, sh) in serial.iter().zip(&sharded) {
+        assert_bitwise(s, sh);
+    }
+}
+
+/// End-to-end: a generated kernel is tunable like any Table II row and
+/// round-trips through a `neat serve` job submission, with the repeat
+/// probe answered entirely from the content-addressed cache.
+#[test]
+fn corpus_kernel_tunes_and_round_trips_through_the_service() {
+    let terms = corpus_terms();
+    let term = &terms[corpus::spread_indices(terms.len(), 1, 7)[0]];
+    let name = format!("corpus:{}", term.canonical());
+
+    // heuristic tuner over the generated kernel
+    let w = bench_suite::by_name(&name).expect("corpus kernel resolves");
+    let eval = Evaluator::new(w, None);
+    let problem = EvalProblem::with_executor(&eval, RuleKind::Cip, Executor::new(2));
+    let result = Tuner::new(TunerConfig {
+        goal: TuneGoal::ErrorBudget(0.01),
+        max_evals: 40,
+        strategy: DescentStrategy::Lattice,
+        exchange_rounds: 0,
+        exchange_partners: 1,
+    })
+    .run(&problem);
+    assert_eq!(result.genome.len(), eval.genome_len(RuleKind::Cip));
+    assert!(result.probes_used > 0);
+    assert!(result.objectives.error.is_finite());
+
+    // service round trip: submit a probe, then resubmit the identical
+    // configuration and require the cached fast path
+    let mut cfg = ServiceConfig::new();
+    cfg.threads = 2;
+    cfg.cache_dir = Some(tmp("cache"));
+    let service = Service::start(cfg).expect("service starts");
+    let bits = term.width.mantissa_bits() / 2;
+    let probe = || JobSpec {
+        tenant: "fuzz".to_string(),
+        priority: 1,
+        target: None,
+        kind: JobKind::Probe {
+            benchmark: name.clone(),
+            rule: RuleKind::Wp,
+            genome: vec![bits],
+        },
+    };
+    let id = service.submit(probe()).expect("submit");
+    let snap = service.wait(id, Duration::from_secs(120)).expect("probe finishes");
+    assert_eq!(snap.state, JobState::Done, "error: {:?}", snap.error);
+    let id2 = service.submit(probe()).expect("resubmit");
+    let snap2 = service.wait(id2, Duration::from_secs(120)).expect("repeat finishes");
+    assert_eq!(snap2.state, JobState::Done, "error: {:?}", snap2.error);
+    assert!(snap2.cache_hit(), "repeat probe must be served from the cache");
+    let _ = service.shutdown();
+}

@@ -1,0 +1,185 @@
+//! Property tests for the content-addressed result cache keys and
+//! store: round-tripping arbitrary genomes / seed sets / rules /
+//! objective bit patterns (including NaN and infinity bits) must be
+//! bit-exact, the canonical key form must be order-independent and
+//! value-sensitive, and a corrupted fanout directory must degrade to a
+//! miss — never a panic.
+
+use std::fs;
+use std::path::PathBuf;
+
+use neat::coordinator::{EvalDetail, RuleKind};
+use neat::service::cache::{CacheKey, ResultCache};
+use neat::util::proptest_lite::{check, Config};
+use neat::util::Pcg64;
+
+fn cfg(cases: u64) -> Config {
+    Config { cases, ..Default::default() }
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("neat_cache_prop_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    d
+}
+
+/// One generated cache transaction: a key assembled from an arbitrary
+/// workload name / version / rule / seed set / genome, and an
+/// `EvalDetail` whose objective values are raw f64 bit patterns.
+#[derive(Debug, Clone)]
+struct Tx {
+    workload: String,
+    version: u32,
+    rule: RuleKind,
+    seeds: Vec<u64>,
+    genome: Vec<u32>,
+    bits: [u64; 4],
+}
+
+fn gen_tx(rng: &mut Pcg64) -> Tx {
+    // names drawn from the same alphabet real workload names use —
+    // including corpus canonical terms (letters, digits, parens,
+    // spaces; never `=` or `;`)
+    let pool = [
+        "blackscholes",
+        "kmeans",
+        "corpus:(dot32 x0 x1)",
+        "corpus:(map64 add (sqrt x0) c2)",
+        "corpus:(axpy32 c1 (mul x0 x1) x2)",
+    ];
+    let rules = [RuleKind::Wp, RuleKind::Cip, RuleKind::Fcs];
+    Tx {
+        workload: pool[rng.below(pool.len() as u64) as usize].to_string(),
+        version: rng.below(1 << 30) as u32,
+        rule: rules[rng.below(3) as usize],
+        seeds: (0..1 + rng.below(6)).map(|_| rng.next_u64() >> 16).collect(),
+        genome: (0..1 + rng.below(10)).map(|_| 1 + rng.below(52) as u32).collect(),
+        bits: [
+            // quarter NaN/inf patterns, the rest arbitrary bits
+            if rng.below(4) == 0 { f64::NAN.to_bits() } else { rng.next_u64() },
+            if rng.below(4) == 0 { f64::INFINITY.to_bits() } else { rng.next_u64() },
+            rng.next_u64(),
+            rng.next_u64(),
+        ],
+    }
+}
+
+fn key_of(tx: &Tx) -> CacheKey {
+    let seeds = tx.seeds.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(",");
+    CacheKey::new()
+        .field("workload", &tx.workload)
+        .field("version", tx.version)
+        .field("rule", tx.rule.name())
+        .field("seeds", seeds)
+        .genome(&tx.genome)
+}
+
+fn detail_of(tx: &Tx) -> EvalDetail {
+    EvalDetail {
+        error: f64::from_bits(tx.bits[0]),
+        fpu_nec: f64::from_bits(tx.bits[1]),
+        mem_nec: f64::from_bits(tx.bits[2]),
+        fpu_target_nec: f64::from_bits(tx.bits[3]),
+    }
+}
+
+/// Store → lookup round-trips the exact objective bit patterns, NaN
+/// and infinity included, for arbitrary key field combinations.
+#[test]
+fn prop_store_lookup_round_trips_arbitrary_bit_patterns() {
+    let cache = ResultCache::new(tmp("roundtrip")).expect("cache opens");
+    check("cache round-trip is bit-exact", cfg(128), gen_tx, |tx| {
+        let key = key_of(tx);
+        let want = detail_of(tx);
+        if cache.store(&key, &want).is_err() {
+            return false;
+        }
+        let Some(got) = cache.lookup(&key) else { return false };
+        got.error.to_bits() == want.error.to_bits()
+            && got.fpu_nec.to_bits() == want.fpu_nec.to_bits()
+            && got.mem_nec.to_bits() == want.mem_nec.to_bits()
+            && got.fpu_target_nec.to_bits() == want.fpu_target_nec.to_bits()
+    });
+}
+
+/// The canonical form is a pure function of the field *set*: any
+/// assembly order yields the same canonical string and fingerprint,
+/// while changing any single component changes the fingerprint.
+#[test]
+fn prop_canonical_key_is_order_independent_and_value_sensitive() {
+    check("canonical key properties", cfg(192), gen_tx, |tx| {
+        let a = key_of(tx);
+        // reversed assembly order
+        let seeds = tx.seeds.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(",");
+        let b = CacheKey::new()
+            .genome(&tx.genome)
+            .field("seeds", seeds)
+            .field("rule", tx.rule.name())
+            .field("version", tx.version)
+            .field("workload", &tx.workload);
+        if a.canonical() != b.canonical() || a.fingerprint() != b.fingerprint() {
+            return false;
+        }
+        // the canonical alphabet stays parseable: no field ever smuggles
+        // in the separators
+        if tx.workload.contains('=') || tx.workload.contains(';') {
+            return false;
+        }
+        // perturb each component; the fingerprint must move
+        let mut genome = tx.genome.clone();
+        genome[0] += 1;
+        let c = CacheKey::new()
+            .field("workload", &tx.workload)
+            .field("version", tx.version)
+            .field("rule", tx.rule.name())
+            .field("seeds", tx.seeds.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(","))
+            .genome(&genome);
+        let d = key_of(tx).field("extra", 1);
+        a.fingerprint() != c.fingerprint() && a.fingerprint() != d.fingerprint()
+    });
+}
+
+/// Corruption battery: truncated entries, garbage bytes, and a fanout
+/// path whose directory was replaced by a plain file must all read as
+/// misses (and fail stores gracefully) — never panic, never serve bad
+/// bits.
+#[test]
+fn corrupted_fanout_dir_is_a_miss_not_a_panic() {
+    let dir = tmp("corrupt");
+    let cache = ResultCache::new(&dir).expect("cache opens");
+    let key = CacheKey::new().field("workload", "kmeans").genome(&vec![4, 8]);
+    let detail = EvalDetail { error: 0.25, fpu_nec: 0.5, mem_nec: 0.75, fpu_target_nec: 1.0 };
+    cache.store(&key, &detail).expect("store");
+    let fp = key.fingerprint();
+    let entry = dir.join(&fp[..2]).join(format!("{fp}.json"));
+    assert!(entry.is_file(), "entry written under the fanout dir");
+
+    // truncated entry (torn write): miss
+    let body = fs::read_to_string(&entry).unwrap();
+    fs::write(&entry, &body[..body.len() / 2]).unwrap();
+    assert!(cache.lookup(&key).is_none(), "truncated entry must miss");
+
+    // garbage bytes: miss
+    fs::write(&entry, b"\x00\xffnot json at all").unwrap();
+    assert!(cache.lookup(&key).is_none(), "garbage entry must miss");
+
+    // restore, then corrupt the *fanout directory itself*: replace the
+    // two-hex-char subdir with a plain file, making every path under it
+    // unreadable (works even when the test runs as root, unlike
+    // permission bits)
+    fs::write(&entry, &body).unwrap();
+    assert!(cache.lookup(&key).is_some(), "restored entry hits again");
+    let fanout = dir.join(&fp[..2]);
+    fs::remove_dir_all(&fanout).unwrap();
+    fs::write(&fanout, b"i am not a directory").unwrap();
+    assert!(cache.lookup(&key).is_none(), "unreadable fanout dir must miss");
+    let store_err = cache.store(&key, &detail);
+    assert!(store_err.is_err(), "store into a corrupted fanout dir must error, not panic");
+    let c = cache.counters();
+    assert!(c.store_errors >= 1, "failed store must be counted");
+
+    // cleanup restores the cache to working order
+    fs::remove_file(&fanout).unwrap();
+    cache.store(&key, &detail).expect("store works again");
+    assert!(cache.lookup(&key).is_some());
+}

@@ -390,6 +390,134 @@ fn prop_gather_kernels_match_scalar_sequences() {
 }
 
 #[test]
+fn prop_sqrt_slice_kernels_match_columnwise_scalar_replicas() {
+    // First-class coverage for the Newton sqrt slice kernels: the
+    // packed column-major slice path against the corpus's scalar
+    // column-major replica — values, counters, and trace bytes, for
+    // every placement kind, with special cases (negative, zero, NaN)
+    // mixed into the inputs.
+    use neat::bench_suite::corpus::{sqrt32_columnwise, sqrt64_columnwise};
+    use neat::bench_suite::{math32, math64};
+    check("sqrt slices == columnwise scalar", cfg(96), gen_scenario, |s| {
+        let mut xs32 = s.a.clone();
+        // plant the specials the packing logic must route around
+        xs32[0] = 0.0;
+        if xs32.len() > 1 {
+            xs32[1] = -xs32[1].abs() - 1.0;
+        }
+        if xs32.len() > 2 {
+            xs32[2] = f32::NAN;
+        }
+        let xs64: Vec<f64> = xs32.iter().map(|&x| x as f64).collect();
+
+        for traced in [false, true] {
+            let (mut scalar, frames) = build_ctx(s);
+            let (mut block, bframes) = build_ctx(s);
+            let sbuf = Buf(Arc::new(Mutex::new(Vec::new())));
+            let bbuf = Buf(Arc::new(Mutex::new(Vec::new())));
+            if traced {
+                scalar.set_trace(TraceSink::new(Box::new(sbuf.clone())));
+                block.set_trace(TraceSink::new(Box::new(bbuf.clone())));
+            }
+            let mut want32 = vec![0.0f32; xs32.len()];
+            let mut want64 = vec![0.0f64; xs64.len()];
+            in_scope(&mut scalar, &frames, |c| {
+                sqrt32_columnwise(c, &xs32, &mut want32);
+                sqrt64_columnwise(c, &xs64, &mut want64);
+            });
+            let mut got32 = vec![0.0f32; xs32.len()];
+            let mut got64 = vec![0.0f64; xs64.len()];
+            in_scope(&mut block, &bframes, |c| {
+                math32::sqrt32_slice(c, &xs32, &mut got32);
+                math64::sqrt64_slice(c, &xs64, &mut got64);
+            });
+            let ok = want32.iter().zip(&got32).all(|(w, g)| w.to_bits() == g.to_bits())
+                && want64.iter().zip(&got64).all(|(w, g)| w.to_bits() == g.to_bits())
+                && *sbuf.0.lock().unwrap() == *bbuf.0.lock().unwrap()
+                && counters_match(&scalar, &block);
+            if !ok {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_gather_boundary_lengths_pin_remainder_tails() {
+    // Adversarial index-list lengths for the gather kernels: empty,
+    // singleton, one-under/at/over each lane width, and a ragged
+    // multiple — every one must stay bit-identical to the scalar
+    // sequences in values and counters for every placement kind.
+    use neat::engine::{LANES32, LANES64};
+    let lens = [
+        0usize,
+        1,
+        LANES64 - 1,
+        LANES64,
+        LANES64 + 1,
+        LANES32 - 1,
+        LANES32,
+        LANES32 + 1,
+        2 * LANES32 + 3,
+    ];
+    check("gather boundary lengths == scalar", cfg(32), gen_scenario, |s| {
+        let m = s.a.len();
+        let alpha = s.b[0];
+        let (x0, y0) = (s.a[0], s.b[0]);
+        let a64: Vec<f64> = s.a.iter().map(|&x| x as f64).collect();
+        for &n in &lens {
+            let mut rng = Pcg64::new((n as u64) << 8 ^ m as u64 ^ 0x9A77);
+            let idx: Vec<usize> = (0..n).map(|_| rng.below(m as u64) as usize).collect();
+            let ys: Vec<f32> = (0..n).map(|_| (rng.normal() * 20.0) as f32).collect();
+            let (mut scalar, frames) = build_ctx(s);
+            let (mut block, bframes) = build_ctx(s);
+            let (w_axpy, w_sq, w_sum) = in_scope(&mut scalar, &frames, |c| {
+                let axpy: Vec<f32> = idx
+                    .iter()
+                    .zip(&ys)
+                    .map(|(&j, &y)| {
+                        let p = c.mul32(alpha, s.a[j]);
+                        c.add32(p, y)
+                    })
+                    .collect();
+                let sq: Vec<f32> = idx
+                    .iter()
+                    .map(|&j| {
+                        let dx = c.sub32(x0, s.a[j]);
+                        let dy = c.sub32(y0, s.b[j]);
+                        let xx = c.mul32(dx, dx);
+                        let yy = c.mul32(dy, dy);
+                        c.add32(xx, yy)
+                    })
+                    .collect();
+                let mut sum = 0.0f64;
+                for &j in &idx {
+                    let v = c.load64(a64[j]);
+                    sum = c.add64(sum, v);
+                }
+                (axpy, sq, sum)
+            });
+            let mut g_axpy = vec![0.0f32; n];
+            let mut g_sq = vec![0.0f32; n];
+            let g_sum = in_scope(&mut block, &bframes, |c| {
+                c.gather_axpy32_slice(alpha, &s.a, &idx, &ys, &mut g_axpy);
+                c.gather_sqdist2d32_slice(x0, y0, &s.a, &s.b, &idx, &mut g_sq);
+                c.gather_sum64_slice(&a64, &idx)
+            });
+            let ok = w_axpy.iter().zip(&g_axpy).all(|(w, g)| w.to_bits() == g.to_bits())
+                && w_sq.iter().zip(&g_sq).all(|(w, g)| w.to_bits() == g.to_bits())
+                && w_sum.to_bits() == g_sum.to_bits()
+                && counters_match(&scalar, &block);
+            if !ok {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
 fn pooled_context_block_mode_survives_set_placement_swaps() {
     // The executor's worker pool reuses one context across
     // configurations via set_placement; the precomputed effective FPI
