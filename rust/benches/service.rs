@@ -41,6 +41,7 @@ fn probe(tenant: &str, benchmark: &str, width: u32) -> JobSpec {
         tenant: tenant.to_string(),
         priority: 1,
         target: None,
+        formats: vec![],
         kind: JobKind::Probe {
             benchmark: benchmark.to_string(),
             rule: RuleKind::Wp,
@@ -54,6 +55,7 @@ fn tune(tenant: &str, benchmark: &str) -> JobSpec {
         tenant: tenant.to_string(),
         priority: 1,
         target: None,
+        formats: vec![],
         kind: JobKind::Tune {
             benchmark: benchmark.to_string(),
             rule: RuleKind::Cip,

@@ -20,7 +20,7 @@ use crate::bench_suite::{math32, math64, Workload};
 use crate::engine::trace::TraceSink;
 use crate::engine::{FpContext, FuncId};
 use crate::fpi::perturb::{PerturbFpi, PerturbMode};
-use crate::fpi::{FpiLibrary, OpKind, Precision};
+use crate::fpi::{CustomFormatFpi, FormatSpec, FpiLibrary, OpKind, Precision};
 use crate::placement::Placement;
 use crate::util::Pcg64;
 
@@ -674,7 +674,9 @@ impl Write for TraceBuf {
 
 /// Run one term at one length through the full placement battery —
 /// exact, WP truncation at three widths, the dyn-dispatch perturb FPI,
-/// CIP with per-function widths, FCS (the sqrt kernel inheriting its
+/// custom formats (bfloat16 / fp16 / an arbitrary saturating point /
+/// seeded stochastic rounding), CIP with per-function widths, a
+/// CIP format-and-truncation mix, FCS (the sqrt kernel inheriting its
 /// caller), and both optimization-target filters — comparing
 /// [`EvalMode::Block`] against [`EvalMode::ScalarReference`] each
 /// time: output bits, counters, and (on the first truncation scenario)
@@ -715,6 +717,26 @@ pub fn identity_check(term: &Term, len: usize) -> Result<(), String> {
         }),
         false,
     ));
+    // custom-format FPIs: industry presets, an arbitrary lattice point
+    // with saturation, and seeded stochastic rounding — the quantizing
+    // slice fast path plus its conversion accounting under the same
+    // contract; the first one also pins trace bytes
+    let fmt = move |spec: FormatSpec| {
+        let mut lib = FpiLibrary::truncation_family(target);
+        let id = lib.register(Arc::new(CustomFormatFpi::new(spec)));
+        FpContext::new(lib, Placement::whole_program(id))
+    };
+    for (i, spec) in [
+        FormatSpec::bfloat16(),
+        FormatSpec::fp16(),
+        FormatSpec::new(6, 7).saturating(),
+        FormatSpec::tf32().stochastic(0x5EED),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        scenarios.push((format!("wp-{spec}"), Box::new(move || fmt(spec)), i == 0));
+    }
     let (k_mid, k_low) = (widths[1], 3.min(bits));
     scenarios.push((
         "cip".to_string(),
@@ -736,6 +758,21 @@ pub fn identity_check(term: &Term, len: usize) -> Result<(), String> {
             map.insert("corpus_lhs".to_string(), FpiLibrary::truncation_id(k_low));
             map.insert("corpus_combine".to_string(), FpiLibrary::truncation_id(k_mid));
             FpContext::new(FpiLibrary::truncation_family(target), Placement::call_stack(map))
+        }),
+        false,
+    ));
+    scenarios.push((
+        "cip-format-mix".to_string(),
+        Box::new(move || {
+            // a format FPI on the combine and sqrt stages, plain
+            // truncation on the lhs: the mixed ladder the tuner explores
+            let mut lib = FpiLibrary::truncation_family(target);
+            let id = lib.register(Arc::new(CustomFormatFpi::new(FormatSpec::fp16().saturating())));
+            let mut map = HashMap::new();
+            map.insert("corpus_combine".to_string(), id);
+            map.insert("corpus_lhs".to_string(), FpiLibrary::truncation_id(k_low));
+            map.insert("corpus_sqrt".to_string(), id);
+            FpContext::new(lib, Placement::current_function(map))
         }),
         false,
     ));

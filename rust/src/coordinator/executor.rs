@@ -239,7 +239,14 @@ impl Worker {
         let out = eval.workload.run(ctx, base.seed);
         let energy = estimate(&eval.epi, ctx.counters());
         let error = eval.workload.error(&base.output, &out);
-        let fpu = energy.fpu_pj / base.energy.fpu_pj.max(1e-12);
+        // conversion energy folds into the FPU ratio: a candidate format
+        // pays for its pack/unpack converters in the same normalized
+        // cost a width-only truncation is scored by, so format-mixing
+        // never wins by hiding conversion overhead (the exact baseline
+        // has conv_pj = 0, hence the shared denominator stays the
+        // baseline FPU energy)
+        let fpu = (energy.fpu_pj + energy.conv_pj)
+            / (base.energy.fpu_pj + base.energy.conv_pj).max(1e-12);
         let mem = if base.energy.mem_pj > 0.0 { energy.mem_pj / base.energy.mem_pj } else { 1.0 };
         let tgt = target_class_fpu_pj(&eval.epi, ctx, eval.target);
         let fpu_target = tgt / base.target_fpu_pj.max(1e-12);

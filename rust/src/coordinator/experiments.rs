@@ -15,7 +15,7 @@ use crate::energy::EpiTable;
 use crate::explore::nsga2::pareto_front_indices;
 use crate::explore::{Genome, Nsga2, Nsga2Params, Objectives, Problem};
 
-use crate::fpi::Precision;
+use crate::fpi::{FormatSpec, Precision};
 use crate::report::{ascii_tradeoff_plot, savings_table, ResultsDir};
 use crate::runtime::{ArtifactPaths, LenetRuntime};
 use crate::service::cache::ResultCache;
@@ -127,10 +127,10 @@ pub fn explore_rule_with(
     let problem = EvalProblem::with_executor(eval, rule, exec.clone());
     match rule {
         RuleKind::Wp => {
-            // single-gene space: sweep it exhaustively (24 / 53 points)
-            // in one batch
-            let sweep: Vec<Genome> =
-                (1..=eval.target.mantissa_bits()).map(|k| vec![k]).collect();
+            // single-gene space: sweep the whole ladder exhaustively
+            // (24 / 53 truncation widths plus any format rungs) in one
+            // batch
+            let sweep: Vec<Genome> = (1..=eval.max_gene()).map(|k| vec![k]).collect();
             let _ = problem.evaluate_batch(&sweep);
         }
         _ => {
@@ -739,7 +739,7 @@ fn table6_row(
         );
         held_out[i] = (report.test.error, report.overshoot());
         tuner_cols.push((tuner_nec, tuned.probes_used));
-        let mut seeds = warm_start_genomes(&tuned.genome, b.eval.target.mantissa_bits());
+        let mut seeds = warm_start_genomes(&tuned.genome, b.eval.max_gene());
         neighborhoods.extend(seeds.split_off(1));
         warm_seeds.extend(seeds);
     }
@@ -907,6 +907,100 @@ fn render_table6(rd: &ResultsDir, rows: Vec<Table6Row>) -> Result<String> {
         "benchmark,wp_nec@1,nsga_nec@1,nsga_ws_nec@1,tuner_nec@1,tuner_probes@1,\
          test_error@1,overshoot@1,wp_nec@10,nsga_nec@10,nsga_ws_nec@10,tuner_nec@10,\
          tuner_probes@10,test_error@10,overshoot@10",
+        rows_csv,
+    )?;
+    Ok(text)
+}
+
+/// The default Table VI-F format menu: the three industry presets plus
+/// one narrow saturating point — each gene chooses among four formats
+/// in addition to every truncation width.
+pub fn format_menu() -> Vec<FormatSpec> {
+    vec![
+        FormatSpec::bfloat16(),
+        FormatSpec::fp16(),
+        FormatSpec::tf32(),
+        FormatSpec::new(6, 5).saturating(),
+    ]
+}
+
+/// Table VI-F: format-mixing vs width-only truncation — the CIP tuner
+/// run twice per benchmark and error budget, once over the plain
+/// truncation ladder and once over the ladder extended with the
+/// [`format_menu`] presets. Both columns are scored by the same
+/// conversion-aware NEC (a format pays for its pack/unpack converters
+/// in `fpu_nec`), so a format win is a genuine energy win, not hidden
+/// conversion overhead. The `fmt-genes` column counts how many of the
+/// tuned genome's genes landed on a format rung rather than a
+/// truncation width.
+pub fn table6_formats(
+    rd: &ResultsDir,
+    exec: &Executor,
+    log: &mut impl FnMut(&str),
+) -> Result<String> {
+    let menu = format_menu();
+    let mut rows_csv = Vec::new();
+    let mut text = String::from(
+        "Table VI-F — format-mixing vs width-only truncation (CIP tuner, \
+         FPU energy savings)\n",
+    );
+    let mut header = format!("{:<16}", "benchmark");
+    for t in TUNE_BUDGETS {
+        for col in ["trunc", "formats", "fmt-genes"] {
+            let _ = write!(header, " {:>12}", format!("{col}@{:.0}%", t * 100.0));
+        }
+    }
+    let _ = writeln!(text, "{header}");
+    let mut fmt_wins = 0usize;
+    let mut cells = 0usize;
+    for w in bench_suite::table2() {
+        let name = w.name().to_string();
+        log(&format!("table6f: tuning {name} (width-only vs +formats, CIP)"));
+        let trunc_eval = Evaluator::new(w, None);
+        let fmt_eval = Evaluator::with_formats(
+            bench_suite::by_name(&name).expect("table2 benchmarks resolve by name"),
+            None,
+            &menu,
+        );
+        let mut row = format!("{:<16}", name);
+        let mut csv = name.clone();
+        for &eps in &TUNE_BUDGETS {
+            let tune = |eval: &Evaluator| {
+                let problem = EvalProblem::with_executor(eval, RuleKind::Cip, exec.clone());
+                let tuned = Tuner::error_budget(eps).run(&problem);
+                let nec = if tuned.feasible { tuned.objectives.energy } else { 1.0 };
+                (nec, tuned.genome)
+            };
+            let (nec_t, _) = tune(&trunc_eval);
+            let (nec_f, genome_f) = tune(&fmt_eval);
+            let fmt_genes = genome_f
+                .iter()
+                .filter(|&&g| fmt_eval.gene_name(g).starts_with("fmt["))
+                .count();
+            cells += 1;
+            if nec_f < nec_t {
+                fmt_wins += 1;
+            }
+            let _ = write!(
+                row,
+                " {:>11.1}% {:>11.1}% {:>12}",
+                (1.0 - nec_t) * 100.0,
+                (1.0 - nec_f) * 100.0,
+                format!("{fmt_genes}/{}", genome_f.len()),
+            );
+            let _ = write!(csv, ",{nec_t:.4},{nec_f:.4},{fmt_genes}");
+        }
+        let _ = writeln!(text, "{row}");
+        rows_csv.push(csv);
+    }
+    let _ = writeln!(
+        text,
+        "\nformat-mixing beat width-only truncation in {fmt_wins} of {cells} \
+         (benchmark, budget) cells"
+    );
+    rd.write_csv(
+        "table6_formats.csv",
+        "benchmark,trunc_nec@1,fmt_nec@1,fmt_genes@1,trunc_nec@10,fmt_nec@10,fmt_genes@10",
         rows_csv,
     )?;
     Ok(text)

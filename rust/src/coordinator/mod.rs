@@ -24,7 +24,8 @@ use crate::energy::{estimate, EnergyEstimate, EpiTable};
 use crate::engine::profile::Profile;
 use crate::engine::FpContext;
 use crate::explore::{Genome, Objectives, Problem};
-use crate::fpi::{FpiLibrary, Precision};
+use crate::fpi::library::FpiId;
+use crate::fpi::{FormatSpec, FpiLibrary, Precision, FORMAT_SCHEMA};
 use crate::placement::Placement;
 use crate::service::cache::{engine_mode, CacheKey, ResultCache, CACHE_SCHEMA};
 
@@ -109,7 +110,19 @@ pub struct Evaluator {
     pub top_functions: Vec<String>,
     /// FCS map keys (top functions minus the shared kernels).
     pub fcs_functions: Vec<String>,
+    /// Custom-format FPIs woven into the gene ladder (empty for the
+    /// paper's width-only truncation library).
+    pub format_specs: Vec<FormatSpec>,
     lib: FpiLibrary,
+    /// Gene value `g` selects `ladder[g - 1]`. The ladder linearizes
+    /// the exponent×significand lattice by significand cost: truncation
+    /// widths `1..=mantissa_bits` merged with the registered format
+    /// FPIs (sorted by effective significand, formats before the
+    /// equal-width truncation), so the lattice descent's 1-D gene walk
+    /// moves through format points on its way between widths. The top
+    /// rung is always the full-width truncation — the lossless anchor
+    /// every explorer starts from.
+    ladder: Vec<FpiId>,
     epi: EpiTable,
     train: Vec<SeedBaseline>,
     test: Vec<SeedBaseline>,
@@ -141,6 +154,18 @@ impl Evaluator {
     /// baselines. `target` overrides the workload's default
     /// optimization target (paper §V-E explores both).
     pub fn new(workload: Box<dyn Workload>, target: Option<Precision>) -> Self {
+        Self::with_formats(workload, target, &[])
+    }
+
+    /// Like [`Evaluator::new`], with custom-format FPIs added to the
+    /// gene ladder: every gene can then select any truncation width
+    /// *or* any of `specs` (the `neat tune --formats` axis). With an
+    /// empty `specs` this is exactly the width-only evaluator.
+    pub fn with_formats(
+        workload: Box<dyn Workload>,
+        target: Option<Precision>,
+        specs: &[FormatSpec],
+    ) -> Self {
         let target = target.unwrap_or_else(|| workload.default_target());
 
         // Step 1: profile (exact run over one training input).
@@ -160,7 +185,18 @@ impl Evaluator {
             .collect();
 
         let epi = EpiTable::paper();
-        let lib = FpiLibrary::truncation_family(target);
+        let (lib, format_ids) = FpiLibrary::with_formats(target, specs);
+        // Cost-ordered gene ladder: ascending effective significand,
+        // formats ahead of the equal-significand truncation so the
+        // full-width truncation keeps the lossless top index.
+        let mut rungs: Vec<(u32, u8, FpiId)> = (1..=target.mantissa_bits())
+            .map(|k| (k, 1, FpiLibrary::truncation_id(k)))
+            .collect();
+        for (spec, id) in specs.iter().zip(&format_ids) {
+            rungs.push((spec.sig_bits.min(target.mantissa_bits()), 0, *id));
+        }
+        rungs.sort_by_key(|&(sig, tie, id)| (sig, tie, id.0));
+        let ladder: Vec<FpiId> = rungs.into_iter().map(|(_, _, id)| id).collect();
         let baseline = |seeds: Vec<u64>| -> Vec<SeedBaseline> {
             seeds
                 .into_iter()
@@ -176,7 +212,19 @@ impl Evaluator {
         let train = baseline(workload.train_seeds());
         let test = baseline(workload.test_seeds());
 
-        Self { workload, target, top_functions, fcs_functions, lib, epi, train, test, profile }
+        Self {
+            workload,
+            target,
+            top_functions,
+            fcs_functions,
+            format_specs: specs.to_vec(),
+            lib,
+            ladder,
+            epi,
+            train,
+            test,
+            profile,
+        }
     }
 
     /// The workload under evaluation.
@@ -198,17 +246,47 @@ impl Evaluator {
         }
     }
 
+    /// Highest gene value — the ladder's lossless top rung. Equals
+    /// `target.mantissa_bits()` for a width-only evaluator, plus one
+    /// per registered format otherwise.
+    pub fn max_gene(&self) -> u32 {
+        self.ladder.len() as u32
+    }
+
+    /// FPI handle a gene value selects (ladder rung `g`, clamped into
+    /// `[1, max_gene]` like every explorer does).
+    pub fn gene_fpi(&self, g: u32) -> FpiId {
+        self.ladder[(g.clamp(1, self.max_gene()) as usize) - 1]
+    }
+
+    /// Library name of the FPI a gene selects (report columns).
+    pub fn gene_name(&self, g: u32) -> String {
+        self.lib.get(self.gene_fpi(g)).name()
+    }
+
+    /// Stable fingerprint of the format menu for cache keys: the
+    /// format-library schema version plus every spec's canonical name,
+    /// ladder-input order. `"none"` for width-only evaluators, so their
+    /// keys are byte-identical to the pre-format schema field.
+    pub fn formats_menu(&self) -> String {
+        if self.format_specs.is_empty() {
+            return "none".to_string();
+        }
+        let names: Vec<String> = self.format_specs.iter().map(|s| s.name()).collect();
+        format!("v{}:{}", FORMAT_SCHEMA, names.join("+"))
+    }
+
     /// Build the placement a genome encodes.
     pub fn placement(&self, rule: RuleKind, genome: &Genome) -> Placement {
-        let bits_of = |g: u32| FpiLibrary::truncation_id(g.clamp(1, self.target.mantissa_bits()));
+        let fpi_of = |g: u32| self.gene_fpi(g);
         match rule {
-            RuleKind::Wp => Placement::whole_program(bits_of(genome[0])),
+            RuleKind::Wp => Placement::whole_program(fpi_of(genome[0])),
             RuleKind::Cip => {
                 let map: HashMap<String, _> = self
                     .top_functions
                     .iter()
                     .zip(genome)
-                    .map(|(n, &g)| (n.clone(), bits_of(g)))
+                    .map(|(n, &g)| (n.clone(), fpi_of(g)))
                     .collect();
                 Placement::current_function(map)
             }
@@ -217,7 +295,7 @@ impl Evaluator {
                     .fcs_functions
                     .iter()
                     .zip(genome)
-                    .map(|(n, &g)| (n.clone(), bits_of(g)))
+                    .map(|(n, &g)| (n.clone(), fpi_of(g)))
                     .collect();
                 Placement::call_stack(map)
             }
@@ -322,6 +400,10 @@ fn train_cache_key(eval: &Evaluator, rule: RuleKind) -> CacheKey {
         .field("set", "train")
         .field("seeds", seeds)
         .field("engine", engine_mode())
+        // the format menu defines what each gene *means*: two runs with
+        // different menus (or a bumped format-library schema) must never
+        // share entries even when the genomes collide numerically
+        .field("formats", eval.formats_menu())
 }
 
 impl<'a> EvalProblem<'a> {
@@ -454,7 +536,9 @@ impl Problem for EvalProblem<'_> {
     }
 
     fn max_bits(&self) -> u32 {
-        self.eval.target.mantissa_bits()
+        // the full gene range: truncation widths plus any format rungs
+        // (the explorers' [1, max_bits] clamp walks the whole ladder)
+        self.eval.max_gene()
     }
 
     fn evaluate(&self, genome: &Genome) -> Objectives {
@@ -537,6 +621,80 @@ mod tests {
             assert!(d.fpu_nec <= last + 1e-9, "bits {bits}: {} > {last}", d.fpu_nec);
             last = d.fpu_nec;
         }
+    }
+
+    fn four_formats() -> Vec<FormatSpec> {
+        vec![
+            FormatSpec::bfloat16(),
+            FormatSpec::fp16(),
+            FormatSpec::tf32(),
+            FormatSpec::new(6, 5).saturating(),
+        ]
+    }
+
+    #[test]
+    fn format_ladder_orders_by_cost_with_lossless_top() {
+        let ev = Evaluator::with_formats(
+            Box::new(Blackscholes { options: 60 }),
+            None,
+            &four_formats(),
+        );
+        // 24 truncation widths + 4 format rungs
+        assert_eq!(ev.max_gene(), 28);
+        // the top rung stays the lossless full-width truncation
+        assert_eq!(ev.gene_name(ev.max_gene()), "truncate[24b]");
+        // every format appears exactly once, just below the
+        // equal-significand truncation width
+        let names: Vec<String> = (1..=ev.max_gene()).map(|g| ev.gene_name(g)).collect();
+        for spec in four_formats() {
+            assert_eq!(names.iter().filter(|n| **n == spec.name()).count(), 1, "{names:?}");
+            let at = names.iter().position(|n| *n == spec.name()).unwrap();
+            assert_eq!(names[at + 1], format!("truncate[{}b]", spec.sig_bits));
+        }
+        // a width-only evaluator's ladder is the identity mapping
+        let plain = small_bs();
+        assert_eq!(plain.max_gene(), 24);
+        for k in 1..=24 {
+            assert_eq!(plain.gene_name(k), format!("truncate[{k}b]"));
+        }
+    }
+
+    #[test]
+    fn format_genome_is_evaluable_and_top_stays_lossless() {
+        let ev = Evaluator::with_formats(
+            Box::new(Blackscholes { options: 60 }),
+            None,
+            &four_formats(),
+        );
+        let hi = ev.evaluate_train(RuleKind::Wp, &vec![ev.max_gene()]);
+        assert_eq!(hi.error, 0.0);
+        assert!((hi.fpu_nec - 1.0).abs() < 1e-12);
+        // drive every format rung through a WP evaluation: narrower
+        // than baseline FPU+conversion energy, finite error
+        for spec in four_formats() {
+            let g = (1..=ev.max_gene()).find(|&g| ev.gene_name(g) == spec.name()).unwrap();
+            let d = ev.evaluate_train(RuleKind::Wp, &vec![g]);
+            assert!(d.fpu_nec < 1.0, "{}: nec {}", spec.name(), d.fpu_nec);
+            assert!(d.error.is_finite());
+        }
+    }
+
+    #[test]
+    fn formats_menu_fingerprint_separates_cache_keys() {
+        let plain = small_bs();
+        assert_eq!(plain.formats_menu(), "none");
+        let ev = Evaluator::with_formats(
+            Box::new(Blackscholes { options: 60 }),
+            None,
+            &[FormatSpec::bfloat16(), FormatSpec::fp16().stochastic(7)],
+        );
+        let menu = ev.formats_menu();
+        assert!(menu.contains("fmt[e8m8]"), "{menu}");
+        assert!(menu.contains("fmt[e5m11,sr:7]"), "{menu}");
+        assert_ne!(menu, plain.formats_menu());
+        let ka = train_cache_key(&plain, RuleKind::Wp).genome(&vec![5]);
+        let kb = train_cache_key(&ev, RuleKind::Wp).genome(&vec![5]);
+        assert_ne!(ka.fingerprint(), kb.fingerprint());
     }
 
     #[test]

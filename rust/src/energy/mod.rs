@@ -30,6 +30,13 @@ pub struct EpiTable {
     pub flop_pj: [[f64; 4]; 2],
     /// Memory energy per transmitted bit, pJ (1.5 nJ/byte / 8).
     pub mem_pj_per_bit: f64,
+    /// Format-conversion energy per field bit crossing a
+    /// [`crate::placement::CompiledFpi::Format`] boundary, pJ. A
+    /// pack/unpack is shift-and-round integer datapath work, so it is
+    /// priced off the Fig. 1 `int_add` row (100 pJ for a 64-bit ALU op)
+    /// at per-bit granularity — narrow formats pay for their converters
+    /// instead of getting the quantization for free.
+    pub conv_pj_per_bit: f64,
 }
 
 impl EpiTable {
@@ -43,6 +50,7 @@ impl EpiTable {
                 [400.0, 400.0, 550.0, 680.0],
             ],
             mem_pj_per_bit: 1500.0 / 8.0,
+            conv_pj_per_bit: 100.0 / 64.0,
         }
     }
 
@@ -83,12 +91,15 @@ pub struct EnergyEstimate {
     pub fpu_pj: f64,
     /// Off-chip memory transfer energy, pJ.
     pub mem_pj: f64,
+    /// Format-conversion energy, pJ (zero unless the run used
+    /// custom-format FPIs).
+    pub conv_pj: f64,
 }
 
 impl EnergyEstimate {
-    /// Combined FPU + memory energy.
+    /// Combined FPU + memory + conversion energy.
     pub fn total_pj(&self) -> f64 {
-        self.fpu_pj + self.mem_pj
+        self.fpu_pj + self.mem_pj + self.conv_pj
     }
 }
 
@@ -121,12 +132,20 @@ pub fn mem_energy_pj(epi: &EpiTable, stats: &FuncStats) -> f64 {
     bits as f64 * epi.mem_pj_per_bit
 }
 
+/// Estimate format-conversion energy: field bits crossing a custom
+/// format's pack/unpack boundary × pJ/bit.
+pub fn conv_energy_pj(epi: &EpiTable, stats: &FuncStats) -> f64 {
+    let bits = stats.conv_bits[0] + stats.conv_bits[1];
+    bits as f64 * epi.conv_pj_per_bit
+}
+
 /// Full energy estimate over a run's counters.
 pub fn estimate(epi: &EpiTable, counters: &Counters) -> EnergyEstimate {
     let agg = counters.aggregate();
     EnergyEstimate {
         fpu_pj: fpu_energy_pj(epi, &agg),
         mem_pj: mem_energy_pj(epi, &agg),
+        conv_pj: conv_energy_pj(epi, &agg),
     }
 }
 
@@ -185,6 +204,40 @@ mod tests {
         assert!((e.fpu_pj - 680.0).abs() < 1e-9);
         assert_eq!(e.mem_pj, 0.0);
         assert!((e.total_pj() - 680.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn conversion_energy_prices_field_bits() {
+        let epi = EpiTable::paper();
+        let mut st = FuncStats::default();
+        // 6 values × bfloat16's 16 field bits at 100/64 pJ per bit
+        st.conv_ops[0] = 6;
+        st.conv_bits[0] = 96;
+        assert!((conv_energy_pj(&epi, &st) - 96.0 * 100.0 / 64.0).abs() < 1e-9);
+        // counters without conversions charge nothing
+        assert_eq!(conv_energy_pj(&epi, &FuncStats::default()), 0.0);
+    }
+
+    #[test]
+    fn format_run_charges_fpu_and_conversion() {
+        use crate::engine::FpContext;
+        use crate::fpi::{CustomFormatFpi, FormatSpec, FpiLibrary};
+        use crate::placement::Placement;
+        use std::sync::Arc;
+        let epi = EpiTable::paper();
+        let spec = FormatSpec::bfloat16();
+        let mut lib = FpiLibrary::new();
+        let id = lib.register(Arc::new(CustomFormatFpi::new(spec)));
+        let mut ctx = FpContext::new(lib, Placement::whole_program(id));
+        let mut acc = 0.1f32;
+        for i in 0..100 {
+            acc = ctx.add32(acc, 0.3 + i as f32 * 0.001);
+        }
+        let e = estimate(&epi, ctx.counters());
+        // 100 FLOPs × 3 values × 16 field bits
+        assert!((e.conv_pj - 300.0 * 16.0 * (100.0 / 64.0)).abs() < 1e-9);
+        assert!(e.fpu_pj > 0.0);
+        assert!((e.total_pj() - (e.fpu_pj + e.mem_pj + e.conv_pj)).abs() < 1e-9);
     }
 
     #[test]

@@ -27,6 +27,14 @@ pub struct FuncStats {
     pub mem_ops: [u64; 2],
     /// Transmitted bits across those accesses.
     pub mem_bits: [u64; 2],
+    /// Values quantized across a format-conversion boundary (a
+    /// `CompiledFpi::Format` FLOP converts two operands and one result),
+    /// by precision class of the FLOP.
+    pub conv_ops: [u64; 2],
+    /// Bits crossing those conversion boundaries: exponent + significand
+    /// field width of the destination format per converted value (the
+    /// datapath-width proxy the energy model prices conversions with).
+    pub conv_bits: [u64; 2],
 }
 
 impl FuncStats {
@@ -55,6 +63,8 @@ impl FuncStats {
             }
             self.mem_ops[p] += other.mem_ops[p];
             self.mem_bits[p] += other.mem_bits[p];
+            self.conv_ops[p] += other.conv_ops[p];
+            self.conv_bits[p] += other.conv_bits[p];
         }
     }
 }
@@ -153,5 +163,17 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.flops[0][1], 5);
         assert_eq!(a.mem_ops[1], 7);
+    }
+
+    #[test]
+    fn merge_and_aggregate_carry_conversion_counters() {
+        let mut c = Counters::new();
+        c.stats_mut(FuncId(1)).conv_ops[0] = 6;
+        c.stats_mut(FuncId(1)).conv_bits[0] = 96;
+        c.stats_mut(FuncId(2)).conv_ops[1] = 3;
+        c.stats_mut(FuncId(2)).conv_bits[1] = 48;
+        let agg = c.aggregate();
+        assert_eq!(agg.conv_ops, [6, 3]);
+        assert_eq!(agg.conv_bits, [96, 48]);
     }
 }

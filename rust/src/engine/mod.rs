@@ -31,8 +31,8 @@ pub mod trace;
 use std::collections::HashMap;
 
 use crate::fpi::{
-    apply_mask_f32, apply_mask_f64, trunc_mask_f32, trunc_mask_f64, used_bits_f32,
-    used_bits_f64, FpiLibrary, OpKind, Precision,
+    apply_mask_f32, apply_mask_f64, quantize32, quantize64, trunc_mask_f32, trunc_mask_f64,
+    used_bits_f32, used_bits_f64, FpiLibrary, OpKind, Precision,
 };
 use crate::placement::{CompiledFpi, Placement};
 use counters::{Counters, FuncStats};
@@ -330,12 +330,25 @@ impl FpContext {
                 let raw = crate::fpi::raw_f32(op, apply_mask_f32(a, mask), apply_mask_f32(b, mask));
                 apply_mask_f32(raw, mask)
             }
+            CompiledFpi::Format(spec) => {
+                // hoistable quantization state, derived per op here and
+                // per slice in block mode — same helpers as
+                // CustomFormatFpi, so the paths cannot drift
+                let q = spec.params32();
+                let raw = crate::fpi::raw_f32(op, quantize32(a, &q), quantize32(b, &q));
+                quantize32(raw, &q)
+            }
             CompiledFpi::Dyn(id) => self.lib.get(id).perform_f32(op, a, b),
         };
         let bits = used_bits_f32(a) + used_bits_f32(b) + used_bits_f32(r);
         let st = self.counters.stats_mut(self.current_func);
         st.flops[Precision::Single as usize][op as usize] += 1;
         st.flop_bits[Precision::Single as usize][op as usize] += bits as u64;
+        if let CompiledFpi::Format(spec) = self.current32 {
+            // two operands + result cross the conversion boundary
+            st.conv_ops[Precision::Single as usize] += 3;
+            st.conv_bits[Precision::Single as usize] += 3 * spec.conv_bits32();
+        }
         if let Some(t) = &mut self.trace {
             t.record32(op, a, b, r);
         }
@@ -351,12 +364,21 @@ impl FpContext {
                 let raw = crate::fpi::raw_f64(op, apply_mask_f64(a, mask), apply_mask_f64(b, mask));
                 apply_mask_f64(raw, mask)
             }
+            CompiledFpi::Format(spec) => {
+                let q = spec.params64();
+                let raw = crate::fpi::raw_f64(op, quantize64(a, &q), quantize64(b, &q));
+                quantize64(raw, &q)
+            }
             CompiledFpi::Dyn(id) => self.lib.get(id).perform_f64(op, a, b),
         };
         let bits = used_bits_f64(a) + used_bits_f64(b) + used_bits_f64(r);
         let st = self.counters.stats_mut(self.current_func);
         st.flops[Precision::Double as usize][op as usize] += 1;
         st.flop_bits[Precision::Double as usize][op as usize] += bits as u64;
+        if let CompiledFpi::Format(spec) = self.current64 {
+            st.conv_ops[Precision::Double as usize] += 3;
+            st.conv_bits[Precision::Double as usize] += 3 * spec.conv_bits64();
+        }
         if let Some(t) = &mut self.trace {
             t.record64(op, a, b, r);
         }
@@ -499,6 +521,26 @@ mod tests {
         let f = ctx.register("leaf");
         let r = ctx.call(f, |c| c.mul32(1.75, 1.75));
         assert_eq!(r, 1.0);
+    }
+
+    #[test]
+    fn whole_program_format_quantizes_and_counts_conversions() {
+        use crate::fpi::{CustomFormatFpi, FormatSpec};
+        use std::sync::Arc;
+        let spec = FormatSpec::bfloat16();
+        let mut lib = FpiLibrary::new();
+        let id = lib.register(Arc::new(CustomFormatFpi::new(spec)));
+        let mut ctx = FpContext::new(lib, Placement::whole_program(id));
+        // 1 + 2^-9 is a quarter-ulp off the 8-significand-bit grid:
+        // both operands round to 1.0, so the product is exactly 1.0
+        let x = 1.0f32 + 2.0f32.powi(-9);
+        assert_eq!(ctx.mul32(x, x), 1.0);
+        let y = 1.0f64 + 2.0f64.powi(-9);
+        assert_eq!(ctx.mul64(y, y), 1.0);
+        // each format FLOP converts two operands and one result
+        let agg = ctx.counters().aggregate();
+        assert_eq!(agg.conv_ops, [3, 3]);
+        assert_eq!(agg.conv_bits, [3 * spec.conv_bits32(), 3 * spec.conv_bits64()]);
     }
 
     #[test]

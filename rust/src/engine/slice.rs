@@ -7,9 +7,10 @@
 //! rather than per-scalar dispatch, and the engine mirrors that here:
 //! the slice kernels resolve the active FPI **once per slice**, run a
 //! monomorphized inner loop per [`CompiledFpi`] variant (exact,
-//! truncate with a hoisted mask, dyn), accumulate FLOP/bit counters in
-//! locals, and commit them to [`crate::engine::counters::Counters`]
-//! once per call.
+//! truncate with a hoisted mask, custom format with hoisted
+//! quantization state, dyn), accumulate FLOP/bit counters in locals,
+//! and commit them to [`crate::engine::counters::Counters`] once per
+//! call.
 //!
 //! **The contract: block mode changes scheduling, never values.** Every
 //! kernel documents the scalar op sequence it computes; its results,
@@ -77,8 +78,9 @@
 //! ```
 
 use crate::fpi::{
-    apply_mask_f32, apply_mask_f64, raw_f32, raw_f64, trunc_mask_f32, trunc_mask_f64,
-    used_bits_f32, used_bits_f64, FpImplementation, OpKind, Precision,
+    apply_mask_f32, apply_mask_f64, quantize32, quantize64, raw_f32, raw_f64, trunc_mask_f32,
+    trunc_mask_f64, used_bits_f32, used_bits_f64, FormatSpec, FpImplementation, OpKind, Precision,
+    QuantParams,
 };
 use crate::placement::CompiledFpi;
 
@@ -333,6 +335,52 @@ impl Kern32 for Trunc32 {
     }
 }
 
+/// Custom exponent×significand format kernel with the quantization
+/// parameters hoisted once per slice. `quantize32` is idempotent in
+/// both rounding modes (an on-grid value has no discarded bits, and the
+/// stochastic tie-break is keyed on the value alone), so pre-quantized
+/// reduction operands feed `op` bit-identically to the scalar sequence
+/// — the same contract the truncate mask satisfies.
+struct Fmt32 {
+    q: QuantParams,
+}
+
+#[cfg(feature = "lanes")]
+impl Fmt32 {
+    #[inline(always)]
+    fn quant_block(&self, xs: &[f32; LANES32]) -> [f32; LANES32] {
+        let mut r = [0.0f32; LANES32];
+        for j in 0..LANES32 {
+            r[j] = quantize32(xs[j], &self.q);
+        }
+        r
+    }
+}
+
+impl Kern32 for Fmt32 {
+    #[inline(always)]
+    fn op(&self, op: OpKind, a: f32, b: f32) -> f32 {
+        let raw = raw_f32(op, quantize32(a, &self.q), quantize32(b, &self.q));
+        quantize32(raw, &self.q)
+    }
+
+    #[cfg(feature = "lanes")]
+    const LANE_OK: bool = true;
+
+    #[cfg(feature = "lanes")]
+    #[inline(always)]
+    fn op_block(&self, op: OpKind, a: &[f32; LANES32], b: &[f32; LANES32]) -> [f32; LANES32] {
+        let raw = raw32_block(op, &self.quant_block(a), &self.quant_block(b));
+        self.quant_block(&raw)
+    }
+
+    #[cfg(feature = "lanes")]
+    #[inline(always)]
+    fn premask_block(&self, xs: &[f32; LANES32]) -> [f32; LANES32] {
+        self.quant_block(xs)
+    }
+}
+
 struct Dyn32<'a>(&'a dyn FpImplementation);
 
 impl Kern32 for Dyn32<'_> {
@@ -422,6 +470,47 @@ impl Kern64 for Trunc64 {
     #[inline(always)]
     fn premask_block(&self, xs: &[f64; LANES64]) -> [f64; LANES64] {
         self.mask_block(xs)
+    }
+}
+
+/// Double-precision twin of [`Fmt32`].
+struct Fmt64 {
+    q: QuantParams,
+}
+
+#[cfg(feature = "lanes")]
+impl Fmt64 {
+    #[inline(always)]
+    fn quant_block(&self, xs: &[f64; LANES64]) -> [f64; LANES64] {
+        let mut r = [0.0f64; LANES64];
+        for j in 0..LANES64 {
+            r[j] = quantize64(xs[j], &self.q);
+        }
+        r
+    }
+}
+
+impl Kern64 for Fmt64 {
+    #[inline(always)]
+    fn op(&self, op: OpKind, a: f64, b: f64) -> f64 {
+        let raw = raw_f64(op, quantize64(a, &self.q), quantize64(b, &self.q));
+        quantize64(raw, &self.q)
+    }
+
+    #[cfg(feature = "lanes")]
+    const LANE_OK: bool = true;
+
+    #[cfg(feature = "lanes")]
+    #[inline(always)]
+    fn op_block(&self, op: OpKind, a: &[f64; LANES64], b: &[f64; LANES64]) -> [f64; LANES64] {
+        let raw = raw64_block(op, &self.quant_block(a), &self.quant_block(b));
+        self.quant_block(&raw)
+    }
+
+    #[cfg(feature = "lanes")]
+    #[inline(always)]
+    fn premask_block(&self, xs: &[f64; LANES64]) -> [f64; LANES64] {
+        self.quant_block(xs)
     }
 }
 
@@ -950,6 +1039,26 @@ impl FpContext {
         st.flop_bits[Precision::Double as usize][op as usize] += bits;
     }
 
+    /// Commit the format-conversion traffic of `flops` single-precision
+    /// FLOPs executed under a [`CompiledFpi::Format`] frame: three
+    /// values cross the conversion boundary per FLOP (two operands, one
+    /// result), each `exp + sig` field bits wide — exactly the scalar
+    /// path's per-FLOP accounting, batched per slice call.
+    #[inline]
+    fn commit_conv32(&mut self, spec: &FormatSpec, flops: u64) {
+        let st = self.counters.stats_mut(self.current_func);
+        st.conv_ops[Precision::Single as usize] += 3 * flops;
+        st.conv_bits[Precision::Single as usize] += 3 * flops * spec.conv_bits32();
+    }
+
+    /// Double-precision twin of [`FpContext::commit_conv32`].
+    #[inline]
+    fn commit_conv64(&mut self, spec: &FormatSpec, flops: u64) {
+        let st = self.counters.stats_mut(self.current_func);
+        st.conv_ops[Precision::Double as usize] += 3 * flops;
+        st.conv_bits[Precision::Double as usize] += 3 * flops * spec.conv_bits64();
+    }
+
     /// Elementwise single-precision block op:
     /// `out[i] = op(a[i], b[i])` with either operand broadcastable —
     /// bit-identical (values, counters, trace) to the scalar loop
@@ -988,6 +1097,10 @@ impl FpContext {
         let bits = match self.current32 {
             CompiledFpi::Exact => ew32(&Exact32, op, a, b, out),
             CompiledFpi::Truncate(k) => ew32(&Trunc32 { mask: trunc_mask_f32(k) }, op, a, b, out),
+            CompiledFpi::Format(spec) => {
+                self.commit_conv32(&spec, out.len() as u64);
+                ew32(&Fmt32 { q: spec.params32() }, op, a, b, out)
+            }
             CompiledFpi::Dyn(id) => match (a, b) {
                 (Operand32::Slice(sa), Operand32::Slice(sb)) => {
                     // the FPI's own block entry point (scalar-fallback
@@ -1029,6 +1142,10 @@ impl FpContext {
         let bits = match self.current64 {
             CompiledFpi::Exact => ew64(&Exact64, op, a, b, out),
             CompiledFpi::Truncate(k) => ew64(&Trunc64 { mask: trunc_mask_f64(k) }, op, a, b, out),
+            CompiledFpi::Format(spec) => {
+                self.commit_conv64(&spec, out.len() as u64);
+                ew64(&Fmt64 { q: spec.params64() }, op, a, b, out)
+            }
             CompiledFpi::Dyn(id) => match (a, b) {
                 (Operand64::Slice(sa), Operand64::Slice(sb)) => {
                     self.lib.get(id).perform_f64_slice(op, sa, sb, out);
@@ -1112,6 +1229,10 @@ impl FpContext {
             CompiledFpi::Truncate(k) => {
                 add_assign32(&Trunc32 { mask: trunc_mask_f32(k) }, acc, xs)
             }
+            CompiledFpi::Format(spec) => {
+                self.commit_conv32(&spec, xs.len() as u64);
+                add_assign32(&Fmt32 { q: spec.params32() }, acc, xs)
+            }
             CompiledFpi::Dyn(id) => add_assign32(&Dyn32(self.lib.get(id)), acc, xs),
         };
         self.commit32(OpKind::Add, xs.len() as u64, bits);
@@ -1143,6 +1264,10 @@ impl FpContext {
         let acc = match self.current32 {
             CompiledFpi::Exact => sum32(&Exact32, xs, &mut bits),
             CompiledFpi::Truncate(k) => sum32(&Trunc32 { mask: trunc_mask_f32(k) }, xs, &mut bits),
+            CompiledFpi::Format(spec) => {
+                self.commit_conv32(&spec, xs.len() as u64);
+                sum32(&Fmt32 { q: spec.params32() }, xs, &mut bits)
+            }
             CompiledFpi::Dyn(id) => sum32(&Dyn32(self.lib.get(id)), xs, &mut bits),
         };
         self.commit32(OpKind::Add, xs.len() as u64, bits);
@@ -1166,6 +1291,10 @@ impl FpContext {
         let acc = match self.current64 {
             CompiledFpi::Exact => sum64(&Exact64, xs, &mut bits),
             CompiledFpi::Truncate(k) => sum64(&Trunc64 { mask: trunc_mask_f64(k) }, xs, &mut bits),
+            CompiledFpi::Format(spec) => {
+                self.commit_conv64(&spec, xs.len() as u64);
+                sum64(&Fmt64 { q: spec.params64() }, xs, &mut bits)
+            }
             CompiledFpi::Dyn(id) => sum64(&Dyn64(self.lib.get(id)), xs, &mut bits),
         };
         self.commit64(OpKind::Add, xs.len() as u64, bits);
@@ -1193,6 +1322,10 @@ impl FpContext {
             CompiledFpi::Exact => dot32(&Exact32, a, b, &mut bm, &mut ba),
             CompiledFpi::Truncate(k) => {
                 dot32(&Trunc32 { mask: trunc_mask_f32(k) }, a, b, &mut bm, &mut ba)
+            }
+            CompiledFpi::Format(spec) => {
+                self.commit_conv32(&spec, 2 * a.len() as u64);
+                dot32(&Fmt32 { q: spec.params32() }, a, b, &mut bm, &mut ba)
             }
             CompiledFpi::Dyn(id) => dot32(&Dyn32(self.lib.get(id)), a, b, &mut bm, &mut ba),
         };
@@ -1222,6 +1355,10 @@ impl FpContext {
             CompiledFpi::Truncate(k) => {
                 dot64(&Trunc64 { mask: trunc_mask_f64(k) }, a, b, &mut bm, &mut ba)
             }
+            CompiledFpi::Format(spec) => {
+                self.commit_conv64(&spec, 2 * a.len() as u64);
+                dot64(&Fmt64 { q: spec.params64() }, a, b, &mut bm, &mut ba)
+            }
             CompiledFpi::Dyn(id) => dot64(&Dyn64(self.lib.get(id)), a, b, &mut bm, &mut ba),
         };
         self.commit64(OpKind::Mul, a.len() as u64, bm);
@@ -1248,6 +1385,10 @@ impl FpContext {
             CompiledFpi::Exact => axpy32(&Exact32, alpha, x, y, out, &mut bm, &mut ba),
             CompiledFpi::Truncate(k) => {
                 axpy32(&Trunc32 { mask: trunc_mask_f32(k) }, alpha, x, y, out, &mut bm, &mut ba)
+            }
+            CompiledFpi::Format(spec) => {
+                self.commit_conv32(&spec, 2 * out.len() as u64);
+                axpy32(&Fmt32 { q: spec.params32() }, alpha, x, y, out, &mut bm, &mut ba)
             }
             CompiledFpi::Dyn(id) => {
                 axpy32(&Dyn32(self.lib.get(id)), alpha, x, y, out, &mut bm, &mut ba)
@@ -1276,6 +1417,10 @@ impl FpContext {
             CompiledFpi::Exact => axpy64(&Exact64, alpha, x, y, out, &mut bm, &mut ba),
             CompiledFpi::Truncate(k) => {
                 axpy64(&Trunc64 { mask: trunc_mask_f64(k) }, alpha, x, y, out, &mut bm, &mut ba)
+            }
+            CompiledFpi::Format(spec) => {
+                self.commit_conv64(&spec, 2 * out.len() as u64);
+                axpy64(&Fmt64 { q: spec.params64() }, alpha, x, y, out, &mut bm, &mut ba)
             }
             CompiledFpi::Dyn(id) => {
                 axpy64(&Dyn64(self.lib.get(id)), alpha, x, y, out, &mut bm, &mut ba)
@@ -1308,6 +1453,10 @@ impl FpContext {
             CompiledFpi::Exact => sqdist32(&Exact32, a, b, &mut bs, &mut bm, &mut ba),
             CompiledFpi::Truncate(k) => {
                 sqdist32(&Trunc32 { mask: trunc_mask_f32(k) }, a, b, &mut bs, &mut bm, &mut ba)
+            }
+            CompiledFpi::Format(spec) => {
+                self.commit_conv32(&spec, 3 * a.len() as u64);
+                sqdist32(&Fmt32 { q: spec.params32() }, a, b, &mut bs, &mut bm, &mut ba)
             }
             CompiledFpi::Dyn(id) => {
                 sqdist32(&Dyn32(self.lib.get(id)), a, b, &mut bs, &mut bm, &mut ba)
@@ -1358,6 +1507,21 @@ impl FpContext {
         match self.current32 {
             CompiledFpi::Exact => {
                 gsq32(&Exact32, x0, y0, xs, ys, idx, out, &mut bs, &mut bm, &mut ba)
+            }
+            CompiledFpi::Format(spec) => {
+                self.commit_conv32(&spec, 5 * idx.len() as u64);
+                gsq32(
+                    &Fmt32 { q: spec.params32() },
+                    x0,
+                    y0,
+                    xs,
+                    ys,
+                    idx,
+                    out,
+                    &mut bs,
+                    &mut bm,
+                    &mut ba,
+                )
             }
             CompiledFpi::Truncate(k) => gsq32(
                 &Trunc32 { mask: trunc_mask_f32(k) },
@@ -1417,6 +1581,10 @@ impl FpContext {
         let (mut bm, mut ba) = (0u64, 0u64);
         match self.current32 {
             CompiledFpi::Exact => gaxpy32(&Exact32, alpha, src, idx, ys, out, &mut bm, &mut ba),
+            CompiledFpi::Format(spec) => {
+                self.commit_conv32(&spec, 2 * idx.len() as u64);
+                gaxpy32(&Fmt32 { q: spec.params32() }, alpha, src, idx, ys, out, &mut bm, &mut ba)
+            }
             CompiledFpi::Truncate(k) => gaxpy32(
                 &Trunc32 { mask: trunc_mask_f32(k) },
                 alpha,
@@ -1465,6 +1633,10 @@ impl FpContext {
             CompiledFpi::Exact => gsum64(&Exact64, src, idx, &mut bits),
             CompiledFpi::Truncate(k) => {
                 gsum64(&Trunc64 { mask: trunc_mask_f64(k) }, src, idx, &mut bits)
+            }
+            CompiledFpi::Format(spec) => {
+                self.commit_conv64(&spec, idx.len() as u64);
+                gsum64(&Fmt64 { q: spec.params64() }, src, idx, &mut bits)
             }
             CompiledFpi::Dyn(id) => gsum64(&Dyn64(self.lib.get(id)), src, idx, &mut bits),
         };
@@ -1592,6 +1764,14 @@ mod tests {
         let dynp = Placement::whole_program(id);
         let (a, b) = make(&dynp, &dyn_lib);
         out.push(("dyn", a, b));
+        // custom format, stochastic rounding: the value-keyed tie-break
+        // must keep scalar and block tiers bit-identical
+        let mut fmt_lib = FpiLibrary::new();
+        let spec = crate::fpi::FormatSpec::new(6, 7).saturating().stochastic(11);
+        let fid = fmt_lib.register(Arc::new(crate::fpi::CustomFormatFpi::new(spec)));
+        let fmtp = Placement::whole_program(fid);
+        let (a, b) = make(&fmtp, &fmt_lib);
+        out.push(("format", a, b));
         out
     }
 

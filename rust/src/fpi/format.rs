@@ -1,0 +1,694 @@
+//! Custom floating-point formats as first-class FPIs.
+//!
+//! A [`FormatSpec`] names a point in the exponent-bits × significand-bits
+//! lattice (bfloat16-alikes, IEEE fp16, TF32-alikes, and arbitrary
+//! points), together with an overflow policy and a rounding mode.
+//! [`CustomFormatFpi`] wraps a spec as an [`FpImplementation`]: operands
+//! and result of every FLOP are quantized onto the format's value grid,
+//! the arithmetic itself staying IEEE in the storage precision — the same
+//! operand/result discipline as [`super::TruncateFpi`], but with
+//! round-to-nearest-even (or stochastic rounding) instead of truncation,
+//! a reduced exponent range with saturating/infinity overflow, and
+//! gradual underflow into the format's subnormal range.
+//!
+//! Quantization is implemented in the integer domain (bit decomposition,
+//! shifts, and compares — never `powi` or any other inexact float step),
+//! so results are bit-exact and reproducible on any host.
+//!
+//! # Determinism of stochastic rounding
+//!
+//! [`Rounding::Stochastic`] draws its rounding decision from a
+//! counter-style hash of **(seed, input bit pattern)** — nothing else.
+//! Keying by the value rather than by call order means the draw for a
+//! given input is the same whether the op runs in the scalar engine, a
+//! block-mode slice kernel, a lane block, or any thread: scheduling can
+//! never change values, which is exactly the engine's determinism
+//! contract. (Per-run variation comes from the seed; per-site variation
+//! comes from the fact that different sites see different values.)
+//! Quantization is idempotent — an already-on-grid value takes the exact
+//! path and draws nothing — so re-quantizing in `premask` lane blocks is
+//! a no-op, same as truncation's mask.
+
+use super::{raw_f32, raw_f64, FpImplementation, OpKind, Precision};
+
+/// Schema version of the format-FPI family. Participates in the
+/// service's content-addressed cache keys (see
+/// `coordinator::train_cache_key`): any change to quantization
+/// semantics, the name grammar, or the stochastic-rounding hash must
+/// bump this so cached results from the old semantics can never be
+/// served for the new.
+pub const FORMAT_SCHEMA: u32 = 1;
+
+const SIGN64: u64 = 1 << 63;
+const EXP_MASK64: u64 = 0x7ff << 52;
+const MANT_MASK64: u64 = (1 << 52) - 1;
+const IMPLICIT64: u64 = 1 << 52;
+
+/// What happens when a rounded value exceeds the format's largest
+/// finite magnitude.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Overflow {
+    /// Clamp to the largest finite value of the format (sign preserved).
+    Saturate,
+    /// Produce an IEEE infinity (the binary16/bfloat16 hardware rule).
+    Infinity,
+}
+
+/// How values are rounded onto the format's grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rounding {
+    /// IEEE round-to-nearest, ties to even.
+    NearestEven,
+    /// Stochastic rounding: round up with probability equal to the
+    /// discarded fraction, drawn from a hash of (seed, value bits) — see
+    /// the module docs for why this keying preserves the determinism
+    /// contract.
+    Stochastic {
+        /// Per-run seed; distinct seeds give distinct rounding draws.
+        seed: u64,
+    },
+}
+
+/// A custom floating-point format: a point in the exponent × significand
+/// lattice plus overflow and rounding policy.
+///
+/// `sig_bits` counts the significand *including* the implicit leading
+/// one (so IEEE binary16 is `e5m11`, bfloat16 is `e8m8`) — the same
+/// convention as [`Precision::mantissa_bits`] and `truncate[k b]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FormatSpec {
+    /// Exponent field width in bits (2..=11).
+    pub exp_bits: u32,
+    /// Significand bits including the implicit one (2..=53).
+    pub sig_bits: u32,
+    /// Overflow policy.
+    pub overflow: Overflow,
+    /// Rounding mode.
+    pub rounding: Rounding,
+}
+
+impl FormatSpec {
+    /// A round-to-nearest-even, infinity-on-overflow format. Panics on
+    /// out-of-range field widths.
+    pub fn new(exp_bits: u32, sig_bits: u32) -> Self {
+        assert!((2..=11).contains(&exp_bits), "exp_bits {exp_bits} outside 2..=11");
+        assert!((2..=53).contains(&sig_bits), "sig_bits {sig_bits} outside 2..=53");
+        Self { exp_bits, sig_bits, overflow: Overflow::Infinity, rounding: Rounding::NearestEven }
+    }
+
+    /// bfloat16: 8 exponent bits, 8 significand bits (7 stored).
+    pub fn bfloat16() -> Self {
+        Self::new(8, 8)
+    }
+
+    /// IEEE binary16: 5 exponent bits, 11 significand bits (10 stored).
+    pub fn fp16() -> Self {
+        Self::new(5, 11)
+    }
+
+    /// TF32-alike: 8 exponent bits, 11 significand bits (10 stored).
+    pub fn tf32() -> Self {
+        Self::new(8, 11)
+    }
+
+    /// Same format with saturating overflow.
+    pub fn saturating(mut self) -> Self {
+        self.overflow = Overflow::Saturate;
+        self
+    }
+
+    /// Same format with seeded stochastic rounding.
+    pub fn stochastic(mut self, seed: u64) -> Self {
+        self.rounding = Rounding::Stochastic { seed };
+        self
+    }
+
+    /// Exponent bias; the max normal exponent is `bias`, the min is
+    /// `1 - bias` (IEEE convention, reserving the top exponent code).
+    fn bias(&self) -> i32 {
+        (1 << (self.exp_bits - 1)) - 1
+    }
+
+    /// Stable name, also the FPI name: `fmt[e8m8]`, `fmt[e8m8,sat]`,
+    /// `fmt[e5m11,sr:42]`, `fmt[e6m7,sat,sr:7]`.
+    pub fn name(&self) -> String {
+        let mut s = format!("fmt[e{}m{}", self.exp_bits, self.sig_bits);
+        if self.overflow == Overflow::Saturate {
+            s.push_str(",sat");
+        }
+        if let Rounding::Stochastic { seed } = self.rounding {
+            s.push_str(&format!(",sr:{seed}"));
+        }
+        s.push(']');
+        s
+    }
+
+    /// Parse the CLI / config grammar: a base (`bfloat16` | `fp16` |
+    /// `tf32` | `e<E>m<S>`) with optional `:sat` and `:sr<seed>`
+    /// suffixes, e.g. `bfloat16`, `e6m7:sat`, `fp16:sr42`. Also accepts
+    /// the canonical [`FormatSpec::name`] form.
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.trim();
+        // canonical name form: fmt[e8m8,sat,sr:42]
+        if let Some(body) = s.strip_prefix("fmt[").and_then(|t| t.strip_suffix(']')) {
+            let mut parts = body.split(',');
+            let mut spec = Self::parse_base(parts.next()?)?;
+            for p in parts {
+                match p {
+                    "sat" => spec = spec.saturating(),
+                    _ => spec = spec.stochastic(p.strip_prefix("sr:")?.parse().ok()?),
+                }
+            }
+            return Some(spec);
+        }
+        // CLI form: base[:sat][:sr<seed>]
+        let mut parts = s.split(':');
+        let mut spec = Self::parse_base(parts.next()?)?;
+        for p in parts {
+            if p == "sat" {
+                spec = spec.saturating();
+            } else {
+                spec = spec.stochastic(p.strip_prefix("sr")?.parse().ok()?);
+            }
+        }
+        Some(spec)
+    }
+
+    fn parse_base(s: &str) -> Option<Self> {
+        match s {
+            "bfloat16" | "bf16" => return Some(Self::bfloat16()),
+            "fp16" => return Some(Self::fp16()),
+            "tf32" => return Some(Self::tf32()),
+            _ => {}
+        }
+        let rest = s.strip_prefix('e')?;
+        let m = rest.find('m')?;
+        let exp_bits: u32 = rest[..m].parse().ok()?;
+        let sig_bits: u32 = rest[m + 1..].parse().ok()?;
+        if (2..=11).contains(&exp_bits) && (2..=53).contains(&sig_bits) {
+            Some(Self::new(exp_bits, sig_bits))
+        } else {
+            None
+        }
+    }
+
+    /// Quantization parameters for values stored in `f32`, clamped to
+    /// the `f32` envelope so every grid point is exactly representable
+    /// in the storage type.
+    pub fn params32(&self) -> QuantParams {
+        QuantParams {
+            sig: self.sig_bits.min(24),
+            emin: self.emin_fmt().max(-126),
+            emax: self.bias().min(127),
+            overflow: self.overflow,
+            rounding: self.rounding,
+        }
+    }
+
+    /// Quantization parameters for values stored in `f64` (see
+    /// [`FormatSpec::params32`]).
+    pub fn params64(&self) -> QuantParams {
+        QuantParams {
+            sig: self.sig_bits.min(53),
+            emin: self.emin_fmt().max(-1022),
+            emax: self.bias().min(1023),
+            overflow: self.overflow,
+            rounding: self.rounding,
+        }
+    }
+
+    fn emin_fmt(&self) -> i32 {
+        1 - self.bias()
+    }
+
+    /// Conversion-boundary width for one value entering this format from
+    /// `f32` storage: exponent field + effective significand bits — the
+    /// datapath proxy the energy model charges per quantized value.
+    pub fn conv_bits32(&self) -> u64 {
+        (self.exp_bits + self.sig_bits.min(24)) as u64
+    }
+
+    /// Conversion-boundary width from `f64` storage (see
+    /// [`FormatSpec::conv_bits32`]).
+    pub fn conv_bits64(&self) -> u64 {
+        (self.exp_bits + self.sig_bits.min(53)) as u64
+    }
+}
+
+impl std::fmt::Display for FormatSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+/// Hoisted per-slice quantization state: the derived integer constants
+/// of a [`FormatSpec`] for one storage precision. Computed once per
+/// slice (or once per FPI construction) so the per-element work is pure
+/// shifts and compares.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuantParams {
+    /// Significand bits incl. implicit one, clamped to the storage type.
+    pub sig: u32,
+    /// Minimum normal exponent, clamped to the storage type.
+    pub emin: i32,
+    /// Maximum exponent, clamped to the storage type.
+    pub emax: i32,
+    /// Overflow policy.
+    pub overflow: Overflow,
+    /// Rounding mode.
+    pub rounding: Rounding,
+}
+
+/// The stochastic-rounding hash: a splitmix64-style finalizer over
+/// (seed, value bits). Pure function of its arguments — see the module
+/// docs for why the key contains nothing else.
+#[inline(always)]
+pub fn sr_hash(seed: u64, value_bits: u64) -> u64 {
+    let mut z = value_bits.wrapping_add(seed.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Overflow result for a sign, per policy.
+#[inline]
+fn overflow64(sign: u64, q: &QuantParams) -> f64 {
+    match q.overflow {
+        Overflow::Infinity => f64::from_bits(sign | EXP_MASK64),
+        Overflow::Saturate => {
+            // largest finite: all-ones significand at the top exponent
+            let sig_max = (1u64 << q.sig) - 1;
+            assemble64(sign, sig_max, q.emax - (q.sig as i32 - 1))
+        }
+    }
+}
+
+/// Reassemble `±(sig · 2^ex2)` into an `f64` by bit construction.
+/// `sig` must be nonzero and the value must fit the f64 range (callers
+/// check overflow first; underflow lands in f64 subnormals exactly).
+#[inline]
+fn assemble64(sign: u64, mut sig: u64, mut ex2: i32) -> f64 {
+    debug_assert!(sig != 0);
+    let tz = sig.trailing_zeros();
+    sig >>= tz;
+    ex2 += tz as i32;
+    let bl = (64 - sig.leading_zeros()) as i32; // bit length; sig odd => bl <= 53
+    let e = ex2 + bl - 1; // unbiased exponent of the value
+    if e >= -1022 {
+        let m = (sig << (53 - bl)) & MANT_MASK64;
+        f64::from_bits(sign | (((e + 1023) as u64) << 52) | m)
+    } else {
+        // f64 subnormal: value = sig · 2^ex2 = (sig << (ex2 + 1074)) · 2^-1074
+        f64::from_bits(sign | (sig << (ex2 + 1074)))
+    }
+}
+
+/// Quantize an `f64` onto the format grid described by `q` (from
+/// [`FormatSpec::params64`]). Bit-exact: decompose, shift-round with the
+/// chosen mode, renormalize the carry, apply the overflow policy,
+/// reassemble. NaN, infinities, and zeros pass through untouched;
+/// values below the format's normal range round onto its subnormal
+/// grid (gradual underflow). Idempotent for both rounding modes.
+pub fn quantize64(x: f64, q: &QuantParams) -> f64 {
+    let bits = x.to_bits();
+    let abs = bits & !SIGN64;
+    if abs == 0 || abs >= EXP_MASK64 {
+        return x; // ±0, ±inf, NaN
+    }
+    let sign = bits & SIGN64;
+    let e = ((bits >> 52) & 0x7ff) as i32;
+    let m = bits & MANT_MASK64;
+    // value = sig · 2^ex2, sig a nonzero integer
+    let (mut sig, mut ex2) = if e == 0 { (m, -1074) } else { (m | IMPLICIT64, e - 1075) };
+    let tz = sig.trailing_zeros();
+    sig >>= tz;
+    ex2 += tz as i32;
+    let bl = (64 - sig.leading_zeros()) as i32;
+    let e_val = ex2 + bl - 1; // floor(log2 |x|)
+    // ulp exponent of the grid at this magnitude; flat below emin
+    // (the format's subnormal range)
+    let qexp = e_val.max(q.emin) - (q.sig as i32 - 1);
+    let shift = qexp - ex2;
+    if shift <= 0 {
+        // already on the grid — only a too-large exponent can bite
+        if e_val > q.emax {
+            return overflow64(sign, q);
+        }
+        return x;
+    }
+    let (high, up) = if shift >= 64 {
+        // the whole significand sits below the rounding point; under RNE
+        // |x| < half the grid step, so the value flushes to zero. The
+        // stochastic draw keeps its exact probability at the hash's
+        // 64-bit granularity: floor(sig · 2^64 / 2^shift) / 2^64.
+        let up = match q.rounding {
+            Rounding::NearestEven => false,
+            Rounding::Stochastic { seed } => {
+                let t = if shift - 64 >= 64 { 0 } else { sig >> (shift - 64) };
+                sr_hash(seed, bits) < t
+            }
+        };
+        (0u64, up)
+    } else {
+        let shift = shift as u32;
+        let low = sig & ((1u64 << shift) - 1);
+        let high = sig >> shift;
+        let up = match q.rounding {
+            Rounding::NearestEven => {
+                let half = 1u64 << (shift - 1);
+                low > half || (low == half && (high & 1) == 1)
+            }
+            // round up with probability low / 2^shift, exactly
+            Rounding::Stochastic { seed } => sr_hash(seed, bits) < low << (64 - shift),
+        };
+        (high, up)
+    };
+    let sig_r = high + up as u64;
+    if sig_r == 0 {
+        return f64::from_bits(sign); // signed zero
+    }
+    // the carry can lengthen the significand (0b1111 -> 0b10000);
+    // sig_r · 2^qexp stays exact, only the overflow check needs the
+    // renormalized exponent
+    let bl_r = (64 - sig_r.leading_zeros()) as i32;
+    if qexp + bl_r - 1 > q.emax {
+        return overflow64(sign, q);
+    }
+    assemble64(sign, sig_r, qexp)
+}
+
+/// Quantize an `f32` onto the format grid described by `q` (from
+/// [`FormatSpec::params32`]). The value is widened to `f64` (exact),
+/// quantized there, and narrowed back — exact because `params32`
+/// clamps the grid inside the `f32` envelope. The stochastic-rounding
+/// key is the widened f64 bit pattern.
+#[inline]
+pub fn quantize32(x: f32, q: &QuantParams) -> f32 {
+    if !x.is_finite() {
+        return x;
+    }
+    quantize64(x as f64, q) as f32
+}
+
+/// The custom-format FPI: operands and result of every FLOP are
+/// quantized onto the format grid; the op itself is IEEE in the storage
+/// precision — the format analogue of [`TruncateFpi`]'s
+/// mask/op/mask discipline.
+///
+/// [`QuantParams`] for both storage precisions are derived once at
+/// construction, so the scalar path and the slice overrides share one
+/// hoisted state and cannot drift.
+///
+/// [`TruncateFpi`]: super::TruncateFpi
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CustomFormatFpi {
+    /// The format this FPI quantizes onto.
+    pub spec: FormatSpec,
+    q32: QuantParams,
+    q64: QuantParams,
+}
+
+impl CustomFormatFpi {
+    /// Wrap a spec; derives the per-precision quantization state.
+    pub fn new(spec: FormatSpec) -> Self {
+        Self { spec, q32: spec.params32(), q64: spec.params64() }
+    }
+}
+
+impl FpImplementation for CustomFormatFpi {
+    fn name(&self) -> String {
+        self.spec.name()
+    }
+
+    #[inline]
+    fn perform_f32(&self, op: OpKind, a: f32, b: f32) -> f32 {
+        let q = &self.q32;
+        quantize32(raw_f32(op, quantize32(a, q), quantize32(b, q)), q)
+    }
+
+    #[inline]
+    fn perform_f64(&self, op: OpKind, a: f64, b: f64) -> f64 {
+        let q = &self.q64;
+        quantize64(raw_f64(op, quantize64(a, q), quantize64(b, q)), q)
+    }
+
+    fn keep_bits(&self, precision: Precision) -> u32 {
+        self.spec.sig_bits.clamp(1, precision.mantissa_bits())
+    }
+
+    /// Block-mode override with the hoisted quantization state (see
+    /// [`TruncateFpi::perform_f32_slice`]'s contract note).
+    ///
+    /// [`TruncateFpi::perform_f32_slice`]: super::TruncateFpi
+    fn perform_f32_slice(&self, op: OpKind, a: &[f32], b: &[f32], out: &mut [f32]) {
+        let q = self.q32;
+        for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+            *o = quantize32(raw_f32(op, quantize32(x, &q), quantize32(y, &q)), &q);
+        }
+    }
+
+    /// Block-mode override, double precision.
+    fn perform_f64_slice(&self, op: OpKind, a: &[f64], b: &[f64], out: &mut [f64]) {
+        let q = self.q64;
+        for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+            *o = quantize64(raw_f64(op, quantize64(x, &q), quantize64(y, &q)), &q);
+        }
+    }
+
+    fn format_spec(&self) -> Option<FormatSpec> {
+        Some(self.spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q32(spec: FormatSpec) -> QuantParams {
+        spec.params32()
+    }
+
+    fn q64(spec: FormatSpec) -> QuantParams {
+        spec.params64()
+    }
+
+    #[test]
+    fn presets_match_published_layouts() {
+        let bf = FormatSpec::bfloat16();
+        assert_eq!((bf.exp_bits, bf.sig_bits), (8, 8));
+        let h = FormatSpec::fp16();
+        assert_eq!((h.exp_bits, h.sig_bits), (5, 11));
+        let p = h.params32();
+        assert_eq!((p.emin, p.emax, p.sig), (-14, 15, 11));
+        let t = FormatSpec::tf32();
+        assert_eq!((t.exp_bits, t.sig_bits), (8, 11));
+    }
+
+    #[test]
+    fn names_round_trip_through_parse() {
+        let specs = [
+            FormatSpec::bfloat16(),
+            FormatSpec::fp16().saturating(),
+            FormatSpec::tf32().stochastic(42),
+            FormatSpec::new(6, 7).saturating().stochastic(7),
+        ];
+        for s in specs {
+            assert_eq!(FormatSpec::parse(&s.name()), Some(s), "{}", s.name());
+        }
+        assert_eq!(FormatSpec::parse("bfloat16"), Some(FormatSpec::bfloat16()));
+        assert_eq!(FormatSpec::parse("fp16:sat"), Some(FormatSpec::fp16().saturating()));
+        assert_eq!(FormatSpec::parse("e6m7:sr42"), Some(FormatSpec::new(6, 7).stochastic(42)));
+        assert_eq!(FormatSpec::parse("e1m7"), None);
+        assert_eq!(FormatSpec::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn rne_known_values_fp16() {
+        let q = q32(FormatSpec::fp16());
+        // fp16 has 10 stored bits: 1 + 2^-11 is exactly halfway between
+        // 1.0 and 1 + 2^-10; ties to even -> 1.0
+        assert_eq!(quantize32(1.0 + 2f32.powi(-11), &q), 1.0);
+        // just above the tie rounds up
+        assert_eq!(quantize32(1.0 + 2f32.powi(-11) + 2f32.powi(-20), &q), 1.0 + 2f32.powi(-10));
+        // odd predecessor: tie rounds *up* to the even neighbor
+        let odd = 1.0 + 2f32.powi(-10); // significand ...0001 (odd)
+        assert_eq!(quantize32(odd + 2f32.powi(-11), &q), 1.0 + 2.0 * 2f32.powi(-10));
+        // 65504 is fp16 max; 65520 is the overflow tie -> inf under IEEE
+        assert_eq!(quantize32(65504.0, &q), 65504.0);
+        assert_eq!(quantize32(65520.0, &q), f32::INFINITY);
+        assert_eq!(quantize32(65519.9, &q), 65504.0);
+        // saturating policy clamps instead
+        let qs = q32(FormatSpec::fp16().saturating());
+        assert_eq!(quantize32(65520.0, &qs), 65504.0);
+        assert_eq!(quantize32(f32::MAX, &qs), 65504.0);
+        assert_eq!(quantize32(-1e9, &qs), -65504.0);
+    }
+
+    #[test]
+    fn fp16_subnormal_grid() {
+        let q = q32(FormatSpec::fp16());
+        let min_sub = 2f32.powi(-24); // fp16 smallest subnormal
+        assert_eq!(quantize32(min_sub, &q), min_sub);
+        assert_eq!(quantize32(min_sub * 3.0, &q), min_sub * 3.0);
+        // halfway below the smallest subnormal flushes to zero (tie to even 0)
+        assert_eq!(quantize32(min_sub / 2.0, &q), 0.0);
+        assert_eq!(quantize32(-min_sub / 2.0, &q).to_bits(), (-0.0f32).to_bits());
+        // just above the halfway point rounds up to the smallest subnormal
+        assert_eq!(quantize32(min_sub * 0.51, &q), min_sub);
+        // smallest normal survives
+        let min_norm = 2f32.powi(-14);
+        assert_eq!(quantize32(min_norm, &q), min_norm);
+    }
+
+    #[test]
+    fn nonfinite_and_zero_pass_through() {
+        for spec in [FormatSpec::bfloat16(), FormatSpec::fp16().saturating()] {
+            let q = q32(spec);
+            assert!(quantize32(f32::NAN, &q).is_nan());
+            assert_eq!(quantize32(f32::INFINITY, &q), f32::INFINITY);
+            assert_eq!(quantize32(f32::NEG_INFINITY, &q), f32::NEG_INFINITY);
+            assert_eq!(quantize32(0.0, &q).to_bits(), 0.0f32.to_bits());
+            assert_eq!(quantize32(-0.0, &q).to_bits(), (-0.0f32).to_bits());
+            let d = q64(spec);
+            assert!(quantize64(f64::NAN, &d).is_nan());
+            assert_eq!(quantize64(f64::NEG_INFINITY, &d), f64::NEG_INFINITY);
+        }
+    }
+
+    #[test]
+    fn bfloat16_agrees_with_f32_layout() {
+        // bfloat16 shares the f32 exponent range; its grid is f32 with
+        // 16 mantissa bits dropped under RNE
+        let q = q32(FormatSpec::bfloat16());
+        for x in [1.0f32, 1.5, 3.14159, -2.71828, 1e-20, 1e20, 0.1] {
+            let got = quantize32(x, &q);
+            // independent RNE via the classic add-magic trick in f64:
+            // bfloat16 ulp at |x| is 2^(e-7)
+            let e = x.abs().log2().floor() as i32;
+            let step = 2f64.powi(e - 7);
+            let want = ((x as f64 / step).round_ties_even() * step) as f32;
+            assert_eq!(got, want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn quantize_is_idempotent_both_modes() {
+        let mut rng = crate::util::Pcg64::new(90);
+        let specs = [
+            FormatSpec::bfloat16(),
+            FormatSpec::fp16().saturating(),
+            FormatSpec::new(6, 4).stochastic(11),
+            FormatSpec::new(11, 52).stochastic(3),
+        ];
+        for spec in specs {
+            let (p32, p64) = (q32(spec), q64(spec));
+            for _ in 0..500 {
+                let x = f32::from_bits(rng.next_u64() as u32);
+                let y = quantize32(x, &p32);
+                assert_eq!(
+                    quantize32(y, &p32).to_bits(),
+                    y.to_bits(),
+                    "{} x={x:?}",
+                    spec.name()
+                );
+                let xd = f64::from_bits(rng.next_u64());
+                let yd = quantize64(xd, &p64);
+                assert_eq!(quantize64(yd, &p64).to_bits(), yd.to_bits(), "{}", spec.name());
+            }
+        }
+    }
+
+    #[test]
+    fn sr_is_value_keyed_and_seed_sensitive() {
+        let a = FormatSpec::new(8, 8).stochastic(1);
+        let b = FormatSpec::new(8, 8).stochastic(2);
+        let (qa, qb) = (q32(a), q32(b));
+        // same seed, same value: same draw, trivially; distinct seeds
+        // must disagree on at least one value in a modest sample
+        let mut differs = false;
+        let mut rng = crate::util::Pcg64::new(5);
+        for _ in 0..256 {
+            let x = (rng.normal() * 10.0) as f32;
+            let ya = quantize32(x, &qa);
+            assert_eq!(ya.to_bits(), quantize32(x, &qa).to_bits());
+            if ya.to_bits() != quantize32(x, &qb).to_bits() {
+                differs = true;
+            }
+        }
+        assert!(differs, "seeds 1 and 2 rounded every sample identically");
+    }
+
+    #[test]
+    fn sr_mean_brackets_exact_value() {
+        // E[SR(x)] = x: average the draw over many seeds for one value
+        // sitting 1/4 of the way between two bfloat16 grid points
+        let lo = 1.0f64;
+        let x = 1.0 + 0.25 * 2f64.powi(-7); // bfloat16 ulp at 1.0 is 2^-7
+        let hi = 1.0 + 2f64.powi(-7);
+        let mut ups = 0u32;
+        let n = 4096;
+        for seed in 0..n {
+            let q = FormatSpec::bfloat16().stochastic(seed as u64).params64();
+            let y = quantize64(x, &q);
+            assert!(y == lo || y == hi, "SR must land on a neighboring grid point");
+            if y == hi {
+                ups += 1;
+            }
+        }
+        // expected up-rate 0.25; allow a generous binomial bracket
+        let rate = ups as f64 / n as f64;
+        assert!((0.2..0.3).contains(&rate), "up rate {rate} not near 0.25");
+    }
+
+    #[test]
+    fn fpi_matches_scalar_and_slice_paths() {
+        let fpi = CustomFormatFpi::new(FormatSpec::fp16().stochastic(9));
+        let mut rng = crate::util::Pcg64::new(31);
+        let a: Vec<f32> = (0..97).map(|_| (rng.normal() * 40.0) as f32).collect();
+        let b: Vec<f32> = (0..97).map(|_| (rng.normal() * 40.0) as f32).collect();
+        for op in OpKind::ALL {
+            let mut out = vec![0.0f32; a.len()];
+            fpi.perform_f32_slice(op, &a, &b, &mut out);
+            for i in 0..a.len() {
+                assert_eq!(out[i].to_bits(), fpi.perform_f32(op, a[i], b[i]).to_bits());
+            }
+        }
+        let a64: Vec<f64> = a.iter().map(|&x| x as f64).collect();
+        let b64: Vec<f64> = b.iter().map(|&x| x as f64).collect();
+        for op in OpKind::ALL {
+            let mut out = vec![0.0f64; a64.len()];
+            fpi.perform_f64_slice(op, &a64, &b64, &mut out);
+            for i in 0..a64.len() {
+                assert_eq!(out[i].to_bits(), fpi.perform_f64(op, a64[i], b64[i]).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn keep_bits_reports_significand() {
+        let fpi = CustomFormatFpi::new(FormatSpec::bfloat16());
+        assert_eq!(fpi.keep_bits(Precision::Single), 8);
+        assert_eq!(fpi.keep_bits(Precision::Double), 8);
+        let wide = CustomFormatFpi::new(FormatSpec::new(11, 53));
+        assert_eq!(wide.keep_bits(Precision::Single), 24);
+        assert_eq!(wide.keep_bits(Precision::Double), 53);
+    }
+
+    #[test]
+    fn quantized_f32_values_survive_the_narrowing_cast() {
+        // params32 clamps the grid into the f32 envelope: quantize64 of
+        // the widened value must already be an exact f32
+        let mut rng = crate::util::Pcg64::new(77);
+        for spec in [FormatSpec::bfloat16(), FormatSpec::new(11, 30), FormatSpec::new(4, 20)] {
+            let p = q32(spec);
+            for _ in 0..1000 {
+                let x = f32::from_bits(rng.next_u64() as u32);
+                if !x.is_finite() {
+                    continue;
+                }
+                let wide = quantize64(x as f64, &p);
+                assert_eq!(wide as f32 as f64, wide, "{} x={x:?}", spec.name());
+            }
+        }
+    }
+}

@@ -8,6 +8,7 @@
 
 use std::sync::Arc;
 
+use super::format::{CustomFormatFpi, FormatSpec};
 use super::{ExactFpi, FpImplementation, Precision, TruncateFpi};
 
 /// Handle into an [`FpiLibrary`]. `FpiId(0)` is always the exact FPI.
@@ -41,6 +42,18 @@ impl FpiLibrary {
             lib.register(Arc::new(TruncateFpi::new(k)));
         }
         lib
+    }
+
+    /// The truncation family extended with custom-format FPIs
+    /// ([`CustomFormatFpi`]), one per spec, registered after the
+    /// truncation ids. Returns the library and the format ids in spec
+    /// order — the seam the coordinator's format-aware gene ladder is
+    /// built on.
+    pub fn with_formats(target: Precision, specs: &[FormatSpec]) -> (Self, Vec<FpiId>) {
+        let mut lib = Self::truncation_family(target);
+        let ids =
+            specs.iter().map(|&s| lib.register(Arc::new(CustomFormatFpi::new(s)))).collect();
+        (lib, ids)
     }
 
     /// Register an implementation; returns its handle.
@@ -108,6 +121,18 @@ mod tests {
             let fpi = lib.get(FpiLibrary::truncation_id(k));
             assert_eq!(fpi.name(), format!("truncate[{k}b]"));
         }
+    }
+
+    #[test]
+    fn with_formats_appends_after_truncation_ids() {
+        let specs = [FormatSpec::bfloat16(), FormatSpec::fp16().stochastic(3)];
+        let (lib, ids) = FpiLibrary::with_formats(Precision::Single, &specs);
+        assert_eq!(lib.len(), 25 + 2);
+        assert_eq!(ids, vec![FpiId(25), FpiId(26)]);
+        assert_eq!(lib.get(ids[0]).name(), "fmt[e8m8]");
+        assert_eq!(lib.get(ids[1]).name(), "fmt[e5m11,sr:3]");
+        // truncation ids are untouched
+        assert_eq!(lib.get(FpiLibrary::truncation_id(8)).name(), "truncate[8b]");
     }
 
     #[test]

@@ -6,18 +6,26 @@
 //! [`FpImplementation`] — the analogue of subclassing the paper's
 //! `FpImplementation` virtual class and overriding `PerformOperation`.
 //!
-//! The built-in family is mantissa bit truncation ([`truncate`]): 24
+//! The built-in families are mantissa bit truncation ([`truncate`]): 24
 //! single-precision and 53 double-precision levels, matching the paper's
-//! evaluation. [`perturb`] provides the "direct approximation injected on
-//! operands/results" style of FPI used for ablations, and [`exact`] is
-//! the identity FPI that anchors every baseline run.
+//! evaluation — and custom exponent×significand formats ([`format`]):
+//! bfloat16/fp16/TF32 presets plus arbitrary lattice points, with
+//! round-to-nearest-even or seeded stochastic rounding. [`perturb`]
+//! provides the "direct approximation injected on operands/results"
+//! style of FPI used for ablations, and [`exact`] is the identity FPI
+//! that anchors every baseline run.
 
 pub mod exact;
+pub mod format;
 pub mod library;
 pub mod perturb;
 pub mod truncate;
 
 pub use exact::ExactFpi;
+pub use format::{
+    quantize32, quantize64, CustomFormatFpi, FormatSpec, Overflow, QuantParams, Rounding,
+    FORMAT_SCHEMA,
+};
 pub use library::FpiLibrary;
 pub use perturb::PerturbFpi;
 pub use truncate::{
@@ -149,6 +157,15 @@ pub trait FpImplementation: Send + Sync {
     /// full width — is correct for FPIs that do not narrow the format.
     fn keep_bits(&self, precision: Precision) -> u32 {
         precision.mantissa_bits()
+    }
+
+    /// The custom-format spec behind this FPI, if its semantics are
+    /// exactly those of [`CustomFormatFpi`] for some [`FormatSpec`].
+    /// Returning `Some` unlocks the engine's no-virtual-call format
+    /// fast path (see `placement::compile`); the default `None` keeps
+    /// an FPI on dynamic dispatch.
+    fn format_spec(&self) -> Option<FormatSpec> {
+        None
     }
 
     /// Compute one single-precision FLOP per element of a slice — the

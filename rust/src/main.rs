@@ -39,10 +39,11 @@ fn usage() -> &'static str {
        profile <benchmark>                     FLOP census (paper step 1)\n\
        explore <benchmark> [--rule wp|cip|fcs] [--target single|double]\n\
                [--population N] [--generations N] [--seed N] [--threads N]\n\
+               [--formats LIST]\n\
        tune    <benchmark> [--rule wp|cip|fcs] [--target single|double]\n\
                [--error-budget E | --energy-budget P] [--max-evals N]\n\
                [--descent lattice|binary] [--exchange-moves N]\n\
-               [--exchange-partners K] [--test-seeds]\n\
+               [--exchange-partners K] [--test-seeds] [--formats LIST]\n\
                [--threads N]                   heuristic constraint-driven tuning\n\
                (budgets are fractions: --error-budget 0.01 = 1% accuracy loss,\n\
                 --energy-budget 0.5 = half the baseline energy; default 0.01.\n\
@@ -51,7 +52,11 @@ fn usage() -> &'static str {
                 phase (0 disables); --exchange-partners caps the raise partners\n\
                 probed per lowered gene, most sensitive first (default 4);\n\
                 --test-seeds re-evaluates the tuned config on held-out seeds\n\
-                and reports the constraint overshoot)\n\
+                and reports the constraint overshoot;\n\
+                --formats adds custom floating-point formats to the gene\n\
+                ladder, comma-separated: bfloat16|bf16|fp16|tf32|e<E>m<S>\n\
+                with optional :sat (saturate on overflow) and :sr<seed>\n\
+                (stochastic rounding), e.g. --formats bfloat16,fp16:sat,e6m7:sr42)\n\
        suite   [--run-dir DIR] [--resume] [--shard-threads N] [--threads N]\n\
                [--benchmarks a,b,c] [--cache-dir DIR]\n\
                                                regenerate every figure with the\n\
@@ -87,7 +92,9 @@ fn usage() -> &'static str {
                                                lengths\n\
        figure  <id|all>                        fig1 fig4 fig5 fig6 fig7 fig8\n\
                                                fig9 fig10 fig11 table1 table2\n\
-                                               table3 table5 table6\n\
+                                               table3 table5 table6 table6f\n\
+                                               (table6f: format-mixing vs\n\
+                                               width-only truncation, CIP tuner)\n\
        ablation <id|all>                       topk random-vs-ga ga-budget fpi-mode\n\
        list                                    benchmarks and figure ids\n\
      \n\
@@ -113,8 +120,9 @@ fn parse_args(raw: &[String]) -> Args {
         let a = &raw[i];
         if let Some(name) = a.strip_prefix("--") {
             // value-taking flags; everything else is a switch
-            const VALUED: [&str; 22] = [
+            const VALUED: [&str; 23] = [
                 "count",
+                "formats",
                 "term",
                 "walk",
                 "rule",
@@ -199,7 +207,7 @@ fn cmd_list() {
         );
     }
     println!("\nfigures: fig1 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11");
-    println!("tables:  table1 table2 table3 table5 table6");
+    println!("tables:  table1 table2 table3 table5 table6 table6f");
     println!("ablations: topk random-vs-ga ga-budget fpi-mode");
 }
 
@@ -249,15 +257,35 @@ fn parse_target(args: &Args) -> Result<Option<Precision>> {
     }
 }
 
+fn parse_formats_flag(args: &Args) -> Result<Vec<neat::fpi::FormatSpec>> {
+    match args.flags.get("formats") {
+        None => Ok(Vec::new()),
+        Some(t) => neat::service::parse_formats(t).with_context(|| {
+            format!(
+                "bad --formats {t} (comma-separated bfloat16|bf16|fp16|tf32|e<E>m<S>, \
+                 each with optional :sat and :sr<seed>)"
+            )
+        }),
+    }
+}
+
 fn cmd_explore(args: &Args) -> Result<()> {
     let name = args.positional.get(1).context("explore: missing benchmark name")?;
     let w = bench_suite::by_name(name).with_context(|| format!("unknown benchmark {name}"))?;
     let rule = parse_rule(args)?;
     let target = parse_target(args)?;
+    let formats = parse_formats_flag(args)?;
     let budget = args.budget();
     let exec = args.executor();
     eprintln!("profiling {name} and preparing baselines...");
-    let eval = Evaluator::new(w, target);
+    let eval = Evaluator::with_formats(w, target, &formats);
+    if !formats.is_empty() {
+        eprintln!(
+            "format menu: {} ({} rungs per gene incl. truncation widths)",
+            neat::service::formats_str(&formats),
+            eval.max_gene()
+        );
+    }
     eprintln!(
         "searching {} with {} over {} functions (genome length {}, {} worker threads)",
         name,
@@ -317,6 +345,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let w = bench_suite::by_name(name).with_context(|| format!("unknown benchmark {name}"))?;
     let rule = parse_rule(args)?;
     let target = parse_target(args)?;
+    let formats = parse_formats_flag(args)?;
     let goal = match (args.flags.get("error-budget"), args.flags.get("energy-budget")) {
         (Some(_), Some(_)) => {
             bail!("pass either --error-budget or --energy-budget, not both")
@@ -357,7 +386,14 @@ fn cmd_tune(args: &Args) -> Result<()> {
     };
     let exec = args.executor();
     eprintln!("profiling {name} and preparing baselines...");
-    let eval = Evaluator::new(w, target);
+    let eval = Evaluator::with_formats(w, target, &formats);
+    if !formats.is_empty() {
+        eprintln!(
+            "format menu: {} ({} rungs per gene incl. truncation widths)",
+            neat::service::formats_str(&formats),
+            eval.max_gene()
+        );
+    }
     eprintln!(
         "tuning {} / {} under {:?}: {} targets, ≤{} probes, {:?} descent, \
          ≤{} exchange moves/phase (top-{} partners), {} worker threads",
@@ -432,6 +468,19 @@ fn cmd_tune(args: &Args) -> Result<()> {
             .collect::<Vec<_>>()
             .join(",")
     );
+    if !formats.is_empty() {
+        // with a format menu, a gene is a ladder index — show what each
+        // one resolved to
+        println!(
+            "resolved FPIs: [{}]",
+            result
+                .genome
+                .iter()
+                .map(|&g| eval.gene_name(g))
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    }
     println!(
         "error {:.3}%  FPU NEC {:.4} ({:.1}% energy savings vs exact baseline)",
         result.objectives.error * 100.0,
@@ -738,6 +787,7 @@ fn cmd_corpus(args: &Args) -> Result<()> {
         tenant: "corpus".to_string(),
         priority: 1,
         target: None,
+        formats: vec![],
         kind: JobKind::Probe {
             benchmark: benchmark.clone(),
             rule: RuleKind::Wp,
@@ -806,6 +856,7 @@ fn cmd_figure(args: &Args) -> Result<()> {
                 _ => experiments::table3(&rd, &suite, &exec, &mut log)?,
             }
         }
+        "table6f" => experiments::table6_formats(&rd, &exec, &mut log)?,
         "fig8" => experiments::fig8(&rd, budget, &exec, &mut log)?,
         "fig9" => experiments::fig9(&rd, budget, &exec, &mut log)?,
         "fig10" | "fig11" | "table5" => {

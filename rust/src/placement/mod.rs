@@ -27,6 +27,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::engine::FuncId;
+use crate::fpi::format::FormatSpec;
 use crate::fpi::{FpiLibrary, TruncateFpi};
 use crate::fpi::library::FpiId;
 use crate::fpi::FpImplementation;
@@ -40,6 +41,10 @@ pub enum CompiledFpi {
     /// Mantissa truncation to `k` bits — the paper's evaluated family,
     /// inlined into the engine (no virtual call).
     Truncate(u32),
+    /// A custom exponent×significand format (bfloat16/fp16/TF32-style,
+    /// RNE or stochastic rounding), inlined into the engine — the
+    /// quantization state is hoisted once per slice in block mode.
+    Format(FormatSpec),
     /// Any other registered implementation, dispatched via the library.
     Dyn(FpiId),
 }
@@ -173,6 +178,12 @@ pub fn compile(lib: &FpiLibrary, id: FpiId) -> CompiledFpi {
         return CompiledFpi::Exact;
     }
     let fpi = lib.get(id);
+    // Custom formats declare themselves through the trait — no name
+    // parsing, and any user FPI with exact CustomFormatFpi semantics
+    // can opt in to the same fast path.
+    if let Some(spec) = fpi.format_spec() {
+        return CompiledFpi::Format(spec);
+    }
     // Recognize the truncation family by its stable name to unlock the
     // no-virtual-call fast path. Custom FPIs stay dynamic.
     let name = fpi.name();
@@ -260,6 +271,16 @@ mod tests {
             compile(&lib, FpiLibrary::truncation_id(9)),
             CompiledFpi::Truncate(9)
         );
+    }
+
+    #[test]
+    fn compile_specializes_formats() {
+        let mut lib = lib();
+        let spec = FormatSpec::bfloat16().stochastic(5);
+        let id = lib.register(Arc::new(crate::fpi::CustomFormatFpi::new(spec)));
+        assert_eq!(compile(&lib, id), CompiledFpi::Format(spec));
+        let p = Placement::whole_program(id);
+        assert_eq!(p.resolve(&lib, "any", FuncId(1), None), CompiledFpi::Format(spec));
     }
 
     #[test]

@@ -28,7 +28,13 @@ use crate::explore::Genome;
 use crate::util::kv;
 
 /// On-disk schema version of a cache entry.
-pub const CACHE_SCHEMA: u32 = 1;
+///
+/// v2: evaluation keys grew a `formats` field (the custom-format menu
+/// fingerprint, including [`crate::fpi::FORMAT_SCHEMA`]) and the energy
+/// model started folding conversion energy into `fpu_nec` — entries
+/// written by v1 binaries price format genomes differently and must
+/// never be served.
+pub const CACHE_SCHEMA: u32 = 2;
 
 /// The engine mode baked into this binary, as a cache-key field: the
 /// lane tier is bit-identical to block mode by contract, but keying on

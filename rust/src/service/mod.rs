@@ -50,7 +50,7 @@ use anyhow::{bail, Context, Result};
 use crate::bench_suite;
 use crate::coordinator::{suite, EvalDetail, EvalProblem, Evaluator, Executor, RuleKind};
 use crate::explore::{Genome, Nsga2, Nsga2Params, Objectives};
-use crate::fpi::Precision;
+use crate::fpi::{FormatSpec, Precision};
 use crate::tuner::{TuneGoal, Tuner, TunerConfig};
 use crate::util::kv;
 
@@ -154,6 +154,11 @@ pub struct JobSpec {
     pub priority: u32,
     /// Optimization target override (`None` = workload default).
     pub target: Option<Precision>,
+    /// Custom-format menu appended to the gene ladder (empty =
+    /// width-only truncation). Part of the evaluator identity: two jobs
+    /// with different menus assign different meanings to the same gene
+    /// value, so they never share an evaluator or a cache entry.
+    pub formats: Vec<FormatSpec>,
     /// The work itself.
     pub kind: JobKind,
 }
@@ -310,6 +315,43 @@ pub fn parse_genome(text: &str) -> Option<Genome> {
         return None;
     }
     text.split('|').map(|p| p.trim().parse::<u32>().ok()).collect()
+}
+
+/// Render a format menu as a comma-joined list of canonical names
+/// (`fmt[e8m8],fmt[e5m11,sr:42]`). Round-trips through
+/// [`parse_formats`], whose splitter respects the brackets.
+pub fn formats_str(specs: &[FormatSpec]) -> String {
+    specs.iter().map(|s| s.name()).collect::<Vec<_>>().join(",")
+}
+
+/// Parse a format-menu list: items in either [`FormatSpec::parse`]
+/// grammar, separated by `,` or `;` *outside* brackets (canonical names
+/// like `fmt[e6m7,sat]` contain commas of their own). Empty text is the
+/// empty menu; any unparseable item rejects the whole list.
+pub fn parse_formats(text: &str) -> Option<Vec<FormatSpec>> {
+    let mut specs = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let mut push = |piece: &str| -> Option<()> {
+        let piece = piece.trim();
+        if !piece.is_empty() {
+            specs.push(FormatSpec::parse(piece)?);
+        }
+        Some(())
+    };
+    for (i, c) in text.char_indices() {
+        match c {
+            '[' => depth += 1,
+            ']' => depth = depth.saturating_sub(1),
+            ',' | ';' if depth == 0 => {
+                push(&text[start..i])?;
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    push(&text[start..])?;
+    Some(specs)
 }
 
 pub(crate) fn json_escape(s: &str) -> String {
@@ -495,10 +537,18 @@ struct Inner {
 }
 
 impl Inner {
-    fn evaluator(&self, benchmark: &str, target: Option<Precision>) -> Result<Arc<Evaluator>> {
+    fn evaluator(
+        &self,
+        benchmark: &str,
+        target: Option<Precision>,
+        formats: &[FormatSpec],
+    ) -> Result<Arc<Evaluator>> {
+        // the format menu is part of the evaluator's identity: it decides
+        // what each gene value *means*, so menus must never share a slot
         let key = format!(
-            "{benchmark}/{}",
-            target.map(|t| t.name()).unwrap_or("default")
+            "{benchmark}/{}/{}",
+            target.map(|t| t.name()).unwrap_or("default"),
+            formats_str(formats),
         );
         if let Some(e) = self.evaluators.lock().unwrap().get(&key) {
             return Ok(e.clone());
@@ -508,7 +558,7 @@ impl Inner {
         // and benign — first insert wins.
         let w = bench_suite::by_name(benchmark)
             .with_context(|| format!("unknown benchmark {benchmark}"))?;
-        let eval = Arc::new(Evaluator::new(w, target));
+        let eval = Arc::new(Evaluator::with_formats(w, target, formats));
         Ok(self.evaluators.lock().unwrap().entry(key).or_insert(eval).clone())
     }
 
@@ -545,7 +595,7 @@ fn run_tune_shard(
     goal: TuneGoal,
     max_evals: usize,
 ) -> Result<ShardOutput> {
-    let eval = inner.evaluator(benchmark, job.spec.target)?;
+    let eval = inner.evaluator(benchmark, job.spec.target, &job.spec.formats)?;
     let problem = inner.problem(&eval, rule, exec);
     let mut cfg = TunerConfig::new(goal);
     cfg.max_evals = max_evals;
@@ -566,7 +616,7 @@ fn run_tune_shard(
 fn run_shard(inner: &Inner, exec: &Executor, job: &JobHandle, idx: usize) -> Result<ShardOutput> {
     match &job.spec.kind {
         JobKind::Probe { benchmark, rule, genome } => {
-            let eval = inner.evaluator(benchmark, job.spec.target)?;
+            let eval = inner.evaluator(benchmark, job.spec.target, &job.spec.formats)?;
             let want = eval.genome_len(*rule);
             if genome.len() != want {
                 bail!(
@@ -590,14 +640,15 @@ fn run_shard(inner: &Inner, exec: &Executor, job: &JobHandle, idx: usize) -> Res
             run_tune_shard(inner, exec, job, &benchmarks[idx], *rule, *goal, *max_evals)
         }
         JobKind::Explore { benchmark, rule, population, generations, seed } => {
-            let eval = inner.evaluator(benchmark, job.spec.target)?;
+            let eval = inner.evaluator(benchmark, job.spec.target, &job.spec.formats)?;
             let problem = inner.problem(&eval, *rule, exec);
             match rule {
                 RuleKind::Wp => {
-                    // single-gene space: exhaustive sweep, like the CLI
+                    // single-gene space: exhaustive sweep over the whole
+                    // gene ladder (truncation widths + format rungs)
                     use crate::explore::Problem as _;
                     let sweep: Vec<Genome> =
-                        (1..=eval.target.mantissa_bits()).map(|k| vec![k]).collect();
+                        (1..=eval.max_gene()).map(|k| vec![k]).collect();
                     let _ = problem.evaluate_batch(&sweep);
                 }
                 _ => {
@@ -917,6 +968,9 @@ fn park_json(spec: &JobSpec) -> String {
     if let Some(t) = spec.target {
         fields.push(format!("\"target\": \"{}\"", t.name()));
     }
+    if !spec.formats.is_empty() {
+        fields.push(format!("\"formats\": \"{}\"", json_escape(&formats_str(&spec.formats))));
+    }
     let goal_fields = |goal: &TuneGoal| {
         let v = match goal {
             TuneGoal::ErrorBudget(v) | TuneGoal::EnergyBudget(v) => *v,
@@ -991,6 +1045,10 @@ pub fn spec_from_meta(meta: &kv::FlatMeta) -> Result<JobSpec> {
         Some(t) => Some(parse_precision(t).with_context(|| format!("bad target {t}"))?),
         None => None,
     };
+    let formats = match meta.strings.get("formats") {
+        Some(f) => parse_formats(f).with_context(|| format!("bad formats {f}"))?,
+        None => Vec::new(),
+    };
     let rule = match meta.strings.get("rule") {
         Some(r) => parse_rule(r).with_context(|| format!("bad rule {r}"))?,
         None => RuleKind::Cip,
@@ -1041,7 +1099,7 @@ pub fn spec_from_meta(meta: &kv::FlatMeta) -> Result<JobSpec> {
         }
         other => bail!("unknown job kind {other}"),
     };
-    Ok(JobSpec { tenant, priority, target, kind })
+    Ok(JobSpec { tenant, priority, target, formats, kind })
 }
 
 /// Parse a parked-job artifact (requires the completion marker).
@@ -1066,6 +1124,12 @@ mod tests {
                 tenant: "a".into(),
                 priority: 2,
                 target: Some(Precision::Double),
+                // a bracketed name with inner commas exercises the
+                // menu splitter's depth tracking
+                formats: vec![
+                    FormatSpec::bfloat16(),
+                    FormatSpec::new(6, 7).saturating().stochastic(7),
+                ],
                 kind: JobKind::Probe {
                     benchmark: "kmeans".into(),
                     rule: RuleKind::Wp,
@@ -1076,6 +1140,7 @@ mod tests {
                 tenant: "b".into(),
                 priority: 1,
                 target: None,
+                formats: vec![],
                 kind: JobKind::Tune {
                     benchmark: "blackscholes".into(),
                     rule: RuleKind::Cip,
@@ -1087,6 +1152,7 @@ mod tests {
                 tenant: "c".into(),
                 priority: 3,
                 target: None,
+                formats: vec![FormatSpec::fp16()],
                 kind: JobKind::Explore {
                     benchmark: "radar".into(),
                     rule: RuleKind::Fcs,
@@ -1099,6 +1165,7 @@ mod tests {
                 tenant: "d".into(),
                 priority: 1,
                 target: None,
+                formats: vec![],
                 kind: JobKind::Sweep {
                     benchmarks: vec!["kmeans".into(), "radar".into()],
                     rule: RuleKind::Cip,
@@ -1112,6 +1179,7 @@ mod tests {
             let back = spec_from_park(&kv::parse(&text)).expect("parseable park artifact");
             assert_eq!(back.tenant, spec.tenant);
             assert_eq!(back.priority, spec.priority);
+            assert_eq!(back.formats, spec.formats);
             assert_eq!(format!("{:?}", back.kind), format!("{:?}", spec.kind));
             assert_eq!(format!("{:?}", back.target), format!("{:?}", spec.target));
         }
@@ -1123,6 +1191,7 @@ mod tests {
             tenant: "a".into(),
             priority: 1,
             target: None,
+            formats: vec![],
             kind: JobKind::Tune {
                 benchmark: "kmeans".into(),
                 rule: RuleKind::Cip,
@@ -1132,6 +1201,19 @@ mod tests {
         };
         let torn = park_json(&spec).replace("\"complete\": 1", "\"complete\": 0");
         assert!(spec_from_park(&kv::parse(&torn)).is_none());
+    }
+
+    #[test]
+    fn format_menu_parses_both_grammars() {
+        assert_eq!(parse_formats(""), Some(vec![]));
+        assert_eq!(
+            parse_formats("bfloat16, e6m7:sat"),
+            Some(vec![FormatSpec::bfloat16(), FormatSpec::new(6, 7).saturating()])
+        );
+        // canonical names keep their inner commas
+        let menu = vec![FormatSpec::new(6, 7).saturating().stochastic(7), FormatSpec::tf32()];
+        assert_eq!(parse_formats(&formats_str(&menu)), Some(menu));
+        assert_eq!(parse_formats("bfloat16,bogus"), None);
     }
 
     #[test]

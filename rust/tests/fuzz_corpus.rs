@@ -23,6 +23,7 @@ use neat::bench_suite::{self, Workload};
 use neat::coordinator::experiments::{explore_rule_with, Budget};
 use neat::coordinator::suite::{plan_shards, shard_map};
 use neat::coordinator::{EvalDetail, EvalProblem, Evaluator, Executor, RuleKind};
+use neat::fpi::FormatSpec;
 use neat::service::{JobKind, JobSpec, JobState, Service, ServiceConfig};
 use neat::tuner::{DescentStrategy, TuneGoal, Tuner, TunerConfig};
 
@@ -206,6 +207,7 @@ fn corpus_kernel_tunes_and_round_trips_through_the_service() {
         tenant: "fuzz".to_string(),
         priority: 1,
         target: None,
+        formats: vec![],
         kind: JobKind::Probe {
             benchmark: name.clone(),
             rule: RuleKind::Wp,
@@ -219,5 +221,69 @@ fn corpus_kernel_tunes_and_round_trips_through_the_service() {
     let snap2 = service.wait(id2, Duration::from_secs(120)).expect("repeat finishes");
     assert_eq!(snap2.state, JobState::Done, "error: {:?}", snap2.error);
     assert!(snap2.cache_hit(), "repeat probe must be served from the cache");
+    let _ = service.shutdown();
+}
+
+/// Format FPIs ride the same contracts as truncation on generated
+/// code: exploring a corpus kernel over a custom-format menu (presets,
+/// saturation, stochastic rounding) yields bit-identical archives on
+/// the serial and pooled executors, and a probe pinned to a format
+/// rung of the ladder round-trips through `neat serve` with the
+/// repeat submission served from the content-addressed cache.
+#[test]
+fn format_menu_holds_identity_and_round_trips_on_corpus_kernels() {
+    let terms = corpus_terms();
+    let term = &terms[corpus::spread_indices(terms.len(), 1, 0x0F)[0]];
+    let name = format!("corpus:{}", term.canonical());
+    let menu = vec![
+        FormatSpec::bfloat16(),
+        FormatSpec::fp16().saturating(),
+        FormatSpec::new(6, 6).stochastic(9),
+    ];
+
+    let archive = |exec: &Executor| {
+        let w = bench_suite::by_name(&name).expect("corpus kernel resolves");
+        let eval = Evaluator::with_formats(w, None, &menu);
+        explore_rule_with(&eval, RuleKind::Wp, Budget::quick(), exec).details
+    };
+    let serial = archive(&Executor::serial());
+    let pooled = archive(&Executor::new(4));
+    assert_eq!(serial.len(), pooled.len());
+    for ((ga, da), (gb, db)) in serial.iter().zip(&pooled) {
+        assert_eq!(ga, gb, "genome order must match");
+        assert_eq!(da.error.to_bits(), db.error.to_bits());
+        assert_eq!(da.fpu_nec.to_bits(), db.fpu_nec.to_bits());
+        assert_eq!(da.mem_nec.to_bits(), db.mem_nec.to_bits());
+    }
+
+    // a probe pinned to a format rung of the mixed gene ladder
+    let w = bench_suite::by_name(&name).expect("corpus kernel resolves");
+    let eval = Evaluator::with_formats(w, None, &menu);
+    let fmt_gene = (1..=eval.max_gene())
+        .find(|&g| eval.gene_name(g).starts_with("fmt["))
+        .expect("menu contributes format rungs");
+
+    let mut cfg = ServiceConfig::new();
+    cfg.threads = 2;
+    cfg.cache_dir = Some(tmp("format_cache"));
+    let service = Service::start(cfg).expect("service starts");
+    let probe = || JobSpec {
+        tenant: "fuzz".to_string(),
+        priority: 1,
+        target: None,
+        formats: menu.clone(),
+        kind: JobKind::Probe {
+            benchmark: name.clone(),
+            rule: RuleKind::Wp,
+            genome: vec![fmt_gene],
+        },
+    };
+    let id = service.submit(probe()).expect("submit");
+    let snap = service.wait(id, Duration::from_secs(120)).expect("probe finishes");
+    assert_eq!(snap.state, JobState::Done, "error: {:?}", snap.error);
+    let id2 = service.submit(probe()).expect("resubmit");
+    let snap2 = service.wait(id2, Duration::from_secs(120)).expect("repeat finishes");
+    assert_eq!(snap2.state, JobState::Done, "error: {:?}", snap2.error);
+    assert!(snap2.cache_hit(), "repeat format probe must hit the cache");
     let _ = service.shutdown();
 }

@@ -34,7 +34,7 @@ fn evaluator() -> Evaluator {
 }
 
 fn spec(tenant: &str, kind: JobKind) -> JobSpec {
-    JobSpec { tenant: tenant.to_string(), priority: 1, target: None, kind }
+    JobSpec { tenant: tenant.to_string(), priority: 1, target: None, formats: vec![], kind }
 }
 
 /// The cache key is an unordered field set: assembling the same fields

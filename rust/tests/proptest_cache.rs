@@ -7,9 +7,13 @@
 
 use std::fs;
 use std::path::PathBuf;
+use std::time::Duration;
 
-use neat::coordinator::{EvalDetail, RuleKind};
+use neat::bench_suite;
+use neat::coordinator::{EvalDetail, Evaluator, RuleKind};
+use neat::fpi::{FormatSpec, FORMAT_SCHEMA};
 use neat::service::cache::{CacheKey, ResultCache};
+use neat::service::{JobKind, JobSpec, JobState, Service, ServiceConfig, ShardOutput};
 use neat::util::proptest_lite::{check, Config};
 use neat::util::Pcg64;
 
@@ -182,4 +186,96 @@ fn corrupted_fanout_dir_is_a_miss_not_a_panic() {
     fs::remove_file(&fanout).unwrap();
     cache.store(&key, &detail).expect("store works again");
     assert!(cache.lookup(&key).is_some());
+}
+
+/// The format-library schema version rides inside the `formats` key
+/// field (`v<schema>:<menu>`), so bumping `FORMAT_SCHEMA` — i.e. any
+/// change to what a `FormatSpec` *means* numerically — strands every
+/// entry written by the previous library without touching the store.
+#[test]
+fn format_schema_bump_invalidates_cached_format_entries() {
+    let menu = [FormatSpec::bfloat16(), FormatSpec::new(6, 7).saturating().stochastic(7)];
+    let w = bench_suite::by_name("kmeans").expect("kmeans exists");
+    let eval = Evaluator::with_formats(w, None, &menu);
+    let menu_now = eval.formats_menu();
+    let prefix = format!("v{FORMAT_SCHEMA}:");
+    assert!(
+        menu_now.starts_with(&prefix),
+        "formats_menu must embed the schema version, got `{menu_now}`"
+    );
+    // the same menu as a previous-schema binary would have keyed it
+    let menu_old = menu_now.replacen(&prefix, &format!("v{}:", FORMAT_SCHEMA.wrapping_sub(1)), 1);
+
+    let cache = ResultCache::new(tmp("format_schema")).expect("cache opens");
+    let key_with = |formats: &str| {
+        CacheKey::new()
+            .field("workload", "kmeans")
+            .field("rule", RuleKind::Cip.name())
+            .field("formats", formats)
+            .genome(&vec![9, 26, 26, 9])
+    };
+    let detail = EvalDetail { error: 0.5, fpu_nec: 0.25, mem_nec: 0.75, fpu_target_nec: 0.25 };
+    cache.store(&key_with(&menu_old), &detail).expect("store old-schema entry");
+    assert!(
+        cache.lookup(&key_with(&menu_now)).is_none(),
+        "an old-schema entry must never satisfy a current-schema lookup"
+    );
+    cache.store(&key_with(&menu_now), &detail).expect("store current-schema entry");
+    assert!(cache.lookup(&key_with(&menu_now)).is_some());
+    // the menu itself is key material too: dropping a format misses
+    let w2 = bench_suite::by_name("kmeans").expect("kmeans exists");
+    let smaller = Evaluator::with_formats(w2, None, &menu[..1]).formats_menu();
+    assert!(cache.lookup(&key_with(&smaller)).is_none(), "a different menu must miss");
+}
+
+/// A format-genome probe submitted twice through `neat serve` is served
+/// from the persistent cache on the repeat — and the cached detail is
+/// bit-identical to the engine-computed one, stochastic rounding
+/// included.
+#[test]
+fn cached_format_genome_resubmit_round_trips_bit_identically() {
+    let menu =
+        vec![FormatSpec::bfloat16().stochastic(3), FormatSpec::fp16().saturating()];
+    let w = bench_suite::by_name("kmeans").expect("kmeans exists");
+    let eval = Evaluator::with_formats(w, None, &menu);
+    let fmt_gene = (1..=eval.max_gene())
+        .find(|&g| eval.gene_name(g).starts_with("fmt["))
+        .expect("menu contributes format rungs");
+
+    let mut cfg = ServiceConfig::new();
+    cfg.threads = 2;
+    cfg.cache_dir = Some(tmp("format_resubmit"));
+    let service = Service::start(cfg).expect("service starts");
+    let probe = || JobSpec {
+        tenant: "cacheprop".to_string(),
+        priority: 1,
+        target: None,
+        formats: menu.clone(),
+        kind: JobKind::Probe {
+            benchmark: "kmeans".to_string(),
+            rule: RuleKind::Wp,
+            genome: vec![fmt_gene],
+        },
+    };
+    let probe_detail = |snap: &neat::service::JobSnapshot| -> EvalDetail {
+        match &snap.outputs[..] {
+            [ShardOutput::Probe { detail, .. }] => *detail,
+            other => panic!("expected one probe output, got {other:?}"),
+        }
+    };
+    let id = service.submit(probe()).expect("submit");
+    let snap = service.wait(id, Duration::from_secs(120)).expect("probe finishes");
+    assert_eq!(snap.state, JobState::Done, "error: {:?}", snap.error);
+    let first = probe_detail(&snap);
+
+    let id2 = service.submit(probe()).expect("resubmit");
+    let snap2 = service.wait(id2, Duration::from_secs(120)).expect("repeat finishes");
+    assert_eq!(snap2.state, JobState::Done, "error: {:?}", snap2.error);
+    assert!(snap2.cache_hit(), "repeat format probe must be served from the cache");
+    let second = probe_detail(&snap2);
+    assert_eq!(first.error.to_bits(), second.error.to_bits());
+    assert_eq!(first.fpu_nec.to_bits(), second.fpu_nec.to_bits());
+    assert_eq!(first.mem_nec.to_bits(), second.mem_nec.to_bits());
+    assert_eq!(first.fpu_target_nec.to_bits(), second.fpu_target_nec.to_bits());
+    let _ = service.shutdown();
 }

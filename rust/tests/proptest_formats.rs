@@ -1,0 +1,633 @@
+//! Differential battery for the custom-format FPI family.
+//!
+//! The format quantizer (`neat::fpi::quantize32/64`) is pinned two ways:
+//!
+//! 1. Against an **independently written scalar softfloat reference**
+//!    (this file's `ref_quantize64`): a fresh decompose/round/reassemble
+//!    implementation that never shares the engine's normalization or
+//!    carry handling. Round-to-nearest-even on exact halfway points,
+//!    subnormal round trips, NaN/Inf propagation, and both overflow
+//!    policies are checked over arbitrary bit patterns.
+//! 2. Against the engine's own determinism contract: for every preset
+//!    (bfloat16 / fp16 / TF32 / arbitrary points, with and without
+//!    saturation and stochastic rounding), the slice kernels must be
+//!    bit-identical to the scalar op sequence in values, counters, and
+//!    trace bytes — in the default build that pins scalar vs block, and
+//!    under `--features lanes` scalar vs the lane tier, so the CI
+//!    feature matrix closes the scalar/block/lanes triangle.
+//!
+//! Stochastic rounding is additionally pinned as *schedule-free*: its
+//! draw is a pure function of (seed, value bits), so archives produced
+//! through the serial and multi-threaded executors are byte-identical,
+//! while distinct seeds produce distinct rounding.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+
+use neat::bench_suite;
+use neat::coordinator::experiments::{explore_rule_with, Budget};
+use neat::coordinator::{Evaluator, Executor, RuleKind};
+use neat::engine::trace::TraceSink;
+use neat::engine::FpContext;
+use neat::fpi::format::sr_hash;
+use neat::fpi::{
+    quantize32, quantize64, CustomFormatFpi, FormatSpec, FpiLibrary, OpKind, Overflow,
+    Precision, QuantParams, Rounding,
+};
+use neat::placement::Placement;
+use neat::util::proptest_lite::{check, Config};
+use neat::util::Pcg64;
+
+fn cfg(cases: u64) -> Config {
+    Config { cases, ..Default::default() }
+}
+
+// ---------------------------------------------------------------------
+// The independent softfloat reference
+// ---------------------------------------------------------------------
+
+const MANT_MASK: u64 = (1 << 52) - 1;
+
+/// 2^e as an exact `f64` (e in -1074..=1023), by bit construction.
+fn pow2(e: i32) -> f64 {
+    assert!((-1074..=1023).contains(&e), "pow2({e}) out of range");
+    if e >= -1022 {
+        f64::from_bits(((e + 1023) as u64) << 52)
+    } else {
+        f64::from_bits(1u64 << (e + 1074))
+    }
+}
+
+/// Decompose a positive finite `f64` as `m · 2^ex`, `m` a nonzero
+/// integer (not normalized — trailing zeros stay in `m`).
+fn decompose(a: f64) -> (u64, i32) {
+    let bits = a.to_bits();
+    let ef = ((bits >> 52) & 0x7ff) as i32;
+    let m = bits & MANT_MASK;
+    if ef == 0 {
+        (m, -1074)
+    } else {
+        (m | (1 << 52), ef - 1075)
+    }
+}
+
+fn bitlen(n: u64) -> i32 {
+    (64 - n.leading_zeros()) as i32
+}
+
+fn ref_overflow(neg: bool, q: &QuantParams) -> f64 {
+    let r = match q.overflow {
+        Overflow::Infinity => f64::INFINITY,
+        // largest finite: an all-ones significand at the top exponent
+        Overflow::Saturate => (pow2(q.sig as i32) - 1.0) * pow2(q.emax - q.sig as i32 + 1),
+    };
+    if neg {
+        -r
+    } else {
+        r
+    }
+}
+
+/// The reference quantizer: same grid semantics as
+/// [`neat::fpi::quantize64`], implemented freshly. The value is split as
+/// an un-normalized integer times a power of two, the discarded fraction
+/// is compared against half (or against the stochastic threshold) with
+/// plain shifts, and the result is reassembled by exact `f64`
+/// multiplication — every step representable, so no double rounding.
+fn ref_quantize64(x: f64, q: &QuantParams) -> f64 {
+    if !x.is_finite() || x == 0.0 {
+        return x;
+    }
+    let neg = x.is_sign_negative();
+    let (m, ex) = decompose(x.abs());
+    let e_val = ex + bitlen(m) - 1;
+    let g = e_val.max(q.emin) - (q.sig as i32 - 1); // grid ulp exponent
+    let d = g - ex; // discarded low bits
+    if d <= 0 {
+        if e_val > q.emax {
+            return ref_overflow(neg, q);
+        }
+        return x;
+    }
+    let (n_lo, thresh, rne_up) = if d >= 64 {
+        // the whole significand is below the grid point; m < 2^53 is
+        // always under half the step, so RNE flushes to zero
+        let t = if d - 64 >= 64 { 0 } else { m >> (d - 64) };
+        (0u64, t, false)
+    } else {
+        let rem = m & ((1u64 << d) - 1);
+        let half = 1u64 << (d - 1);
+        let n_lo = m >> d;
+        (n_lo, rem << (64 - d), rem > half || (rem == half && n_lo & 1 == 1))
+    };
+    let up = match q.rounding {
+        Rounding::NearestEven => rne_up,
+        Rounding::Stochastic { seed } => sr_hash(seed, x.to_bits()) < thresh,
+    };
+    let n = n_lo + up as u64;
+    if n == 0 {
+        return if neg { -0.0 } else { 0.0 };
+    }
+    if g + bitlen(n) - 1 > q.emax {
+        return ref_overflow(neg, q);
+    }
+    let r = (n as f64) * pow2(g); // exact: n <= 2^53, product in range
+    if neg {
+        -r
+    } else {
+        r
+    }
+}
+
+fn ref_quantize32(x: f32, q: &QuantParams) -> f32 {
+    if !x.is_finite() {
+        return x;
+    }
+    ref_quantize64(x as f64, q) as f32
+}
+
+/// An arbitrary lattice point with random policies; `sr_rate` of them
+/// get seeded stochastic rounding.
+fn gen_spec(rng: &mut Pcg64) -> FormatSpec {
+    let mut s = FormatSpec::new(2 + rng.below(10) as u32, 2 + rng.below(52) as u32);
+    if rng.below(2) == 1 {
+        s = s.saturating();
+    }
+    if rng.below(3) == 0 {
+        s = s.stochastic(rng.next_u64());
+    }
+    s
+}
+
+#[derive(Debug, Clone)]
+struct BitsCase {
+    spec: FormatSpec,
+    bits: Vec<u64>,
+}
+
+#[test]
+fn prop_quantize_matches_softfloat_reference_on_arbitrary_bits() {
+    let gen = |rng: &mut Pcg64| BitsCase {
+        spec: gen_spec(rng),
+        bits: (0..64).map(|_| rng.next_u64()).collect(),
+    };
+    check("quantize == softfloat reference", cfg(256), gen, |c| {
+        let (q64, q32) = (c.spec.params64(), c.spec.params32());
+        c.bits.iter().all(|&b| {
+            // arbitrary patterns include NaNs, infinities, zeros, and
+            // subnormals — the reference must agree bit for bit
+            let x = f64::from_bits(b);
+            let y = f32::from_bits(b as u32);
+            quantize64(x, &q64).to_bits() == ref_quantize64(x, &q64).to_bits()
+                && quantize32(y, &q32).to_bits() == ref_quantize32(y, &q32).to_bits()
+        })
+    });
+}
+
+#[derive(Debug, Clone)]
+struct TieCase {
+    spec: FormatSpec,
+    n: u64,
+    g: i32,
+    neg: bool,
+}
+
+#[test]
+fn prop_exact_halfway_points_tie_to_even() {
+    // x = (2n+1)·2^(g-1) sits exactly between grid neighbors n and n+1
+    // at grid exponent g; RNE must land on the even one. sig <= 52 so
+    // the tie itself is exactly representable.
+    let gen = |rng: &mut Pcg64| {
+        let mut spec = FormatSpec::new(2 + rng.below(10) as u32, 2 + rng.below(51) as u32);
+        if rng.below(2) == 1 {
+            spec = spec.saturating();
+        }
+        let q = spec.params64();
+        let glo = q.emin - (q.sig as i32 - 1);
+        let ghi = q.emax - q.sig as i32; // carry to 2^sig stays <= emax
+        let g = glo + rng.below((ghi - glo + 1) as u64) as i32;
+        let n = (1u64 << (q.sig - 1)) + rng.below(1u64 << (q.sig - 1));
+        TieCase { spec, n, g, neg: rng.below(2) == 1 }
+    };
+    check("halfway ties to even", cfg(256), gen, |c| {
+        let q = c.spec.params64();
+        let x = (2 * c.n + 1) as f64 * pow2(c.g - 1);
+        let even = if c.n % 2 == 0 { c.n } else { c.n + 1 };
+        let want = even as f64 * pow2(c.g);
+        let (x, want) = if c.neg { (-x, -want) } else { (x, want) };
+        quantize64(x, &q).to_bits() == want.to_bits()
+    });
+}
+
+#[derive(Debug, Clone)]
+struct SubCase {
+    spec: FormatSpec,
+    k: u64,
+}
+
+#[test]
+fn prop_subnormal_grid_round_trips_and_below_half_flushes() {
+    // k·2^(emin-sig+1), k < 2^(sig-1), is on the format's subnormal
+    // grid: it must survive quantization exactly in both rounding
+    // modes. Half the smallest subnormal flushes to a signed zero
+    // under RNE (tie to the even 0).
+    let gen = |rng: &mut Pcg64| {
+        let spec = gen_spec(rng);
+        let k = 1 + rng.below((1u64 << (spec.params64().sig - 1).min(52)) - 1);
+        SubCase { spec, k }
+    };
+    check("subnormal round trip", cfg(256), gen, |c| {
+        let q = c.spec.params64();
+        let step = pow2(q.emin - (q.sig as i32 - 1));
+        let y = c.k as f64 * step;
+        if quantize64(y, &q).to_bits() != y.to_bits()
+            || quantize64(-y, &q).to_bits() != (-y).to_bits()
+        {
+            return false;
+        }
+        let rne = QuantParams { rounding: Rounding::NearestEven, ..q };
+        quantize64(step / 2.0, &rne).to_bits() == 0.0f64.to_bits()
+            && quantize64(-step / 2.0, &rne).to_bits() == (-0.0f64).to_bits()
+    });
+}
+
+#[test]
+fn nonfinite_propagation_and_overflow_policy_through_the_engine() {
+    use neat::fpi::FpImplementation as _;
+    // Infinity policy: the binary16 hardware rule
+    let inf = CustomFormatFpi::new(FormatSpec::fp16());
+    assert_eq!(inf.perform_f32(OpKind::Mul, 300.0, 300.0), f32::INFINITY);
+    assert_eq!(inf.perform_f32(OpKind::Mul, -300.0, 300.0), f32::NEG_INFINITY);
+    assert!(inf.perform_f32(OpKind::Add, f32::NAN, 1.0).is_nan());
+    assert!(inf.perform_f64(OpKind::Sub, f64::INFINITY, f64::INFINITY).is_nan());
+    assert_eq!(inf.perform_f64(OpKind::Add, f64::INFINITY, 1.0), f64::INFINITY);
+    // Saturate policy: clamps to the largest finite (65504 for fp16)
+    let sat = CustomFormatFpi::new(FormatSpec::fp16().saturating());
+    assert_eq!(sat.perform_f32(OpKind::Mul, 300.0, 300.0), 65504.0);
+    assert_eq!(sat.perform_f32(OpKind::Mul, -300.0, 300.0), -65504.0);
+    // an infinity operand still passes through: saturation applies to
+    // finite values that exceed the range, not to IEEE specials
+    assert_eq!(sat.perform_f32(OpKind::Add, f32::INFINITY, 1.0), f32::INFINITY);
+    assert!(sat.perform_f64(OpKind::Mul, f64::NAN, 2.0).is_nan());
+}
+
+#[derive(Debug, Clone)]
+struct SrCase {
+    spec: FormatSpec,
+    xs: Vec<f64>,
+}
+
+#[test]
+fn prop_stochastic_rounding_is_on_grid_value_keyed_and_idempotent() {
+    let gen = |rng: &mut Pcg64| {
+        let spec = FormatSpec::new(2 + rng.below(10) as u32, 2 + rng.below(52) as u32)
+            .stochastic(rng.next_u64());
+        SrCase { spec, xs: (0..32).map(|_| rng.normal() * 100.0).collect() }
+    };
+    check("SR on-grid + value-keyed", cfg(192), gen, |c| {
+        let q = c.spec.params64();
+        let rne = QuantParams { rounding: Rounding::NearestEven, ..q };
+        c.xs.iter().all(|&x| {
+            let y = quantize64(x, &q);
+            // on the grid: the RNE quantizer is a no-op on SR output
+            if quantize64(y, &rne).to_bits() != y.to_bits() {
+                return false;
+            }
+            // within one grid step of the input (a neighbor, never a
+            // skip) — unless the value overflowed past the format range
+            if y.is_finite() {
+                let (m, ex) = decompose(x.abs());
+                let ulp = pow2((ex + bitlen(m) - 1).max(q.emin) - (q.sig as i32 - 1));
+                if (y - x).abs() >= ulp {
+                    return false;
+                }
+            }
+            // value-keyed: a fresh params copy and a repeat call agree
+            let again = quantize64(x, &c.spec.params64());
+            // idempotent: re-quantizing draws nothing
+            again.to_bits() == y.to_bits() && quantize64(y, &q).to_bits() == y.to_bits()
+        })
+    });
+}
+
+// ---------------------------------------------------------------------
+// Engine identity: scalar ops vs slice kernels per preset
+// ---------------------------------------------------------------------
+
+/// The preset battery: industry layouts, a saturating arbitrary point,
+/// and (per case) an optional stochastic-rounding overlay.
+fn preset(rng: &mut Pcg64) -> FormatSpec {
+    let presets = [
+        FormatSpec::bfloat16(),
+        FormatSpec::fp16(),
+        FormatSpec::tf32(),
+        FormatSpec::fp16().saturating(),
+        FormatSpec::new(6, 7).saturating(),
+    ];
+    let mut spec = presets[rng.below(presets.len() as u64) as usize];
+    if rng.below(3) == 0 {
+        spec = spec.stochastic(rng.next_u64());
+    }
+    spec
+}
+
+#[derive(Debug, Clone)]
+struct FmtScenario {
+    spec: FormatSpec,
+    op: OpKind,
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+fn gen_fmt_scenario(rng: &mut Pcg64) -> FmtScenario {
+    let n = 1 + rng.below(40) as usize;
+    FmtScenario {
+        spec: preset(rng),
+        op: OpKind::ALL[rng.below(4) as usize],
+        a: (0..n).map(|_| (rng.normal() * 60.0) as f32).collect(),
+        b: (0..n).map(|_| (rng.normal() * 60.0 + 0.5) as f32).collect(),
+    }
+}
+
+fn fmt_ctx(spec: FormatSpec) -> FpContext {
+    let mut lib = FpiLibrary::new();
+    let id = lib.register(Arc::new(CustomFormatFpi::new(spec)));
+    FpContext::new(lib, Placement::whole_program(id))
+}
+
+fn scalar_op32(c: &mut FpContext, op: OpKind, a: f32, b: f32) -> f32 {
+    match op {
+        OpKind::Add => c.add32(a, b),
+        OpKind::Sub => c.sub32(a, b),
+        OpKind::Mul => c.mul32(a, b),
+        OpKind::Div => c.div32(a, b),
+    }
+}
+
+fn scalar_op64(c: &mut FpContext, op: OpKind, a: f64, b: f64) -> f64 {
+    match op {
+        OpKind::Add => c.add64(a, b),
+        OpKind::Sub => c.sub64(a, b),
+        OpKind::Mul => c.mul64(a, b),
+        OpKind::Div => c.div64(a, b),
+    }
+}
+
+/// Shared in-memory trace buffer.
+#[derive(Clone)]
+struct Buf(Arc<Mutex<Vec<u8>>>);
+
+impl Write for Buf {
+    fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(b);
+        Ok(b.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+#[test]
+fn prop_format_slice_kernels_match_scalar_in_values_counters_and_trace() {
+    check("format slices == scalar", cfg(128), gen_fmt_scenario, |s| {
+        let n = s.a.len();
+        let a64: Vec<f64> = s.a.iter().map(|&x| x as f64).collect();
+        let b64: Vec<f64> = s.b.iter().map(|&x| x as f64).collect();
+        let mut rng = Pcg64::new(n as u64 ^ 0xF047);
+        let idx: Vec<usize> = (0..n).map(|_| rng.below(n as u64) as usize).collect();
+        let alpha = s.b[0];
+        let (x0, y0) = (s.a[0], s.b[0]);
+        for traced in [false, true] {
+            let mut scalar = fmt_ctx(s.spec);
+            let mut block = fmt_ctx(s.spec);
+            let sbuf = Buf(Arc::new(Mutex::new(Vec::new())));
+            let bbuf = Buf(Arc::new(Mutex::new(Vec::new())));
+            if traced {
+                scalar.set_trace(TraceSink::new(Box::new(sbuf.clone())));
+                block.set_trace(TraceSink::new(Box::new(bbuf.clone())));
+            }
+            // scalar reference sequences
+            let want: Vec<f32> =
+                s.a.iter().zip(&s.b).map(|(&x, &y)| scalar_op32(&mut scalar, s.op, x, y)).collect();
+            let mut w_sum = 0.0f32;
+            for &x in &s.a {
+                w_sum = scalar.add32(w_sum, x);
+            }
+            let mut w_dot = 0.0f32;
+            for (&x, &y) in s.a.iter().zip(&s.b) {
+                let p = scalar.mul32(x, y);
+                w_dot = scalar.add32(w_dot, p);
+            }
+            let mut w_sq = 0.0f32;
+            for (&x, &y) in s.a.iter().zip(&s.b) {
+                let d = scalar.sub32(x, y);
+                let m = scalar.mul32(d, d);
+                w_sq = scalar.add32(w_sq, m);
+            }
+            let want64: Vec<f64> = a64
+                .iter()
+                .zip(&b64)
+                .map(|(&x, &y)| scalar_op64(&mut scalar, s.op, x, y))
+                .collect();
+            let w_axpy: Vec<f32> = idx
+                .iter()
+                .zip(&s.b)
+                .map(|(&j, &y)| {
+                    let p = scalar.mul32(alpha, s.a[j]);
+                    scalar.add32(p, y)
+                })
+                .collect();
+            let w_gsq: Vec<f32> = idx
+                .iter()
+                .map(|&j| {
+                    let dx = scalar.sub32(x0, s.a[j]);
+                    let dy = scalar.sub32(y0, s.b[j]);
+                    let xx = scalar.mul32(dx, dx);
+                    let yy = scalar.mul32(dy, dy);
+                    scalar.add32(xx, yy)
+                })
+                .collect();
+            let mut w_gsum = 0.0f64;
+            for &j in &idx {
+                let v = scalar.load64(a64[j]);
+                w_gsum = scalar.add64(w_gsum, v);
+            }
+
+            // the slice kernels
+            let mut got = vec![0.0f32; n];
+            block.map32_slice(s.op, &s.a[..], &s.b[..], &mut got);
+            let g_sum = block.sum32_slice(&s.a);
+            let g_dot = block.dot32_slice(&s.a, &s.b);
+            let g_sq = block.sqdist32_slice(&s.a, &s.b);
+            let mut got64 = vec![0.0f64; n];
+            block.map64_slice(s.op, &a64[..], &b64[..], &mut got64);
+            let mut g_axpy = vec![0.0f32; n];
+            block.gather_axpy32_slice(alpha, &s.a, &idx, &s.b, &mut g_axpy);
+            let mut g_gsq = vec![0.0f32; n];
+            block.gather_sqdist2d32_slice(x0, y0, &s.a, &s.b, &idx, &mut g_gsq);
+            let g_gsum = block.gather_sum64_slice(&a64, &idx);
+
+            let ok = want.iter().zip(&got).all(|(w, g)| w.to_bits() == g.to_bits())
+                && w_sum.to_bits() == g_sum.to_bits()
+                && w_dot.to_bits() == g_dot.to_bits()
+                && w_sq.to_bits() == g_sq.to_bits()
+                && want64.iter().zip(&got64).all(|(w, g)| w.to_bits() == g.to_bits())
+                && w_axpy.iter().zip(&g_axpy).all(|(w, g)| w.to_bits() == g.to_bits())
+                && w_gsq.iter().zip(&g_gsq).all(|(w, g)| w.to_bits() == g.to_bits())
+                && w_gsum.to_bits() == g_gsum.to_bits()
+                && *sbuf.0.lock().unwrap() == *bbuf.0.lock().unwrap()
+                && scalar.counters() == block.counters();
+            if !ok {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_format_boundary_lengths_pin_lane_remainder_tails() {
+    // Empty, singleton, one-under/at/over each lane width, and a ragged
+    // multiple — under `--features lanes` these hit the block/remainder
+    // split of the format kernels; without it, the scalar loop. Both
+    // must match the scalar op sequence bit for bit.
+    use neat::engine::{LANES32, LANES64};
+    let lens =
+        [0usize, 1, LANES32 - 1, LANES32, LANES32 + 1, 2 * LANES32 + 3, LANES64 + 1];
+    check("format boundary lengths == scalar", cfg(48), gen_fmt_scenario, |s| {
+        for &n in &lens {
+            let a: Vec<f32> = s.a.iter().copied().cycle().take(n).collect();
+            let b: Vec<f32> = s.b.iter().copied().cycle().take(n).collect();
+            let mut scalar = fmt_ctx(s.spec);
+            let mut block = fmt_ctx(s.spec);
+            let want: Vec<f32> =
+                a.iter().zip(&b).map(|(&x, &y)| scalar_op32(&mut scalar, s.op, x, y)).collect();
+            let mut w_dot = 0.0f32;
+            for (&x, &y) in a.iter().zip(&b) {
+                let p = scalar.mul32(x, y);
+                w_dot = scalar.add32(w_dot, p);
+            }
+            let mut got = vec![0.0f32; n];
+            block.map32_slice(s.op, &a[..], &b[..], &mut got);
+            let g_dot = block.dot32_slice(&a, &b);
+            if !want.iter().zip(&got).all(|(w, g)| w.to_bits() == g.to_bits())
+                || w_dot.to_bits() != g_dot.to_bits()
+                || scalar.counters() != block.counters()
+            {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn format_fpis_compose_with_cip_and_fcs_placements() {
+    // A format FPI mapped to one function under CIP / inherited through
+    // the call stack under FCS: scalar vs slice identity inside the
+    // mapped frames, exactness outside them.
+    let spec = FormatSpec::bfloat16().stochastic(21);
+    let mut rng = Pcg64::new(0xC1F5);
+    let a: Vec<f32> = (0..37).map(|_| (rng.normal() * 25.0) as f32).collect();
+    let b: Vec<f32> = (0..37).map(|_| (rng.normal() * 25.0 + 1.0) as f32).collect();
+    for call_stack in [false, true] {
+        let build = || {
+            let mut lib = FpiLibrary::new();
+            let id = lib.register(Arc::new(CustomFormatFpi::new(spec)));
+            let mut map = HashMap::new();
+            map.insert("hot".to_string(), id);
+            let p = if call_stack {
+                Placement::call_stack(map)
+            } else {
+                Placement::current_function(map)
+            };
+            let mut ctx = FpContext::new(lib, p);
+            let hot = ctx.register("hot");
+            let cold = ctx.register("cold");
+            (ctx, hot, cold)
+        };
+        let (mut scalar, s_hot, s_cold) = build();
+        let (mut block, b_hot, b_cold) = build();
+        let want: Vec<f32> = scalar.call(s_hot, |c| {
+            a.iter().zip(&b).map(|(&x, &y)| c.mul32(x, y)).collect()
+        });
+        let mut got = vec![0.0f32; a.len()];
+        block.call(b_hot, |c| c.mul32_slice(&a, &b, &mut got));
+        for i in 0..a.len() {
+            assert_eq!(want[i].to_bits(), got[i].to_bits(), "mapped frame, lane {i}");
+        }
+        // outside the mapped function both engines are exact IEEE
+        let w_cold = scalar.call(s_cold, |c| c.mul32(a[0], b[0]));
+        let mut g_cold = [0.0f32];
+        block.call(b_cold, |c| c.mul32_slice(&a[..1], &b[..1], &mut g_cold));
+        assert_eq!(w_cold.to_bits(), (a[0] * b[0]).to_bits());
+        assert_eq!(w_cold.to_bits(), g_cold[0].to_bits());
+        assert_eq!(scalar.counters(), block.counters());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stochastic rounding is schedule-free end to end
+// ---------------------------------------------------------------------
+
+#[test]
+fn sr_archives_are_byte_identical_serial_vs_parallel() {
+    let menu =
+        [FormatSpec::bfloat16().stochastic(0xA5), FormatSpec::new(6, 6).stochastic(0xA5)];
+    let archive = |menu: &[FormatSpec], threads: usize| {
+        let w = bench_suite::by_name("blackscholes").expect("blackscholes exists");
+        let eval = Evaluator::with_formats(w, None, menu);
+        let res =
+            explore_rule_with(&eval, RuleKind::Wp, Budget::quick(), &Executor::new(threads));
+        res.details
+            .iter()
+            .map(|(g, d)| {
+                (g.clone(), d.error.to_bits(), d.fpu_nec.to_bits(), d.mem_nec.to_bits())
+            })
+            .collect::<Vec<_>>()
+    };
+    let serial = archive(&menu, 1);
+    // scheduling can never change values: 4 worker threads produce the
+    // byte-identical archive, stochastic rounding included
+    assert_eq!(serial, archive(&menu, 4), "4-thread archive diverged from serial");
+    // a distinct seed must actually round differently somewhere
+    let other_menu =
+        [FormatSpec::bfloat16().stochastic(0xB6), FormatSpec::new(6, 6).stochastic(0xB6)];
+    let other = archive(&other_menu, 1);
+    assert_eq!(serial.len(), other.len(), "ladders must have the same shape");
+    assert!(
+        serial.iter().zip(&other).any(|(a, b)| a.1 != b.1),
+        "seeds 0xA5 and 0xB6 produced identical error bits on every rung"
+    );
+}
+
+#[test]
+fn sr_whole_program_runs_are_reproducible_across_contexts() {
+    // Two independent contexts over the same seeded-SR placement must
+    // produce bit-identical outputs and counters — the engine-level
+    // statement of "per-run variation comes from the seed, not from
+    // allocation order or scheduling".
+    let spec = FormatSpec::tf32().stochastic(1234);
+    let run = || {
+        let mut ctx = fmt_ctx(spec);
+        let mut rng = Pcg64::new(0x5EED);
+        let mut acc = 0.0f32;
+        for _ in 0..500 {
+            let x = (rng.normal() * 10.0) as f32;
+            let p = ctx.mul32(acc, 1.0001);
+            acc = ctx.add32(p, x);
+        }
+        let agg = ctx.counters().aggregate();
+        (acc.to_bits(), agg)
+    };
+    let (a, ca) = run();
+    let (b, cb) = run();
+    assert_eq!(a, b);
+    assert_eq!(ca, cb);
+    // Precision targets gate format FPIs exactly like truncation: under
+    // a Double-only target the f32 path stays exact
+    let mut gated = fmt_ctx(spec);
+    gated.set_target(Precision::Double);
+    assert_eq!(gated.mul32(1.1, 1.3).to_bits(), (1.1f32 * 1.3).to_bits());
+}
