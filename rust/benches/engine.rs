@@ -16,6 +16,11 @@
 //!
 //!     cargo bench --bench engine                    # scalar + block
 //!     cargo bench --bench engine --features lanes   # scalar + lanes
+//!
+//! An accounting-only microbench section (bits32/64 scalar vs block,
+//! masking branchy vs branchless) isolates the §III-C bookkeeping so
+//! the Amdahl share of the accounting is measured directly; its rows
+//! land in the JSON under `accounting_mops`.
 
 #[path = "harness.rs"]
 mod harness;
@@ -26,7 +31,11 @@ use std::sync::Arc;
 use harness::{bench, Measurement};
 use neat::engine::FpContext;
 use neat::fpi::perturb::{PerturbFpi, PerturbMode};
-use neat::fpi::{FpiLibrary, Precision};
+use neat::fpi::{
+    apply_mask_block32, apply_mask_block64, apply_mask_f32, apply_mask_f64, trunc_mask_f32,
+    trunc_mask_f64, used_bits_block32, used_bits_block64, used_bits_f32, used_bits_f64,
+    FpiLibrary, Precision,
+};
 use neat::placement::Placement;
 
 const N: usize = 1024;
@@ -104,6 +113,107 @@ fn run_variant(fpi: &'static str, mut ctx: FpContext, reports: &mut Vec<String>)
     result
 }
 
+/// Accounting-only microbench: isolates the §III-C bookkeeping — the
+/// used-bits counts and the truncate mask — from the arithmetic, so the
+/// Amdahl share claimed in the gap analysis is measured directly rather
+/// than inferred from end-to-end deltas. Scalar forms are the per-op
+/// accounting the scalar tier pays; block forms are the lane tier's
+/// batched spellings.
+fn accounting_microbench(reports: &mut Vec<String>) -> Vec<(&'static str, f64)> {
+    let (a, _) = inputs();
+    let a64: Vec<f64> = a.iter().map(|&x| x as f64).collect();
+    let (m32, m64) = (trunc_mask_f32(8), trunc_mask_f64(8));
+    let mut rows = Vec::new();
+    let mut run = |name: &'static str, m: Measurement| {
+        rows.push((name, rate(&m) / 1e6));
+        reports.push(m.report());
+    };
+
+    run(
+        "bits32_scalar",
+        bench("bits32 scalar", N as u64, "counts", || {
+            let mut s = 0u64;
+            for &x in &a {
+                s += used_bits_f32(x) as u64;
+            }
+            std::hint::black_box(s);
+        }),
+    );
+    run(
+        "bits32_block",
+        bench("bits32 block ", N as u64, "counts", || {
+            let mut s = 0u64;
+            for c in a.chunks_exact(8) {
+                let xs: &[f32; 8] = c.try_into().unwrap();
+                s += used_bits_block32(xs) as u64;
+            }
+            std::hint::black_box(s);
+        }),
+    );
+    run(
+        "bits64_scalar",
+        bench("bits64 scalar", N as u64, "counts", || {
+            let mut s = 0u64;
+            for &x in &a64 {
+                s += used_bits_f64(x) as u64;
+            }
+            std::hint::black_box(s);
+        }),
+    );
+    run(
+        "bits64_block",
+        bench("bits64 block ", N as u64, "counts", || {
+            let mut s = 0u64;
+            for c in a64.chunks_exact(4) {
+                let xs: &[f64; 4] = c.try_into().unwrap();
+                s += used_bits_block64(xs) as u64;
+            }
+            std::hint::black_box(s);
+        }),
+    );
+    let mut out32 = vec![0.0f32; N];
+    run(
+        "mask32_branchy",
+        bench("mask32 branchy   ", N as u64, "masks", || {
+            for (o, &x) in out32.iter_mut().zip(&a) {
+                *o = apply_mask_f32(x, m32);
+            }
+            std::hint::black_box(&out32);
+        }),
+    );
+    run(
+        "mask32_branchless",
+        bench("mask32 branchless", N as u64, "masks", || {
+            for (o, c) in out32.chunks_exact_mut(8).zip(a.chunks_exact(8)) {
+                let xs: &[f32; 8] = c.try_into().unwrap();
+                o.copy_from_slice(&apply_mask_block32(xs, m32));
+            }
+            std::hint::black_box(&out32);
+        }),
+    );
+    let mut out64 = vec![0.0f64; N];
+    run(
+        "mask64_branchy",
+        bench("mask64 branchy   ", N as u64, "masks", || {
+            for (o, &x) in out64.iter_mut().zip(&a64) {
+                *o = apply_mask_f64(x, m64);
+            }
+            std::hint::black_box(&out64);
+        }),
+    );
+    run(
+        "mask64_branchless",
+        bench("mask64 branchless", N as u64, "masks", || {
+            for (o, c) in out64.chunks_exact_mut(4).zip(a64.chunks_exact(4)) {
+                let xs: &[f64; 4] = c.try_into().unwrap();
+                o.copy_from_slice(&apply_mask_block64(xs, m64));
+            }
+            std::hint::black_box(&out64);
+        }),
+    );
+    rows
+}
+
 fn main() {
     let mut reports = Vec::new();
     let mut results = Vec::new();
@@ -120,6 +230,8 @@ fn main() {
     let dynamic = FpContext::new(dyn_lib, Placement::whole_program(id));
     results.push(run_variant("dyn(perturb)", dynamic, &mut reports));
 
+    let accounting = accounting_microbench(&mut reports);
+
     let tier = if LANES_ON { "lanes" } else { "block" };
     println!("== engine: scalar vs {tier} mode ({N}-element slices) ==");
     for r in &reports {
@@ -134,6 +246,10 @@ fn main() {
             v.slice_mflops,
             v.slice_mflops / v.scalar_mflops.max(1e-9)
         );
+    }
+    println!();
+    for (name, mops) in &accounting {
+        println!("accounting {name:<18} {mops:>9.2} Mops/s");
     }
 
     // machine-readable baseline for the perf trajectory: the slice
@@ -162,7 +278,13 @@ fn main() {
             v.slice_mflops / v.scalar_mflops.max(1e-9)
         );
     }
-    let _ = writeln!(json, "  ]");
+    let _ = writeln!(json, "  ],");
+    let _ = writeln!(json, "  \"accounting_mops\": {{");
+    for (i, (name, mops)) in accounting.iter().enumerate() {
+        let comma = if i + 1 == accounting.len() { "" } else { "," };
+        let _ = writeln!(json, "    \"{name}\": {mops:.3}{comma}");
+    }
+    let _ = writeln!(json, "  }}");
     json.push_str("}\n");
     let path = std::env::var("NEAT_BENCH_ENGINE_OUT")
         .unwrap_or_else(|_| "BENCH_engine.json".to_string());

@@ -480,19 +480,21 @@ impl FpContext {
 /// Bits transmitted for one f32 memory access: sign + exponent + the
 /// explicit mantissa bits up to the last set one (trailing zero bits need
 /// not move on a width-adaptive bus). Full width = 32.
+///
+/// The trailing-zero rule is `fpi::truncate`'s §III-C count, reused
+/// rather than re-implemented: `32 − tz = 8 + (24 − tz)`, i.e. exactly
+/// 8 bits on top of [`used_bits_f32`]. One definition of the rule means
+/// the vectorized accounting block forms cannot drift from this one.
 #[inline(always)]
 pub fn mem_bits_f32(v: f32) -> u32 {
-    let mantissa = v.to_bits() & 0x007f_ffff;
-    let tz = if mantissa == 0 { 23 } else { mantissa.trailing_zeros() };
-    32 - tz
+    8 + used_bits_f32(v)
 }
 
-/// Bits transmitted for one f64 memory access. Full width = 64.
+/// Bits transmitted for one f64 memory access (11 exponent bits on top
+/// of [`used_bits_f64`]). Full width = 64.
 #[inline(always)]
 pub fn mem_bits_f64(v: f64) -> u32 {
-    let mantissa = v.to_bits() & 0x000f_ffff_ffff_ffff;
-    let tz = if mantissa == 0 { 52 } else { mantissa.trailing_zeros() };
-    64 - tz
+    11 + used_bits_f64(v)
 }
 
 #[cfg(test)]

@@ -55,6 +55,23 @@
 //! - `Dyn` FPIs keep the scalar per-element virtual call — a custom
 //!   FPI never observes a lane width it did not opt into.
 //!
+//! The §III-C bit accounting is lane-parallel too: the per-FLOP
+//! trailing-zero counts of independent operands and results are
+//! computed per block ([`crate::fpi::used_bits_block32`] — branch-free
+//! popcount-identity trailing zeros that vectorize on baseline x86-64)
+//! and horizontally added into the kernel's `u64` local once per block,
+//! and the lane truncate masks go through the branchless
+//! [`crate::fpi::apply_mask_block32`] blend instead of a per-element
+//! `is_finite` branch. Bit totals are order-independent u64 sums of the
+//! same per-lane terms, so deferring the horizontal add changes no
+//! counter bit; in a reduction's serial add chain each step's
+//! accumulator *is* the previous step's result, so its used-bits count
+//! is carried forward instead of recounted (same value, same count).
+//! Without this the accounting — three scalar trailing-zero counts per
+//! FLOP plus the masking branch — is roughly half the per-op work on
+//! truncate kernels, an Amdahl cap near 2× that no arithmetic lane
+//! width can break (measured in `BENCH_engine.json`).
+//!
 //! `tests/proptest_slice.rs` runs every kernel scalar/block/lanes and
 //! pins values + counters + trace bytes across placements, widths, and
 //! adversarial lengths (0, 1, lane±1, non-multiples).
@@ -81,6 +98,11 @@ use crate::fpi::{
     apply_mask_f32, apply_mask_f64, quantize32, quantize64, raw_f32, raw_f64, trunc_mask_f32,
     trunc_mask_f64, used_bits_f32, used_bits_f64, FormatSpec, FpImplementation, OpKind, Precision,
     QuantParams,
+};
+#[cfg(feature = "lanes")]
+use crate::fpi::{
+    apply_mask_block32, apply_mask_block64, used_bits_block32, used_bits_block64,
+    used_bits_lanes32, used_bits_lanes64,
 };
 use crate::placement::CompiledFpi;
 
@@ -303,11 +325,10 @@ struct Trunc32 {
 impl Trunc32 {
     #[inline(always)]
     fn mask_block(&self, xs: &[f32; LANES32]) -> [f32; LANES32] {
-        let mut r = [0.0f32; LANES32];
-        for j in 0..LANES32 {
-            r[j] = apply_mask_f32(xs[j], self.mask);
-        }
-        r
+        // Branchless blend — bit-identical to `apply_mask_f32` per lane
+        // (incl. NaN payload / Inf passthrough), without the per-element
+        // `is_finite` branch.
+        apply_mask_block32(xs, self.mask)
     }
 }
 
@@ -441,11 +462,8 @@ struct Trunc64 {
 impl Trunc64 {
     #[inline(always)]
     fn mask_block(&self, xs: &[f64; LANES64]) -> [f64; LANES64] {
-        let mut r = [0.0f64; LANES64];
-        for j in 0..LANES64 {
-            r[j] = apply_mask_f64(xs[j], self.mask);
-        }
-        r
+        // Branchless blend — see `Trunc32::mask_block`.
+        apply_mask_block64(xs, self.mask)
     }
 }
 
@@ -535,6 +553,31 @@ fn bits64(a: f64, b: f64, r: f64) -> u64 {
     (used_bits_f64(a) + used_bits_f64(b) + used_bits_f64(r)) as u64
 }
 
+// Block accounting: sum the per-lane used-bits counts in u32 and fold
+// into the u64 total once per block. Headroom: one block contributes at
+// most 3 operands × 24 bits × 8 lanes = 576 (f32) or 3 × 53 × 4 = 636
+// (f64) — nowhere near u32::MAX, so the intermediate u32 sums cannot
+// wrap. Pinned by the const asserts below and a unit test in
+// `fpi::truncate`.
+#[cfg(feature = "lanes")]
+const _: () = assert!(3 * 24 * LANES32 <= u32::MAX as usize);
+#[cfg(feature = "lanes")]
+const _: () = assert!(3 * 53 * LANES64 <= u32::MAX as usize);
+
+/// Manipulated bits of one lane block of FLOPs — [`bits32`] over
+/// `LANES32` independent (a, b, r) triples, horizontally added once.
+#[cfg(feature = "lanes")]
+#[inline(always)]
+fn block_bits32(a: &[f32; LANES32], b: &[f32; LANES32], r: &[f32; LANES32]) -> u64 {
+    (used_bits_block32(a) + used_bits_block32(b) + used_bits_block32(r)) as u64
+}
+
+#[cfg(feature = "lanes")]
+#[inline(always)]
+fn block_bits64(a: &[f64; LANES64], b: &[f64; LANES64], r: &[f64; LANES64]) -> u64 {
+    (used_bits_block64(a) + used_bits_block64(b) + used_bits_block64(r)) as u64
+}
+
 /// Copy one lane block out of an operand (slice window or broadcast
 /// splat). The constant-trip copy loop is the gather LLVM vectorizes.
 #[cfg(feature = "lanes")]
@@ -566,10 +609,8 @@ fn ew32<K: Kern32>(k: &K, op: OpKind, a: Operand32, b: Operand32, out: &mut [f32
         while i + LANES32 <= out.len() {
             let (xa, xb) = (lane32(&a, i), lane32(&b, i));
             let r = k.op_block(op, &xa, &xb);
-            for j in 0..LANES32 {
-                bits += bits32(xa[j], xb[j], r[j]);
-                out[i + j] = r[j];
-            }
+            bits += block_bits32(&xa, &xb, &r);
+            out[i..i + LANES32].copy_from_slice(&r);
             i += LANES32;
         }
     }
@@ -592,10 +633,8 @@ fn ew64<K: Kern64>(k: &K, op: OpKind, a: Operand64, b: Operand64, out: &mut [f64
         while i + LANES64 <= out.len() {
             let (xa, xb) = (lane64(&a, i), lane64(&b, i));
             let r = k.op_block(op, &xa, &xb);
-            for j in 0..LANES64 {
-                bits += bits64(xa[j], xb[j], r[j]);
-                out[i + j] = r[j];
-            }
+            bits += block_bits64(&xa, &xb, &r);
+            out[i..i + LANES64].copy_from_slice(&r);
             i += LANES64;
         }
     }
@@ -623,13 +662,20 @@ fn sum32<K: Kern32>(k: &K, xs: &[f32], bits: &mut u64) -> f32 {
     let mut i = 0usize;
     #[cfg(feature = "lanes")]
     if K::LANE_OK {
+        // Operand used-bits counted per block; the accumulator's count
+        // is carried across the serial chain (acc at step j+1 *is* r at
+        // step j, so recounting it would produce the same term).
+        let mut ub_acc = used_bits_f32(acc);
         while i + LANES32 <= xs.len() {
             let xb: [f32; LANES32] = xs[i..i + LANES32].try_into().unwrap();
             let mx = k.premask_block(&xb);
+            let ubx = used_bits_lanes32(&xb);
             for j in 0..LANES32 {
                 let r = k.op(OpKind::Add, acc, mx[j]);
-                *bits += bits32(acc, xb[j], r);
+                let ub_r = used_bits_f32(r);
+                *bits += (ub_acc + ubx[j] + ub_r) as u64;
                 acc = r;
+                ub_acc = ub_r;
             }
             i += LANES32;
         }
@@ -648,13 +694,17 @@ fn sum64<K: Kern64>(k: &K, xs: &[f64], bits: &mut u64) -> f64 {
     let mut i = 0usize;
     #[cfg(feature = "lanes")]
     if K::LANE_OK {
+        let mut ub_acc = used_bits_f64(acc);
         while i + LANES64 <= xs.len() {
             let xb: [f64; LANES64] = xs[i..i + LANES64].try_into().unwrap();
             let mx = k.premask_block(&xb);
+            let ubx = used_bits_lanes64(&xb);
             for j in 0..LANES64 {
                 let r = k.op(OpKind::Add, acc, mx[j]);
-                *bits += bits64(acc, xb[j], r);
+                let ub_r = used_bits_f64(r);
+                *bits += (ub_acc + ubx[j] + ub_r) as u64;
                 acc = r;
+                ub_acc = ub_r;
             }
             i += LANES64;
         }
@@ -673,19 +723,22 @@ fn dot32<K: Kern32>(k: &K, a: &[f32], b: &[f32], bm: &mut u64, ba: &mut u64) -> 
     let mut i = 0usize;
     #[cfg(feature = "lanes")]
     if K::LANE_OK {
+        let mut ub_acc = used_bits_f32(acc);
         while i + LANES32 <= a.len() {
             let xb: [f32; LANES32] = a[i..i + LANES32].try_into().unwrap();
             let yb: [f32; LANES32] = b[i..i + LANES32].try_into().unwrap();
-            // lane-parallel multiplies (independent per element)...
+            // lane-parallel multiplies + block accounting...
             let p = k.op_block(OpKind::Mul, &xb, &yb);
+            *bm += block_bits32(&xb, &yb, &p);
+            // ...serial add chain (the reduction order is the contract);
+            // the accumulator's used-bits count carries step to step.
+            let ubp = used_bits_lanes32(&p);
             for j in 0..LANES32 {
-                *bm += bits32(xb[j], yb[j], p[j]);
-            }
-            // ...serial add chain (the reduction order is the contract)
-            for &pj in &p {
-                let r = k.op(OpKind::Add, acc, pj);
-                *ba += bits32(acc, pj, r);
+                let r = k.op(OpKind::Add, acc, p[j]);
+                let ub_r = used_bits_f32(r);
+                *ba += (ub_acc + ubp[j] + ub_r) as u64;
                 acc = r;
+                ub_acc = ub_r;
             }
             i += LANES32;
         }
@@ -706,17 +759,19 @@ fn dot64<K: Kern64>(k: &K, a: &[f64], b: &[f64], bm: &mut u64, ba: &mut u64) -> 
     let mut i = 0usize;
     #[cfg(feature = "lanes")]
     if K::LANE_OK {
+        let mut ub_acc = used_bits_f64(acc);
         while i + LANES64 <= a.len() {
             let xb: [f64; LANES64] = a[i..i + LANES64].try_into().unwrap();
             let yb: [f64; LANES64] = b[i..i + LANES64].try_into().unwrap();
             let p = k.op_block(OpKind::Mul, &xb, &yb);
+            *bm += block_bits64(&xb, &yb, &p);
+            let ubp = used_bits_lanes64(&p);
             for j in 0..LANES64 {
-                *bm += bits64(xb[j], yb[j], p[j]);
-            }
-            for &pj in &p {
-                let r = k.op(OpKind::Add, acc, pj);
-                *ba += bits64(acc, pj, r);
+                let r = k.op(OpKind::Add, acc, p[j]);
+                let ub_r = used_bits_f64(r);
+                *ba += (ub_acc + ubp[j] + ub_r) as u64;
                 acc = r;
+                ub_acc = ub_r;
             }
             i += LANES64;
         }
@@ -745,16 +800,17 @@ fn axpy32<K: Kern32>(
     #[cfg(feature = "lanes")]
     if K::LANE_OK {
         let alpha_b = [alpha; LANES32];
+        // alpha is the same operand in every lane: count it once,
+        // charge it per lane.
+        let ub_alpha = LANES32 as u32 * used_bits_f32(alpha);
         while i + LANES32 <= out.len() {
             let xb: [f32; LANES32] = x[i..i + LANES32].try_into().unwrap();
             let yb: [f32; LANES32] = y[i..i + LANES32].try_into().unwrap();
             let p = k.op_block(OpKind::Mul, &alpha_b, &xb);
             let r = k.op_block(OpKind::Add, &p, &yb);
-            for j in 0..LANES32 {
-                *bm += bits32(alpha, xb[j], p[j]);
-                *ba += bits32(p[j], yb[j], r[j]);
-                out[i + j] = r[j];
-            }
+            *bm += (ub_alpha + used_bits_block32(&xb) + used_bits_block32(&p)) as u64;
+            *ba += block_bits32(&p, &yb, &r);
+            out[i..i + LANES32].copy_from_slice(&r);
             i += LANES32;
         }
     }
@@ -782,16 +838,15 @@ fn axpy64<K: Kern64>(
     #[cfg(feature = "lanes")]
     if K::LANE_OK {
         let alpha_b = [alpha; LANES64];
+        let ub_alpha = LANES64 as u32 * used_bits_f64(alpha);
         while i + LANES64 <= out.len() {
             let xb: [f64; LANES64] = x[i..i + LANES64].try_into().unwrap();
             let yb: [f64; LANES64] = y[i..i + LANES64].try_into().unwrap();
             let p = k.op_block(OpKind::Mul, &alpha_b, &xb);
             let r = k.op_block(OpKind::Add, &p, &yb);
-            for j in 0..LANES64 {
-                *bm += bits64(alpha, xb[j], p[j]);
-                *ba += bits64(p[j], yb[j], r[j]);
-                out[i + j] = r[j];
-            }
+            *bm += (ub_alpha + used_bits_block64(&xb) + used_bits_block64(&p)) as u64;
+            *ba += block_bits64(&p, &yb, &r);
+            out[i..i + LANES64].copy_from_slice(&r);
             i += LANES64;
         }
     }
@@ -818,21 +873,25 @@ fn sqdist32<K: Kern32>(
     let mut i = 0usize;
     #[cfg(feature = "lanes")]
     if K::LANE_OK {
+        let mut ub_acc = used_bits_f32(acc);
         while i + LANES32 <= a.len() {
             let xb: [f32; LANES32] = a[i..i + LANES32].try_into().unwrap();
             let yb: [f32; LANES32] = b[i..i + LANES32].try_into().unwrap();
-            // lane-parallel sub + square (independent per element)...
+            // lane-parallel sub + square with block accounting (the
+            // square's two operands are the same block: count it once,
+            // charge it twice)...
             let d = k.op_block(OpKind::Sub, &xb, &yb);
             let s = k.op_block(OpKind::Mul, &d, &d);
+            *bs += block_bits32(&xb, &yb, &d);
+            *bm += (2 * used_bits_block32(&d) + used_bits_block32(&s)) as u64;
+            // ...serial accumulation chain, accumulator count carried
+            let ubs = used_bits_lanes32(&s);
             for j in 0..LANES32 {
-                *bs += bits32(xb[j], yb[j], d[j]);
-                *bm += bits32(d[j], d[j], s[j]);
-            }
-            // ...serial accumulation chain
-            for &sj in &s {
-                let r = k.op(OpKind::Add, acc, sj);
-                *ba += bits32(acc, sj, r);
+                let r = k.op(OpKind::Add, acc, s[j]);
+                let ub_r = used_bits_f32(r);
+                *ba += (ub_acc + ubs[j] + ub_r) as u64;
                 acc = r;
+                ub_acc = ub_r;
             }
             i += LANES32;
         }
@@ -860,10 +919,8 @@ fn add_assign32<K: Kern32>(k: &K, acc: &mut [f32], xs: &[f32]) -> u64 {
             let ab: [f32; LANES32] = acc[i..i + LANES32].try_into().unwrap();
             let xb: [f32; LANES32] = xs[i..i + LANES32].try_into().unwrap();
             let r = k.op_block(OpKind::Add, &ab, &xb);
-            for j in 0..LANES32 {
-                bits += bits32(ab[j], xb[j], r[j]);
-                acc[i + j] = r[j];
-            }
+            bits += block_bits32(&ab, &xb, &r);
+            acc[i..i + LANES32].copy_from_slice(&r);
             i += LANES32;
         }
     }
@@ -906,6 +963,10 @@ fn gsq32<K: Kern32>(
     if K::LANE_OK {
         let x0b = [x0; LANES32];
         let y0b = [y0; LANES32];
+        // The query point repeats in every lane: count once, charge per
+        // lane (same hoist as axpy's alpha).
+        let ub_x0 = LANES32 as u32 * used_bits_f32(x0);
+        let ub_y0 = LANES32 as u32 * used_bits_f32(y0);
         while e + LANES32 <= idx.len() {
             let mut xj = [0.0f32; LANES32];
             let mut yj = [0.0f32; LANES32];
@@ -918,12 +979,12 @@ fn gsq32<K: Kern32>(
             let xx = k.op_block(OpKind::Mul, &dx, &dx);
             let yy = k.op_block(OpKind::Mul, &dy, &dy);
             let r2 = k.op_block(OpKind::Add, &xx, &yy);
-            for j in 0..LANES32 {
-                *bs += bits32(x0, xj[j], dx[j]) + bits32(y0, yj[j], dy[j]);
-                *bm += bits32(dx[j], dx[j], xx[j]) + bits32(dy[j], dy[j], yy[j]);
-                *ba += bits32(xx[j], yy[j], r2[j]);
-                out[e + j] = r2[j];
-            }
+            *bs += (ub_x0 + used_bits_block32(&xj) + used_bits_block32(&dx)) as u64
+                + (ub_y0 + used_bits_block32(&yj) + used_bits_block32(&dy)) as u64;
+            *bm += (2 * used_bits_block32(&dx) + used_bits_block32(&xx)) as u64
+                + (2 * used_bits_block32(&dy) + used_bits_block32(&yy)) as u64;
+            *ba += block_bits32(&xx, &yy, &r2);
+            out[e..e + LANES32].copy_from_slice(&r2);
             e += LANES32;
         }
     }
@@ -961,6 +1022,7 @@ fn gaxpy32<K: Kern32>(
     #[cfg(feature = "lanes")]
     if K::LANE_OK {
         let alpha_b = [alpha; LANES32];
+        let ub_alpha = LANES32 as u32 * used_bits_f32(alpha);
         while e + LANES32 <= idx.len() {
             let mut xb = [0.0f32; LANES32];
             for j in 0..LANES32 {
@@ -969,11 +1031,9 @@ fn gaxpy32<K: Kern32>(
             let yb: [f32; LANES32] = ys[e..e + LANES32].try_into().unwrap();
             let p = k.op_block(OpKind::Mul, &alpha_b, &xb);
             let r = k.op_block(OpKind::Add, &p, &yb);
-            for j in 0..LANES32 {
-                *bm += bits32(alpha, xb[j], p[j]);
-                *ba += bits32(p[j], yb[j], r[j]);
-                out[e + j] = r[j];
-            }
+            *bm += (ub_alpha + used_bits_block32(&xb) + used_bits_block32(&p)) as u64;
+            *ba += block_bits32(&p, &yb, &r);
+            out[e..e + LANES32].copy_from_slice(&r);
             e += LANES32;
         }
     }
@@ -996,16 +1056,20 @@ fn gsum64<K: Kern64>(k: &K, src: &[f64], idx: &[usize], bits: &mut u64) -> f64 {
     let mut e = 0usize;
     #[cfg(feature = "lanes")]
     if K::LANE_OK {
+        let mut ub_acc = used_bits_f64(acc);
         while e + LANES64 <= idx.len() {
             let mut xb = [0.0f64; LANES64];
             for j in 0..LANES64 {
                 xb[j] = src[idx[e + j]];
             }
             let mx = k.premask_block(&xb);
+            let ubx = used_bits_lanes64(&xb);
             for j in 0..LANES64 {
                 let r = k.op(OpKind::Add, acc, mx[j]);
-                *bits += bits64(acc, xb[j], r);
+                let ub_r = used_bits_f64(r);
+                *bits += (ub_acc + ubx[j] + ub_r) as u64;
                 acc = r;
+                ub_acc = ub_r;
             }
             e += LANES64;
         }

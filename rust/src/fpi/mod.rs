@@ -29,8 +29,9 @@ pub use format::{
 pub use library::FpiLibrary;
 pub use perturb::PerturbFpi;
 pub use truncate::{
-    apply_mask_f32, apply_mask_f64, trunc_mask_f32, trunc_mask_f64, truncate_f32,
-    truncate_f64, used_bits_f32, used_bits_f64, TruncateFpi,
+    apply_mask_block32, apply_mask_block64, apply_mask_f32, apply_mask_f64, trunc_mask_f32,
+    trunc_mask_f64, truncate_f32, truncate_f64, used_bits_block32, used_bits_block64,
+    used_bits_f32, used_bits_f64, used_bits_lanes32, used_bits_lanes64, TruncateFpi,
 };
 
 /// Which scalar arithmetic instruction a FLOP is (the paper instruments

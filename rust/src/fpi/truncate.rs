@@ -68,25 +68,185 @@ pub fn truncate_f64(x: f64, keep: u32) -> f64 {
     apply_mask_f64(x, trunc_mask_f64(keep))
 }
 
+// --- §III-C bit accounting ---------------------------------------------
+//
+// The energy model charges every FLOP the manipulated mantissa bits of
+// its operands and result: trailing zeros of the mantissa field,
+// saturated at the field width, subtracted from the precision's bit
+// budget. The trailing-zero count is written branch-free both ways by
+// the same sentinel trick — OR in the bit just above the mantissa field,
+// so a zero mantissa counts exactly the field width and no real trailing
+// run (≤ field width − 1) is ever affected:
+//
+// - the scalar forms take `trailing_zeros` of the sentineled field
+//   (one `bsf` on baseline x86-64, no zero-input special case);
+// - the f32 block form isolates the lowest set bit of the sentineled
+//   field (`s & s.wrapping_neg()` — a power of two ≤ 2^23, so the
+//   `i32 → f32` conversion is exact) and reads its exponent field:
+//   `tz = exp − 127`. The conversion is `cvtdq2ps`, an SSE2 vector
+//   instruction, so the lane loop auto-vectorizes on baseline x86-64 —
+//   measured faster there than the popcount identity
+//   `tz = popcnt(!s & (s − 1))`, whose SWAR lowering costs more vector
+//   ops than the convert (see `benches/engine_proxy.c`);
+// - the f64 block form keeps per-lane `trailing_zeros` (there is no
+//   pre-AVX-512 vector `u64 → f64` convert, and the measured SWAR
+//   popcount is slower than four `bsf`s) — blocking still buys the
+//   branch-free sentinel and the single u32 → u64 fold per block.
+//
+// `tests/proptest_accounting.rs` pins block == scalar per lane on
+// adversarial bit patterns (zero/dense mantissas, subnormals, NaN/Inf,
+// negative zero), so the two spellings cannot drift.
+
+const MANT32_MASK: u32 = 0x007f_ffff;
+/// Bit 23 — one past the explicit f32 mantissa field.
+const MANT32_SENTINEL: u32 = 0x0080_0000;
+const MANT64_MASK: u64 = 0x000f_ffff_ffff_ffff;
+/// Bit 52 — one past the explicit f64 mantissa field.
+const MANT64_SENTINEL: u64 = 0x0010_0000_0000_0000;
+
+/// Trailing zeros of the explicit f32 mantissa field, saturated at 23
+/// (scalar spelling: one `bsf`, branch-free via the sentinel bit).
+#[inline(always)]
+fn mantissa_tz_f32(bits: u32) -> u32 {
+    ((bits & MANT32_MASK) | MANT32_SENTINEL).trailing_zeros()
+}
+
+/// Trailing zeros of the explicit f64 mantissa field, saturated at 52.
+#[inline(always)]
+fn mantissa_tz_f64(bits: u64) -> u32 {
+    ((bits & MANT64_MASK) | MANT64_SENTINEL).trailing_zeros()
+}
+
+/// Block spelling of [`mantissa_tz_f32`]: lowest-set-bit isolate +
+/// exact `i32 → f32` convert + exponent extract (`cvtdq2ps` is SSE2, so
+/// this vectorizes on baseline x86-64 where `bsf` cannot).
+#[inline(always)]
+fn mantissa_tz_cvt_f32(bits: u32) -> u32 {
+    let s = (bits & MANT32_MASK) | MANT32_SENTINEL;
+    let lsb = s & s.wrapping_neg();
+    // lsb is a power of two in [1, 2^23] — exactly representable, so
+    // the float's exponent field is 127 + tz with a zero mantissa.
+    ((lsb as i32 as f32).to_bits() >> 23) - 127
+}
+
 /// Manipulated mantissa bits of an `f32` per the paper's §III-C rule:
 /// count zeroes from the LSB of the mantissa field and subtract from the
 /// 24 available bits. A power of two uses 1 bit (the implicit one); a
 /// dense mantissa uses all 24.
 #[inline(always)]
 pub fn used_bits_f32(x: f32) -> u32 {
-    let mantissa = x.to_bits() & 0x007f_ffff;
-    // trailing_zeros of the 23-bit field, saturated at 23 for zero.
-    let tz = if mantissa == 0 { 23 } else { mantissa.trailing_zeros() };
-    24 - tz
+    24 - mantissa_tz_f32(x.to_bits())
 }
 
 /// Manipulated mantissa bits of an `f64` (53-bit budget; see
 /// [`used_bits_f32`]).
 #[inline(always)]
 pub fn used_bits_f64(x: f64) -> u32 {
-    let mantissa = x.to_bits() & 0x000f_ffff_ffff_ffff;
-    let tz = if mantissa == 0 { 52 } else { mantissa.trailing_zeros() };
-    53 - tz
+    53 - mantissa_tz_f64(x.to_bits())
+}
+
+/// Per-lane [`used_bits_f32`] over one lane block, computed branch-free
+/// via the convert-and-extract spelling so the whole block vectorizes.
+/// Lane `j` of the result equals `used_bits_f32(xs[j])` exactly.
+#[inline(always)]
+pub fn used_bits_lanes32<const L: usize>(xs: &[f32; L]) -> [u32; L] {
+    let mut r = [0u32; L];
+    for j in 0..L {
+        r[j] = 24 - mantissa_tz_cvt_f32(xs[j].to_bits());
+    }
+    r
+}
+
+/// Per-lane [`used_bits_f64`] over one lane block (branch-free per-lane
+/// `trailing_zeros`; see [`used_bits_lanes32`] and the module notes on
+/// why f64 keeps the scalar spelling).
+#[inline(always)]
+pub fn used_bits_lanes64<const L: usize>(xs: &[f64; L]) -> [u32; L] {
+    let mut r = [0u32; L];
+    for j in 0..L {
+        r[j] = 53 - mantissa_tz_f64(xs[j].to_bits());
+    }
+    r
+}
+
+/// Horizontal sum of [`used_bits_f32`] over one lane block — the
+/// vectorizable half of the engine's per-block bit accounting: the
+/// per-lane trailing-zero counts vectorize, and the caller folds the
+/// returned `u32` into its `u64` total once per block.
+///
+/// Overflow headroom: each lane contributes ≤ 24, so the sum is ≤
+/// `24 · L` — a u32 holds it for any lane width up to tens of millions
+/// of lanes (the engine's blocks are 8 wide; its worst per-block
+/// three-operand total is 576).
+#[inline(always)]
+pub fn used_bits_block32<const L: usize>(xs: &[f32; L]) -> u32 {
+    let mut total = 0u32;
+    for j in 0..L {
+        total += 24 - mantissa_tz_cvt_f32(xs[j].to_bits());
+    }
+    total
+}
+
+/// Horizontal sum of [`used_bits_f64`] over one lane block (≤ `53 · L`;
+/// see [`used_bits_block32`]).
+#[inline(always)]
+pub fn used_bits_block64<const L: usize>(xs: &[f64; L]) -> u32 {
+    let mut total = 0u32;
+    for j in 0..L {
+        total += 53 - mantissa_tz_f64(xs[j].to_bits());
+    }
+    total
+}
+
+// --- branchless masking ------------------------------------------------
+//
+// `apply_mask_f32/f64` pass non-finite values through untouched, which
+// the scalar forms express as an `is_finite` branch. The block forms
+// below compute the same result with an unconditional mask + bitwise
+// blend: widen the mask to all-ones exactly when the exponent field is
+// all-ones (the vector compare LLVM turns into `pcmpeqd`), so NaN
+// payloads and infinities survive bit-for-bit with no per-element
+// branch in the loop.
+
+/// Branchless core of [`apply_mask_f32`], on raw bits: identical output
+/// bits for every input pattern, including NaN/Inf passthrough.
+#[inline(always)]
+fn blend_mask_bits32(bits: u32, mask: u32) -> u32 {
+    const EXP32: u32 = 0x7f80_0000;
+    let nonfinite = (((bits & EXP32) == EXP32) as u32).wrapping_neg();
+    bits & (mask | nonfinite)
+}
+
+/// Branchless core of [`apply_mask_f64`], on raw bits.
+#[inline(always)]
+fn blend_mask_bits64(bits: u64, mask: u64) -> u64 {
+    const EXP64: u64 = 0x7ff0_0000_0000_0000;
+    let nonfinite = (((bits & EXP64) == EXP64) as u64).wrapping_neg();
+    bits & (mask | nonfinite)
+}
+
+/// Apply a precomputed [`trunc_mask_f32`] mask to one lane block,
+/// branch-free: bit-identical per lane to [`apply_mask_f32`] (NaN/Inf
+/// passthrough included), with the `is_finite` branch replaced by an
+/// unconditional compare + bitwise blend that vectorizes.
+#[inline(always)]
+pub fn apply_mask_block32<const L: usize>(xs: &[f32; L], mask: u32) -> [f32; L] {
+    let mut r = [0.0f32; L];
+    for j in 0..L {
+        r[j] = f32::from_bits(blend_mask_bits32(xs[j].to_bits(), mask));
+    }
+    r
+}
+
+/// Branchless block form of [`apply_mask_f64`] (see
+/// [`apply_mask_block32`]).
+#[inline(always)]
+pub fn apply_mask_block64<const L: usize>(xs: &[f64; L], mask: u64) -> [f64; L] {
+    let mut r = [0.0f64; L];
+    for j in 0..L {
+        r[j] = f64::from_bits(blend_mask_bits64(xs[j].to_bits(), mask));
+    }
+    r
 }
 
 /// The truncation FPI: `keep_bits` mantissa bits on operands and result.
@@ -254,6 +414,96 @@ mod tests {
             assert!(apply_mask_f32(f32::NAN, m32).is_nan());
             assert_eq!(apply_mask_f64(f64::INFINITY, m64), f64::INFINITY);
         }
+    }
+
+    #[test]
+    fn block_used_bits_match_scalar_on_specials() {
+        let specials = [
+            0.0f32,
+            -0.0,
+            1.0,
+            -2.0,
+            0.1,
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::from_bits(1),          // smallest subnormal: dense tz run
+            f32::from_bits(0x007f_ffff), // densest subnormal mantissa
+            f32::MIN_POSITIVE,
+            f32::MAX,
+        ];
+        let mut block = [0.0f32; 4];
+        for chunk in specials.chunks(4) {
+            block[..chunk.len()].copy_from_slice(chunk);
+            let lanes = used_bits_lanes32(&block);
+            let mut sum = 0u32;
+            for j in 0..4 {
+                assert_eq!(lanes[j], used_bits_f32(block[j]), "lane {j} of {block:?}");
+                sum += used_bits_f32(block[j]);
+            }
+            assert_eq!(used_bits_block32(&block), sum);
+            let b64: [f64; 4] = [block[0] as f64, block[1] as f64, block[2] as f64, block[3] as f64];
+            let lanes64 = used_bits_lanes64(&b64);
+            for j in 0..4 {
+                assert_eq!(lanes64[j], used_bits_f64(b64[j]), "f64 lane {j}");
+            }
+            assert_eq!(
+                used_bits_block64(&b64),
+                lanes64.iter().sum::<u32>()
+            );
+        }
+    }
+
+    #[test]
+    fn block_mask_is_bit_identical_to_scalar_mask() {
+        let patterns: [u32; 8] = [
+            0,
+            0x8000_0000,          // -0.0
+            0x7fc0_0001,          // NaN with payload
+            0x7f80_0000,          // +inf
+            0xff80_0000,          // -inf
+            0x0000_0001,          // subnormal
+            0x3dcc_cccd,          // 0.1
+            0xffff_ffff,          // -NaN, dense payload
+        ];
+        for keep in [0u32, 1, 5, 13, 24, 99] {
+            let m32 = trunc_mask_f32(keep);
+            let xs: [f32; 8] = patterns.map(f32::from_bits);
+            let got = apply_mask_block32(&xs, m32);
+            for j in 0..8 {
+                assert_eq!(
+                    got[j].to_bits(),
+                    apply_mask_f32(xs[j], m32).to_bits(),
+                    "keep={keep} pattern {:#010x}",
+                    patterns[j]
+                );
+            }
+            let m64 = trunc_mask_f64(keep);
+            let xs64: [f64; 8] = patterns.map(|p| {
+                f64::from_bits(((p as u64) << 32) | 0x0000_0000_000f_0001)
+            });
+            let got64 = apply_mask_block64(&xs64, m64);
+            for j in 0..8 {
+                assert_eq!(
+                    got64[j].to_bits(),
+                    apply_mask_f64(xs64[j], m64).to_bits(),
+                    "keep={keep} f64 lane {j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn block_sum_headroom_bound_is_pinned() {
+        // the engine folds one u32 block sum into its u64 total per
+        // block: the worst case is every lane dense, three operands per
+        // FLOP — pin the per-block ceiling the headroom argument uses
+        let dense32 = [0.1f32; 8];
+        assert_eq!(used_bits_block32(&dense32), 8 * 24);
+        assert!(3 * used_bits_block32(&dense32) == 576);
+        let dense64 = [0.3f64; 4];
+        assert_eq!(used_bits_block64(&dense64), 4 * 53);
+        assert!(3 * used_bits_block64(&dense64) == 636);
     }
 
     #[test]

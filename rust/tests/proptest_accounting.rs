@@ -1,0 +1,190 @@
+//! Property tests pinning the vectorized §III-C bit accounting to the
+//! scalar rule. The lane tier counts used mantissa bits per block
+//! (`used_bits_block*` — branch-free popcount-identity trailing zeros)
+//! and applies truncate masks through a branchless blend
+//! (`apply_mask_block*`); both must be bit-for-bit the scalar
+//! `used_bits_*` / `apply_mask_*` on every lane, including the
+//! adversarial corners (zero mantissa, dense mantissa, subnormals,
+//! NaN/Inf, negative zero). These are pure `fpi` functions, so the
+//! battery runs identically in every feature cell — no `lanes` gate.
+
+use neat::fpi::{
+    apply_mask_block32, apply_mask_block64, apply_mask_f32, apply_mask_f64, trunc_mask_f32,
+    trunc_mask_f64, used_bits_block32, used_bits_block64, used_bits_f32, used_bits_f64,
+    used_bits_lanes32, used_bits_lanes64,
+};
+use neat::util::proptest_lite::{check, Config};
+use neat::util::Pcg64;
+
+fn cfg(cases: u64) -> Config {
+    Config { cases, ..Default::default() }
+}
+
+/// One adversarial f32 bit pattern: arbitrary bits plus forced visits
+/// to every §III-C corner class.
+fn adv32(rng: &mut Pcg64) -> f32 {
+    let bits = match rng.below(8) {
+        0 => rng.next_u64() as u32,                          // arbitrary
+        1 => (rng.next_u64() as u32) & 0xff80_0000,          // zero mantissa
+        2 => ((rng.next_u64() as u32) & 0xff80_0000) | 0x007f_ffff, // dense mantissa
+        3 => (rng.next_u64() as u32) & 0x807f_ffff,          // subnormal / ±0
+        4 => 0x7f80_0000 | ((rng.next_u64() as u32) & 0x807f_ffff), // NaN / Inf
+        5 => 0x8000_0000,                                    // negative zero
+        6 => 0x7f80_0000 | ((rng.next_u64() & 1) as u32) << 31, // ±Inf
+        _ => 1 + (rng.next_u64() as u32 & 0xff),             // smallest subnormals
+    };
+    f32::from_bits(bits)
+}
+
+fn adv64(rng: &mut Pcg64) -> f64 {
+    let bits = match rng.below(8) {
+        0 => rng.next_u64(),
+        1 => rng.next_u64() & 0xfff0_0000_0000_0000,
+        2 => (rng.next_u64() & 0xfff0_0000_0000_0000) | 0x000f_ffff_ffff_ffff,
+        3 => rng.next_u64() & 0x800f_ffff_ffff_ffff,
+        4 => 0x7ff0_0000_0000_0000 | (rng.next_u64() & 0x800f_ffff_ffff_ffff),
+        5 => 0x8000_0000_0000_0000,
+        6 => 0x7ff0_0000_0000_0000 | (rng.next_u64() & 1) << 63,
+        _ => 1 + (rng.next_u64() & 0xffff),
+    };
+    f64::from_bits(bits)
+}
+
+#[test]
+fn block_used_bits_match_scalar_per_lane_f32() {
+    check(
+        "used_bits_block32 == Σ used_bits_f32",
+        cfg(512),
+        |rng| {
+            let mut xs = [0.0f32; 8];
+            for x in &mut xs {
+                *x = adv32(rng);
+            }
+            xs
+        },
+        |xs| {
+            let lanes = used_bits_lanes32(xs);
+            let per_lane_ok = (0..8).all(|j| lanes[j] == used_bits_f32(xs[j]));
+            let sum: u32 = xs.iter().map(|&x| used_bits_f32(x)).sum();
+            per_lane_ok && used_bits_block32(xs) == sum
+        },
+    );
+}
+
+#[test]
+fn block_used_bits_match_scalar_per_lane_f64() {
+    check(
+        "used_bits_block64 == Σ used_bits_f64",
+        cfg(512),
+        |rng| {
+            let mut xs = [0.0f64; 4];
+            for x in &mut xs {
+                *x = adv64(rng);
+            }
+            xs
+        },
+        |xs| {
+            let lanes = used_bits_lanes64(xs);
+            let per_lane_ok = (0..4).all(|j| lanes[j] == used_bits_f64(xs[j]));
+            let sum: u32 = xs.iter().map(|&x| used_bits_f64(x)).sum();
+            per_lane_ok && used_bits_block64(xs) == sum
+        },
+    );
+}
+
+#[test]
+fn block_used_bits_generic_over_odd_lane_counts() {
+    // The block forms are const-generic; the engine uses 8/4 but the
+    // rule must hold at any width (incl. the scalar degenerate case).
+    check(
+        "used_bits_block* at L ∈ {1, 3, 5}",
+        cfg(256),
+        |rng| [adv32(rng), adv32(rng), adv32(rng), adv32(rng), adv32(rng)],
+        |xs| {
+            let one: [f32; 1] = [xs[0]];
+            let three: [f32; 3] = [xs[0], xs[1], xs[2]];
+            used_bits_block32(&one) == used_bits_f32(xs[0])
+                && used_bits_block32(&three)
+                    == three.iter().map(|&x| used_bits_f32(x)).sum::<u32>()
+                && used_bits_block32(xs) == xs.iter().map(|&x| used_bits_f32(x)).sum::<u32>()
+        },
+    );
+}
+
+#[test]
+fn branchless_mask_is_bit_identical_f32() {
+    check(
+        "apply_mask_block32 == apply_mask_f32 per lane",
+        cfg(512),
+        |rng| {
+            let mut xs = [0.0f32; 8];
+            for x in &mut xs {
+                *x = adv32(rng);
+            }
+            let keep = 1 + rng.below(24) as u32;
+            (xs, trunc_mask_f32(keep))
+        },
+        |(xs, mask)| {
+            let blended = apply_mask_block32(xs, *mask);
+            (0..8).all(|j| blended[j].to_bits() == apply_mask_f32(xs[j], *mask).to_bits())
+        },
+    );
+}
+
+#[test]
+fn branchless_mask_is_bit_identical_f64() {
+    check(
+        "apply_mask_block64 == apply_mask_f64 per lane",
+        cfg(512),
+        |rng| {
+            let mut xs = [0.0f64; 4];
+            for x in &mut xs {
+                *x = adv64(rng);
+            }
+            let keep = 1 + rng.below(53) as u32;
+            (xs, trunc_mask_f64(keep))
+        },
+        |(xs, mask)| {
+            let blended = apply_mask_block64(xs, *mask);
+            (0..4).all(|j| blended[j].to_bits() == apply_mask_f64(xs[j], *mask).to_bits())
+        },
+    );
+}
+
+#[test]
+fn branchless_mask_on_arbitrary_bit_patterns() {
+    // Raw u32/u64 reinterpretations — incl. NaN payloads the blend must
+    // pass through untouched (bit equality, not value equality).
+    check(
+        "blend == branch on raw bit patterns",
+        cfg(512),
+        |rng| {
+            let p32 = rng.next_u64() as u32;
+            let p64 = rng.next_u64();
+            let k32 = 1 + rng.below(24) as u32;
+            let k64 = 1 + rng.below(53) as u32;
+            (p32, p64, k32, k64)
+        },
+        |&(p32, p64, k32, k64)| {
+            let (m32, m64) = (trunc_mask_f32(k32), trunc_mask_f64(k64));
+            let x = f32::from_bits(p32);
+            let y = f64::from_bits(p64);
+            apply_mask_block32(&[x], m32)[0].to_bits() == apply_mask_f32(x, m32).to_bits()
+                && apply_mask_block64(&[y], m64)[0].to_bits() == apply_mask_f64(y, m64).to_bits()
+        },
+    );
+}
+
+#[test]
+fn horizontal_add_headroom_is_bounded() {
+    // The engine folds per-block u32 sums into u64 totals; the worst
+    // case per block is full-width mantissas in every lane and three
+    // operand blocks per FLOP. Pin the bound the overflow argument in
+    // `engine/slice.rs` relies on.
+    let dense32 = [f32::from_bits(0x3fff_ffff); 8]; // all 24 bits used
+    let dense64 = [f64::from_bits(0x3fff_ffff_ffff_ffff); 4]; // all 53 bits
+    assert_eq!(used_bits_block32(&dense32), 24 * 8);
+    assert_eq!(used_bits_block64(&dense64), 53 * 4);
+    assert_eq!(3 * used_bits_block32(&dense32), 576); // ≪ u32::MAX
+    assert_eq!(3 * used_bits_block64(&dense64), 636); // ≪ u32::MAX
+}
